@@ -1,0 +1,150 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Trains a NysX model on the BZR synthetic dataset (paper-size), starts
+//! the L3 serving coordinator (router → batch queues → worker pool),
+//! replays the test split as a Poisson request stream at a target rate,
+//! and reports the paper's serving metrics: batch-1 latency (host +
+//! simulated ZCU104), throughput, and energy per graph. Finally it runs
+//! the same queries through the AOT-compiled XLA artifact (L2+L1 exported
+//! from jax, loaded via PJRT) and cross-checks the predictions — proving
+//! all three layers compose. Results are recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example edge_serving
+
+use std::path::Path;
+use std::sync::Arc;
+
+use nysx::coordinator::{RoutingPolicy, Server, ServerConfig};
+use nysx::graph::tudataset::spec_by_name;
+use nysx::model::train::{evaluate, train};
+use nysx::model::ModelConfig;
+use nysx::nystrom::LandmarkStrategy;
+use nysx::runtime::{Manifest, PjrtRuntime, XlaNee};
+use nysx::util::cli::Args;
+use nysx::util::rng::Xoshiro256;
+
+fn main() {
+    let args = Args::from_env();
+    let dataset = args.get_or("dataset", "BZR");
+    let workers = args.get_usize("workers", 4);
+    let requests = args.get_usize("requests", 2000);
+    let rate_rps = args.get_f64("rate", 2000.0);
+    let scale = args.get_f64("scale", 1.0);
+
+    let spec = spec_by_name(dataset).unwrap_or_else(|| panic!("unknown dataset {dataset}"));
+    let (ds, _s_uni, s_dpp) = spec.generate_scaled(42, scale);
+    eprintln!("[1/4] training NysX on {} ({} graphs, s={s_dpp})...", ds.name, ds.train.len());
+    let cfg = ModelConfig {
+        hops: spec.hops,
+        hv_dim: 10_000,
+        num_landmarks: s_dpp,
+        strategy: LandmarkStrategy::HybridDpp { pool_factor: 2 },
+        ..ModelConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let model = Arc::new(train(&ds, &cfg));
+    eprintln!(
+        "      trained in {:.1}s, test accuracy {:.1}%",
+        t0.elapsed().as_secs_f64(),
+        100.0 * evaluate(&model, &ds.test)
+    );
+
+    eprintln!("[2/4] starting coordinator: {workers} workers, size-aware routing, batch=1");
+    let mut server = Server::start(
+        model.clone(),
+        ServerConfig {
+            workers,
+            routing: RoutingPolicy::SizeAware,
+            ..Default::default()
+        },
+    );
+
+    eprintln!("[3/4] replaying {requests} requests at ~{rate_rps:.0} req/s (Poisson arrivals)");
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let mut truths = Vec::with_capacity(requests);
+    let t_start = std::time::Instant::now();
+    let mut next_arrival = 0.0f64;
+    for _ in 0..requests {
+        // Poisson process: exponential inter-arrival gaps.
+        next_arrival += -rng.next_f64().max(1e-12).ln() / rate_rps;
+        let target = std::time::Duration::from_secs_f64(next_arrival);
+        while t_start.elapsed() < target {
+            std::hint::spin_loop();
+        }
+        let idx = rng.gen_range(ds.test.len());
+        truths.push(ds.test[idx].1);
+        let mut graph = ds.test[idx].0.clone();
+        loop {
+            match server.submit(graph) {
+                Ok(_) => break,
+                Err(g) => {
+                    graph = g;
+                    server.recv(); // backpressure: free a slot
+                }
+            }
+        }
+    }
+    let responses = server.drain();
+    let wall = t_start.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), requests, "lost responses");
+    let correct = responses
+        .iter()
+        .filter(|r| r.predicted == truths[r.id as usize])
+        .count();
+    let m = server.metrics.summary();
+    println!("\n=== edge serving report ({} on {} workers) ===", ds.name, workers);
+    println!("requests            {requests} in {wall:.2}s -> {:.0} req/s", requests as f64 / wall);
+    println!("served accuracy     {:.1}%", 100.0 * correct as f64 / requests as f64);
+    println!(
+        "host latency (µs)   p50={:.0} p95={:.0} p99={:.0} max={:.0}",
+        m.host_us.p50, m.host_us.p95, m.host_us.p99, m.host_us.max
+    );
+    println!(
+        "queue wait (µs)     p50={:.0} p99={:.0}",
+        m.queue_us.p50, m.queue_us.p99
+    );
+    println!(
+        "sim ZCU104 latency  mean={:.3}ms p99={:.3}ms  (paper Table 6 band: 0.3-1.8ms)",
+        m.fpga_ms.mean, m.fpga_ms.p99
+    );
+    println!(
+        "sim ZCU104 energy   {:.2} mJ/graph mean  (paper Table 7 band: 0.2-1.3 mJ)",
+        m.total_fpga_mj / requests as f64
+    );
+    println!("per-worker          {:?}", m.per_worker);
+    server.shutdown();
+
+    // Cross-layer check: run the NEE stage of the same queries through
+    // the jax-exported, PJRT-loaded artifact and compare predictions.
+    eprintln!("\n[4/4] cross-checking L1/L2 artifact (PJRT) against native pipeline");
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("      SKIPPED: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&artifacts).expect("manifest");
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU");
+    match XlaNee::new(&rt, &manifest, &model) {
+        Ok(nee) => {
+            let mut engine = nysx::infer::NysxEngine::new(&model);
+            let mut agree = 0usize;
+            let check = ds.test.len().min(64);
+            for (g, _) in ds.test.iter().take(check) {
+                let (c, _) = engine.kernel_vector(g);
+                let c = c.to_vec();
+                let xla_hv = nee.project_sign(&c).expect("xla exec");
+                let hv = nysx::hdc::Hypervector {
+                    data: xla_hv.iter().map(|&v| if v < 0.0 { -1i8 } else { 1 }).collect(),
+                };
+                let xla_pred = model.prototypes.classify(&hv);
+                let (native_pred, _) = engine.classify_kernel_vector(&c);
+                if xla_pred == native_pred {
+                    agree += 1;
+                }
+            }
+            println!("      XLA NEE vs native: {agree}/{check} predictions agree");
+            assert!(agree * 10 >= check * 9, "cross-layer disagreement too high");
+        }
+        Err(e) => eprintln!("      SKIPPED ({e}) — rebuild artifacts for this d/s"),
+    }
+}

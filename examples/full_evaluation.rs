@@ -1,0 +1,56 @@
+//! Regenerates EVERY table and figure of the paper's evaluation section
+//! (Tables 3/4/6/7/8, Figures 6/7/8, the §5.2.5 roofline) on the
+//! synthetic TUDataset suite, writing the report to
+//! `results/full_evaluation.txt` and the per-dataset JSON to
+//! `results/cache/`.
+//!
+//!     cargo run --release --example full_evaluation [-- --scale 0.25 --ablation]
+//!
+//! At scale 1.0 this trains 3 models × 8 datasets and takes a few
+//! minutes; the JSON cache makes reruns and the `cargo bench` targets
+//! instant.
+
+use nysx::bench::tables::*;
+use nysx::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = EvalConfig {
+        scale: args.get_f64("scale", EvalConfig::default().scale),
+        seed: args.get_u64("seed", 42),
+        hv_dim: args.get_usize("d", 10_000),
+        ablation: args.get_bool("ablation"),
+    };
+    eprintln!("full evaluation: scale={} seed={} d={}", cfg.scale, cfg.seed, cfg.hv_dim);
+    let t0 = std::time::Instant::now();
+    let evals = evaluate_all(&cfg);
+
+    let mut report = String::new();
+    report.push_str(&format!(
+        "NysX full evaluation (scale={}, seed={}, d={})\ngenerated in {:.1}s\n\n",
+        cfg.scale,
+        cfg.seed,
+        cfg.hv_dim,
+        t0.elapsed().as_secs_f64()
+    ));
+    for section in [
+        render_table4(&evals),
+        render_table3(&evals),
+        render_table6(&evals),
+        render_fig6(&evals),
+        render_table7(&evals),
+        render_fig7(&evals),
+        render_table8(&evals),
+        render_fig8(&evals),
+        render_roofline(),
+    ] {
+        report.push_str(&section);
+        report.push('\n');
+    }
+    println!("{report}");
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&out).ok();
+    let path = out.join("full_evaluation.txt");
+    std::fs::write(&path, &report).expect("write report");
+    eprintln!("report written to {}", path.display());
+}

@@ -1,0 +1,117 @@
+"""AOT export: lower the L2 jax graphs to HLO **text** artifacts the rust
+runtime loads via ``HloModuleProto::from_text_file``.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to ``artifacts/``, indexed by ``manifest.json``):
+
+* ``encode_<shape>.hlo.txt`` — the full Algorithm-1 graph at padded
+  shapes (cross-layer equivalence tests + small-graph serving);
+* ``nee_<d>x<s>.hlo.txt``    — the NEE projection alone (the hot-path
+  artifact the coordinator can execute per request).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple1/to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_encode(out_dir, n, f, hops, bmax, s, d, classes):
+    name = f"encode_n{n}_f{f}_h{hops}_b{bmax}_s{s}_d{d}_c{classes}"
+    lowered = jax.jit(model.encode_and_classify).lower(
+        spec((n, n)),
+        spec((n, f)),
+        spec((n,)),
+        spec((hops, f)),
+        spec((hops,)),
+        spec((), jnp.float32),
+        spec((hops, bmax), jnp.int32),
+        spec((hops, s, bmax)),
+        spec((d, s)),
+        spec((classes, d)),
+    )
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(to_hlo_text(lowered))
+    return {
+        "name": name,
+        "kind": "encode",
+        "path": os.path.basename(path),
+        "n": n,
+        "f": f,
+        "hops": hops,
+        "bmax": bmax,
+        "s": s,
+        "d": d,
+        "classes": classes,
+    }
+
+
+def export_nee(out_dir, d, s):
+    name = f"nee_d{d}_s{s}"
+    lowered = jax.jit(model.nee_only).lower(spec((d, s)), spec((s,)))
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(to_hlo_text(lowered))
+    return {"name": name, "kind": "nee", "path": os.path.basename(path), "d": d, "s": s}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Padded shapes for the full-graph artifact (test-scale defaults keep
+    # `make artifacts` + the rust equivalence tests fast).
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--f", type=int, default=16)
+    ap.add_argument("--hops", type=int, default=3)
+    ap.add_argument("--bmax", type=int, default=512)
+    ap.add_argument("--s", type=int, default=48)
+    ap.add_argument("--d", type=int, default=2048)
+    ap.add_argument("--classes", type=int, default=4)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    entries.append(
+        export_encode(
+            args.out_dir, args.n, args.f, args.hops, args.bmax, args.s, args.d, args.classes
+        )
+    )
+    # Hot-path NEE artifacts: the test-scale one plus the paper-scale
+    # deployment point (d=10^4; s=448 covers every dataset's landmark
+    # budget — the runtime zero-pads C and P_nys columns up to s).
+    entries.append(export_nee(args.out_dir, args.d, args.s))
+    entries.append(export_nee(args.out_dir, 10_000, 448))
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

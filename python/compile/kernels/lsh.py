@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: LSHU code generation (paper §5.2.1).
+
+Computes ``c = floor((M @ u + b) / w)`` for a block of nodes at a time —
+the DenseMV + quantize stage of the LSHU. Node features stream through
+VMEM in (BLOCK_N, f) tiles; the projection vector ``u`` stays resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+
+
+def _lsh_block_kernel(m_ref, u_ref, bw_ref, o_ref):
+    proj = m_ref[...] @ u_ref[...]
+    b = bw_ref[0]
+    w = bw_ref[1]
+    o_ref[...] = jnp.floor((proj + b) / w).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def lsh_codes(m, u, b, w, block_n=DEFAULT_BLOCK_N):
+    """Integer LSH codes for every node.
+
+    m: (n, f) float32; u: (f,) float32; b, w: python/array scalars.
+    Returns (n,) int32.
+    """
+    n, f = m.shape
+    block_n = min(block_n, max(8, n))
+    pad = (-n) % block_n
+    if pad:
+        m = jnp.pad(m, ((0, pad), (0, 0)))
+    np_ = n + pad
+    bw = jnp.stack([jnp.asarray(b, jnp.float32), jnp.asarray(w, jnp.float32)])
+    out = pl.pallas_call(
+        _lsh_block_kernel,
+        grid=(np_ // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.int32),
+        interpret=True,
+    )(m.astype(jnp.float32), u.astype(jnp.float32), bw)
+    return out[:n]

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: the Nyström Encoding Engine (paper §5.2.5).
+
+The FPGA streams ``P_nys`` (d×s FP32) from DDR through a 512-bit AXI port
+into 16 MAC lanes, with the similarity vector ``C`` resident on chip and
+``sign()`` fused into the accumulator drain. The TPU-shaped analogue
+(DESIGN.md §Hardware-Adaptation):
+
+* ``P_nys`` lives in HBM (the "DDR"); a ``BlockSpec`` of ``(BLOCK_D, s)``
+  tiles it into VMEM — the HBM→VMEM block copy plays the AXI burst + FIFO
+  role, and Pallas double-buffers consecutive blocks exactly like the
+  paper's outstanding reads decouple fetch from compute.
+* ``C`` is small and replicated into VMEM for every block (the paper's
+  cyclically-partitioned on-chip buffer).
+* Each block computes a (BLOCK_D, s) × (s,) product on the VPU/MXU and
+  fuses bipolarization into the epilogue, so only ±1 values leave the
+  kernel (the paper's ">4× on-chip buffer reduction" fusion).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU perf is estimated from the VMEM footprint + lane
+utilization recorded in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of P_nys per VMEM block. 256 rows × s=512 × 4B = 512 KiB blocks —
+# two in flight fit comfortably in 16 MiB VMEM while amortizing copy
+# startup; a multiple of 8 sublanes. (Perf log: EXPERIMENTS.md §Perf L1.)
+DEFAULT_BLOCK_D = 256
+
+
+def _nee_block_kernel(p_ref, c_ref, o_ref):
+    """One (BLOCK_D, s) tile: fused project + bipolarize."""
+    y = p_ref[...] @ c_ref[...]
+    o_ref[...] = jnp.where(y < 0, -1.0, 1.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def nee_project_sign(p_nys, c, block_d=DEFAULT_BLOCK_D):
+    """h = sign(P_nys @ C) via the streaming Pallas kernel.
+
+    p_nys: (d, s) float32, c: (s,) float32 -> (d,) float32 in {-1, +1}.
+    d is padded up to a multiple of ``block_d`` internally.
+    """
+    d, s = p_nys.shape
+    (s2,) = c.shape
+    assert s == s2, f"shape mismatch: {p_nys.shape} vs {c.shape}"
+    block_d = min(block_d, max(8, d))
+    pad = (-d) % block_d
+    if pad:
+        p_nys = jnp.pad(p_nys, ((0, pad), (0, 0)))
+    dp = d + pad
+    out = pl.pallas_call(
+        _nee_block_kernel,
+        grid=(dp // block_d,),
+        in_specs=[
+            # Stream one (block_d, s) tile of P_nys per grid step.
+            pl.BlockSpec((block_d, s), lambda i: (i, 0)),
+            # C is fully resident (same block every step).
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=True,
+    )(p_nys.astype(jnp.float32), c.astype(jnp.float32))
+    return out[:d]
+
+
+def vmem_footprint_bytes(s, block_d=DEFAULT_BLOCK_D, double_buffered=True):
+    """Estimated VMEM bytes for the chosen block shape (perf model).
+
+    One P block + C + one output block, ×2 when double-buffered.
+    """
+    p_block = block_d * s * 4
+    c_buf = s * 4
+    o_block = block_d * 4
+    mult = 2 if double_buffered else 1
+    return mult * (p_block + o_block) + c_buf

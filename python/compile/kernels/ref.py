@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package is checked against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes and dtypes).
+The sign convention matches the rust functional model
+(``Hypervector::from_real``): sign(0) := +1.
+"""
+
+import jax.numpy as jnp
+
+INT_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def bipolar_sign(y):
+    """sign with sign(0) := +1, emitting the input dtype."""
+    return jnp.where(y < 0, -1.0, 1.0).astype(y.dtype)
+
+
+def nee_ref(p_nys, c):
+    """Nystrom Encoding Engine oracle: h = sign(P_nys @ C).
+
+    p_nys: (d, s) float; c: (s,) float -> (d,) bipolar float32.
+    """
+    y = p_nys.astype(jnp.float32) @ c.astype(jnp.float32)
+    return bipolar_sign(y)
+
+
+def lsh_codes_ref(m, u, b, w):
+    """LSH code oracle: floor((M @ u + b) / w) as int32.
+
+    m: (n, f); u: (f,); b, w: scalars -> (n,) int32.
+    """
+    proj = m.astype(jnp.float32) @ u.astype(jnp.float32)
+    return jnp.floor((proj + b) / w).astype(jnp.int32)
+
+
+def histogram_ref(codes, codebook, node_mask):
+    """Histogram oracle: bin codes through a sorted codebook.
+
+    codes: (n,) int32; codebook: (bmax,) int32 sorted ascending, padded
+    with INT_SENTINEL; node_mask: (n,) bool. Codes of masked-off nodes
+    and codes absent from the codebook are skipped (Alg. 1 lines 6-8);
+    masked nodes are remapped to the sentinel so they can only land in
+    sentinel (zero-weight) bins.
+    """
+    codes = jnp.where(node_mask, codes, INT_SENTINEL)
+    idx = jnp.searchsorted(codebook, codes)
+    idx = jnp.clip(idx, 0, codebook.shape[0] - 1)
+    valid = codebook[idx] == codes
+    hist = jnp.zeros(codebook.shape[0], dtype=jnp.float32)
+    return hist.at[idx].add(jnp.where(valid, 1.0, 0.0))

@@ -1,0 +1,105 @@
+"""L2: the end-to-end Nyström-HDC inference graph in JAX (Algorithm 1),
+calling the L1 Pallas kernels, with fixed (padded) shapes so it can be
+AOT-lowered once and executed from the rust runtime.
+
+All model parameters are runtime *inputs* (not baked constants): the rust
+coordinator trains the model, packs the padded parameter tensors once, and
+feeds them with each query — so a single HLO artifact serves any trained
+model of matching maximum shapes.
+
+Shape/padding conventions (see ``python/compile/aot.py`` for the manifest):
+
+* graphs are padded to ``n`` nodes; ``node_mask`` flags real nodes; padded
+  adjacency rows/cols are zero;
+* per-hop codebooks are sorted int32 arrays padded with INT32_MAX, so
+  padded nodes and padded codebook slots can only meet in sentinel bins
+  whose ``hists`` columns are zero;
+* ``hists`` is (hops, s, bmax) with zero columns for padding;
+* outputs are the class scores (C,) and the bipolar HV (d,).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.nee import nee_project_sign
+from .kernels.ref import INT_SENTINEL
+
+
+def encode_and_classify(adj, feats, node_mask, u, b, w, codebooks, hists, p_nys, protos):
+    """Algorithm 1 with fixed shapes.
+
+    adj:       (n, n) float32 — 0/1 adjacency (symmetric, zero-padded)
+    feats:     (n, f) float32 — node features (one-hot labels)
+    node_mask: (n,)   float32 — 1.0 for real nodes, 0.0 for padding
+    u:         (hops, f) float32 — LSH projections
+    b:         (hops,) float32   — LSH offsets
+    w:         ()      float32   — shared LSH width
+    codebooks: (hops, bmax) int32 — sorted, INT32_MAX-padded codes
+    hists:     (hops, s, bmax) float32 — landmark histogram matrices
+    p_nys:     (d, s) float32 — Nyström projection
+    protos:    (classes, d) float32 — bipolar class prototypes
+
+    Returns (scores (classes,), hv (d,)).
+    """
+    hops = u.shape[0]
+    s = hists.shape[1]
+    c_vec = jnp.zeros((s,), jnp.float32)
+    for t in range(hops):  # hops is static: unrolled at trace time
+        # LSHU restructured chain (paper §5.2.1): proj = A^t (F u^(t)).
+        proj = feats @ u[t]
+        for _ in range(t):
+            proj = adj @ proj
+        codes = jnp.floor((proj + b[t]) / w).astype(jnp.int32)
+        # MPHE-equivalent vocabulary lookup: padded nodes -> sentinel.
+        codes = jnp.where(node_mask > 0, codes, INT_SENTINEL)
+        cb = codebooks[t]
+        idx = jnp.clip(jnp.searchsorted(cb, codes), 0, cb.shape[0] - 1)
+        valid = cb[idx] == codes
+        # HUE: histogram accumulation.
+        hist = jnp.zeros((cb.shape[0],), jnp.float32)
+        hist = hist.at[idx].add(jnp.where(valid, 1.0, 0.0))
+        # KSE: v^(t) = H^(t) h^(t), accumulated into C.
+        c_vec = c_vec + hists[t] @ hist
+    # NEE (L1 Pallas kernel): h = sign(P_nys C), fused bipolarization.
+    hv = nee_project_sign(p_nys, c_vec)
+    # SCE: scores = G h (argmax stays on the rust side).
+    scores = protos @ hv
+    return scores, hv
+
+
+def nee_only(p_nys, c_vec):
+    """The NEE stage alone (the runtime's hot-path artifact)."""
+    return (nee_project_sign(p_nys, c_vec),)
+
+
+def example_inputs(n, f, hops, bmax, s, d, classes, seed=0):
+    """Random, well-formed example inputs (tests + AOT example args)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    n_real = max(2, n // 2)
+    adj = np.zeros((n, n), np.float32)
+    for _ in range(3 * n_real):
+        i, j = rng.integers(0, n_real, 2)
+        if i != j:
+            adj[i, j] = 1.0
+            adj[j, i] = 1.0
+    feats = np.zeros((n, f), np.float32)
+    feats[np.arange(n_real), rng.integers(0, f, n_real)] = 1.0
+    node_mask = np.zeros((n,), np.float32)
+    node_mask[:n_real] = 1.0
+    u = rng.standard_normal((hops, f)).astype(np.float32)
+    b = rng.uniform(0, 1, hops).astype(np.float32)
+    w = np.float32(1.0)
+    # Codebooks: sorted plausible code ranges with sentinel padding.
+    codebooks = np.full((hops, bmax), INT_SENTINEL, np.int32)
+    for t in range(hops):
+        n_codes = int(rng.integers(bmax // 2, bmax))
+        codes = np.unique(rng.integers(-50, 50, n_codes).astype(np.int32))
+        codebooks[t, : codes.size] = np.sort(codes)
+    hists = rng.poisson(0.3, (hops, s, bmax)).astype(np.float32)
+    # Zero the sentinel columns.
+    for t in range(hops):
+        hists[t][:, codebooks[t] == INT_SENTINEL] = 0.0
+    p_nys = (rng.standard_normal((d, s)) / np.sqrt(s)).astype(np.float32)
+    protos = np.sign(rng.standard_normal((classes, d))).astype(np.float32)
+    return adj, feats, node_mask, u, b, w, codebooks, hists, p_nys, protos

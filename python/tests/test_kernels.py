@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes, block sizes and value distributions; the
+comparisons are exact (same fp32 ops, same sign convention).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lsh import lsh_codes
+from compile.kernels.nee import nee_project_sign, vmem_footprint_bytes
+from compile.kernels.ref import bipolar_sign, histogram_ref, lsh_codes_ref, nee_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------- NEE ----
+
+
+@given(
+    d=st.integers(1, 700),
+    s=st.integers(1, 64),
+    block_d=st.sampled_from([8, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nee_matches_ref(d, s, block_d, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.standard_normal((d, s)).astype(np.float32)
+    c = rng.standard_normal((s,)).astype(np.float32)
+    got = nee_project_sign(jnp.asarray(p), jnp.asarray(c), block_d=block_d)
+    want = nee_ref(jnp.asarray(p), jnp.asarray(c))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (d,)
+    assert set(np.unique(np.asarray(got))) <= {-1.0, 1.0}
+
+
+def test_nee_sign_zero_is_plus_one():
+    # Zero projection (C = 0) must emit +1 everywhere — the rust
+    # Hypervector::from_real convention.
+    p = jnp.ones((16, 4), jnp.float32)
+    c = jnp.zeros((4,), jnp.float32)
+    out = np.asarray(nee_project_sign(p, c))
+    np.testing.assert_array_equal(out, np.ones(16, np.float32))
+
+
+def test_nee_nonmultiple_padding():
+    # d not a multiple of the block: padding must not leak into output.
+    rng = np.random.default_rng(7)
+    p = rng.standard_normal((257, 5)).astype(np.float32)
+    c = rng.standard_normal((5,)).astype(np.float32)
+    got = np.asarray(nee_project_sign(jnp.asarray(p), jnp.asarray(c), block_d=128))
+    want = np.asarray(nee_ref(jnp.asarray(p), jnp.asarray(c)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_vmem_footprint_within_budget():
+    # The chosen deployment block shape must fit comfortably in 16 MiB
+    # VMEM with double buffering (paper-scale s=448).
+    assert vmem_footprint_bytes(448) < 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------- LSH ----
+
+
+@given(
+    n=st.integers(1, 300),
+    f=st.integers(1, 40),
+    w=st.floats(0.05, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lsh_matches_ref(n, f, w, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((n, f)).astype(np.float32)
+    u = rng.standard_normal((f,)).astype(np.float32)
+    b = np.float32(rng.uniform(0, w))
+    got = lsh_codes(jnp.asarray(m), jnp.asarray(u), b, np.float32(w))
+    want = lsh_codes_ref(jnp.asarray(m), jnp.asarray(u), b, np.float32(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lsh_offset_shifts_codes_by_one():
+    rng = np.random.default_rng(3)
+    m = rng.standard_normal((20, 6)).astype(np.float32)
+    u = rng.standard_normal((6,)).astype(np.float32)
+    a = np.asarray(lsh_codes(jnp.asarray(m), jnp.asarray(u), np.float32(0.0), np.float32(1.0)))
+    bshift = np.asarray(
+        lsh_codes(jnp.asarray(m), jnp.asarray(u), np.float32(1.0), np.float32(1.0))
+    )
+    np.testing.assert_array_equal(a + 1, bshift)
+
+
+# ---------------------------------------------------------- histogram ----
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 200), bmax=st.integers(4, 64))
+def test_histogram_ref_counts(seed, n, bmax):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-10, 10, n).astype(np.int32)
+    mask = rng.random(n) < 0.8
+    from compile.kernels.ref import INT_SENTINEL
+
+    cb = np.full(bmax, INT_SENTINEL, np.int32)
+    vocab = np.unique(rng.integers(-10, 10, bmax // 2).astype(np.int32))[: bmax - 1]
+    cb[: vocab.size] = vocab
+    hist = np.asarray(histogram_ref(jnp.asarray(codes), jnp.asarray(cb), jnp.asarray(mask)))
+    # Oracle-of-the-oracle: plain python counting.
+    want = np.zeros(bmax, np.float32)
+    lookup = {int(c): i for i, c in enumerate(vocab)}
+    for c, m in zip(codes, mask):
+        if m and int(c) in lookup:
+            want[lookup[int(c)]] += 1
+    np.testing.assert_array_equal(hist[: vocab.size], want[: vocab.size])
+    # Masked-off nodes are remapped to the sentinel and land in the FIRST
+    # sentinel bin (zero-weight in the landmark hists); all later sentinel
+    # bins must be empty.
+    if vocab.size < bmax:
+        assert hist[vocab.size] == (~mask).sum()
+        assert hist[vocab.size + 1 :].sum() == 0
+
+
+def test_bipolar_sign_convention():
+    y = jnp.asarray([-2.0, -0.0, 0.0, 3.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(bipolar_sign(y)), [-1.0, 1.0, 1.0, 1.0])

@@ -1,0 +1,111 @@
+"""L2 correctness: the jax inference graph vs an independent numpy
+implementation of Algorithm 1, plus padding-invariance properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import INT_SENTINEL
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def numpy_alg1(adj, feats, node_mask, u, b, w, codebooks, hists, p_nys, protos):
+    """Independent numpy Algorithm 1 (baseline schedule M = A^t F)."""
+    hops = u.shape[0]
+    s = hists.shape[1]
+    n_real = int((node_mask > 0).sum())
+    a = adj[:n_real, :n_real].astype(np.float64)
+    m = feats[:n_real].astype(np.float64)
+    c_vec = np.zeros(s)
+    for t in range(hops):
+        proj = m @ u[t].astype(np.float64)
+        codes = np.floor((proj + float(b[t])) / float(w)).astype(np.int64)
+        vocab = {int(c): i for i, c in enumerate(codebooks[t]) if c != INT_SENTINEL}
+        hist = np.zeros(hists.shape[2])
+        for c in codes:
+            if int(c) in vocab:
+                hist[vocab[int(c)]] += 1
+        c_vec += hists[t].astype(np.float64) @ hist
+        if t + 1 < hops:
+            m = a @ m
+    y = p_nys.astype(np.float64) @ c_vec
+    hv = np.where(y < 0, -1.0, 1.0)
+    scores = protos.astype(np.float64) @ hv
+    return scores, hv, c_vec
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_model_matches_numpy_alg1(seed):
+    shapes = dict(n=24, f=6, hops=3, bmax=64, s=10, d=256, classes=3)
+    inputs = model.example_inputs(**shapes, seed=seed)
+    scores, hv = model.encode_and_classify(*[jnp.asarray(x) for x in inputs])
+    want_scores, want_hv, _ = numpy_alg1(*inputs)
+    # fp32 vs fp64 kernel-vector accumulation: HV signs can differ only
+    # where |y| is at rounding scale; demand near-perfect agreement.
+    agree = np.mean(np.asarray(hv) == want_hv)
+    assert agree > 0.995, f"HV agreement {agree}"
+    # Scores are dot products over d of mostly-equal bipolar vectors.
+    np.testing.assert_allclose(
+        np.asarray(scores), want_scores, atol=2 * shapes["d"] * 0.005 + 1e-6
+    )
+
+
+def test_padding_invariance():
+    # Growing the node padding must not change the outputs at all.
+    shapes = dict(n=16, f=5, hops=2, bmax=32, s=8, d=128, classes=2)
+    inputs = model.example_inputs(**shapes, seed=11)
+    scores_a, hv_a = model.encode_and_classify(*[jnp.asarray(x) for x in inputs])
+    adj, feats, mask, *rest = inputs
+    pad = 9
+    adj_p = np.pad(adj, ((0, pad), (0, pad)))
+    feats_p = np.pad(feats, ((0, pad), (0, 0)))
+    mask_p = np.pad(mask, (0, pad))
+    scores_b, hv_b = model.encode_and_classify(
+        jnp.asarray(adj_p), jnp.asarray(feats_p), jnp.asarray(mask_p),
+        *[jnp.asarray(x) for x in rest]
+    )
+    np.testing.assert_array_equal(np.asarray(hv_a), np.asarray(hv_b))
+    np.testing.assert_array_equal(np.asarray(scores_a), np.asarray(scores_b))
+
+
+def test_chain_equals_baseline_schedule():
+    # The L2 graph uses the restructured chain A^t (F u); the numpy oracle
+    # uses the baseline (A^t F) u. Their kernel-similarity vectors must
+    # agree (checked indirectly above; here on C directly via nee bypass).
+    shapes = dict(n=20, f=4, hops=3, bmax=48, s=6, d=64, classes=2)
+    inputs = model.example_inputs(**shapes, seed=5)
+    _, _, c_numpy = numpy_alg1(*inputs)
+    # Recompute C through the jax graph by projecting with identity-ish
+    # P_nys: use P = I_s padded into (d, s) to read C off the projection.
+    adj, feats, mask, u, b, w, cbs, hists, _, protos = inputs
+    # P rows j and s+j read off ±C_j: sign(+C_j) == +1 always (C >= 0),
+    # and sign(-C_j) == -1 iff C_j > 0 (sign(0) := +1 distinguishes the
+    # empty bins).
+    s_dim = shapes["s"]
+    p_probe = np.zeros((shapes["d"], s_dim), np.float32)
+    p_probe[:s_dim, :] = np.eye(s_dim, dtype=np.float32)
+    p_probe[s_dim : 2 * s_dim, :] = -np.eye(s_dim, dtype=np.float32)
+    _, hv = model.encode_and_classify(
+        jnp.asarray(adj), jnp.asarray(feats), jnp.asarray(mask), jnp.asarray(u),
+        jnp.asarray(b), jnp.asarray(w), jnp.asarray(cbs), jnp.asarray(hists),
+        jnp.asarray(p_probe), jnp.asarray(protos),
+    )
+    hv = np.asarray(hv)
+    np.testing.assert_array_equal(hv[:s_dim], np.ones(s_dim))
+    got_positive = hv[s_dim : 2 * s_dim] < 0
+    np.testing.assert_array_equal(got_positive, c_numpy > 0)
+
+
+def test_aot_exports_parse(tmp_path):
+    # The AOT path must produce loadable HLO text with the entry module.
+    from compile import aot
+
+    entry = aot.export_nee(str(tmp_path), d=64, s=8)
+    text = (tmp_path / entry["path"]).read_text()
+    assert "ENTRY" in text and "HloModule" in text
+    entry2 = aot.export_encode(str(tmp_path), n=8, f=3, hops=2, bmax=16, s=4, d=32, classes=2)
+    text2 = (tmp_path / entry2["path"]).read_text()
+    assert "ENTRY" in text2

@@ -1,0 +1,17 @@
+//! Regenerates Figure 7: classification accuracy of GraphHD / NysHD /
+//! NysX across the eight TUDatasets, plus (with --ablation via
+//! NYSX_ABLATION=1) the equal-budget Uniform@s_dpp ablation that isolates
+//! the DPP diversity effect from the landmark-count effect.
+//!
+//!     cargo bench --bench fig7_accuracy
+
+use nysx::bench::tables::*;
+
+fn main() {
+    let cfg = EvalConfig {
+        ablation: std::env::var("NYSX_ABLATION").is_ok(),
+        ..EvalConfig::default()
+    };
+    let evals = evaluate_all(&cfg);
+    println!("{}", render_fig7(&evals));
+}

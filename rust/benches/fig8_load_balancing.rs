@@ -1,0 +1,13 @@
+//! Regenerates Figure 8: the §4.2 static load-balancing ablation — FPGA
+//! latency with nnz-grouped schedule tables vs natural row order,
+//! normalized to the no-LB case.
+//!
+//!     cargo bench --bench fig8_load_balancing
+
+use nysx::bench::tables::*;
+
+fn main() {
+    let cfg = EvalConfig::default();
+    let evals = evaluate_all(&cfg);
+    println!("{}", render_fig8(&evals));
+}

@@ -1,0 +1,130 @@
+//! Micro-benchmarks of the L3 hot-path kernels (in-repo harness; no
+//! criterion in the vendored crate set): scheduled SpMV vs plain CSR vs
+//! dense, MPH lookup vs hashmap vs binary search, the NEE projection, the
+//! full optimized inference, and the MPH γ ablation.
+//!
+//!     cargo bench --bench micro_kernels
+
+use std::time::Duration;
+
+use nysx::bench::harness::{bench, black_box, print_results};
+use nysx::graph::tudataset::spec_by_name;
+use nysx::infer::NysxEngine;
+use nysx::kernel::node_codes;
+use nysx::model::train::train;
+use nysx::model::ModelConfig;
+use nysx::mph::{code_key, Mph, MphLookup};
+use nysx::sparse::{SchedulePolicy, ScheduleTable};
+use nysx::util::rng::Xoshiro256;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let mut results = Vec::new();
+
+    // --- a trained model + a representative query graph ---
+    let spec = spec_by_name("NCI1").unwrap();
+    let (ds, _s_uni, s_dpp) = spec.generate_scaled(42, 0.15);
+    let cfg = ModelConfig {
+        hops: spec.hops,
+        hv_dim: 10_000,
+        num_landmarks: s_dpp.min(ds.train.len()),
+        ..ModelConfig::default()
+    };
+    eprintln!("training NCI1@0.15 model for the micro benches...");
+    let model = train(&ds, &cfg);
+    let graph = &ds.train[0].0;
+
+    // --- SpMV variants on the largest landmark-histogram operand ---
+    let h = model
+        .landmark_hists
+        .iter()
+        .max_by_key(|h| h.nnz())
+        .unwrap();
+    let x: Vec<f64> = (0..h.cols).map(|i| (i % 7) as f64).collect();
+    let mut y = vec![0.0f64; h.rows];
+    let lb = ScheduleTable::build(h, 4, SchedulePolicy::NnzGrouped);
+    results.push(bench("spmv/csr-plain", budget, || {
+        h.spmv_into(black_box(&x), black_box(&mut y));
+    }));
+    results.push(bench("spmv/scheduled-lb", budget, || {
+        lb.run_spmv(h, black_box(&x), black_box(&mut y));
+    }));
+    let dense = h.to_dense();
+    let mut yd = vec![0.0f64; h.rows];
+    results.push(bench("spmv/dense-matvec", budget, || {
+        yd.copy_from_slice(&dense.matvec(black_box(&x)));
+    }));
+
+    // --- codebook lookup: MPH vs hashmap vs binary search ---
+    let cb = model
+        .codebooks
+        .iter()
+        .max_by_key(|c| c.len())
+        .unwrap();
+    let lookup = model
+        .lookups
+        .iter()
+        .max_by_key(|l| l.mph.num_keys())
+        .unwrap();
+    let codes = node_codes(graph, &model.lsh).concat();
+    results.push(bench("lookup/mph-o1", budget, || {
+        let mut acc = 0u32;
+        for &c in &codes {
+            if let Some(i) = lookup.get(code_key(c)) {
+                acc = acc.wrapping_add(i);
+            }
+        }
+        black_box(acc);
+    }));
+    results.push(bench("lookup/hashmap", budget, || {
+        let mut acc = 0u32;
+        for &c in &codes {
+            if let Some(i) = cb.index_of(c) {
+                acc = acc.wrapping_add(i);
+            }
+        }
+        black_box(acc);
+    }));
+    results.push(bench("lookup/binary-search", budget, || {
+        let mut acc = 0usize;
+        for &c in &codes {
+            if let Ok(i) = cb.codes.binary_search(&c) {
+                acc = acc.wrapping_add(i);
+            }
+        }
+        black_box(acc);
+    }));
+
+    // --- NEE projection (the paper's dominant kernel) ---
+    let c_vec: Vec<f64> = (0..model.s()).map(|i| (i % 11) as f64).collect();
+    let mut hv = vec![0.0f64; model.d()];
+    results.push(bench("nee/project-f32-rowmajor", budget, || {
+        model
+            .projection
+            .project_into(black_box(&c_vec), black_box(&mut hv));
+    }));
+
+    // --- whole optimized inference ---
+    let mut engine = NysxEngine::new(&model);
+    results.push(bench("infer/optimized-e2e", budget, || {
+        black_box(engine.infer(black_box(graph)).predicted);
+    }));
+
+    print_results(&results);
+
+    // --- MPH γ ablation (paper §5.2.2 sizing trade-off) ---
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let keys: Vec<u64> = (0..20_000).map(|_| rng.next_u64()).collect::<std::collections::HashSet<_>>().into_iter().collect();
+    let values: Vec<u32> = (0..keys.len() as u32).collect();
+    println!("\nMPH gamma ablation ({} keys):", keys.len());
+    println!("{:>6} {:>10} {:>8} {:>14}", "gamma", "bits/key", "levels", "mean probes");
+    for gamma in [1.1f64, 1.25, 1.5, 2.0, 3.0] {
+        let mph = Mph::build(&keys, gamma);
+        let st = mph.stats(&keys);
+        let _lk = MphLookup::build(&keys, &values, gamma);
+        println!(
+            "{gamma:>6} {:>10.2} {:>8} {:>14.2}",
+            st.bits_per_key, st.levels, st.expected_probes
+        );
+    }
+}

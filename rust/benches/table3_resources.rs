@@ -1,0 +1,13 @@
+//! Regenerates Table 3: estimated ZCU104 resource utilization of the
+//! §6.1 design point (4 PEs, 16 FP32 MAC lanes, 512-deep stream FIFO)
+//! with the deployed NCI1 model's on-chip buffer inventory.
+//!
+//!     cargo bench --bench table3_resources
+
+use nysx::bench::tables::*;
+
+fn main() {
+    let cfg = EvalConfig::default();
+    let evals = evaluate_all(&cfg);
+    println!("{}", render_table3(&evals));
+}

@@ -1,0 +1,14 @@
+//! Regenerates Table 6 + Figure 6: end-to-end latency per graph on
+//! CPU/GPU (platform models) and FPGA (cycle model), with and without
+//! DPP landmark reduction. Uses the shared cached evaluation driver.
+//!
+//!     cargo bench --bench table6_latency    [NYSX_SCALE=0.25 for quick runs]
+
+use nysx::bench::tables::*;
+
+fn main() {
+    let cfg = EvalConfig::default();
+    let evals = evaluate_all(&cfg);
+    println!("{}", render_table6(&evals));
+    println!("{}", render_fig6(&evals));
+}

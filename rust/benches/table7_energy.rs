@@ -1,0 +1,12 @@
+//! Regenerates Table 7: throughput, power and energy efficiency per
+//! platform (CPU/GPU analytic models, FPGA cycle+power model), with DPP.
+//!
+//!     cargo bench --bench table7_energy
+
+use nysx::bench::tables::*;
+
+fn main() {
+    let cfg = EvalConfig::default();
+    let evals = evaluate_all(&cfg);
+    println!("{}", render_table7(&evals));
+}

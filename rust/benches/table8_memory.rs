@@ -1,0 +1,12 @@
+//! Regenerates Table 8: model-parameter memory (Table 2 accounting) with
+//! and without DPP landmark reduction.
+//!
+//!     cargo bench --bench table8_memory
+
+use nysx::bench::tables::*;
+
+fn main() {
+    let cfg = EvalConfig::default();
+    let evals = evaluate_all(&cfg);
+    println!("{}", render_table8(&evals));
+}

@@ -1,0 +1,13 @@
+//! Baselines: the GraphHD and NysHD algorithmic baselines of Fig 7 and
+//! the analytic CPU/GPU platform models of Tables 6-7.
+
+pub mod graphhd;
+pub mod nyshd;
+pub mod platform;
+
+pub use graphhd::{evaluate_graphhd, pagerank, train_graphhd, GraphHdModel};
+pub use nyshd::{train_nyshd, train_nysx};
+pub use platform::{
+    estimate_energy_mj, estimate_latency_ms, PlatformSpec, Workload, CPU_RYZEN_5625U,
+    GPU_RTX_A4000,
+};

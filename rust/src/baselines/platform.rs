@@ -1,0 +1,223 @@
+//! Analytic CPU/GPU latency + energy models (the paper's baseline
+//! platforms, Table 5). We have neither the Ryzen 5 5625U nor the RTX
+//! A4000, so batch-1 PyTorch inference is modeled as a sequence of
+//! framework ops — each costing `max(flops/effective_rate,
+//! bytes/effective_bw)` plus a per-op dispatch overhead — with the
+//! complexity expressions of Table 1 supplying the per-op flops/bytes.
+//! Effective rates are calibrated once against the paper's reported CPU
+//! latencies (see EXPERIMENTS.md §Calibration); the quantities we then
+//! *reproduce* are the cross-platform ratios.
+//!
+//! Baselines run **dense** kernels (the paper notes NysHD "does not
+//! exploit the sparsity in adjacency and histogram matrices"), and the
+//! codebook lookup stage is host-side dictionary work — on the GPU this
+//! forces a device↔host round trip per hop.
+
+use crate::model::NysHdcModel;
+
+/// Effective-throughput description of a baseline platform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    /// Effective dense FP32 throughput for batch-1 tensor ops (GFLOP/s).
+    pub dense_gflops: f64,
+    /// Effective memory bandwidth for streaming tensor ops (GB/s).
+    pub mem_bw_gbps: f64,
+    /// Per-framework-op dispatch overhead (µs).
+    pub op_overhead_us: f64,
+    /// Host dictionary lookup cost per key (ns).
+    pub lookup_ns: f64,
+    /// Per-hop host sync cost (µs) — device↔host code transfer for the
+    /// codebook stage (0 for CPU).
+    pub hop_sync_us: f64,
+    /// Fixed per-inference cost (µs): input staging, final sync.
+    pub fixed_us: f64,
+    /// Average device power during inference (W), as measured in Table 7.
+    pub power_w: f64,
+}
+
+/// AMD Ryzen 5 5625U (6C/12T) running PyTorch 2.4, batch size 1.
+pub const CPU_RYZEN_5625U: PlatformSpec = PlatformSpec {
+    name: "CPU (Ryzen 5 5625U)",
+    dense_gflops: 30.0,
+    mem_bw_gbps: 12.0,
+    op_overhead_us: 100.0,
+    lookup_ns: 150.0,
+    hop_sync_us: 0.0,
+    fixed_us: 120.0,
+    power_w: 24.9,
+};
+
+/// NVIDIA RTX A4000 (PyTorch + CUDA 12.1), batch size 1, parameters
+/// resident in device memory.
+pub const GPU_RTX_A4000: PlatformSpec = PlatformSpec {
+    name: "GPU (RTX A4000)",
+    dense_gflops: 2_000.0,
+    mem_bw_gbps: 300.0,
+    op_overhead_us: 70.0,
+    lookup_ns: 150.0, // dictionary stage still runs on the host
+    hop_sync_us: 350.0,
+    fixed_us: 250.0,
+    power_w: 60.5,
+};
+
+/// Average per-inference workload parameters for one (model, dataset)
+/// pair — the inputs to Table 1's complexity expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub n: f64,
+    pub f: f64,
+    pub hops: usize,
+    /// |B^(t)| per hop.
+    pub hist_bins: Vec<f64>,
+    pub s: f64,
+    pub d: f64,
+    pub classes: f64,
+}
+
+impl Workload {
+    /// Derive from a trained model and dataset-average graph statistics.
+    pub fn from_model(model: &NysHdcModel, avg_nodes: f64) -> Self {
+        Self {
+            n: avg_nodes,
+            f: model.feature_dim as f64,
+            hops: model.hops(),
+            hist_bins: model.codebooks.iter().map(|c| c.len() as f64).collect(),
+            s: model.s() as f64,
+            d: model.d() as f64,
+            classes: model.num_classes as f64,
+        }
+    }
+}
+
+/// One modeled framework op.
+fn op_time_s(spec: &PlatformSpec, flops: f64, bytes: f64) -> f64 {
+    let compute = flops / (spec.dense_gflops * 1e9);
+    let memory = bytes / (spec.mem_bw_gbps * 1e9);
+    compute.max(memory) + spec.op_overhead_us * 1e-6
+}
+
+/// Estimated end-to-end batch-1 latency in milliseconds.
+pub fn estimate_latency_ms(spec: &PlatformSpec, w: &Workload) -> f64 {
+    let mut t = spec.fixed_us * 1e-6;
+    for hop in 0..w.hops {
+        // Feature propagation M ← A M (dense, hops-1 times: skipped at
+        // hop 0).
+        if hop > 0 {
+            t += op_time_s(
+                spec,
+                2.0 * w.n * w.n * w.f,
+                4.0 * (w.n * w.n + 2.0 * w.n * w.f),
+            );
+        }
+        // LSH projection (M u + b)/w.
+        t += op_time_s(spec, 2.0 * w.n * w.f, 4.0 * w.n * (w.f + 1.0));
+        // Floor to integer codes.
+        t += op_time_s(spec, w.n, 8.0 * w.n);
+        // Host-side codebook dictionary lookups (+ device sync on GPU).
+        t += w.n * spec.lookup_ns * 1e-9 + spec.op_overhead_us * 1e-6 + spec.hop_sync_us * 1e-6;
+        // Histogram scatter-add.
+        t += op_time_s(spec, w.n, 8.0 * w.n);
+        // Landmark similarity: DENSE s×|B| matvec.
+        let bins = w.hist_bins.get(hop).copied().unwrap_or(0.0);
+        t += op_time_s(spec, 2.0 * w.s * bins, 4.0 * w.s * bins);
+        // Accumulate C += v.
+        t += op_time_s(spec, w.s, 8.0 * w.s);
+    }
+    // Nyström projection y = P_nys C (memory bound: d×s stream).
+    t += op_time_s(spec, 2.0 * w.s * w.d, 4.0 * w.s * w.d);
+    // sign(y).
+    t += op_time_s(spec, w.d, 8.0 * w.d);
+    // Prototype matching + argmax.
+    t += op_time_s(spec, 2.0 * w.classes * w.d, w.classes * w.d);
+    t += op_time_s(spec, w.classes, 8.0 * w.classes);
+    t * 1e3
+}
+
+/// Energy per inference in millijoules.
+pub fn estimate_energy_mj(spec: &PlatformSpec, w: &Workload) -> f64 {
+    spec.power_w * estimate_latency_ms(spec, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nci1_like() -> Workload {
+        Workload {
+            n: 30.0,
+            f: 37.0,
+            hops: 4,
+            hist_bins: vec![500.0, 700.0, 900.0, 1100.0],
+            s: 328.0,
+            d: 10_000.0,
+            classes: 2.0,
+        }
+    }
+
+    fn dd_like() -> Workload {
+        Workload {
+            n: 284.0,
+            f: 89.0,
+            hops: 4,
+            hist_bins: vec![3000.0, 5000.0, 6000.0, 7000.0],
+            s: 327.0,
+            d: 10_000.0,
+            classes: 2.0,
+        }
+    }
+
+    #[test]
+    fn cpu_latencies_in_paper_band() {
+        // Paper Table 6 CPU column spans 2.85–7.47 ms; the calibrated
+        // model must land small-molecule datasets at a few ms and DD
+        // higher than NCI1.
+        let nci1 = estimate_latency_ms(&CPU_RYZEN_5625U, &nci1_like());
+        let dd = estimate_latency_ms(&CPU_RYZEN_5625U, &dd_like());
+        assert!(nci1 > 1.5 && nci1 < 9.0, "NCI1 CPU {nci1} ms");
+        assert!(dd > nci1, "DD ({dd}) must exceed NCI1 ({nci1})");
+        assert!(dd < 15.0, "DD CPU {dd} ms");
+    }
+
+    #[test]
+    fn gpu_wins_on_compute_heavy_loses_on_hop_heavy() {
+        // DD (big dense propagation): GPU < CPU.
+        let dd_cpu = estimate_latency_ms(&CPU_RYZEN_5625U, &dd_like());
+        let dd_gpu = estimate_latency_ms(&GPU_RTX_A4000, &dd_like());
+        assert!(dd_gpu < dd_cpu, "GPU should win on DD: {dd_gpu} vs {dd_cpu}");
+        // Hop-heavy tiny graphs (MUTAG-like, 6 hops): GPU ≥ CPU (the
+        // paper's MUTAG/COX2 anomaly).
+        let mutag = Workload {
+            n: 18.0,
+            f: 7.0,
+            hops: 6,
+            hist_bins: vec![80.0; 6],
+            s: 148.0,
+            d: 10_000.0,
+            classes: 2.0,
+        };
+        let mutag_cpu = estimate_latency_ms(&CPU_RYZEN_5625U, &mutag);
+        let mutag_gpu = estimate_latency_ms(&GPU_RTX_A4000, &mutag);
+        assert!(
+            mutag_gpu > mutag_cpu * 0.95,
+            "GPU should not clearly win hop-heavy tiny graphs: {mutag_gpu} vs {mutag_cpu}"
+        );
+    }
+
+    #[test]
+    fn dpp_reduction_cuts_latency() {
+        let mut w = nci1_like();
+        let before = estimate_latency_ms(&CPU_RYZEN_5625U, &w);
+        w.s *= 0.63;
+        let after = estimate_latency_ms(&CPU_RYZEN_5625U, &w);
+        assert!(after < before);
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let w = nci1_like();
+        let t = estimate_latency_ms(&CPU_RYZEN_5625U, &w);
+        let e = estimate_energy_mj(&CPU_RYZEN_5625U, &w);
+        assert!((e - t * 24.9).abs() < 1e-9);
+    }
+}

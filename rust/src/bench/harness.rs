@@ -1,0 +1,125 @@
+//! Criterion-style micro-benchmark harness (no `criterion` in the
+//! vendored crate set): warmup, adaptive iteration count targeting a
+//! fixed measurement budget, mean/std/min/p50 reporting.
+
+use std::time::{Duration, Instant};
+
+use crate::util::{mean, percentile, stddev};
+
+/// One benchmark's measurements.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Benchmark a closure: ~`budget` of measurement after warmup, split into
+/// `samples` batches. Returns per-call statistics.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration: estimate per-call cost.
+    let cal_start = Instant::now();
+    let mut cal_iters = 0u64;
+    while cal_start.elapsed() < budget.div_f64(10.0).max(Duration::from_millis(5)) {
+        f();
+        cal_iters += 1;
+    }
+    let per_call = cal_start.elapsed().as_nanos() as f64 / cal_iters as f64;
+
+    let samples = 20usize;
+    let per_sample_ns = budget.as_nanos() as f64 / samples as f64;
+    let iters = ((per_sample_ns / per_call).ceil() as u64).max(1);
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        iters_per_sample: iters,
+        mean_ns: mean(&times),
+        std_ns: stddev(&times),
+        min_ns: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        p50_ns: percentile(&times, 50.0),
+    }
+}
+
+/// Pretty-print a batch of results.
+pub fn print_results(results: &[BenchResult]) {
+    let mut table = crate::util::table::Table::new("microbenchmarks")
+        .header(&["bench", "mean", "p50", "min", "±std", "iters"]);
+    for r in results {
+        let fmt = |ns: f64| {
+            if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.2} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        table.row(&[
+            r.name.clone(),
+            fmt(r.mean_ns),
+            fmt(r.p50_ns),
+            fmt(r.min_ns),
+            fmt(r.std_ns),
+            format!("{}x{}", r.samples, r.iters_per_sample),
+        ]);
+    }
+    table.print();
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", Duration::from_millis(50), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.mean_ns < 1e6, "a wrapping add should not take 1ms");
+        assert!(r.min_ns <= r.mean_ns + 1e-9);
+    }
+
+    #[test]
+    fn relative_ordering_detected() {
+        let cheap = bench("cheap", Duration::from_millis(40), || {
+            black_box((0..10u64).sum::<u64>());
+        });
+        let pricey = bench("pricey", Duration::from_millis(40), || {
+            black_box((0..10_000u64).sum::<u64>());
+        });
+        assert!(pricey.mean_ns > cheap.mean_ns);
+    }
+}

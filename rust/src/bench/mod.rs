@@ -1,0 +1,9 @@
+//! Benchmark support: the criterion-style timing harness and the shared
+//! evaluation driver that regenerates every table and figure of the
+//! paper.
+
+pub mod harness;
+pub mod tables;
+
+pub use harness::{bench, black_box, print_results, BenchResult};
+pub use tables::{evaluate_all, evaluate_dataset, evaluate_dataset_cached, DatasetEval, EvalConfig};

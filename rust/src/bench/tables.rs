@@ -1,0 +1,778 @@
+//! The evaluation driver shared by `examples/full_evaluation` and every
+//! paper-table bench: trains GraphHD / NysHD / NysX on each synthetic
+//! TUDataset, runs the platform models and the FPGA cycle model, and
+//! renders Tables 3/4/6/7/8 and Figures 6/7/8.
+//!
+//! Results are cached as JSON under `results/cache/` keyed by
+//! (scale, seed, hv_dim) so the seven `cargo bench` targets don't retrain
+//! eight datasets each.
+
+use std::path::PathBuf;
+
+use crate::baselines::{
+    estimate_latency_ms, evaluate_graphhd, train_graphhd, train_nyshd, train_nysx, Workload,
+    CPU_RYZEN_5625U, GPU_RTX_A4000,
+};
+use crate::graph::tudataset::{TuSpec, TU_SPECS};
+use crate::graph::GraphDataset;
+use crate::infer::NysxEngine;
+use crate::model::train::evaluate;
+use crate::model::{ModelConfig, NysHdcModel};
+use crate::sim::{
+    estimate_resources, simulate, AcceleratorConfig, PowerModel, SimOptions,
+};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Evaluation configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalConfig {
+    /// Dataset scale factor (1.0 = paper-size datasets).
+    pub scale: f64,
+    pub seed: u64,
+    /// HV dimensionality d (paper: 10^4).
+    pub hv_dim: usize,
+    /// Also train the equal-budget Uniform@s_dpp ablation.
+    pub ablation: bool,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self {
+            scale: std::env::var("NYSX_SCALE")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1.0),
+            seed: 42,
+            hv_dim: 10_000,
+            ablation: false,
+        }
+    }
+}
+
+/// All measured quantities for one dataset (flat & JSON-cacheable).
+#[derive(Debug, Clone, Default)]
+pub struct DatasetEval {
+    pub name: String,
+    // Table 4
+    pub num_train: usize,
+    pub num_test: usize,
+    pub avg_nodes: f64,
+    pub avg_edges: f64,
+    pub classes: usize,
+    pub feature_dim: usize,
+    pub hops: usize,
+    pub s_uniform: usize,
+    pub s_dpp: usize,
+    // Fig 7
+    pub acc_graphhd: f64,
+    pub acc_nyshd: f64,
+    pub acc_nysx: f64,
+    /// Uniform sampling at the reduced budget (ablation; NaN if skipped).
+    pub acc_uniform_at_sdpp: f64,
+    // Table 6 (ms)
+    pub cpu_ms: f64,
+    pub cpu_dpp_ms: f64,
+    pub gpu_ms: f64,
+    pub gpu_dpp_ms: f64,
+    pub fpga_ms: f64,
+    pub fpga_dpp_ms: f64,
+    // Fig 8
+    pub fpga_dpp_nolb_ms: f64,
+    pub fpga_sparse_lb_ms: f64,
+    pub fpga_sparse_nolb_ms: f64,
+    // Table 7
+    pub fpga_power_w: f64,
+    pub fpga_dpp_mj: f64,
+    pub fpga_mj: f64,
+    pub nee_fraction: f64,
+    // Table 8 (MB, dense Table-2 accounting)
+    pub mem_no_dpp_mb: f64,
+    pub mem_dpp_mb: f64,
+    // Table 3 inputs (from the deployed NysX model)
+    pub mem_codebooks: usize,
+    pub mem_hists_csr: usize,
+    pub mem_mph: usize,
+    pub mem_schedules: usize,
+    pub mem_protos: usize,
+    pub max_hist_bins: usize,
+}
+
+const FIELDS_F64: &[&str] = &[
+    "avg_nodes",
+    "avg_edges",
+    "acc_graphhd",
+    "acc_nyshd",
+    "acc_nysx",
+    "acc_uniform_at_sdpp",
+    "cpu_ms",
+    "cpu_dpp_ms",
+    "gpu_ms",
+    "gpu_dpp_ms",
+    "fpga_ms",
+    "fpga_dpp_ms",
+    "fpga_dpp_nolb_ms",
+    "fpga_sparse_lb_ms",
+    "fpga_sparse_nolb_ms",
+    "fpga_power_w",
+    "fpga_dpp_mj",
+    "fpga_mj",
+    "nee_fraction",
+    "mem_no_dpp_mb",
+    "mem_dpp_mb",
+];
+
+const FIELDS_USIZE: &[&str] = &[
+    "num_train",
+    "num_test",
+    "classes",
+    "feature_dim",
+    "hops",
+    "s_uniform",
+    "s_dpp",
+    "mem_codebooks",
+    "mem_hists_csr",
+    "mem_mph",
+    "mem_schedules",
+    "mem_protos",
+    "max_hist_bins",
+];
+
+impl DatasetEval {
+    fn get_f64(&self, key: &str) -> f64 {
+        match key {
+            "avg_nodes" => self.avg_nodes,
+            "avg_edges" => self.avg_edges,
+            "acc_graphhd" => self.acc_graphhd,
+            "acc_nyshd" => self.acc_nyshd,
+            "acc_nysx" => self.acc_nysx,
+            "acc_uniform_at_sdpp" => self.acc_uniform_at_sdpp,
+            "cpu_ms" => self.cpu_ms,
+            "cpu_dpp_ms" => self.cpu_dpp_ms,
+            "gpu_ms" => self.gpu_ms,
+            "gpu_dpp_ms" => self.gpu_dpp_ms,
+            "fpga_ms" => self.fpga_ms,
+            "fpga_dpp_ms" => self.fpga_dpp_ms,
+            "fpga_dpp_nolb_ms" => self.fpga_dpp_nolb_ms,
+            "fpga_sparse_lb_ms" => self.fpga_sparse_lb_ms,
+            "fpga_sparse_nolb_ms" => self.fpga_sparse_nolb_ms,
+            "fpga_power_w" => self.fpga_power_w,
+            "fpga_dpp_mj" => self.fpga_dpp_mj,
+            "fpga_mj" => self.fpga_mj,
+            "nee_fraction" => self.nee_fraction,
+            "mem_no_dpp_mb" => self.mem_no_dpp_mb,
+            "mem_dpp_mb" => self.mem_dpp_mb,
+            _ => panic!("unknown f64 field {key}"),
+        }
+    }
+
+    fn set_f64(&mut self, key: &str, v: f64) {
+        match key {
+            "avg_nodes" => self.avg_nodes = v,
+            "avg_edges" => self.avg_edges = v,
+            "acc_graphhd" => self.acc_graphhd = v,
+            "acc_nyshd" => self.acc_nyshd = v,
+            "acc_nysx" => self.acc_nysx = v,
+            "acc_uniform_at_sdpp" => self.acc_uniform_at_sdpp = v,
+            "cpu_ms" => self.cpu_ms = v,
+            "cpu_dpp_ms" => self.cpu_dpp_ms = v,
+            "gpu_ms" => self.gpu_ms = v,
+            "gpu_dpp_ms" => self.gpu_dpp_ms = v,
+            "fpga_ms" => self.fpga_ms = v,
+            "fpga_dpp_ms" => self.fpga_dpp_ms = v,
+            "fpga_dpp_nolb_ms" => self.fpga_dpp_nolb_ms = v,
+            "fpga_sparse_lb_ms" => self.fpga_sparse_lb_ms = v,
+            "fpga_sparse_nolb_ms" => self.fpga_sparse_nolb_ms = v,
+            "fpga_power_w" => self.fpga_power_w = v,
+            "fpga_dpp_mj" => self.fpga_dpp_mj = v,
+            "fpga_mj" => self.fpga_mj = v,
+            "nee_fraction" => self.nee_fraction = v,
+            "mem_no_dpp_mb" => self.mem_no_dpp_mb = v,
+            "mem_dpp_mb" => self.mem_dpp_mb = v,
+            _ => panic!("unknown f64 field {key}"),
+        }
+    }
+
+    fn get_usize(&self, key: &str) -> usize {
+        match key {
+            "num_train" => self.num_train,
+            "num_test" => self.num_test,
+            "classes" => self.classes,
+            "feature_dim" => self.feature_dim,
+            "hops" => self.hops,
+            "s_uniform" => self.s_uniform,
+            "s_dpp" => self.s_dpp,
+            "mem_codebooks" => self.mem_codebooks,
+            "mem_hists_csr" => self.mem_hists_csr,
+            "mem_mph" => self.mem_mph,
+            "mem_schedules" => self.mem_schedules,
+            "mem_protos" => self.mem_protos,
+            "max_hist_bins" => self.max_hist_bins,
+            _ => panic!("unknown usize field {key}"),
+        }
+    }
+
+    fn set_usize(&mut self, key: &str, v: usize) {
+        match key {
+            "num_train" => self.num_train = v,
+            "num_test" => self.num_test = v,
+            "classes" => self.classes = v,
+            "feature_dim" => self.feature_dim = v,
+            "hops" => self.hops = v,
+            "s_uniform" => self.s_uniform = v,
+            "s_dpp" => self.s_dpp = v,
+            "mem_codebooks" => self.mem_codebooks = v,
+            "mem_hists_csr" => self.mem_hists_csr = v,
+            "mem_mph" => self.mem_mph = v,
+            "mem_schedules" => self.mem_schedules = v,
+            "mem_protos" => self.mem_protos = v,
+            "max_hist_bins" => self.max_hist_bins = v,
+            _ => panic!("unknown usize field {key}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("name", Json::str(self.name.clone()))];
+        for &k in FIELDS_F64 {
+            let v = self.get_f64(k);
+            pairs.push((k, if v.is_nan() { Json::Null } else { Json::num(v) }));
+        }
+        for &k in FIELDS_USIZE {
+            pairs.push((k, Json::num(self.get_usize(k) as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(doc: &Json) -> Option<Self> {
+        let mut e = DatasetEval {
+            name: doc.get("name")?.as_str()?.to_string(),
+            ..Default::default()
+        };
+        for &k in FIELDS_F64 {
+            match doc.get(k) {
+                Some(Json::Null) | None => e.set_f64(k, f64::NAN),
+                Some(v) => e.set_f64(k, v.as_f64()?),
+            }
+        }
+        for &k in FIELDS_USIZE {
+            e.set_usize(k, doc.get(k)?.as_usize()?);
+        }
+        Some(e)
+    }
+}
+
+fn cache_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results/cache")
+}
+
+fn cache_key(spec: &TuSpec, cfg: &EvalConfig) -> PathBuf {
+    cache_dir().join(format!(
+        "{}_s{}_seed{}_d{}.json",
+        spec.name,
+        (cfg.scale * 100.0).round() as usize,
+        cfg.seed,
+        cfg.hv_dim
+    ))
+}
+
+/// Mean simulated FPGA latency/energy/power over (a sample of) the test
+/// split, plus the no-LB ablation and NEE fraction.
+struct SplitSim {
+    ms: f64,
+    mj: f64,
+    watts: f64,
+    nolb_ms: f64,
+    nee_frac: f64,
+    /// LB-affected (LSHU + KSE) stage time under the §4.2 schedule.
+    sparse_lb_ms: f64,
+    /// ... and under natural row order.
+    sparse_nolb_ms: f64,
+}
+
+fn simulate_split(
+    model: &NysHdcModel,
+    ds: &GraphDataset,
+    accel: &AcceleratorConfig,
+    power: &PowerModel,
+) -> SplitSim {
+    let mut engine = NysxEngine::new(model);
+    let sample = ds.test.iter().take(120);
+    let mut ms = Vec::new();
+    let mut mj = Vec::new();
+    let mut watts = Vec::new();
+    let mut nolb_ms = Vec::new();
+    let mut nee_frac = Vec::new();
+    let mut sparse_lb = Vec::new();
+    let mut sparse_nolb = Vec::new();
+    for (g, _) in sample {
+        let trace = engine.infer(g).trace;
+        let lb = simulate(&trace, accel, SimOptions::default());
+        let nolb = simulate(
+            &trace,
+            accel,
+            SimOptions {
+                load_balanced: false,
+                ..SimOptions::default()
+            },
+        );
+        let e = power.energy(&lb, accel);
+        ms.push(e.time_ms);
+        mj.push(e.energy_mj);
+        watts.push(e.avg_power_w);
+        nolb_ms.push(accel.cycles_to_ms(nolb.total()));
+        nee_frac.push(lb.nee_fraction());
+        sparse_lb.push(accel.cycles_to_ms(lb.lshu + lb.kse));
+        sparse_nolb.push(accel.cycles_to_ms(nolb.lshu + nolb.kse));
+    }
+    SplitSim {
+        ms: crate::util::mean(&ms),
+        mj: crate::util::mean(&mj),
+        watts: crate::util::mean(&watts),
+        nolb_ms: crate::util::mean(&nolb_ms),
+        nee_frac: crate::util::mean(&nee_frac),
+        sparse_lb_ms: crate::util::mean(&sparse_lb),
+        sparse_nolb_ms: crate::util::mean(&sparse_nolb),
+    }
+}
+
+/// Train + evaluate one dataset (no cache).
+pub fn evaluate_dataset(spec: &TuSpec, cfg: &EvalConfig) -> DatasetEval {
+    let (ds, s_uni, s_dpp) = spec.generate_scaled(cfg.seed, cfg.scale);
+    let stats = ds.stats();
+    let base = ModelConfig {
+        hops: spec.hops,
+        hv_dim: cfg.hv_dim,
+        seed: cfg.seed ^ 0x5eed,
+        ..ModelConfig::default()
+    };
+
+    log::info!("[{}] training NysHD (uniform, s={s_uni})", spec.name);
+    let nyshd = train_nyshd(&ds, s_uni, &base);
+    log::info!("[{}] training NysX (hybrid DPP, s={s_dpp})", spec.name);
+    let nysx = train_nysx(&ds, s_dpp, &base);
+    log::info!("[{}] training GraphHD", spec.name);
+    let ghd = train_graphhd(&ds, cfg.hv_dim, cfg.seed ^ 0x6ead);
+
+    let acc_nyshd = evaluate(&nyshd, &ds.test);
+    let acc_nysx = evaluate(&nysx, &ds.test);
+    let acc_graphhd = evaluate_graphhd(&ghd, &ds.test);
+    let acc_uniform_at_sdpp = if cfg.ablation {
+        evaluate(&train_nyshd(&ds, s_dpp, &base), &ds.test)
+    } else {
+        f64::NAN
+    };
+
+    // Platform models (Table 1 complexity × Table 5 constants).
+    let w_uni = Workload::from_model(&nyshd, stats.avg_nodes);
+    let w_dpp = Workload::from_model(&nysx, stats.avg_nodes);
+    let cpu_ms = estimate_latency_ms(&CPU_RYZEN_5625U, &w_uni);
+    let cpu_dpp_ms = estimate_latency_ms(&CPU_RYZEN_5625U, &w_dpp);
+    let gpu_ms = estimate_latency_ms(&GPU_RTX_A4000, &w_uni);
+    let gpu_dpp_ms = estimate_latency_ms(&GPU_RTX_A4000, &w_dpp);
+
+    // FPGA cycle model over real traces.
+    let accel = AcceleratorConfig::zcu104();
+    let power = PowerModel::default();
+    let sim_uni = simulate_split(&nyshd, &ds, &accel, &power);
+    let sim_dpp = simulate_split(&nysx, &ds, &accel, &power);
+
+    let mem_uni = nyshd.memory_report();
+    let mem_dpp = nysx.memory_report();
+    let mb = |b: usize| b as f64 / (1024.0 * 1024.0);
+
+    DatasetEval {
+        name: spec.name.to_string(),
+        num_train: stats.num_train,
+        num_test: stats.num_test,
+        avg_nodes: stats.avg_nodes,
+        avg_edges: stats.avg_edges,
+        classes: stats.num_classes,
+        feature_dim: stats.feature_dim,
+        hops: spec.hops,
+        s_uniform: s_uni,
+        s_dpp,
+        acc_graphhd,
+        acc_nyshd,
+        acc_nysx,
+        acc_uniform_at_sdpp,
+        cpu_ms,
+        cpu_dpp_ms,
+        gpu_ms,
+        gpu_dpp_ms,
+        fpga_ms: sim_uni.ms,
+        fpga_dpp_ms: sim_dpp.ms,
+        fpga_dpp_nolb_ms: sim_dpp.nolb_ms,
+        fpga_sparse_lb_ms: sim_dpp.sparse_lb_ms,
+        fpga_sparse_nolb_ms: sim_dpp.sparse_nolb_ms,
+        fpga_power_w: sim_dpp.watts,
+        fpga_dpp_mj: sim_dpp.mj,
+        fpga_mj: sim_uni.mj,
+        nee_fraction: sim_dpp.nee_frac,
+        mem_no_dpp_mb: mb(mem_uni.total_dense()),
+        mem_dpp_mb: mb(mem_dpp.total_dense()),
+        mem_codebooks: mem_dpp.codebooks,
+        mem_hists_csr: mem_dpp.hists_csr,
+        mem_mph: mem_dpp.mph,
+        mem_schedules: mem_dpp.schedules,
+        mem_protos: mem_dpp.prototypes,
+        max_hist_bins: nysx.codebooks.iter().map(|c| c.len()).max().unwrap_or(0),
+    }
+}
+
+/// Evaluate one dataset with JSON caching.
+pub fn evaluate_dataset_cached(spec: &TuSpec, cfg: &EvalConfig) -> DatasetEval {
+    let path = cache_key(spec, cfg);
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Ok(doc) = Json::parse(&text) {
+            if let Some(eval) = DatasetEval::from_json(&doc) {
+                // Ablation results must be present if requested.
+                if !cfg.ablation || !eval.acc_uniform_at_sdpp.is_nan() {
+                    return eval;
+                }
+            }
+        }
+    }
+    let eval = evaluate_dataset(spec, cfg);
+    std::fs::create_dir_all(cache_dir()).ok();
+    std::fs::write(&path, eval.to_json().to_string()).ok();
+    eval
+}
+
+/// Evaluate all eight datasets (cached).
+pub fn evaluate_all(cfg: &EvalConfig) -> Vec<DatasetEval> {
+    TU_SPECS
+        .iter()
+        .map(|spec| {
+            eprintln!("== evaluating {} (scale {}) ==", spec.name, cfg.scale);
+            evaluate_dataset_cached(spec, cfg)
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------ renderers --
+
+pub fn render_table4(evals: &[DatasetEval]) -> String {
+    let mut t = Table::new("Table 4: Summary of Graph Classification Datasets (synthetic)")
+        .header(&["Task", "#Train", "#Test", "Avg.Nodes", "Avg.Edges", "Classes", "f", "H"]);
+    for e in evals {
+        t.row(&[
+            e.name.clone(),
+            e.num_train.to_string(),
+            e.num_test.to_string(),
+            format!("{:.0}", e.avg_nodes),
+            format!("{:.0}", e.avg_edges),
+            e.classes.to_string(),
+            e.feature_dim.to_string(),
+            e.hops.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+pub fn render_table6(evals: &[DatasetEval]) -> String {
+    let mut t = Table::new("Table 6: End-to-end latency (ms) per graph; speedup vs CPU (no DPP)")
+        .header(&["Dataset", "CPU", "CPU+DPP", "GPU", "GPU+DPP", "FPGA", "FPGA+DPP"]);
+    let cell = |ms: f64, base: f64| format!("{:.2} ({:.2}x)", ms, base / ms);
+    for e in evals {
+        t.row(&[
+            e.name.clone(),
+            cell(e.cpu_ms, e.cpu_ms),
+            cell(e.cpu_dpp_ms, e.cpu_ms),
+            cell(e.gpu_ms, e.cpu_ms),
+            cell(e.gpu_dpp_ms, e.cpu_ms),
+            cell(e.fpga_ms, e.cpu_ms),
+            cell(e.fpga_dpp_ms, e.cpu_ms),
+        ]);
+    }
+    let mean_speedup_cpu =
+        crate::util::mean(&evals.iter().map(|e| e.cpu_ms / e.fpga_dpp_ms).collect::<Vec<_>>());
+    let mean_speedup_gpu =
+        crate::util::mean(&evals.iter().map(|e| e.gpu_ms / e.fpga_dpp_ms).collect::<Vec<_>>());
+    format!(
+        "{}\nMean FPGA+DPP speedup: {:.2}x vs CPU (paper: 6.85x), {:.2}x vs GPU (paper: 4.32x)\n",
+        t.render(),
+        mean_speedup_cpu,
+        mean_speedup_gpu
+    )
+}
+
+pub fn render_fig6(evals: &[DatasetEval]) -> String {
+    let mut t = Table::new("Figure 6: Speedup over CPU baseline (no DPP)").header(&[
+        "Dataset", "CPU+DPP", "GPU", "GPU+DPP", "FPGA", "FPGA+DPP",
+    ]);
+    for e in evals {
+        let sp = |ms: f64| format!("{:.2}x", e.cpu_ms / ms);
+        t.row(&[
+            e.name.clone(),
+            sp(e.cpu_dpp_ms),
+            sp(e.gpu_ms),
+            sp(e.gpu_dpp_ms),
+            sp(e.fpga_ms),
+            sp(e.fpga_dpp_ms),
+        ]);
+    }
+    t.render()
+}
+
+pub fn render_table7(evals: &[DatasetEval]) -> String {
+    let mut t = Table::new("Table 7: Throughput, power, energy efficiency (with DPP)").header(&[
+        "Dataset",
+        "Device",
+        "Thru (g/s)",
+        "Power (W)",
+        "mJ/graph",
+        "vs FPGA",
+    ]);
+    for e in evals {
+        let fpga_mj = e.fpga_dpp_mj;
+        let rows: [(&str, f64, f64); 3] = [
+            ("CPU", e.cpu_dpp_ms, CPU_RYZEN_5625U.power_w),
+            ("GPU", e.gpu_dpp_ms, GPU_RTX_A4000.power_w),
+            ("FPGA", e.fpga_dpp_ms, e.fpga_power_w),
+        ];
+        for (dev, ms, w) in rows {
+            let mj = w * ms;
+            let mj = if dev == "FPGA" { fpga_mj } else { mj };
+            t.row(&[
+                e.name.clone(),
+                dev.to_string(),
+                format!("{:.0}", 1000.0 / ms),
+                format!("{:.2}", w),
+                format!("{:.2}", mj),
+                format!("({:.0}x)", mj / fpga_mj),
+            ]);
+        }
+    }
+    let cpu_ratio = crate::util::mean(
+        &evals
+            .iter()
+            .map(|e| CPU_RYZEN_5625U.power_w * e.cpu_dpp_ms / e.fpga_dpp_mj)
+            .collect::<Vec<_>>(),
+    );
+    let gpu_ratio = crate::util::mean(
+        &evals
+            .iter()
+            .map(|e| GPU_RTX_A4000.power_w * e.gpu_dpp_ms / e.fpga_dpp_mj)
+            .collect::<Vec<_>>(),
+    );
+    format!(
+        "{}\nMean energy ratio: {:.0}x vs CPU (paper: 169x), {:.0}x vs GPU (paper: 314x)\n",
+        t.render(),
+        cpu_ratio,
+        gpu_ratio
+    )
+}
+
+pub fn render_fig7(evals: &[DatasetEval]) -> String {
+    let ablation = evals.iter().any(|e| !e.acc_uniform_at_sdpp.is_nan());
+    let mut header = vec!["Dataset", "GraphHD", "NysHD", "NysX (ours)"];
+    if ablation {
+        header.push("Uniform@s_dpp");
+    }
+    let mut t = Table::new("Figure 7: Classification accuracy (%)").header(&header);
+    for e in evals {
+        let mut row = vec![
+            e.name.clone(),
+            format!("{:.1}", 100.0 * e.acc_graphhd),
+            format!("{:.1}", 100.0 * e.acc_nyshd),
+            format!("{:.1}", 100.0 * e.acc_nysx),
+        ];
+        if ablation {
+            row.push(if e.acc_uniform_at_sdpp.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:.1}", 100.0 * e.acc_uniform_at_sdpp)
+            });
+        }
+        t.row(&row);
+    }
+    let delta = crate::util::mean(
+        &evals
+            .iter()
+            .map(|e| 100.0 * (e.acc_nysx - e.acc_nyshd))
+            .collect::<Vec<_>>(),
+    );
+    format!(
+        "{}\nMean NysX - NysHD accuracy delta: {delta:+.1} pp (paper: +3.4 pp)\n",
+        t.render()
+    )
+}
+
+pub fn render_table8(evals: &[DatasetEval]) -> String {
+    let mut t = Table::new("Table 8: Model parameter memory with and without DPP").header(&[
+        "Dataset",
+        "Memory w/o DPP (MB)",
+        "Memory w/ DPP (MB)",
+        "Reduction",
+    ]);
+    for e in evals {
+        t.row(&[
+            e.name.clone(),
+            format!("{:.2}", e.mem_no_dpp_mb),
+            format!("{:.2}", e.mem_dpp_mb),
+            format!(
+                "{:.1}%",
+                100.0 * (1.0 - e.mem_dpp_mb / e.mem_no_dpp_mb)
+            ),
+        ]);
+    }
+    let mean_red = crate::util::mean(
+        &evals
+            .iter()
+            .map(|e| 100.0 * (1.0 - e.mem_dpp_mb / e.mem_no_dpp_mb))
+            .collect::<Vec<_>>(),
+    );
+    format!(
+        "{}\nMean memory reduction: {mean_red:.1}% (paper: 37% avg)\n",
+        t.render()
+    )
+}
+
+pub fn render_fig8(evals: &[DatasetEval]) -> String {
+    // The §4.2 schedule only touches the SpMV engines (LSHU + KSE); the
+    // paper's Fig 8 normalizes the SpMV-stage latency to the no-LB case.
+    // We report both the stage-level speedup (the honest measure of the
+    // optimization) and the end-to-end effect, which our NEE-dominated
+    // breakdown dilutes (see EXPERIMENTS.md §Known deviations).
+    let mut t = Table::new("Figure 8: Static load balancing speedup in SpMV stages (LSHU/KSE)")
+        .header(&[
+            "Dataset",
+            "SpMV no-LB (ms)",
+            "SpMV LB (ms)",
+            "Stage speedup",
+            "End-to-end",
+        ]);
+    for e in evals {
+        t.row(&[
+            e.name.clone(),
+            format!("{:.4}", e.fpga_sparse_nolb_ms),
+            format!("{:.4}", e.fpga_sparse_lb_ms),
+            format!("{:.2}x", e.fpga_sparse_nolb_ms / e.fpga_sparse_lb_ms),
+            format!("{:.3}x", e.fpga_dpp_nolb_ms / e.fpga_dpp_ms),
+        ]);
+    }
+    let mean_sp = crate::util::mean(
+        &evals
+            .iter()
+            .map(|e| e.fpga_sparse_nolb_ms / e.fpga_sparse_lb_ms)
+            .collect::<Vec<_>>(),
+    );
+    format!(
+        "{}\nMean SpMV-stage LB speedup: {mean_sp:.2}x (paper: 1.19x mean, 1.13-1.24x)\n",
+        t.render()
+    )
+}
+
+pub fn render_table3(evals: &[DatasetEval]) -> String {
+    // Use the NCI1 deployment (or the first eval) as the representative
+    // on-chip inventory, matching the paper's single design point.
+    let rep = evals
+        .iter()
+        .find(|e| e.name == "NCI1")
+        .or_else(|| evals.first())
+        .expect("need at least one eval");
+    let mem = crate::model::MemoryReport {
+        codebooks: rep.mem_codebooks,
+        hists_dense: 0,
+        hists_csr: rep.mem_hists_csr,
+        p_nys: 0, // streamed from DDR, not on-chip
+        prototypes: rep.mem_protos,
+        mph: rep.mem_mph,
+        schedules: rep.mem_schedules,
+    };
+    let cfg = AcceleratorConfig::zcu104();
+    let r = estimate_resources(&cfg, &mem, rep.max_hist_bins);
+    let mut t = Table::new("Table 3: Resource utilization (estimated; paper values in parens)")
+        .header(&["Resource", "Used", "Available", "Utilization", "Paper"]);
+    let paper = [("LUT", 71_900), ("FF", 87_800), ("BRAM (18K)", 329), ("DSP", 156), ("URAM", 0)];
+    for ((name, used, avail, frac), (_, pval)) in r.utilization().iter().zip(paper.iter()) {
+        t.row(&[
+            name.to_string(),
+            used.to_string(),
+            avail.to_string(),
+            format!("{:.0}%", 100.0 * frac),
+            pval.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// §5.2.5 roofline rendering.
+pub fn render_roofline() -> String {
+    let mut out = String::new();
+    let mut t = Table::new("Roofline analysis of the NEE projection (§5.2.5)").header(&[
+        "Lanes", "Peak GOPS", "BW (GB/s)", "Balance", "AI", "Attainable", "Bound",
+    ]);
+    for lanes in [2usize, 8, 16, 32, 64] {
+        let mut cfg = AcceleratorConfig::zcu104();
+        cfg.nee_lanes = lanes;
+        let p = crate::sim::nee_point(&cfg);
+        t.row(&[
+            lanes.to_string(),
+            format!("{:.1}", p.peak_gops),
+            format!("{:.1}", p.sustained_bw_gbps),
+            format!("{:.2}", p.machine_balance),
+            format!("{:.2}", p.ai),
+            format!("{:.2}", p.attainable_gops),
+            format!("{:?}", p.bound),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut e = DatasetEval {
+            name: "X".into(),
+            cpu_ms: 1.5,
+            s_dpp: 7,
+            acc_uniform_at_sdpp: f64::NAN,
+            ..Default::default()
+        };
+        e.avg_nodes = 33.3;
+        let back = DatasetEval::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.name, "X");
+        assert_eq!(back.cpu_ms, 1.5);
+        assert_eq!(back.s_dpp, 7);
+        assert!(back.acc_uniform_at_sdpp.is_nan());
+        assert_eq!(back.avg_nodes, 33.3);
+    }
+
+    #[test]
+    fn small_scale_eval_smoke() {
+        // One tiny dataset end to end through the whole driver.
+        let spec = crate::graph::tudataset::spec_by_name("MUTAG").unwrap();
+        let cfg = EvalConfig {
+            scale: 0.15,
+            seed: 9,
+            hv_dim: 1024,
+            ablation: true,
+        };
+        let e = evaluate_dataset(spec, &cfg);
+        assert!(e.acc_nysx > 0.3);
+        assert!(e.fpga_dpp_ms > 0.0);
+        assert!(e.fpga_dpp_nolb_ms >= e.fpga_dpp_ms * 0.99);
+        assert!(e.mem_dpp_mb < e.mem_no_dpp_mb);
+        assert!(!e.acc_uniform_at_sdpp.is_nan());
+        // Renderers don't panic and mention the dataset.
+        let evals = vec![e];
+        for s in [
+            render_table4(&evals),
+            render_table6(&evals),
+            render_fig6(&evals),
+            render_table7(&evals),
+            render_fig7(&evals),
+            render_table8(&evals),
+            render_fig8(&evals),
+            render_table3(&evals),
+            render_roofline(),
+        ] {
+            assert!(!s.is_empty());
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Bounded batch queue: requests accumulate until `batch_size` are ready
+//! or `max_wait` expires (edge mode: batch_size = 1, so every request is
+//! dispatched immediately). Mutex + Condvar, no busy-waiting.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatcherConfig {
+    /// Maximum requests handed to a worker at once.
+    pub batch_size: usize,
+    /// Maximum time the first queued request may wait for batch-mates.
+    pub max_wait: Duration,
+    /// Queue capacity; `push` returns false (backpressure) beyond it.
+    pub capacity: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 1, // paper's real-time edge mode
+            max_wait: Duration::from_micros(200),
+            capacity: 4096,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// A thread-safe batch queue.
+#[derive(Debug)]
+pub struct BatchQueue {
+    cfg: BatcherConfig,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl BatchQueue {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self {
+            cfg,
+            state: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request. On backpressure (full or closed) the request
+    /// is handed back to the caller as `Err`.
+    pub fn push(&self, req: Request) -> Result<(), Request> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.items.len() >= self.cfg.capacity {
+            return Err(req);
+        }
+        st.items.push_back(req);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Current depth (for least-loaded routing).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking pop of the next batch. Returns None after close+drain.
+    pub fn pop_batch(&self) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.items.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.cv.wait(st).unwrap();
+                continue;
+            }
+            // Have at least one; maybe wait for batch-mates.
+            if st.items.len() < self.cfg.batch_size && !st.closed {
+                let deadline = Instant::now() + self.cfg.max_wait;
+                while st.items.len() < self.cfg.batch_size && !st.closed {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                    st = guard;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+                if st.items.is_empty() {
+                    continue; // drained by a rival worker; go back to wait
+                }
+            }
+            let take = st.items.len().min(self.cfg.batch_size);
+            let batch: Vec<Request> = st.items.drain(..take).collect();
+            return Some(batch);
+        }
+    }
+
+    /// Close the queue: pushes fail, poppers drain then get None.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            graph: Graph::from_edges(2, &[(0, 1)], &[0, 0], 1),
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_order_batch1() {
+        let q = BatchQueue::new(BatcherConfig::default());
+        for i in 0..5 {
+            assert!(q.push(req(i)).is_ok());
+        }
+        for i in 0..5 {
+            let b = q.pop_batch().unwrap();
+            assert_eq!(b.len(), 1);
+            assert_eq!(b[0].id, i);
+        }
+        q.close();
+        assert!(q.pop_batch().is_none());
+    }
+
+    #[test]
+    fn batches_form_up_to_size() {
+        let q = BatchQueue::new(BatcherConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(1),
+            capacity: 100,
+        });
+        for i in 0..10 {
+            q.push(req(i)).unwrap();
+        }
+        let b1 = q.pop_batch().unwrap();
+        assert_eq!(b1.len(), 4);
+        let b2 = q.pop_batch().unwrap();
+        assert_eq!(b2.len(), 4);
+        let b3 = q.pop_batch().unwrap();
+        assert_eq!(b3.len(), 2); // max_wait expires, partial batch
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let q = BatchQueue::new(BatcherConfig {
+            batch_size: 1,
+            max_wait: Duration::ZERO,
+            capacity: 2,
+        });
+        assert!(q.push(req(0)).is_ok());
+        assert!(q.push(req(1)).is_ok());
+        assert!(q.push(req(2)).is_err(), "push beyond capacity must fail");
+    }
+
+    #[test]
+    fn close_rejects_and_drains() {
+        let q = Arc::new(BatchQueue::new(BatcherConfig::default()));
+        q.push(req(1)).unwrap();
+        q.close();
+        assert!(q.push(req(2)).is_err());
+        assert_eq!(q.pop_batch().unwrap()[0].id, 1);
+        assert!(q.pop_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_lose_nothing() {
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            batch_size: 3,
+            max_wait: Duration::from_micros(50),
+            capacity: 10_000,
+        }));
+        let total = 300u64;
+        let mut producers = Vec::new();
+        for p in 0..3 {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..total / 3 {
+                    assert!(q.push(req(p * 1000 + i)).is_ok());
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = q.pop_batch() {
+                    seen.extend(batch.into_iter().map(|r| r.id));
+                }
+                seen
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total as usize, "requests lost or duplicated");
+    }
+}

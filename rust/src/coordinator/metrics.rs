@@ -1,0 +1,136 @@
+//! Serving metrics: latency distributions (host / queue / simulated
+//! FPGA), throughput and energy accounting, aggregated across workers.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::{mean, percentile, stddev};
+
+/// Summary statistics over a latency series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        Self {
+            count: xs.len(),
+            mean: mean(xs),
+            std: stddev(xs),
+            p50: percentile(xs, 50.0),
+            p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
+            max: xs.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct MetricsInner {
+    host_us: Vec<f64>,
+    queue_us: Vec<f64>,
+    fpga_ms: Vec<f64>,
+    fpga_mj: Vec<f64>,
+    per_worker: Vec<usize>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// Thread-safe metrics registry shared by all workers.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<MetricsInner>,
+}
+
+impl MetricsRegistry {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            inner: Mutex::new(MetricsInner {
+                per_worker: vec![0; workers],
+                ..Default::default()
+            }),
+        }
+    }
+
+    pub fn record(&self, worker: usize, host_us: f64, queue_us: f64, fpga_ms: f64, fpga_mj: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let now = Instant::now();
+        m.started.get_or_insert(now);
+        m.finished = Some(now);
+        m.host_us.push(host_us);
+        m.queue_us.push(queue_us);
+        m.fpga_ms.push(fpga_ms);
+        m.fpga_mj.push(fpga_mj);
+        if worker < m.per_worker.len() {
+            m.per_worker[worker] += 1;
+        }
+    }
+
+    pub fn summary(&self) -> MetricsSummary {
+        let m = self.inner.lock().unwrap();
+        let wall_s = match (m.started, m.finished) {
+            (Some(a), Some(b)) => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsSummary {
+            requests: m.host_us.len(),
+            host_us: LatencyStats::from_samples(&m.host_us),
+            queue_us: LatencyStats::from_samples(&m.queue_us),
+            fpga_ms: LatencyStats::from_samples(&m.fpga_ms),
+            total_fpga_mj: m.fpga_mj.iter().sum(),
+            host_throughput_rps: if wall_s > 0.0 {
+                m.host_us.len() as f64 / wall_s
+            } else {
+                0.0
+            },
+            per_worker: m.per_worker.clone(),
+        }
+    }
+}
+
+/// A point-in-time rollup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSummary {
+    pub requests: usize,
+    pub host_us: LatencyStats,
+    pub queue_us: LatencyStats,
+    pub fpga_ms: LatencyStats,
+    pub total_fpga_mj: f64,
+    pub host_throughput_rps: f64,
+    pub per_worker: Vec<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_and_rollup() {
+        let reg = MetricsRegistry::new(2);
+        for i in 0..100 {
+            reg.record(i % 2, (i + 1) as f64, 1.0, 0.5, 0.4);
+        }
+        let s = reg.summary();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.per_worker, vec![50, 50]);
+        assert!((s.host_us.mean - 50.5).abs() < 1e-9);
+        assert!(s.host_us.p99 >= s.host_us.p50);
+        assert!((s.total_fpga_mj - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_registry_safe() {
+        let reg = MetricsRegistry::new(1);
+        let s = reg.summary();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.host_us.count, 0);
+        assert_eq!(s.host_throughput_rps, 0.0);
+    }
+}

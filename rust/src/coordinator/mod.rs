@@ -1,0 +1,50 @@
+//! L3 serving coordinator: the edge-inference request path.
+//!
+//! The paper's deployment model is single-graph, real-time inference on a
+//! resource-constrained device; the coordinator wraps the functional
+//! accelerator model in a production-shaped serving loop — router →
+//! per-worker batch queues → worker pool → response channel — built on
+//! std threads + mpsc (no async runtime in the vendored crate set).
+//!
+//! Each response carries three timings: host wall-clock (this machine),
+//! simulated FPGA latency (cycle model) and simulated FPGA energy, so the
+//! serving examples and benches report the paper's metrics directly.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use batcher::{BatchQueue, BatcherConfig};
+pub use metrics::{LatencyStats, MetricsRegistry};
+pub use router::{Router, RoutingPolicy};
+pub use server::{Server, ServerConfig};
+
+use crate::graph::Graph;
+
+/// A classification request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub graph: Graph,
+    /// Submission timestamp.
+    pub submitted: std::time::Instant,
+}
+
+/// A classification response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub predicted: usize,
+    /// Host wall-clock inference time (µs) inside the worker.
+    pub host_us: f64,
+    /// Queueing delay before the worker picked the request up (µs).
+    pub queue_us: f64,
+    /// Simulated FPGA latency (ms) from the cycle model.
+    pub fpga_ms: f64,
+    /// Simulated FPGA energy (mJ).
+    pub fpga_mj: f64,
+    /// Which worker served it.
+    pub worker: usize,
+}

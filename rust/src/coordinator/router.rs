@@ -1,0 +1,205 @@
+//! Request router: assigns incoming requests to per-worker queues.
+//! Policies: round-robin, least-loaded (queue depth), and size-aware
+//! (estimated work = nnz(A), so a DD-sized graph doesn't head-of-line
+//! block a MUTAG-sized one).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::batcher::BatchQueue;
+use super::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    RoundRobin,
+    LeastLoaded,
+    /// Least accumulated estimated work (Σ nnz of queued graphs).
+    SizeAware,
+}
+
+/// Router over a fixed set of worker queues.
+pub struct Router {
+    queues: Vec<Arc<BatchQueue>>,
+    policy: RoutingPolicy,
+    rr_next: AtomicU64,
+    /// Outstanding estimated work per worker (SizeAware).
+    work: Vec<AtomicU64>,
+}
+
+impl Router {
+    pub fn new(queues: Vec<Arc<BatchQueue>>, policy: RoutingPolicy) -> Self {
+        let n = queues.len();
+        assert!(n > 0, "router needs at least one queue");
+        Self {
+            queues,
+            policy,
+            rr_next: AtomicU64::new(0),
+            work: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Estimated work units of a request (graph nnz + node count).
+    fn estimate(req: &Request) -> u64 {
+        (req.graph.adj.nnz() + req.graph.num_nodes()) as u64
+    }
+
+    /// Pick a worker index for a request.
+    pub fn pick(&self, _req: &Request) -> usize {
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                (self.rr_next.fetch_add(1, Ordering::Relaxed) as usize) % self.queues.len()
+            }
+            RoutingPolicy::LeastLoaded => (0..self.queues.len())
+                .min_by_key(|&i| self.queues[i].len())
+                .unwrap(),
+            RoutingPolicy::SizeAware => (0..self.queues.len())
+                .min_by_key(|&i| self.work[i].load(Ordering::Relaxed))
+                .unwrap(),
+        }
+    }
+
+    /// Route: returns the chosen worker, or hands the request back on
+    /// backpressure (caller decides: retry, shed, or block).
+    pub fn route(&self, req: Request) -> Result<usize, Request> {
+        let idx = self.pick(&req);
+        let est = Self::estimate(&req);
+        match self.queues[idx].push(req) {
+            Ok(()) => {
+                self.work[idx].fetch_add(est, Ordering::Relaxed);
+                Ok(idx)
+            }
+            Err(req) => Err(req),
+        }
+    }
+
+    /// Worker `idx` reports `est` work completed (SizeAware accounting).
+    pub fn complete(&self, idx: usize, req: &Request) {
+        let est = Self::estimate(req);
+        let _ =
+            self.work[idx].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |w| {
+                Some(w.saturating_sub(est))
+            });
+    }
+
+    pub fn close_all(&self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+
+    pub fn queue(&self, idx: usize) -> &Arc<BatchQueue> {
+        &self.queues[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::graph::generators::labeled_graph;
+    use crate::testing::{forall, PropConfig};
+    use crate::util::rng::Xoshiro256;
+    use std::time::Instant;
+
+    fn mk_router(n: usize, policy: RoutingPolicy) -> Router {
+        let queues = (0..n)
+            .map(|_| {
+                Arc::new(BatchQueue::new(BatcherConfig {
+                    capacity: 100_000,
+                    ..Default::default()
+                }))
+            })
+            .collect();
+        Router::new(queues, policy)
+    }
+
+    fn mk_req(id: u64, rng: &mut Xoshiro256) -> super::Request {
+        let n = 4 + rng.gen_range(30);
+        super::super::Request {
+            id,
+            graph: labeled_graph(n, rng.gen_range(n), 0.2, &[0.6, 0.4], rng),
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Property: every routed request lands in exactly one queue and none
+    /// are lost, under every policy.
+    #[test]
+    fn routing_conserves_requests() {
+        for policy in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::SizeAware,
+        ] {
+            forall("routing-conserves", PropConfig::default(), |rng, size| {
+                let workers = 1 + rng.gen_range(6);
+                let router = mk_router(workers, policy);
+                let count = size * 3;
+                for id in 0..count as u64 {
+                    let req = mk_req(id, rng);
+                    crate::prop_assert!(router.route(req).is_ok(), "route rejected");
+                }
+                router.close_all();
+                let mut ids = Vec::new();
+                for i in 0..workers {
+                    while let Some(batch) = router.queue(i).pop_batch() {
+                        ids.extend(batch.into_iter().map(|r| r.id));
+                    }
+                }
+                ids.sort_unstable();
+                let want: Vec<u64> = (0..count as u64).collect();
+                crate::prop_assert!(ids == want, "lost/duplicated: got {} want {}", ids.len(), count);
+                Ok(())
+            });
+        }
+    }
+
+    /// Property: round-robin spreads requests within ±1.
+    #[test]
+    fn round_robin_balances_exactly() {
+        forall("rr-balance", PropConfig::default(), |rng, size| {
+            let workers = 1 + rng.gen_range(5);
+            let router = mk_router(workers, RoutingPolicy::RoundRobin);
+            let count = size * workers;
+            let mut per = vec![0usize; workers];
+            for id in 0..count as u64 {
+                let req = mk_req(id, rng);
+                per[router.route(req).unwrap()] += 1;
+            }
+            let max = *per.iter().max().unwrap();
+            let min = *per.iter().min().unwrap();
+            crate::prop_assert!(max - min <= 1, "imbalance {per:?}");
+            Ok(())
+        });
+    }
+
+    /// Property: size-aware routing bounds the work skew well below a
+    /// single max-size request times worker count.
+    #[test]
+    fn size_aware_bounds_work_skew() {
+        forall("size-aware-skew", PropConfig::default(), |rng, size| {
+            let workers = 2 + rng.gen_range(4);
+            let router = mk_router(workers, RoutingPolicy::SizeAware);
+            let mut per_work = vec![0u64; workers];
+            let mut max_est = 0u64;
+            for id in 0..(size * 8) as u64 {
+                let req = mk_req(id, rng);
+                let est = Router::estimate(&req);
+                max_est = max_est.max(est);
+                let idx = router.route(req).unwrap();
+                per_work[idx] += est;
+            }
+            let max = *per_work.iter().max().unwrap();
+            let min = *per_work.iter().min().unwrap();
+            crate::prop_assert!(
+                max - min <= max_est + 1,
+                "work skew {max}-{min} > max item {max_est}"
+            );
+            Ok(())
+        });
+    }
+}

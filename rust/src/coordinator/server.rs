@@ -1,0 +1,248 @@
+//! The serving leader: spawns the worker pool, owns the router and the
+//! response fan-in, exposes submit/drain/shutdown.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{BatchQueue, BatcherConfig};
+use super::metrics::MetricsRegistry;
+use super::router::{Router, RoutingPolicy};
+use super::worker::worker_loop;
+use super::{Request, Response};
+use crate::graph::Graph;
+use crate::model::NysHdcModel;
+use crate::sim::{AcceleratorConfig, PowerModel};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub routing: RoutingPolicy,
+    pub batcher: BatcherConfig,
+    pub accel: AcceleratorConfig,
+    pub power: PowerModel,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            routing: RoutingPolicy::SizeAware,
+            batcher: BatcherConfig::default(),
+            accel: AcceleratorConfig::zcu104(),
+            power: PowerModel::default(),
+        }
+    }
+}
+
+/// A running server.
+pub struct Server {
+    router: Arc<Router>,
+    workers: Vec<JoinHandle<()>>,
+    responses: Receiver<Response>,
+    _response_tx: Sender<Response>,
+    pub metrics: Arc<MetricsRegistry>,
+    next_id: u64,
+    outstanding: usize,
+}
+
+impl Server {
+    /// Spawn the worker pool and return the serving handle.
+    pub fn start(model: Arc<NysHdcModel>, cfg: ServerConfig) -> Self {
+        assert!(cfg.workers > 0);
+        let queues: Vec<Arc<BatchQueue>> = (0..cfg.workers)
+            .map(|_| Arc::new(BatchQueue::new(cfg.batcher)))
+            .collect();
+        let router = Arc::new(Router::new(queues.clone(), cfg.routing));
+        let metrics = Arc::new(MetricsRegistry::new(cfg.workers));
+        let (tx, rx) = channel();
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let model = model.clone();
+                let queue = queues[i].clone();
+                let tx = tx.clone();
+                let accel = cfg.accel;
+                let power = cfg.power;
+                std::thread::Builder::new()
+                    .name(format!("nysx-worker-{i}"))
+                    .spawn(move || worker_loop(i, model, queue, accel, power, tx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            router,
+            workers,
+            responses: rx,
+            _response_tx: tx,
+            metrics,
+            next_id: 0,
+            outstanding: 0,
+        }
+    }
+
+    /// Submit a query graph; returns its request id, or the graph back on
+    /// backpressure.
+    pub fn submit(&mut self, graph: Graph) -> Result<u64, Graph> {
+        let id = self.next_id;
+        let req = Request {
+            id,
+            graph,
+            submitted: Instant::now(),
+        };
+        match self.router.route(req) {
+            Ok(_worker) => {
+                self.next_id += 1;
+                self.outstanding += 1;
+                Ok(id)
+            }
+            Err(req) => Err(req.graph),
+        }
+    }
+
+    /// Blocking receive of one response (records metrics).
+    pub fn recv(&mut self) -> Option<Response> {
+        if self.outstanding == 0 {
+            return None;
+        }
+        match self.responses.recv() {
+            Ok(resp) => {
+                self.outstanding -= 1;
+                self.metrics.record(
+                    resp.worker,
+                    resp.host_us,
+                    resp.queue_us,
+                    resp.fpga_ms,
+                    resp.fpga_mj,
+                );
+                Some(resp)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Drain all outstanding responses.
+    pub fn drain(&mut self) -> Vec<Response> {
+        let mut out = Vec::with_capacity(self.outstanding);
+        while self.outstanding > 0 {
+            match self.recv() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Close queues and join workers.
+    pub fn shutdown(mut self) -> Vec<Response> {
+        let rest = self.drain();
+        self.router.close_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        rest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tudataset::spec_by_name;
+    use crate::infer::NysxEngine;
+    use crate::model::train::train;
+    use crate::model::ModelConfig;
+    use crate::testing::{forall, PropConfig};
+
+    fn small_model() -> (crate::graph::GraphDataset, Arc<NysHdcModel>) {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(81, 0.2);
+        let model = Arc::new(train(
+            &ds,
+            &ModelConfig {
+                hops: 2,
+                hv_dim: 512,
+                num_landmarks: 8,
+                ..ModelConfig::default()
+            },
+        ));
+        (ds, model)
+    }
+
+    /// The coordinator's end-to-end invariant: every submitted request is
+    /// answered exactly once, with the same prediction the engine gives
+    /// single-threaded, regardless of worker count / routing policy.
+    #[test]
+    fn serving_matches_single_threaded() {
+        let (ds, model) = small_model();
+        let mut reference = NysxEngine::new(&model);
+        let want: Vec<usize> = ds
+            .test
+            .iter()
+            .map(|(g, _)| reference.infer(g).predicted)
+            .collect();
+
+        forall(
+            "serving-equivalence",
+            PropConfig {
+                cases: 6,
+                ..Default::default()
+            },
+            |rng, _size| {
+                let workers = 1 + rng.gen_range(4);
+                let policy = match rng.gen_range(3) {
+                    0 => RoutingPolicy::RoundRobin,
+                    1 => RoutingPolicy::LeastLoaded,
+                    _ => RoutingPolicy::SizeAware,
+                };
+                let mut server = Server::start(
+                    model.clone(),
+                    ServerConfig {
+                        workers,
+                        routing: policy,
+                        ..Default::default()
+                    },
+                );
+                let mut id_to_graph = Vec::new();
+                for (g, _) in ds.test.iter() {
+                    let id = server.submit(g.clone()).expect("no backpressure expected");
+                    id_to_graph.push(id);
+                }
+                let responses = server.shutdown();
+                crate::prop_assert!(
+                    responses.len() == ds.test.len(),
+                    "{} responses for {} requests (workers={workers}, {policy:?})",
+                    responses.len(),
+                    ds.test.len()
+                );
+                let mut seen = std::collections::HashSet::new();
+                for resp in &responses {
+                    crate::prop_assert!(seen.insert(resp.id), "duplicate response id {}", resp.id);
+                    crate::prop_assert!(
+                        resp.predicted == want[resp.id as usize],
+                        "prediction mismatch for request {}",
+                        resp.id
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let (ds, model) = small_model();
+        let mut server = Server::start(model, ServerConfig::default());
+        let count = ds.test.len().min(10);
+        for (g, _) in ds.test.iter().take(count) {
+            server.submit(g.clone()).unwrap();
+        }
+        let responses = server.drain();
+        assert_eq!(responses.len(), count);
+        let summary = server.metrics.summary();
+        assert_eq!(summary.requests, count);
+        assert!(summary.fpga_ms.mean > 0.0);
+        assert!(summary.host_throughput_rps >= 0.0);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,113 @@
+//! Worker: owns a [`crate::infer::NysxEngine`] bound to the shared model,
+//! drains its batch queue, runs the optimized pipeline per request, and
+//! emits responses carrying host wall-clock time plus the cycle-model's
+//! simulated FPGA latency/energy.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::batcher::BatchQueue;
+#[cfg(test)]
+use super::Request;
+use super::Response;
+use crate::infer::NysxEngine;
+use crate::model::NysHdcModel;
+use crate::sim::{simulate, AcceleratorConfig, PowerModel, SimOptions};
+
+/// Per-worker loop. Runs until the queue closes and drains.
+pub fn worker_loop(
+    worker_id: usize,
+    model: Arc<NysHdcModel>,
+    queue: Arc<BatchQueue>,
+    accel: AcceleratorConfig,
+    power: PowerModel,
+    responses: Sender<Response>,
+) {
+    let mut engine = NysxEngine::new(&model);
+    let opts = SimOptions::default();
+    while let Some(batch) = queue.pop_batch() {
+        for req in batch {
+            let picked_up = Instant::now();
+            let queue_us = (picked_up - req.submitted).as_secs_f64() * 1e6;
+            let result = engine.infer(&req.graph);
+            let host_us = picked_up.elapsed().as_secs_f64() * 1e6;
+            let breakdown = simulate(&result.trace, &accel, opts);
+            let energy = power.energy(&breakdown, &accel);
+            let resp = Response {
+                id: req.id,
+                predicted: result.predicted,
+                host_us,
+                queue_us,
+                fpga_ms: energy.time_ms,
+                fpga_mj: energy.energy_mj,
+                worker: worker_id,
+            };
+            if responses.send(resp).is_err() {
+                return; // receiver dropped: shut down
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::graph::tudataset::spec_by_name;
+    use crate::model::train::train;
+    use crate::model::ModelConfig;
+    use std::sync::mpsc;
+
+    #[test]
+    fn worker_processes_and_exits_on_close() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(71, 0.2);
+        let model = Arc::new(train(
+            &ds,
+            &ModelConfig {
+                hops: 2,
+                hv_dim: 512,
+                num_landmarks: 8,
+                ..ModelConfig::default()
+            },
+        ));
+        let queue = Arc::new(BatchQueue::new(BatcherConfig::default()));
+        let (tx, rx) = mpsc::channel();
+        let handle = {
+            let (model, queue) = (model.clone(), queue.clone());
+            std::thread::spawn(move || {
+                worker_loop(
+                    3,
+                    model,
+                    queue,
+                    AcceleratorConfig::zcu104(),
+                    PowerModel::default(),
+                    tx,
+                )
+            })
+        };
+        for (i, (g, _)) in ds.test.iter().take(6).enumerate() {
+            queue
+                .push(Request {
+                    id: i as u64,
+                    graph: g.clone(),
+                    submitted: Instant::now(),
+                })
+                .unwrap();
+        }
+        queue.close();
+        handle.join().unwrap();
+        let responses: Vec<Response> = rx.iter().collect();
+        assert_eq!(responses.len(), 6);
+        // Predictions must match a fresh single-threaded engine.
+        let mut engine = NysxEngine::new(&model);
+        for resp in &responses {
+            let want = engine.infer(&ds.test[resp.id as usize].0).predicted;
+            assert_eq!(resp.predicted, want);
+            assert_eq!(resp.worker, 3);
+            assert!(resp.fpga_ms > 0.0);
+            assert!(resp.fpga_mj > 0.0);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Random graph generators used by the synthetic TUDataset suite and by
+//! property tests: connected tree-plus-random-edges graphs (matches the
+//! node/edge statistics of small molecule/protein graphs), Erdős–Rényi,
+//! and preferential attachment.
+
+use super::Graph;
+use crate::util::rng::Xoshiro256;
+
+/// A connected random graph: uniform spanning tree (n-1 edges) plus
+/// `extra` random non-duplicate edges. Two structural knobs drive the
+/// class-conditional generators: `triangle_bias` closes wedges
+/// (clustering), `hub_bias` attaches extras degree-proportionally
+/// (hub formation — the signal PageRank-based GraphHD is sharpest at).
+pub fn tree_plus_random_hub(
+    n: usize,
+    extra: usize,
+    triangle_bias: f64,
+    hub_bias: f64,
+    rng: &mut Xoshiro256,
+) -> Vec<(usize, usize)> {
+    assert!(n >= 1);
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(n - 1 + extra);
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut exists = std::collections::HashSet::new();
+    let push = |edges: &mut Vec<(usize, usize)>,
+                    adj: &mut Vec<Vec<usize>>,
+                    exists: &mut std::collections::HashSet<(usize, usize)>,
+                    u: usize,
+                    v: usize|
+     -> bool {
+        if u == v {
+            return false;
+        }
+        let key = (u.min(v), u.max(v));
+        if !exists.insert(key) {
+            return false;
+        }
+        edges.push(key);
+        adj[u].push(v);
+        adj[v].push(u);
+        true
+    };
+
+    // Random attachment tree: node i attaches to a uniform previous node.
+    for i in 1..n {
+        let j = rng.gen_range(i);
+        push(&mut edges, &mut adj, &mut exists, i, j);
+    }
+
+    // Degree-proportional endpoint sampling for hub formation.
+    let mut endpoints: Vec<usize> = Vec::new();
+    for &(u, v) in &edges {
+        endpoints.push(u);
+        endpoints.push(v);
+    }
+
+    let mut added = 0usize;
+    let mut attempts = 0usize;
+    while added < extra && attempts < extra * 20 + 100 {
+        attempts += 1;
+        let (u, v) = if rng.bernoulli(hub_bias) && !endpoints.is_empty() {
+            // Hub attachment: one endpoint degree-proportional, the other
+            // uniform.
+            (endpoints[rng.gen_range(endpoints.len())], rng.gen_range(n))
+        } else if rng.bernoulli(triangle_bias) && n >= 3 {
+            // Close a wedge: pick a node with >= 2 neighbors, join two of
+            // its neighbors.
+            let c = rng.gen_range(n);
+            if adj[c].len() < 2 {
+                continue;
+            }
+            let a = adj[c][rng.gen_range(adj[c].len())];
+            let b = adj[c][rng.gen_range(adj[c].len())];
+            (a, b)
+        } else {
+            (rng.gen_range(n), rng.gen_range(n))
+        };
+        if push(&mut edges, &mut adj, &mut exists, u, v) {
+            endpoints.push(u);
+            endpoints.push(v);
+            added += 1;
+        }
+    }
+    edges
+}
+
+/// Back-compat wrapper without hub bias.
+pub fn tree_plus_random(
+    n: usize,
+    extra: usize,
+    triangle_bias: f64,
+    rng: &mut Xoshiro256,
+) -> Vec<(usize, usize)> {
+    tree_plus_random_hub(n, extra, triangle_bias, 0.0, rng)
+}
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Xoshiro256) -> Vec<(usize, usize)> {
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.bernoulli(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    edges
+}
+
+/// Barabási–Albert preferential attachment with `m` edges per new node.
+pub fn preferential_attachment(n: usize, m: usize, rng: &mut Xoshiro256) -> Vec<(usize, usize)> {
+    assert!(m >= 1 && n > m);
+    let mut edges = Vec::new();
+    // Repeated-endpoint list implements degree-proportional sampling.
+    let mut endpoints: Vec<usize> = Vec::new();
+    // Seed clique of m+1 nodes.
+    for u in 0..=m {
+        for v in (u + 1)..=m {
+            edges.push((u, v));
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+    }
+    for new in (m + 1)..n {
+        let mut targets = std::collections::HashSet::new();
+        while targets.len() < m {
+            let t = endpoints[rng.gen_range(endpoints.len())];
+            if t != new {
+                targets.insert(t);
+            }
+        }
+        for t in targets {
+            edges.push((new, t));
+            endpoints.push(new);
+            endpoints.push(t);
+        }
+    }
+    edges
+}
+
+/// Random graph with node labels drawn from class-conditional weights.
+pub fn labeled_graph(
+    n: usize,
+    extra_edges: usize,
+    triangle_bias: f64,
+    label_weights: &[f64],
+    rng: &mut Xoshiro256,
+) -> Graph {
+    let edges = tree_plus_random(n, extra_edges, triangle_bias, rng);
+    let labels: Vec<usize> = (0..n).map(|_| rng.weighted_choice(label_weights)).collect();
+    Graph::from_edges(n, &edges, &labels, label_weights.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_connected(n: usize, edges: &[(usize, usize)]) -> bool {
+        let mut adj = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            adj[u].push(v);
+            adj[v].push(u);
+        }
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(u) = stack.pop() {
+            for &v in &adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    stack.push(v);
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+
+    #[test]
+    fn tree_plus_random_connected_and_sized() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..20 {
+            let n = 2 + rng.gen_range(60);
+            let extra = rng.gen_range(n);
+            let edges = tree_plus_random(n, extra, 0.3, &mut rng);
+            assert!(is_connected(n, &edges), "n={n}");
+            assert!(edges.len() >= n - 1);
+            assert!(edges.len() <= n - 1 + extra);
+            // No duplicates or self loops.
+            let set: std::collections::HashSet<_> = edges.iter().collect();
+            assert_eq!(set.len(), edges.len());
+            assert!(edges.iter().all(|&(u, v)| u != v));
+        }
+    }
+
+    #[test]
+    fn triangle_bias_raises_clustering() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let count_triangles = |n: usize, edges: &[(usize, usize)]| -> usize {
+            let mut a = vec![vec![false; n]; n];
+            for &(u, v) in edges {
+                a[u][v] = true;
+                a[v][u] = true;
+            }
+            let mut t = 0;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if !a[i][j] {
+                        continue;
+                    }
+                    for k in (j + 1)..n {
+                        if a[i][k] && a[j][k] {
+                            t += 1;
+                        }
+                    }
+                }
+            }
+            t
+        };
+        let n = 40;
+        let mut tri_hi = 0usize;
+        let mut tri_lo = 0usize;
+        for _ in 0..10 {
+            tri_hi += count_triangles(n, &tree_plus_random(n, 30, 0.9, &mut rng));
+            tri_lo += count_triangles(n, &tree_plus_random(n, 30, 0.0, &mut rng));
+        }
+        assert!(tri_hi > tri_lo, "bias should create triangles: {tri_hi} vs {tri_lo}");
+    }
+
+    #[test]
+    fn erdos_renyi_edge_count() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let n = 100;
+        let p = 0.1;
+        let edges = erdos_renyi(n, p, &mut rng);
+        let expect = (n * (n - 1) / 2) as f64 * p;
+        assert!((edges.len() as f64 - expect).abs() < expect * 0.25);
+    }
+
+    #[test]
+    fn preferential_attachment_properties() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let n = 100;
+        let m = 3;
+        let edges = preferential_attachment(n, m, &mut rng);
+        assert!(is_connected(n, &edges));
+        // m*(m+1)/2 seed + (n-m-1)*m attachment edges
+        assert_eq!(edges.len(), m * (m + 1) / 2 + (n - m - 1) * m);
+        // Hub formation: max degree should clearly exceed m.
+        let mut deg = vec![0usize; n];
+        for &(u, v) in &edges {
+            deg[u] += 1;
+            deg[v] += 1;
+        }
+        assert!(*deg.iter().max().unwrap() > 2 * m);
+    }
+
+    #[test]
+    fn labeled_graph_respects_alphabet() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let g = labeled_graph(30, 10, 0.2, &[0.5, 0.25, 0.25], &mut rng);
+        assert_eq!(g.feature_dim(), 3);
+        assert_eq!(g.num_nodes(), 30);
+    }
+}

@@ -1,0 +1,153 @@
+//! Graph substrate: the labeled-graph type consumed by the whole pipeline
+//! plus random generators and the synthetic TUDataset suite.
+
+pub mod generators;
+pub mod tudataset;
+
+use crate::linalg::dense::Mat;
+use crate::sparse::Csr;
+
+/// An undirected graph with one-hot node-label features, matching the
+/// paper's input `(A_x ∈ {0,1}^{N×N}, F_x ∈ R^{N×f})`.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Symmetric 0/1 adjacency in CSR.
+    pub adj: Csr,
+    /// N×f node features (one-hot node labels for TU-style datasets).
+    pub features: Mat,
+}
+
+impl Graph {
+    /// Build from an edge list (undirected; both directions stored) and
+    /// per-node label ids in [0, f).
+    pub fn from_edges(num_nodes: usize, edges: &[(usize, usize)], labels: &[usize], f: usize) -> Self {
+        assert_eq!(labels.len(), num_nodes);
+        let mut triplets = Vec::with_capacity(edges.len() * 2);
+        for &(u, v) in edges {
+            assert!(u < num_nodes && v < num_nodes, "edge out of range");
+            if u == v {
+                continue; // no self loops in TU graphs
+            }
+            triplets.push((u, v, 1.0));
+            triplets.push((v, u, 1.0));
+        }
+        // from_triplets sums duplicates; clamp back to 0/1.
+        let mut adj = Csr::from_triplets(num_nodes, num_nodes, triplets);
+        for v in &mut adj.val {
+            *v = 1.0;
+        }
+        let mut features = Mat::zeros(num_nodes, f);
+        for (i, &l) in labels.iter().enumerate() {
+            assert!(l < f, "label {l} out of range (f={f})");
+            features[(i, l)] = 1.0;
+        }
+        Self { adj, features }
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.adj.rows
+    }
+
+    /// Undirected edge count (nnz / 2).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.adj.nnz() / 2
+    }
+
+    #[inline]
+    pub fn feature_dim(&self) -> usize {
+        self.features.cols
+    }
+
+    /// Degree of node v.
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj.row_nnz(v)
+    }
+
+    /// Bytes for the query inputs per Table 2 (dense A_x at b_A bits +
+    /// dense F_x at b_F bits).
+    pub fn input_bytes(&self, b_a_bits: usize, b_f_bits: usize) -> usize {
+        let n = self.num_nodes();
+        (n * n * b_a_bits + n * self.feature_dim() * b_f_bits) / 8
+    }
+}
+
+/// A labeled train/test split for graph classification.
+#[derive(Debug, Clone)]
+pub struct GraphDataset {
+    pub name: String,
+    pub train: Vec<(Graph, usize)>,
+    pub test: Vec<(Graph, usize)>,
+    pub num_classes: usize,
+    pub feature_dim: usize,
+}
+
+impl GraphDataset {
+    pub fn stats(&self) -> DatasetStats {
+        let all = self.train.iter().chain(self.test.iter());
+        let mut nodes = 0usize;
+        let mut edges = 0usize;
+        let mut count = 0usize;
+        for (g, _) in all {
+            nodes += g.num_nodes();
+            edges += g.num_edges();
+            count += 1;
+        }
+        DatasetStats {
+            num_train: self.train.len(),
+            num_test: self.test.len(),
+            avg_nodes: nodes as f64 / count.max(1) as f64,
+            avg_edges: edges as f64 / count.max(1) as f64,
+            num_classes: self.num_classes,
+            feature_dim: self.feature_dim,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetStats {
+    pub num_train: usize,
+    pub num_test: usize,
+    pub avg_nodes: f64,
+    pub avg_edges: f64,
+    pub num_classes: usize,
+    pub feature_dim: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_symmetric_no_self_loops() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 2), (1, 0)], &[0, 1, 1, 0], 2);
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 2); // (0,1) deduped, (2,2) dropped
+        let d = g.adj.to_dense();
+        for i in 0..4 {
+            assert_eq!(d[(i, i)], 0.0);
+            for j in 0..4 {
+                assert_eq!(d[(i, j)], d[(j, i)]);
+                assert!(d[(i, j)] == 0.0 || d[(i, j)] == 1.0);
+            }
+        }
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn one_hot_features() {
+        let g = Graph::from_edges(3, &[(0, 1)], &[2, 0, 1], 3);
+        assert_eq!(g.features[(0, 2)], 1.0);
+        assert_eq!(g.features[(1, 0)], 1.0);
+        let row_sums: Vec<f64> = (0..3).map(|i| g.features.row(i).iter().sum()).collect();
+        assert_eq!(row_sums, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn input_bytes_accounting() {
+        let g = Graph::from_edges(10, &[(0, 1)], &vec![0; 10], 5);
+        // 10*10*32 bits for A + 10*5*32 bits for F = 400+200 bytes
+        assert_eq!(g.input_bytes(32, 32), 600);
+    }
+}

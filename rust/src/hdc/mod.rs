@@ -1,0 +1,182 @@
+//! Hyperdimensional computing core (paper §2.1.1): bipolar hypervectors,
+//! the bundling/binding/permutation operators, similarity metrics and
+//! class prototypes.
+
+pub mod prototypes;
+
+pub use prototypes::{ClassPrototypes, PrototypeAccumulator};
+
+/// A bipolar hypervector h ∈ {-1, +1}^d stored as i8 (the accelerator's
+/// SCE consumes sign bits; i8 keeps the functional model simple and
+/// cache-dense).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hypervector {
+    pub data: Vec<i8>,
+}
+
+impl Hypervector {
+    pub fn dim(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bipolarize a real vector: h = sign(y) with sign(0) := +1 (matches
+    /// the convention in the jax reference kernel).
+    pub fn from_real(y: &[f64]) -> Self {
+        Self {
+            data: y.iter().map(|&v| if v < 0.0 { -1i8 } else { 1i8 }).collect(),
+        }
+    }
+
+    pub fn from_real_f32(y: &[f32]) -> Self {
+        Self {
+            data: y.iter().map(|&v| if v < 0.0 { -1i8 } else { 1i8 }).collect(),
+        }
+    }
+
+    /// Random bipolar HV.
+    pub fn random(d: usize, rng: &mut crate::util::rng::Xoshiro256) -> Self {
+        Self {
+            data: (0..d).map(|_| if rng.bernoulli(0.5) { 1 } else { -1 }).collect(),
+        }
+    }
+
+    /// Binding (⊗): element-wise product. Produces an HV dissimilar to
+    /// both inputs.
+    pub fn bind(&self, other: &Hypervector) -> Hypervector {
+        assert_eq!(self.dim(), other.dim());
+        Hypervector {
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| a * b)
+                .collect(),
+        }
+    }
+
+    /// Permutation (ρ^i): cyclic shift by i positions.
+    pub fn permute(&self, i: usize) -> Hypervector {
+        let d = self.dim();
+        if d == 0 {
+            return self.clone();
+        }
+        let shift = i % d;
+        let mut data = Vec::with_capacity(d);
+        data.extend_from_slice(&self.data[d - shift..]);
+        data.extend_from_slice(&self.data[..d - shift]);
+        Hypervector { data }
+    }
+
+    /// Dot-product similarity (integer); equals d - 2*hamming for bipolar.
+    pub fn dot(&self, other: &Hypervector) -> i64 {
+        assert_eq!(self.dim(), other.dim());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a as i64) * (b as i64))
+            .sum()
+    }
+
+    /// Cosine similarity in [-1, 1].
+    pub fn cosine(&self, other: &Hypervector) -> f64 {
+        if self.dim() == 0 {
+            return 0.0;
+        }
+        self.dot(other) as f64 / self.dim() as f64
+    }
+
+    /// Hamming distance (number of disagreeing coordinates).
+    pub fn hamming(&self, other: &Hypervector) -> usize {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .filter(|(&a, &b)| a != b)
+            .count()
+    }
+}
+
+/// Bundling (⊕) of many HVs: element-wise sum then sign. Ties (sum == 0)
+/// break to +1.
+pub fn bundle(hvs: &[&Hypervector]) -> Hypervector {
+    assert!(!hvs.is_empty(), "bundle of nothing");
+    let d = hvs[0].dim();
+    let mut acc = vec![0i64; d];
+    for hv in hvs {
+        assert_eq!(hv.dim(), d);
+        for (a, &b) in acc.iter_mut().zip(&hv.data) {
+            *a += b as i64;
+        }
+    }
+    Hypervector {
+        data: acc.iter().map(|&v| if v < 0 { -1 } else { 1 }).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn sign_convention() {
+        let h = Hypervector::from_real(&[-0.5, 0.0, 2.0]);
+        assert_eq!(h.data, vec![-1, 1, 1]);
+    }
+
+    #[test]
+    fn random_hvs_quasi_orthogonal() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a = Hypervector::random(10_000, &mut rng);
+        let b = Hypervector::random(10_000, &mut rng);
+        assert!((a.cosine(&a) - 1.0).abs() < 1e-12);
+        assert!(a.cosine(&b).abs() < 0.05, "cos={}", a.cosine(&b));
+    }
+
+    #[test]
+    fn binding_dissimilar_and_invertible() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = Hypervector::random(10_000, &mut rng);
+        let b = Hypervector::random(10_000, &mut rng);
+        let c = a.bind(&b);
+        assert!(c.cosine(&a).abs() < 0.05);
+        assert!(c.cosine(&b).abs() < 0.05);
+        // Self-inverse: (a⊗b)⊗b == a
+        assert_eq!(c.bind(&b), a);
+    }
+
+    #[test]
+    fn permute_cyclic_group() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = Hypervector::random(257, &mut rng);
+        assert_eq!(a.permute(0), a);
+        assert_eq!(a.permute(257), a);
+        assert_eq!(a.permute(5).permute(252), a);
+        assert!(a.permute(1).cosine(&a).abs() < 0.2);
+        // Spot-check the shift direction: ρ^1(h)[j] = h[(j+ d -1) % d]? Our
+        // convention: element 0 of permute(1) is the last element of a.
+        assert_eq!(a.permute(1).data[0], a.data[256]);
+    }
+
+    #[test]
+    fn bundle_preserves_majority_similarity() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let hvs: Vec<Hypervector> = (0..5).map(|_| Hypervector::random(10_000, &mut rng)).collect();
+        let refs: Vec<&Hypervector> = hvs.iter().collect();
+        let b = bundle(&refs);
+        for hv in &hvs {
+            assert!(b.cosine(hv) > 0.2, "bundle lost a member: {}", b.cosine(hv));
+        }
+        let outsider = Hypervector::random(10_000, &mut rng);
+        assert!(b.cosine(&outsider).abs() < 0.05);
+    }
+
+    #[test]
+    fn dot_and_hamming_consistent() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let a = Hypervector::random(1000, &mut rng);
+        let b = Hypervector::random(1000, &mut rng);
+        let dot = a.dot(&b);
+        let ham = a.hamming(&b) as i64;
+        assert_eq!(dot, 1000 - 2 * ham);
+    }
+}

@@ -1,0 +1,152 @@
+//! Class prototypes (paper §2.1.1): bundled HVs of training samples per
+//! class, plus the SCE-style argmax matcher `ŷ = argmax_c sim(h, g_c)`.
+
+use super::Hypervector;
+
+/// Accumulates per-class element-wise sums during training, then
+/// bipolarizes into prototypes (single-pass HDC training).
+#[derive(Debug, Clone)]
+pub struct PrototypeAccumulator {
+    pub num_classes: usize,
+    pub dim: usize,
+    sums: Vec<Vec<i64>>,
+    counts: Vec<usize>,
+}
+
+impl PrototypeAccumulator {
+    pub fn new(num_classes: usize, dim: usize) -> Self {
+        Self {
+            num_classes,
+            dim,
+            sums: vec![vec![0i64; dim]; num_classes],
+            counts: vec![0; num_classes],
+        }
+    }
+
+    pub fn add(&mut self, class: usize, hv: &Hypervector) {
+        assert!(class < self.num_classes);
+        assert_eq!(hv.dim(), self.dim);
+        for (s, &v) in self.sums[class].iter_mut().zip(&hv.data) {
+            *s += v as i64;
+        }
+        self.counts[class] += 1;
+    }
+
+    pub fn finalize(self) -> ClassPrototypes {
+        let prototypes = self
+            .sums
+            .iter()
+            .map(|s| Hypervector {
+                data: s.iter().map(|&v| if v < 0 { -1i8 } else { 1i8 }).collect(),
+            })
+            .collect();
+        ClassPrototypes {
+            prototypes,
+            counts: self.counts,
+        }
+    }
+}
+
+/// The trained prototype matrix G ∈ {-1,+1}^{C×d}.
+#[derive(Debug, Clone)]
+pub struct ClassPrototypes {
+    pub prototypes: Vec<Hypervector>,
+    /// Training samples bundled into each class (diagnostics).
+    pub counts: Vec<usize>,
+}
+
+impl ClassPrototypes {
+    pub fn num_classes(&self) -> usize {
+        self.prototypes.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.prototypes.first().map(|p| p.dim()).unwrap_or(0)
+    }
+
+    /// All class scores s = G h (integer dot products).
+    pub fn scores(&self, hv: &Hypervector) -> Vec<i64> {
+        self.prototypes.iter().map(|p| p.dot(hv)).collect()
+    }
+
+    /// Predicted class: argmax similarity (first max wins on ties, which
+    /// matches the hardware argmax unit's sequential compare).
+    pub fn classify(&self, hv: &Hypervector) -> usize {
+        let scores = self.scores(hv);
+        let mut best = 0usize;
+        for (c, &s) in scores.iter().enumerate() {
+            if s > scores[best] {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Bytes for G at b_G bits per element (Table 2 accounting).
+    pub fn bytes(&self, b_g_bits: usize) -> usize {
+        self.num_classes() * self.dim() * b_g_bits / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn prototypes_classify_their_own_clusters() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let d = 4096;
+        let centers: Vec<Hypervector> = (0..3).map(|_| Hypervector::random(d, &mut rng)).collect();
+        let mut acc = PrototypeAccumulator::new(3, d);
+        // Noisy copies of each center: flip 20% of coordinates.
+        let noisy = |c: &Hypervector, rng: &mut Xoshiro256| -> Hypervector {
+            Hypervector {
+                data: c
+                    .data
+                    .iter()
+                    .map(|&v| if rng.bernoulli(0.2) { -v } else { v })
+                    .collect(),
+            }
+        };
+        for class in 0..3 {
+            for _ in 0..20 {
+                acc.add(class, &noisy(&centers[class], &mut rng));
+            }
+        }
+        let protos = acc.finalize();
+        assert_eq!(protos.counts, vec![20, 20, 20]);
+        let mut correct = 0;
+        let trials = 60;
+        for class in 0..3 {
+            for _ in 0..trials / 3 {
+                if protos.classify(&noisy(&centers[class], &mut rng)) == class {
+                    correct += 1;
+                }
+            }
+        }
+        assert!(correct as f64 / trials as f64 > 0.95, "acc={correct}/{trials}");
+    }
+
+    #[test]
+    fn tie_breaks_to_first() {
+        let p = ClassPrototypes {
+            prototypes: vec![
+                Hypervector { data: vec![1, 1] },
+                Hypervector { data: vec![1, 1] },
+            ],
+            counts: vec![1, 1],
+        };
+        assert_eq!(p.classify(&Hypervector { data: vec![1, 1] }), 0);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let p = ClassPrototypes {
+            prototypes: vec![Hypervector { data: vec![1; 10000] }; 2],
+            counts: vec![1, 1],
+        };
+        assert_eq!(p.bytes(8), 2 * 10000);
+        assert_eq!(p.bytes(1), 2 * 10000 / 8);
+    }
+}

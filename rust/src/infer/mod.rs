@@ -1,0 +1,9 @@
+//! Inference paths: the literal Algorithm-1 reference and the optimized
+//! NysX pipeline (restructured LSH chain, MPH lookups, statically
+//! load-balanced SpMV) that doubles as the accelerator's functional model.
+
+pub mod optimized;
+pub mod reference;
+
+pub use optimized::{HopTrace, InferTrace, InferenceResult, NysxEngine};
+pub use reference::infer_reference;

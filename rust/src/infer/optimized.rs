@@ -1,0 +1,326 @@
+//! The optimized NysX inference pipeline — the functional model of the
+//! accelerator (paper §5):
+//!
+//! * LSHU: restructured `A^k F u` vector chain with the §4.2 scheduled
+//!   SpMV;
+//! * MPHE: O(1) minimal-perfect-hash codebook lookups with verification;
+//! * HUE: histogram accumulation;
+//! * KSE: scheduled SpMV against the CSR landmark histograms;
+//! * NEE: f32 streaming projection with fused bipolarization;
+//! * SCE: prototype matching + argmax.
+//!
+//! All scratch buffers live in [`NysxEngine`], so the per-request hot path
+//! is allocation-free. Every inference also produces an [`InferTrace`] —
+//! the per-stage work counts (real nnz, real MPH probe counts, real
+//! histogram sizes) that drive the cycle-accurate accelerator model in
+//! [`crate::sim`].
+
+use crate::graph::Graph;
+use crate::hdc::Hypervector;
+use crate::model::NysHdcModel;
+use crate::mph::code_key;
+use crate::sparse::{SchedulePolicy, ScheduleTable};
+
+/// Per-hop work counts observed during one inference.
+#[derive(Debug, Clone, Default)]
+pub struct HopTrace {
+    /// Codebook lookups issued (= N).
+    pub lookups: u64,
+    /// Total MPH level probes across those lookups.
+    pub mph_probes: u64,
+    /// Lookups that hit the vocabulary (histogram updates).
+    pub vocab_hits: u64,
+    /// |B^(t)| — histogram length.
+    pub hist_bins: usize,
+    /// nnz(H^(t)).
+    pub kse_nnz: u64,
+    /// KSE SpMV cycles under the §4.2 schedule.
+    pub kse_cycles_lb: u64,
+    /// KSE SpMV cycles under natural row order (no LB).
+    pub kse_cycles_nolb: u64,
+}
+
+/// Whole-inference work counts.
+#[derive(Debug, Clone, Default)]
+pub struct InferTrace {
+    pub n: usize,
+    pub f: usize,
+    pub nnz_a: u64,
+    /// Cycles for ONE application of A under the LB schedule.
+    pub a_spmv_cycles_lb: u64,
+    /// ... and under natural row order.
+    pub a_spmv_cycles_nolb: u64,
+    /// Number of A-applications in the restructured chain = H(H-1)/2.
+    pub a_spmv_applications: u64,
+    pub hops: Vec<HopTrace>,
+    pub s: usize,
+    pub d: usize,
+    pub num_classes: usize,
+}
+
+/// Result of one inference.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub predicted: usize,
+    pub hv: Hypervector,
+    pub trace: InferTrace,
+}
+
+/// Reusable inference engine bound to a trained model.
+pub struct NysxEngine<'m> {
+    pub model: &'m NysHdcModel,
+    /// No-LB schedules for the KSE ablation (built once).
+    kse_nolb: Vec<ScheduleTable>,
+    // --- scratch (hot path is allocation-free) ---
+    c_sim: Vec<f64>,
+    y: Vec<f64>,
+    proj: Vec<f64>,
+    proj_scratch: Vec<f64>,
+    codes: Vec<i64>,
+    hist: Vec<f64>,
+}
+
+impl<'m> NysxEngine<'m> {
+    pub fn new(model: &'m NysHdcModel) -> Self {
+        let max_bins = model
+            .codebooks
+            .iter()
+            .map(|cb| cb.len())
+            .max()
+            .unwrap_or(0);
+        let kse_nolb = model
+            .landmark_hists
+            .iter()
+            .map(|h| ScheduleTable::build(h, model.config.pes, SchedulePolicy::RowOrder))
+            .collect();
+        Self {
+            model,
+            kse_nolb,
+            c_sim: vec![0.0; model.s()],
+            y: vec![0.0; model.d()],
+            proj: Vec::new(),
+            proj_scratch: Vec::new(),
+            codes: Vec::new(),
+            hist: vec![0.0; max_bins],
+        }
+    }
+
+    /// Alg. 1 lines 1-12: compute the kernel-similarity vector C(x) and
+    /// the work trace. Returns a borrow of the internal C buffer.
+    pub fn kernel_vector(&mut self, graph: &Graph) -> (&[f64], InferTrace) {
+        let model = self.model;
+        let n = graph.num_nodes();
+        let hops = model.hops();
+        self.c_sim.iter_mut().for_each(|v| *v = 0.0);
+        self.proj.resize(n, 0.0);
+        self.proj_scratch.resize(n, 0.0);
+        self.codes.resize(n, 0);
+
+        // Per-query adjacency schedule (O(N) offline-style construction —
+        // the paper builds it when the CSR operand is loaded).
+        let a_lb = ScheduleTable::build(&graph.adj, model.config.pes, SchedulePolicy::NnzGrouped);
+        let a_nolb = ScheduleTable::build(&graph.adj, model.config.pes, SchedulePolicy::RowOrder);
+        let (a_cycles_lb, _) = a_lb.spmv_cycles(&graph.adj);
+        let (a_cycles_nolb, _) = a_nolb.spmv_cycles(&graph.adj);
+
+        let mut trace = InferTrace {
+            n,
+            f: graph.feature_dim(),
+            nnz_a: graph.adj.nnz() as u64,
+            a_spmv_cycles_lb: a_cycles_lb,
+            a_spmv_cycles_nolb: a_cycles_nolb,
+            a_spmv_applications: (hops * (hops.saturating_sub(1)) / 2) as u64,
+            hops: Vec::with_capacity(hops),
+            s: model.s(),
+            d: model.d(),
+            num_classes: model.num_classes,
+        };
+
+        for t in 0..hops {
+            // LSHU: c = F u^(t), then t scheduled applications of A.
+            for (i, p) in self.proj.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                let row = graph.features.row(i);
+                for (x, u) in row.iter().zip(&model.lsh.u[t]) {
+                    acc += x * u;
+                }
+                *p = acc;
+            }
+            for _ in 0..t {
+                a_lb.run_spmv(&graph.adj, &self.proj, &mut self.proj_scratch);
+                std::mem::swap(&mut self.proj, &mut self.proj_scratch);
+            }
+            for (c, &p) in self.codes.iter_mut().zip(self.proj.iter()) {
+                *c = model.lsh.quantize(p, t);
+            }
+
+            // MPHE + HUE: verified O(1) lookups, histogram accumulation.
+            let cb_len = model.codebooks[t].len();
+            let hist = &mut self.hist[..cb_len];
+            hist.iter_mut().for_each(|v| *v = 0.0);
+            let lookup = &model.lookups[t];
+            let mut probes = 0u64;
+            let mut hits = 0u64;
+            for &code in self.codes.iter() {
+                let (idx, p) = lookup.get_with_probes(code_key(code));
+                probes += p as u64;
+                if let Some(j) = idx {
+                    hist[j as usize] += 1.0;
+                    hits += 1;
+                }
+            }
+
+            // KSE: v^(t) = H^(t) h^(t) via the static LB schedule,
+            // accumulated into C.
+            let h = &model.landmark_hists[t];
+            let sched = &model.kse_schedules[t];
+            for it in 0..sched.iterations {
+                for pe in 0..sched.pes {
+                    if let Some(r) = sched.row_for(it, pe) {
+                        let r = r as usize;
+                        let mut acc = 0.0;
+                        for k in h.row_ptr[r]..h.row_ptr[r + 1] {
+                            acc += h.val[k] * hist[h.col_idx[k] as usize];
+                        }
+                        self.c_sim[r] += acc;
+                    }
+                }
+            }
+
+            let (kse_lb, _) = sched.spmv_cycles(h);
+            let (kse_nolb, _) = self.kse_nolb[t].spmv_cycles(h);
+            trace.hops.push(HopTrace {
+                lookups: n as u64,
+                mph_probes: probes,
+                vocab_hits: hits,
+                hist_bins: cb_len,
+                kse_nnz: h.nnz() as u64,
+                kse_cycles_lb: kse_lb,
+                kse_cycles_nolb: kse_nolb,
+            });
+        }
+        (&self.c_sim, trace)
+    }
+
+    /// NEE + SCE from a kernel vector: project, bipolarize, classify.
+    pub fn classify_kernel_vector(&mut self, c_sim: &[f64]) -> (usize, Hypervector) {
+        self.model.projection.project_into(c_sim, &mut self.y);
+        let hv = Hypervector::from_real(&self.y);
+        (self.model.prototypes.classify(&hv), hv)
+    }
+
+    /// Full Algorithm 1.
+    pub fn infer(&mut self, graph: &Graph) -> InferenceResult {
+        let (_, trace) = self.kernel_vector(graph);
+        // Split borrows: take c_sim out temporarily to satisfy the borrow
+        // checker without cloning on the hot path.
+        let c_sim = std::mem::take(&mut self.c_sim);
+        let (predicted, hv) = self.classify_kernel_vector(&c_sim);
+        self.c_sim = c_sim;
+        InferenceResult {
+            predicted,
+            hv,
+            trace,
+        }
+    }
+}
+
+impl InferTrace {
+    /// Total MPH probes across hops (MPHE cycle driver).
+    pub fn total_probes(&self) -> u64 {
+        self.hops.iter().map(|h| h.mph_probes).sum()
+    }
+
+    /// Total vocabulary hits (HUE update driver).
+    pub fn total_hits(&self) -> u64 {
+        self.hops.iter().map(|h| h.vocab_hits).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tudataset::spec_by_name;
+    use crate::infer::reference::infer_reference;
+    use crate::model::train::train;
+    use crate::model::ModelConfig;
+
+    fn trained() -> (crate::graph::GraphDataset, NysHdcModel) {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(31, 0.3);
+        let cfg = ModelConfig {
+            hops: 3,
+            hv_dim: 1024,
+            num_landmarks: 14,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        (ds, model)
+    }
+
+    /// THE core equivalence property: the optimized pipeline (vector
+    /// chain + MPH + scheduled SpMV + f32 streaming projection) produces
+    /// bit-identical HVs and predictions to the verbatim Algorithm 1.
+    #[test]
+    fn optimized_equals_reference() {
+        let (ds, model) = trained();
+        let mut engine = NysxEngine::new(&model);
+        for (g, _) in ds.test.iter() {
+            let opt = engine.infer(g);
+            let (want_pred, want_hv) = infer_reference(&model, g);
+            assert_eq!(opt.hv, want_hv, "HV mismatch");
+            assert_eq!(opt.predicted, want_pred, "prediction mismatch");
+        }
+    }
+
+    #[test]
+    fn trace_counts_sane() {
+        let (ds, model) = trained();
+        let mut engine = NysxEngine::new(&model);
+        let g = &ds.test[0].0;
+        let res = engine.infer(g);
+        let tr = &res.trace;
+        assert_eq!(tr.n, g.num_nodes());
+        assert_eq!(tr.hops.len(), 3);
+        assert_eq!(tr.a_spmv_applications, 3); // 0+1+2
+        for hop in &tr.hops {
+            assert_eq!(hop.lookups, g.num_nodes() as u64);
+            assert!(hop.vocab_hits <= hop.lookups);
+            // Every lookup needs at least one probe.
+            assert!(hop.mph_probes >= hop.lookups);
+            assert!(hop.kse_cycles_lb <= hop.kse_cycles_nolb);
+            assert!(hop.kse_cycles_lb as f64 >= hop.kse_nnz as f64 / model.config.pes as f64);
+        }
+        assert!(tr.a_spmv_cycles_lb <= tr.a_spmv_cycles_nolb);
+    }
+
+    #[test]
+    fn engine_reusable_across_requests() {
+        // Same engine, interleaved graphs of different sizes: results must
+        // match fresh-engine runs (scratch reuse must not leak state).
+        let (ds, model) = trained();
+        let mut engine = NysxEngine::new(&model);
+        let order = [0usize, 5, 1, 5, 0];
+        for &i in &order {
+            let g = &ds.test[i].0;
+            let res = engine.infer(g);
+            let mut fresh = NysxEngine::new(&model);
+            let fresh_res = fresh.infer(g);
+            assert_eq!(res.hv, fresh_res.hv);
+            assert_eq!(res.predicted, fresh_res.predicted);
+        }
+    }
+
+    #[test]
+    fn staged_api_matches_full() {
+        let (ds, model) = trained();
+        let mut engine = NysxEngine::new(&model);
+        let g = &ds.test[2].0;
+        let full = engine.infer(g);
+        let (c, _) = engine.kernel_vector(g);
+        let c = c.to_vec();
+        let (pred, hv) = engine.classify_kernel_vector(&c);
+        assert_eq!(pred, full.predicted);
+        assert_eq!(hv, full.hv);
+    }
+}

@@ -1,0 +1,79 @@
+//! Algorithm 1 implemented verbatim — the correctness oracle for the
+//! optimized engine. Materializes the full feature matrix `M^(t)` per hop
+//! (the baseline the paper's §5.2.1 restructuring replaces) and uses
+//! hashmap codebook lookups (the naive dictionary search the MPHE
+//! replaces).
+
+use crate::graph::Graph;
+use crate::hdc::Hypervector;
+use crate::model::NysHdcModel;
+
+/// End-to-end Algorithm 1: returns (predicted class, query HV).
+pub fn infer_reference(model: &NysHdcModel, graph: &Graph) -> (usize, Hypervector) {
+    let n = graph.num_nodes();
+    let s = model.s();
+    // line 1: M ← F_x
+    let mut m = graph.features.clone();
+    // line 2: C ← 0
+    let mut c_sim = vec![0.0f64; s];
+
+    for t in 0..model.hops() {
+        // line 4: c ← ⌊(M u^(t) + b^(t) 1_N)/w⌋
+        let proj = m.matvec(&model.lsh.u[t]);
+        let codes: Vec<i64> = (0..n).map(|i| model.lsh.quantize(proj[i], t)).collect();
+        // lines 5-8: histogram through B^(t), skipping absent codes
+        let cb = &model.codebooks[t];
+        let mut hist = vec![0.0f64; cb.len()];
+        for &code in &codes {
+            if let Some(j) = cb.index_of(code) {
+                hist[j as usize] += 1.0;
+            }
+        }
+        // line 9: v^(t) = H^(t) h^(t)
+        let h = &model.landmark_hists[t];
+        for r in 0..h.rows {
+            let mut acc = 0.0;
+            for k in h.row_ptr[r]..h.row_ptr[r + 1] {
+                acc += h.val[k] * hist[h.col_idx[k] as usize];
+            }
+            // line 10: C ← C + v^(t)
+            c_sim[r] += acc;
+        }
+        // lines 11-12: propagate M ← A_x M
+        if t + 1 < model.hops() {
+            m = graph.adj.spmm(&m);
+        }
+    }
+
+    // line 13: y = P_nys C; h = sign(y)
+    let y = model.projection.project(&c_sim);
+    let hv = Hypervector::from_real(&y);
+    // line 14: argmax over class prototypes
+    let predicted = model.prototypes.classify(&hv);
+    (predicted, hv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tudataset::spec_by_name;
+    use crate::model::train::{encode_hv, train};
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn reference_matches_training_encoder() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(21, 0.25);
+        let cfg = ModelConfig {
+            hops: 3,
+            hv_dim: 1024,
+            num_landmarks: 12,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        for (g, _) in ds.test.iter().take(10) {
+            let (_, hv) = infer_reference(&model, g);
+            assert_eq!(hv, encode_hv(&model, g));
+        }
+    }
+}

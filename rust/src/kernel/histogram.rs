@@ -1,0 +1,138 @@
+//! Hop-wise code histograms and the codebooks (vocabularies) they are
+//! binned through (paper §2.1.3).
+
+use std::collections::HashMap;
+
+/// A hop-specific codebook `B^(t)`: the set of integer codes observed in
+/// the landmark graphs at that hop, with a canonical (sorted) index per
+/// code — the histogram bin layout shared by training and inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Codebook {
+    /// Sorted distinct codes.
+    pub codes: Vec<i64>,
+    index: HashMap<i64, u32>,
+}
+
+impl Codebook {
+    /// Build from any iterator of observed codes.
+    pub fn build<I: IntoIterator<Item = i64>>(codes: I) -> Self {
+        let mut distinct: Vec<i64> = codes.into_iter().collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let index = distinct
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, i as u32))
+            .collect();
+        Self {
+            codes: distinct,
+            index,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// HashMap-based lookup (the "naive dictionary search" the MPHE
+    /// replaces; kept as the functional oracle).
+    #[inline]
+    pub fn index_of(&self, code: i64) -> Option<u32> {
+        self.index.get(&code).copied()
+    }
+
+    /// Bytes per Table 2: each entry stores the code (i64) and its index
+    /// (u32).
+    pub fn bytes(&self) -> usize {
+        self.len() * (8 + 4)
+    }
+}
+
+/// Dense histogram of codes binned through a codebook; codes absent from
+/// the codebook are skipped (Alg. 1 lines 6-8).
+pub fn histogram(codes: &[i64], codebook: &Codebook) -> Vec<u32> {
+    let mut h = vec![0u32; codebook.len()];
+    for &c in codes {
+        if let Some(j) = codebook.index_of(c) {
+            h[j as usize] += 1;
+        }
+    }
+    h
+}
+
+/// Raw (codebook-free) histogram: code -> count. Used during training and
+/// by the propagation-kernel Gram computation, where the vocabulary is
+/// defined by the graphs themselves.
+pub fn raw_histogram(codes: &[i64]) -> HashMap<i64, u32> {
+    let mut h = HashMap::with_capacity(codes.len());
+    for &c in codes {
+        *h.entry(c).or_insert(0) += 1;
+    }
+    h
+}
+
+/// Dot product of two raw histograms (the per-hop term of the propagation
+/// kernel).
+pub fn raw_dot(a: &HashMap<i64, u32>, b: &HashMap<i64, u32>) -> f64 {
+    // Iterate the smaller map.
+    let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    small
+        .iter()
+        .filter_map(|(c, &x)| large.get(c).map(|&y| x as f64 * y as f64))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codebook_sorted_dedup() {
+        let cb = Codebook::build(vec![5, -2, 5, 0, -2]);
+        assert_eq!(cb.codes, vec![-2, 0, 5]);
+        assert_eq!(cb.index_of(-2), Some(0));
+        assert_eq!(cb.index_of(5), Some(2));
+        assert_eq!(cb.index_of(7), None);
+        assert_eq!(cb.bytes(), 3 * 12);
+    }
+
+    #[test]
+    fn histogram_counts_and_skips() {
+        let cb = Codebook::build(vec![1, 2, 3]);
+        let h = histogram(&[1, 1, 3, 99, -5], &cb);
+        assert_eq!(h, vec![2, 0, 1]);
+        // total counted = nodes with in-vocabulary codes
+        assert_eq!(h.iter().sum::<u32>(), 3);
+    }
+
+    #[test]
+    fn raw_dot_symmetric_and_correct() {
+        let a = raw_histogram(&[1, 1, 2, 7]);
+        let b = raw_histogram(&[1, 2, 2, 2]);
+        assert_eq!(raw_dot(&a, &b), raw_dot(&b, &a));
+        // 1: 2*1 + 2: 1*3 = 5
+        assert_eq!(raw_dot(&a, &b), 5.0);
+        let empty = raw_histogram(&[]);
+        assert_eq!(raw_dot(&a, &empty), 0.0);
+    }
+
+    /// Consistency: binning through a codebook built from the same codes
+    /// preserves all counts.
+    #[test]
+    fn dense_matches_raw_when_in_vocab() {
+        let codes = vec![4, 4, -1, 0, 4, -1];
+        let cb = Codebook::build(codes.clone());
+        let dense = histogram(&codes, &cb);
+        let raw = raw_histogram(&codes);
+        for (j, &code) in cb.codes.iter().enumerate() {
+            assert_eq!(dense[j], raw[&code]);
+        }
+        assert_eq!(dense.iter().sum::<u32>() as usize, codes.len());
+    }
+}

@@ -1,0 +1,170 @@
+//! Locality-sensitive hashing for the propagation kernel (paper §2.1.3):
+//! per-hop random projection `u^(t)`, offset `b^(t)`, shared width `w`,
+//! and the two equivalent code-generation schedules:
+//!
+//! * the *baseline* `M^(t) = A^t F`, `c = ⌊(M u + b)/w⌋` which stores the
+//!   full N×f feature matrix per hop, and
+//! * the paper's §5.2.1 *restructured chain* `c ← F u` then `c ← A c`
+//!   per hop, which keeps only an N-vector and cuts the op count from
+//!   `HNf + (H-1) f·nnz(A)` to `HNf + H(H-1)/2·nnz(A)`.
+
+use crate::graph::Graph;
+use crate::util::rng::Xoshiro256;
+
+/// Per-hop LSH parameters `{(u^(t), b^(t))}` with shared width `w`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LshParams {
+    /// hops × f projection vectors.
+    pub u: Vec<Vec<f64>>,
+    /// hops offsets.
+    pub b: Vec<f64>,
+    /// Shared quantization width w > 0.
+    pub w: f64,
+}
+
+impl LshParams {
+    /// Sample parameters: u ~ N(0, I), b ~ U[0, w).
+    pub fn sample(hops: usize, f: usize, w: f64, rng: &mut Xoshiro256) -> Self {
+        assert!(w > 0.0);
+        Self {
+            u: (0..hops)
+                .map(|_| (0..f).map(|_| rng.normal()).collect())
+                .collect(),
+            b: (0..hops).map(|_| rng.uniform(0.0, w)).collect(),
+            w,
+        }
+    }
+
+    pub fn hops(&self) -> usize {
+        self.u.len()
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.u.first().map(|u| u.len()).unwrap_or(0)
+    }
+
+    /// Quantize one projected value to its integer code.
+    #[inline]
+    pub fn quantize(&self, proj: f64, hop: usize) -> i64 {
+        ((proj + self.b[hop]) / self.w).floor() as i64
+    }
+}
+
+/// Baseline code generation: materializes `M^(t) = A^t F` (N×f per hop).
+/// Kept as the oracle for the equivalence property test and for op-count
+/// comparisons; the production path is [`node_codes`].
+pub fn node_codes_reference(graph: &Graph, lsh: &LshParams) -> Vec<Vec<i64>> {
+    let n = graph.num_nodes();
+    let mut m = graph.features.clone();
+    let mut out = Vec::with_capacity(lsh.hops());
+    for t in 0..lsh.hops() {
+        let proj = m.matvec(&lsh.u[t]);
+        out.push((0..n).map(|i| lsh.quantize(proj[i], t)).collect());
+        if t + 1 < lsh.hops() {
+            m = graph.adj.spmm(&m);
+        }
+    }
+    out
+}
+
+/// Restructured chain (paper §5.2.1): per hop t compute `F u^(t)` then
+/// apply `A` t times, so only N-vectors are live. Exactly computes
+/// `A^t F u^(t)`.
+pub fn node_codes(graph: &Graph, lsh: &LshParams) -> Vec<Vec<i64>> {
+    let n = graph.num_nodes();
+    let mut out = Vec::with_capacity(lsh.hops());
+    let mut scratch = vec![0.0; n];
+    for t in 0..lsh.hops() {
+        // c = F u^(t)
+        let mut c = graph.features.matvec(&lsh.u[t]);
+        // c = A^t c
+        for _ in 0..t {
+            graph.adj.spmv_into(&c, &mut scratch);
+            std::mem::swap(&mut c, &mut scratch);
+        }
+        out.push(c.iter().map(|&p| lsh.quantize(p, t)).collect());
+    }
+    out
+}
+
+/// Operation counts of both schedules (paper §5.2.1's complexity claim),
+/// returned as (baseline_ops, restructured_ops).
+pub fn schedule_op_counts(n: usize, f: usize, nnz: usize, hops: usize) -> (u64, u64) {
+    let h = hops as u64;
+    let (n, f, nnz) = (n as u64, f as u64, nnz as u64);
+    let baseline = h * n * f + h.saturating_sub(1) * f * nnz;
+    let restructured = h * n * f + h * h.saturating_sub(1) / 2 * nnz;
+    (baseline, restructured)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::labeled_graph;
+
+    fn sample_graph(rng: &mut Xoshiro256) -> Graph {
+        let n = 5 + rng.gen_range(40);
+        labeled_graph(n, rng.gen_range(n), 0.3, &[0.4, 0.3, 0.2, 0.1], rng)
+    }
+
+    /// Property (paper §5.2.1): the restructured chain computes the same
+    /// codes as the baseline for every hop.
+    #[test]
+    fn chain_equals_baseline() {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        for _ in 0..25 {
+            let g = sample_graph(&mut rng);
+            let lsh = LshParams::sample(4, g.feature_dim(), 1.0, &mut rng);
+            let a = node_codes_reference(&g, &lsh);
+            let b = node_codes(&g, &lsh);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn codes_shift_with_offset() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let g = sample_graph(&mut rng);
+        let mut lsh = LshParams::sample(1, g.feature_dim(), 1.0, &mut rng);
+        let before = node_codes(&g, &lsh);
+        lsh.b[0] += 1.0; // exactly one bin
+        let after = node_codes(&g, &lsh);
+        for (x, y) in before[0].iter().zip(&after[0]) {
+            assert_eq!(x + 1, *y);
+        }
+    }
+
+    #[test]
+    fn width_controls_granularity() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = sample_graph(&mut rng);
+        let fine = LshParams::sample(1, g.feature_dim(), 0.1, &mut rng);
+        let mut coarse = fine.clone();
+        coarse.w = 100.0;
+        coarse.b = vec![0.0];
+        let fine_codes = node_codes(&g, &fine);
+        let coarse_codes = node_codes(&g, &coarse);
+        let distinct = |v: &Vec<i64>| v.iter().collect::<std::collections::HashSet<_>>().len();
+        assert!(distinct(&fine_codes[0]) >= distinct(&coarse_codes[0]));
+    }
+
+    /// The §5.2.1 claim: restructuring wins when f > H/2.
+    #[test]
+    fn op_count_claim() {
+        let (base, restr) = schedule_op_counts(100, 50, 400, 4);
+        assert!(restr < base, "restructured {restr} vs baseline {base}");
+        // Degenerate single-hop case: identical (no propagation at all).
+        let (b1, r1) = schedule_op_counts(100, 50, 400, 1);
+        assert_eq!(b1, r1);
+    }
+
+    #[test]
+    fn hop_zero_ignores_adjacency() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let labels = [0usize, 1, 2, 0];
+        let g1 = Graph::from_edges(4, &[(0, 1), (1, 2)], &labels, 3);
+        let g2 = Graph::from_edges(4, &[(0, 3), (2, 3)], &labels, 3);
+        let lsh = LshParams::sample(1, 3, 1.0, &mut rng);
+        assert_eq!(node_codes(&g1, &lsh), node_codes(&g2, &lsh));
+    }
+}

@@ -1,0 +1,10 @@
+//! Propagation-kernel substrate: LSH code generation, codebooks and
+//! histograms, and the graph propagation kernel (paper §2.1.3, §5.2.1).
+
+pub mod histogram;
+pub mod lsh;
+pub mod propagation;
+
+pub use histogram::{histogram, raw_dot, raw_histogram, Codebook};
+pub use lsh::{node_codes, node_codes_reference, schedule_op_counts, LshParams};
+pub use propagation::{gram_from_signatures, gram_matrix, normalize_gram, GraphSignature};

@@ -1,0 +1,35 @@
+//! # NysX — Nyström-HDC graph classification, reproduced end-to-end
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *"NysX: An Accurate
+//! and Energy-Efficient FPGA Accelerator for Hyperdimensional Graph
+//! Classification at the Edge"*:
+//!
+//! * **L3 (this crate)** — the serving coordinator, the full training and
+//!   inference pipelines, every algorithmic substrate (propagation kernel,
+//!   DPP landmark selection, minimal-perfect-hash lookup, load-balanced
+//!   SpMV), and a cycle-approximate model of the paper's six-engine FPGA
+//!   accelerator.
+//! * **L2 (python/compile/model.py)** — the same inference graph in JAX,
+//!   AOT-lowered to HLO text consumed by [`runtime`].
+//! * **L1 (python/compile/kernels/)** — the Nyström-encoding hot spot as a
+//!   Pallas kernel fused into the L2 graph.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod graph;
+pub mod infer;
+pub mod model;
+pub mod hdc;
+pub mod kernel;
+pub mod linalg;
+pub mod mph;
+pub mod nystrom;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,237 @@
+//! Dense row-major matrices over `f64` with the operations the
+//! Nyström/DPP/HDC pipeline needs: matmul, matvec, transpose, norms.
+//!
+//! We deliberately keep a single scalar type (f64) for the *math* path;
+//! the deployed accelerator/functional model quantizes where the paper
+//! does (bipolar HVs, integer histograms, f32 streaming of `P_nys`).
+
+use crate::util::rng::Xoshiro256;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Self {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// I.i.d. standard-normal entries (used for random hyperplane
+    /// projections P_rp and LSH vectors u).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// self (r×k) @ other (k×c) -> (r×c). Cache-friendly ikj loop.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = out.row_mut(i);
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// self (r×c) @ x (c) -> (r).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn scale(&mut self, a: f64) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    /// Max |a - b| over entries.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// a += alpha * b
+pub fn axpy(a: &mut [f64], alpha: f64, b: &[f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b.iter()) {
+        *x += alpha * y;
+    }
+}
+
+/// Cosine similarity; 0 when either vector is zero.
+pub fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a = Mat::randn(4, 4, &mut rng);
+        let i = Mat::identity(4);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-12);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = Mat::randn(5, 3, &mut rng);
+        let x: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+        let xm = Mat::from_vec(3, 1, x.clone());
+        let via_mm = a.matmul(&xm);
+        let via_mv = a.matvec(&x);
+        for i in 0..5 {
+            assert!((via_mm[(i, 0)] - via_mv[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = Mat::randn(3, 7, &mut rng);
+        assert!(a.transpose().transpose().max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn transpose_respects_matmul() {
+        // (AB)^T == B^T A^T
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let a = Mat::randn(4, 6, &mut rng);
+        let b = Mat::randn(6, 3, &mut rng);
+        let lhs = a.matmul(&b).transpose();
+        let rhs = b.transpose().matmul(&a.transpose());
+        assert!(lhs.max_abs_diff(&rhs) < 1e-10);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = [1.0, 0.0];
+        let b = [0.0, 2.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-12);
+        assert!(cosine(&a, &b).abs() < 1e-12);
+        assert_eq!(cosine(&a, &[0.0, 0.0]), 0.0);
+    }
+}

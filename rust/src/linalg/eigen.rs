@@ -1,0 +1,280 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method, plus the
+//! derived operations the Nyström pipeline needs: pseudo-inverse and the
+//! `Λ^{-1/2} Q^T` whitening map (§2.1.2 of the paper), and log-determinants
+//! for DPP likelihoods.
+//!
+//! Jacobi is a good fit here: landmark kernels are small (s ≤ a few
+//! hundred), symmetric PSD, and Jacobi is simple, numerically robust and
+//! gives orthonormal eigenvectors to machine precision.
+
+use super::dense::Mat;
+
+/// Eigendecomposition `A = Q diag(λ) Q^T` of a symmetric matrix.
+/// Eigenvalues are sorted descending; `q` holds eigenvectors as columns.
+#[derive(Debug, Clone)]
+pub struct SymEigen {
+    pub values: Vec<f64>,
+    /// n×n orthonormal matrix, column j = eigenvector for values[j].
+    pub q: Mat,
+}
+
+/// Cyclic Jacobi eigensolver for symmetric matrices.
+///
+/// Sweeps all off-diagonal (p,q) pairs, rotating each to zero, until the
+/// off-diagonal Frobenius mass falls below `tol * ||A||_F` or `max_sweeps`
+/// is reached (30 sweeps is far more than ever needed; convergence is
+/// quadratic).
+pub fn sym_eigen(a: &Mat) -> SymEigen {
+    assert_eq!(a.rows, a.cols, "sym_eigen: matrix must be square");
+    let n = a.rows;
+    let mut m = a.clone();
+    // Symmetrize defensively (callers pass kernels that should already be
+    // symmetric up to roundoff).
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let mut q = Mat::identity(n);
+    let fro = m.fro_norm().max(f64::MIN_POSITIVE);
+    let tol = 1e-14 * fro;
+
+    for _sweep in 0..30 {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if (2.0 * off).sqrt() < tol {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apq = m[(p, r)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(r, r)];
+                // Stable rotation computation (Golub & Van Loan 8.4).
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Apply rotation to rows/cols p and r of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, r)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, r)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(r, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(r, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let qkp = q[(k, p)];
+                    let qkq = q[(k, r)];
+                    q[(k, p)] = c * qkp - s * qkq;
+                    q[(k, r)] = s * qkp + c * qkq;
+                }
+            }
+        }
+    }
+
+    let mut values: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    // Sort descending, permuting eigenvector columns accordingly.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| values[j].partial_cmp(&values[i]).unwrap());
+    let sorted_values: Vec<f64> = order.iter().map(|&i| values[i]).collect();
+    let mut sorted_q = Mat::zeros(n, n);
+    for (new_col, &old_col) in order.iter().enumerate() {
+        for row in 0..n {
+            sorted_q[(row, new_col)] = q[(row, old_col)];
+        }
+    }
+    values = sorted_values;
+    SymEigen { values, q: sorted_q }
+}
+
+impl SymEigen {
+    /// Reconstruct `Q diag(values) Q^T`.
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.values.len();
+        let mut scaled = self.q.clone(); // columns scaled by eigenvalue
+        for j in 0..n {
+            for i in 0..n {
+                scaled[(i, j)] *= self.values[j];
+            }
+        }
+        scaled.matmul(&self.q.transpose())
+    }
+
+    /// Moore-Penrose pseudo-inverse (eigenvalues below `rcond * λ_max`
+    /// treated as zero).
+    pub fn pseudo_inverse(&self, rcond: f64) -> Mat {
+        let n = self.values.len();
+        let lmax = self.values.iter().cloned().fold(0.0, f64::max).max(0.0);
+        let cutoff = rcond * lmax;
+        let mut scaled = self.q.clone();
+        for j in 0..n {
+            let inv = if self.values[j] > cutoff {
+                1.0 / self.values[j]
+            } else {
+                0.0
+            };
+            for i in 0..n {
+                scaled[(i, j)] *= inv;
+            }
+        }
+        scaled.matmul(&self.q.transpose())
+    }
+
+    /// The Nyström whitening map `W = Λ^{-1/2} Q^T` (rank-truncated at
+    /// `rcond * λ_max`), so that `W^T W = H_Z^+`. Shape: n×n (rows for
+    /// zeroed eigenvalues are zero).
+    pub fn whitening(&self, rcond: f64) -> Mat {
+        let n = self.values.len();
+        let lmax = self.values.iter().cloned().fold(0.0, f64::max).max(0.0);
+        let cutoff = rcond * lmax;
+        let qt = self.q.transpose();
+        let mut w = Mat::zeros(n, n);
+        for i in 0..n {
+            let scale = if self.values[i] > cutoff {
+                1.0 / self.values[i].sqrt()
+            } else {
+                0.0
+            };
+            for j in 0..n {
+                w[(i, j)] = scale * qt[(i, j)];
+            }
+        }
+        w
+    }
+
+    /// log det(A + eps I) — used by greedy DPP MAP selection.
+    pub fn log_det(&self, eps: f64) -> f64 {
+        self.values.iter().map(|&l| (l + eps).max(1e-300).ln()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_symmetric(n: usize, rng: &mut Xoshiro256) -> Mat {
+        let a = Mat::randn(n, n, rng);
+        let mut s = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                s[(i, j)] = 0.5 * (a[(i, j)] + a[(j, i)]);
+            }
+        }
+        s
+    }
+
+    fn random_psd(n: usize, rng: &mut Xoshiro256) -> Mat {
+        let a = Mat::randn(n, n.max(2), rng);
+        a.matmul(&a.transpose())
+    }
+
+    #[test]
+    fn eigen_reconstructs() {
+        let mut rng = Xoshiro256::seed_from_u64(100);
+        for n in [1usize, 2, 5, 12, 30] {
+            let a = random_symmetric(n, &mut rng);
+            let e = sym_eigen(&a);
+            let r = e.reconstruct();
+            assert!(
+                r.max_abs_diff(&a) < 1e-8 * (1.0 + a.fro_norm()),
+                "n={n} err={}",
+                r.max_abs_diff(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Xoshiro256::seed_from_u64(101);
+        let a = random_symmetric(10, &mut rng);
+        let e = sym_eigen(&a);
+        let qtq = e.q.transpose().matmul(&e.q);
+        assert!(qtq.max_abs_diff(&Mat::identity(10)) < 1e-10);
+    }
+
+    #[test]
+    fn values_sorted_descending() {
+        let mut rng = Xoshiro256::seed_from_u64(102);
+        let a = random_symmetric(15, &mut rng);
+        let e = sym_eigen(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = sym_eigen(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pseudo_inverse_property() {
+        // For PSD A: A A+ A == A.
+        let mut rng = Xoshiro256::seed_from_u64(103);
+        let a = random_psd(8, &mut rng);
+        let e = sym_eigen(&a);
+        let pinv = e.pseudo_inverse(1e-12);
+        let back = a.matmul(&pinv).matmul(&a);
+        assert!(back.max_abs_diff(&a) < 1e-6 * (1.0 + a.fro_norm()));
+    }
+
+    #[test]
+    fn whitening_squares_to_pinv() {
+        // W^T W == A+ for PSD A.
+        let mut rng = Xoshiro256::seed_from_u64(104);
+        let a = random_psd(6, &mut rng);
+        let e = sym_eigen(&a);
+        let w = e.whitening(1e-12);
+        let wtw = w.transpose().matmul(&w);
+        let pinv = e.pseudo_inverse(1e-12);
+        assert!(wtw.max_abs_diff(&pinv) < 1e-8 * (1.0 + pinv.fro_norm()));
+    }
+
+    #[test]
+    fn rank_deficient_handled() {
+        // Rank-1 PSD matrix: vv^T.
+        let v = Mat::from_vec(4, 1, vec![1.0, 2.0, -1.0, 0.5]);
+        let a = v.matmul(&v.transpose());
+        let e = sym_eigen(&a);
+        assert!(e.values[0] > 1.0);
+        for &l in &e.values[1..] {
+            assert!(l.abs() < 1e-10);
+        }
+        let pinv = e.pseudo_inverse(1e-10);
+        // A+ A A+ == A+
+        let back = pinv.matmul(&a).matmul(&pinv);
+        assert!(back.max_abs_diff(&pinv) < 1e-8);
+    }
+
+    #[test]
+    fn log_det_identity_zero() {
+        let e = sym_eigen(&Mat::identity(5));
+        assert!(e.log_det(0.0).abs() < 1e-10);
+    }
+}

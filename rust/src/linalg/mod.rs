@@ -1,0 +1,8 @@
+//! Dense linear algebra substrate: row-major matrices, cyclic-Jacobi
+//! symmetric eigendecomposition, pseudo-inverse and Nyström whitening.
+
+pub mod dense;
+pub mod eigen;
+
+pub use dense::{axpy, cosine, dot, norm, Mat};
+pub use eigen::{sym_eigen, SymEigen};

@@ -1,0 +1,191 @@
+//! `nysx` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train   --dataset MUTAG [--dpp] [--out model.nysx] [--scale 1.0]
+//!   infer   --model model.nysx --dataset MUTAG [--count 32]
+//!   serve   --dataset MUTAG [--workers 4] [--requests 500] [--dpp]
+//!   eval    [--scale 1.0] [--ablation]      # all tables & figures
+//!   roofline
+//!
+//! Positional command first, then flags (the tiny parser is greedy).
+
+use std::sync::Arc;
+
+use nysx::bench::tables::{
+    evaluate_all, render_fig6, render_fig7, render_fig8, render_roofline, render_table3,
+    render_table4, render_table6, render_table7, render_table8, EvalConfig,
+};
+use nysx::coordinator::{Server, ServerConfig};
+use nysx::graph::tudataset::{spec_by_name, TU_SPECS};
+use nysx::model::train::{evaluate, train};
+use nysx::model::ModelConfig;
+use nysx::nystrom::LandmarkStrategy;
+use nysx::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "roofline" => println!("{}", render_roofline()),
+        _ => {
+            println!(
+                "nysx — Nyström-HDC graph classification (NysX reproduction)\n\n\
+                 USAGE: nysx <train|infer|serve|eval|roofline> [flags]\n\
+                 datasets: {}",
+                TU_SPECS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+            );
+        }
+    }
+}
+
+fn dataset_and_config(args: &Args) -> (nysx::graph::GraphDataset, ModelConfig) {
+    let name = args.get_or("dataset", "MUTAG");
+    let spec = spec_by_name(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+    let scale = args.get_f64("scale", 1.0);
+    let seed = args.get_u64("seed", 42);
+    let (ds, s_uni, s_dpp) = spec.generate_scaled(seed, scale);
+    let dpp = args.get_bool("dpp");
+    let cfg = ModelConfig {
+        hops: spec.hops,
+        hv_dim: args.get_usize("d", 10_000),
+        num_landmarks: if dpp { s_dpp } else { s_uni },
+        strategy: if dpp {
+            LandmarkStrategy::HybridDpp { pool_factor: 2 }
+        } else {
+            LandmarkStrategy::Uniform
+        },
+        seed,
+        ..ModelConfig::default()
+    };
+    (ds, cfg)
+}
+
+fn cmd_train(args: &Args) {
+    let (ds, cfg) = dataset_and_config(args);
+    eprintln!(
+        "training on {} ({} train graphs, s={}, {:?})",
+        ds.name,
+        ds.train.len(),
+        cfg.num_landmarks,
+        cfg.strategy
+    );
+    let t0 = std::time::Instant::now();
+    let model = train(&ds, &cfg);
+    eprintln!("trained in {:.1}s", t0.elapsed().as_secs_f64());
+    println!("test accuracy: {:.2}%", 100.0 * evaluate(&model, &ds.test));
+    let mem = model.memory_report();
+    println!(
+        "model memory: {:.2} MB dense / {:.2} MB deployed (P_nys {:.0}%)",
+        mem.total_dense() as f64 / 1048576.0,
+        mem.total_deployed() as f64 / 1048576.0,
+        100.0 * mem.p_nys_fraction()
+    );
+    if let Some(path) = args.get("out") {
+        nysx::model::io::save_file(&model, std::path::Path::new(path)).expect("save model");
+        println!("saved to {path}");
+    }
+}
+
+fn cmd_infer(args: &Args) {
+    let (ds, cfg) = dataset_and_config(args);
+    let model = if let Some(path) = args.get("model") {
+        nysx::model::io::load_file(std::path::Path::new(path)).expect("load model")
+    } else {
+        eprintln!("no --model given; training one now");
+        train(&ds, &cfg)
+    };
+    let count = args.get_usize("count", 32).min(ds.test.len());
+    let mut engine = nysx::infer::NysxEngine::new(&model);
+    let accel = nysx::sim::AcceleratorConfig::zcu104();
+    let power = nysx::sim::PowerModel::default();
+    let mut correct = 0;
+    for (g, y) in ds.test.iter().take(count) {
+        let t0 = std::time::Instant::now();
+        let res = engine.infer(g);
+        let host_us = t0.elapsed().as_secs_f64() * 1e6;
+        let b = nysx::sim::simulate(&res.trace, &accel, nysx::sim::SimOptions::default());
+        let e = power.energy(&b, &accel);
+        if res.predicted == *y {
+            correct += 1;
+        }
+        println!(
+            "graph N={:<4} pred={} truth={} host={:.0}µs fpga={:.3}ms {:.2}mJ",
+            g.num_nodes(),
+            res.predicted,
+            y,
+            host_us,
+            e.time_ms,
+            e.energy_mj
+        );
+    }
+    println!(
+        "accuracy on {count} graphs: {:.1}%",
+        100.0 * correct as f64 / count as f64
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let (ds, cfg) = dataset_and_config(args);
+    eprintln!("training model for serving...");
+    let model = Arc::new(train(&ds, &cfg));
+    let workers = args.get_usize("workers", 4);
+    let requests = args.get_usize("requests", 500);
+    let mut server = Server::start(
+        model,
+        ServerConfig {
+            workers,
+            ..Default::default()
+        },
+    );
+    let mut rng = nysx::util::rng::Xoshiro256::seed_from_u64(7);
+    for _ in 0..requests {
+        let (g, _) = &ds.test[rng.gen_range(ds.test.len())];
+        while server.submit(g.clone()).is_err() {
+            server.recv();
+        }
+    }
+    server.drain();
+    let s = server.metrics.summary();
+    println!(
+        "served {} requests on {workers} workers\n  host latency  p50={:.0}µs p95={:.0}µs p99={:.0}µs\n  queue wait    p50={:.0}µs p99={:.0}µs\n  sim FPGA      mean={:.3}ms p99={:.3}ms\n  host throughput {:.0} req/s; simulated energy {:.1} mJ total\n  per-worker {:?}",
+        s.requests,
+        s.host_us.p50,
+        s.host_us.p95,
+        s.host_us.p99,
+        s.queue_us.p50,
+        s.queue_us.p99,
+        s.fpga_ms.mean,
+        s.fpga_ms.p99,
+        s.host_throughput_rps,
+        s.total_fpga_mj,
+        s.per_worker
+    );
+    server.shutdown();
+}
+
+fn cmd_eval(args: &Args) {
+    let cfg = EvalConfig {
+        scale: args.get_f64("scale", EvalConfig::default().scale),
+        seed: args.get_u64("seed", 42),
+        hv_dim: args.get_usize("d", 10_000),
+        ablation: args.get_bool("ablation"),
+    };
+    let evals = evaluate_all(&cfg);
+    for section in [
+        render_table4(&evals),
+        render_table3(&evals),
+        render_table6(&evals),
+        render_fig6(&evals),
+        render_table7(&evals),
+        render_fig7(&evals),
+        render_table8(&evals),
+        render_fig8(&evals),
+        render_roofline(),
+    ] {
+        println!("{section}");
+    }
+}

@@ -1,0 +1,416 @@
+//! Binary model serialization (no `serde` available — a small
+//! length-prefixed little-endian format with magic/version header).
+//!
+//! Derived structures (MPH lookups, KSE schedule tables) are *rebuilt*
+//! on load: they are deterministic functions of the stored codebooks /
+//! histogram matrices, which keeps the artifact compact and guarantees
+//! the offline tables always match the deployed parameters.
+
+use std::io::{self, Read, Write};
+
+use super::{ModelConfig, NysHdcModel};
+use crate::hdc::{ClassPrototypes, Hypervector};
+use crate::kernel::{Codebook, LshParams};
+use crate::mph::{code_key, MphLookup};
+use crate::nystrom::{LandmarkStrategy, NystromProjection};
+use crate::sparse::Csr;
+
+const MAGIC: &[u8; 8] = b"NYSXMDL\x01";
+
+struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u64(&mut self, v: u64) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn i64(&mut self, v: i64) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn f64(&mut self, v: f64) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn bytes(&mut self, v: &[u8]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        self.w.write_all(v)
+    }
+    fn str(&mut self, s: &str) -> io::Result<()> {
+        self.bytes(s.as_bytes())
+    }
+    fn f64s(&mut self, v: &[f64]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.f64(x)?;
+        }
+        Ok(())
+    }
+    fn f32s(&mut self, v: &[f32]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn i64s(&mut self, v: &[i64]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.i64(x)?;
+        }
+        Ok(())
+    }
+    fn usizes(&mut self, v: &[usize]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.u64(x as u64)?;
+        }
+        Ok(())
+    }
+    fn u32s(&mut self, v: &[u32]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn i8s(&mut self, v: &[i8]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
+        self.w.write_all(&bytes)
+    }
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u64(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn i64(&mut self) -> io::Result<i64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(i64::from_le_bytes(b))
+    }
+    fn f64(&mut self) -> io::Result<f64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+    fn bytes(&mut self) -> io::Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        let mut v = vec![0u8; n];
+        self.r.read_exact(&mut v)?;
+        Ok(v)
+    }
+    fn str(&mut self) -> io::Result<String> {
+        String::from_utf8(self.bytes()?)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+    fn f64s(&mut self) -> io::Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut b = [0u8; 4];
+            self.r.read_exact(&mut b)?;
+            out.push(f32::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+    fn i64s(&mut self) -> io::Result<Vec<i64>> {
+        let n = self.u64()? as usize;
+        (0..n).map(|_| self.i64()).collect()
+    }
+    fn usizes(&mut self) -> io::Result<Vec<usize>> {
+        let n = self.u64()? as usize;
+        (0..n).map(|_| self.u64().map(|v| v as usize)).collect()
+    }
+    fn u32s(&mut self) -> io::Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut b = [0u8; 4];
+            self.r.read_exact(&mut b)?;
+            out.push(u32::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+    fn i8s(&mut self) -> io::Result<Vec<i8>> {
+        let bytes = self.bytes()?;
+        Ok(bytes.into_iter().map(|b| b as i8).collect())
+    }
+}
+
+fn strategy_tag(s: LandmarkStrategy) -> (u64, u64) {
+    match s {
+        LandmarkStrategy::Uniform => (0, 0),
+        LandmarkStrategy::HybridDpp { pool_factor } => (1, pool_factor as u64),
+        LandmarkStrategy::FullDpp => (2, 0),
+    }
+}
+
+fn strategy_from_tag(tag: u64, arg: u64) -> io::Result<LandmarkStrategy> {
+    match tag {
+        0 => Ok(LandmarkStrategy::Uniform),
+        1 => Ok(LandmarkStrategy::HybridDpp {
+            pool_factor: arg as usize,
+        }),
+        2 => Ok(LandmarkStrategy::FullDpp),
+        _ => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad strategy tag {tag}"),
+        )),
+    }
+}
+
+/// Serialize a model to a writer.
+pub fn save<W: Write>(model: &NysHdcModel, w: W) -> io::Result<()> {
+    let mut w = Writer { w };
+    w.w.write_all(MAGIC)?;
+    // Config
+    let c = &model.config;
+    w.u64(c.hops as u64)?;
+    w.u64(c.hv_dim as u64)?;
+    w.f64(c.lsh_width)?;
+    w.u64(c.num_landmarks as u64)?;
+    let (tag, arg) = strategy_tag(c.strategy);
+    w.u64(tag)?;
+    w.u64(arg)?;
+    w.f64(c.mph_gamma)?;
+    w.u64(c.pes as u64)?;
+    w.u64(c.seed)?;
+    // Meta
+    w.str(&model.dataset_name)?;
+    w.u64(model.num_classes as u64)?;
+    w.u64(model.feature_dim as u64)?;
+    // LSH
+    w.u64(model.lsh.u.len() as u64)?;
+    for u in &model.lsh.u {
+        w.f64s(u)?;
+    }
+    w.f64s(&model.lsh.b)?;
+    w.f64(model.lsh.w)?;
+    // Codebooks
+    w.u64(model.codebooks.len() as u64)?;
+    for cb in &model.codebooks {
+        w.i64s(&cb.codes)?;
+    }
+    // Landmark hists (CSR)
+    w.u64(model.landmark_hists.len() as u64)?;
+    for h in &model.landmark_hists {
+        w.u64(h.rows as u64)?;
+        w.u64(h.cols as u64)?;
+        w.usizes(&h.row_ptr)?;
+        w.u32s(&h.col_idx)?;
+        w.f64s(&h.val)?;
+    }
+    // Projection
+    w.u64(model.projection.d as u64)?;
+    w.u64(model.projection.s as u64)?;
+    w.u64(model.projection.rank as u64)?;
+    w.f32s(&model.projection.data)?;
+    // Prototypes
+    w.u64(model.prototypes.prototypes.len() as u64)?;
+    for p in &model.prototypes.prototypes {
+        w.i8s(&p.data)?;
+    }
+    w.usizes(&model.prototypes.counts)?;
+    // Landmark indices
+    w.usizes(&model.landmark_indices)?;
+    Ok(())
+}
+
+/// Deserialize a model from a reader, rebuilding MPH lookups and KSE
+/// schedule tables.
+pub fn load<R: Read>(r: R) -> io::Result<NysHdcModel> {
+    let mut r = Reader { r };
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "not a NysX model file",
+        ));
+    }
+    let hops = r.u64()? as usize;
+    let hv_dim = r.u64()? as usize;
+    let lsh_width = r.f64()?;
+    let num_landmarks = r.u64()? as usize;
+    let tag = r.u64()?;
+    let arg = r.u64()?;
+    let strategy = strategy_from_tag(tag, arg)?;
+    let mph_gamma = r.f64()?;
+    let pes = r.u64()? as usize;
+    let seed = r.u64()?;
+    let config = ModelConfig {
+        hops,
+        hv_dim,
+        lsh_width,
+        num_landmarks,
+        strategy,
+        mph_gamma,
+        pes,
+        seed,
+    };
+    let dataset_name = r.str()?;
+    let num_classes = r.u64()? as usize;
+    let feature_dim = r.u64()? as usize;
+    let n_u = r.u64()? as usize;
+    let mut u = Vec::with_capacity(n_u);
+    for _ in 0..n_u {
+        u.push(r.f64s()?);
+    }
+    let b = r.f64s()?;
+    let w_width = r.f64()?;
+    let lsh = LshParams { u, b, w: w_width };
+    let n_cb = r.u64()? as usize;
+    let codebooks: Vec<Codebook> = (0..n_cb)
+        .map(|_| r.i64s().map(Codebook::build))
+        .collect::<io::Result<_>>()?;
+    let n_h = r.u64()? as usize;
+    let mut landmark_hists = Vec::with_capacity(n_h);
+    for _ in 0..n_h {
+        let rows = r.u64()? as usize;
+        let cols = r.u64()? as usize;
+        let row_ptr = r.usizes()?;
+        let col_idx = r.u32s()?;
+        let val = r.f64s()?;
+        landmark_hists.push(Csr {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            val,
+        });
+    }
+    let d = r.u64()? as usize;
+    let s = r.u64()? as usize;
+    let rank = r.u64()? as usize;
+    let data = r.f32s()?;
+    if data.len() != d * s {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "projection size mismatch",
+        ));
+    }
+    let projection = NystromProjection { d, s, data, rank };
+    let n_proto = r.u64()? as usize;
+    let mut prototypes = Vec::with_capacity(n_proto);
+    for _ in 0..n_proto {
+        prototypes.push(Hypervector { data: r.i8s()? });
+    }
+    let counts = r.usizes()?;
+    let landmark_indices = r.usizes()?;
+
+    // Rebuild derived structures.
+    let lookups: Vec<MphLookup> = codebooks
+        .iter()
+        .map(|cb| {
+            let keys: Vec<u64> = cb.codes.iter().map(|&c| code_key(c)).collect();
+            let values: Vec<u32> = (0..cb.len() as u32).collect();
+            MphLookup::build(&keys, &values, mph_gamma)
+        })
+        .collect();
+    let kse_schedules = NysHdcModel::build_kse_schedules(&landmark_hists, pes);
+
+    Ok(NysHdcModel {
+        config,
+        dataset_name,
+        num_classes,
+        feature_dim,
+        lsh,
+        codebooks,
+        lookups,
+        landmark_hists,
+        kse_schedules,
+        projection,
+        prototypes: ClassPrototypes {
+            prototypes,
+            counts,
+        },
+        landmark_indices,
+    })
+}
+
+/// Save to a file path.
+pub fn save_file(model: &NysHdcModel, path: &std::path::Path) -> io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    save(model, std::io::BufWriter::new(f))
+}
+
+/// Load from a file path.
+pub fn load_file(path: &std::path::Path) -> io::Result<NysHdcModel> {
+    let f = std::fs::File::open(path)?;
+    load(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tudataset::spec_by_name;
+    use crate::model::train::{encode_hv, train};
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn roundtrip_preserves_behaviour() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(5, 0.2);
+        let cfg = ModelConfig {
+            hops: 2,
+            hv_dim: 512,
+            num_landmarks: 8,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        let mut buf = Vec::new();
+        save(&model, &mut buf).unwrap();
+        let back = load(&buf[..]).unwrap();
+        assert_eq!(back.dataset_name, model.dataset_name);
+        assert_eq!(back.landmark_indices, model.landmark_indices);
+        assert_eq!(back.projection.data, model.projection.data);
+        assert_eq!(back.prototypes.prototypes, model.prototypes.prototypes);
+        // Behavioural equality: same HV for the same query.
+        for (g, _) in ds.test.iter().take(5) {
+            assert_eq!(encode_hv(&model, g), encode_hv(&back, g));
+        }
+        // Rebuilt MPH agrees with stored codebooks.
+        for t in 0..2 {
+            for &c in &back.codebooks[t].codes {
+                assert_eq!(
+                    back.lookups[t].get(crate::mph::code_key(c)),
+                    back.codebooks[t].index_of(c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOTAMODELxxxxxxxxxxxxxxx".to_vec();
+        assert!(load(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(6, 0.15);
+        let cfg = ModelConfig {
+            hops: 2,
+            hv_dim: 128,
+            num_landmarks: 5,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        let mut buf = Vec::new();
+        save(&model, &mut buf).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(load(&buf[..]).is_err());
+    }
+}

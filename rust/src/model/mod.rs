@@ -1,0 +1,153 @@
+//! The trained Nyström-HDC model: everything Algorithm 1 needs at
+//! inference time, plus the Table-2 memory accounting that drives the
+//! paper's Table 8 (memory ± DPP).
+
+pub mod io;
+pub mod train;
+
+use crate::hdc::ClassPrototypes;
+use crate::kernel::{Codebook, LshParams};
+use crate::mph::MphLookup;
+use crate::nystrom::{LandmarkStrategy, NystromProjection};
+use crate::sparse::{Csr, SchedulePolicy, ScheduleTable};
+
+/// Hyper-parameters of a training run.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// Propagation hops H.
+    pub hops: usize,
+    /// HV dimensionality d (paper uses 10^4).
+    pub hv_dim: usize,
+    /// LSH quantization width w (shared across hops).
+    pub lsh_width: f64,
+    /// Landmark count s.
+    pub num_landmarks: usize,
+    /// Landmark selection strategy (uniform = NysHD, hybrid DPP = NysX).
+    pub strategy: LandmarkStrategy,
+    /// MPH load factor γ.
+    pub mph_gamma: f64,
+    /// PEs in the SpMV engines (schedule-table width).
+    pub pes: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            hops: 4,
+            hv_dim: 10_000,
+            lsh_width: 1.0,
+            num_landmarks: 64,
+            strategy: LandmarkStrategy::HybridDpp { pool_factor: 2 },
+            mph_gamma: 1.5,
+            pes: 4,
+            seed: 0x4e79_7358, // "NysX"
+        }
+    }
+}
+
+/// The trained model — the full parameter set of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct NysHdcModel {
+    pub config: ModelConfig,
+    pub dataset_name: String,
+    pub num_classes: usize,
+    pub feature_dim: usize,
+    /// LSH parameters {(u^(t), b^(t))}, width w.
+    pub lsh: LshParams,
+    /// Hop-specific codebooks B^(t).
+    pub codebooks: Vec<Codebook>,
+    /// MPH lookup engines (code→histogram index), one per hop.
+    pub lookups: Vec<MphLookup>,
+    /// Landmark histogram matrices H^(t) ∈ R^{s×|B^(t)|} in CSR.
+    pub landmark_hists: Vec<Csr>,
+    /// Static load-balance schedules for each H^(t) (built offline per
+    /// §4.2 — these operands never change after training).
+    pub kse_schedules: Vec<ScheduleTable>,
+    /// Nyström projection P_nys ∈ R^{d×s} (f32 streaming layout).
+    pub projection: NystromProjection,
+    /// Class prototypes G ∈ {-1,+1}^{C×d}.
+    pub prototypes: ClassPrototypes,
+    /// Indices of the selected landmark graphs in the training set.
+    pub landmark_indices: Vec<usize>,
+}
+
+impl NysHdcModel {
+    pub fn s(&self) -> usize {
+        self.config.num_landmarks
+    }
+
+    pub fn d(&self) -> usize {
+        self.config.hv_dim
+    }
+
+    pub fn hops(&self) -> usize {
+        self.config.hops
+    }
+
+    /// Rebuild the KSE schedule tables (used after deserialization).
+    pub fn build_kse_schedules(hists: &[Csr], pes: usize) -> Vec<ScheduleTable> {
+        hists
+            .iter()
+            .map(|h| ScheduleTable::build(h, pes, SchedulePolicy::NnzGrouped))
+            .collect()
+    }
+
+    /// Table 2 memory accounting at the deployed bit-widths.
+    pub fn memory_report(&self) -> MemoryReport {
+        let codebooks: usize = self.codebooks.iter().map(|c| c.bytes()).sum();
+        // Paper Table 2 accounts H^(t) densely (s×|B|×b_H); the
+        // accelerator stores CSR. Report both.
+        let hists_dense: usize = self
+            .landmark_hists
+            .iter()
+            .map(|h| h.rows * h.cols * 4)
+            .sum();
+        let hists_csr: usize = self.landmark_hists.iter().map(|h| h.csr_bytes(32)).sum();
+        let p_nys = self.projection.bytes();
+        let prototypes = self.prototypes.bytes(8);
+        let mph: usize = self.lookups.iter().map(|l| l.bytes()).sum();
+        let schedules: usize = self.kse_schedules.iter().map(|s| s.table_bytes()).sum();
+        MemoryReport {
+            codebooks,
+            hists_dense,
+            hists_csr,
+            p_nys,
+            prototypes,
+            mph,
+            schedules,
+        }
+    }
+}
+
+/// Byte counts per component (Table 2 / Table 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryReport {
+    pub codebooks: usize,
+    /// Dense s×|B| accounting (what the paper's Table 2 counts).
+    pub hists_dense: usize,
+    /// CSR accounting (what the accelerator actually stores).
+    pub hists_csr: usize,
+    pub p_nys: usize,
+    pub prototypes: usize,
+    pub mph: usize,
+    pub schedules: usize,
+}
+
+impl MemoryReport {
+    /// Total with dense histogram accounting (paper's Table 2 convention).
+    pub fn total_dense(&self) -> usize {
+        self.codebooks + self.hists_dense + self.p_nys + self.prototypes
+    }
+
+    /// Total as deployed on the accelerator (CSR + MPH + schedules).
+    pub fn total_deployed(&self) -> usize {
+        self.codebooks + self.hists_csr + self.p_nys + self.prototypes + self.mph + self.schedules
+    }
+
+    /// Fraction of total taken by P_nys (the paper's ">90%" claim).
+    pub fn p_nys_fraction(&self) -> f64 {
+        self.p_nys as f64 / self.total_dense().max(1) as f64
+    }
+}

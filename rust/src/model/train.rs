@@ -1,0 +1,265 @@
+//! The training pipeline (offline; paper §2.2 + §4.1):
+//!
+//! 1. sample LSH parameters;
+//! 2. select `s` landmark graphs (uniform or hybrid Uniform+DPP);
+//! 3. build hop-specific codebooks `B^(t)` from the landmark codes;
+//! 4. assemble landmark histogram matrices `H^(t)` (CSR) and their §4.2
+//!    schedule tables;
+//! 5. compute the landmark kernel `H_Z`, eigendecompose, build `P_nys`;
+//! 6. single-pass encode all training graphs into class prototypes.
+
+use super::{ModelConfig, NysHdcModel};
+use crate::graph::{Graph, GraphDataset};
+use crate::hdc::{Hypervector, PrototypeAccumulator};
+use crate::kernel::{node_codes, Codebook, GraphSignature, LshParams};
+use crate::linalg::Mat;
+use crate::mph::{code_key, MphLookup};
+use crate::nystrom::{select_landmarks, NystromProjection};
+use crate::sparse::Csr;
+use crate::util::rng::Xoshiro256;
+
+/// Train a Nyström-HDC model on a dataset.
+pub fn train(dataset: &GraphDataset, config: &ModelConfig) -> NysHdcModel {
+    let mut rng = Xoshiro256::seed_from_u64(config.seed);
+    let graphs: Vec<&Graph> = dataset.train.iter().map(|(g, _)| g).collect();
+    assert!(
+        config.num_landmarks <= graphs.len(),
+        "s={} exceeds training set size {}",
+        config.num_landmarks,
+        graphs.len()
+    );
+
+    // (1) LSH parameters (shared by training and inference).
+    let lsh = LshParams::sample(config.hops, dataset.feature_dim, config.lsh_width, &mut rng);
+
+    // (2) Landmark selection.
+    let landmark_indices =
+        select_landmarks(&graphs, config.num_landmarks, config.strategy, &lsh, &mut rng);
+    let s = landmark_indices.len();
+
+    // (3) Codebooks from landmark codes, hop by hop.
+    let landmark_codes: Vec<Vec<Vec<i64>>> = landmark_indices
+        .iter()
+        .map(|&i| node_codes(graphs[i], &lsh))
+        .collect();
+    let codebooks: Vec<Codebook> = (0..config.hops)
+        .map(|t| {
+            Codebook::build(
+                landmark_codes
+                    .iter()
+                    .flat_map(|codes| codes[t].iter().copied()),
+            )
+        })
+        .collect();
+
+    // (4) Landmark histogram matrices H^(t) ∈ s×|B^(t)| (CSR) and their
+    // static schedules.
+    let landmark_hists: Vec<Csr> = (0..config.hops)
+        .map(|t| {
+            let mut triplets = Vec::new();
+            for (row, codes) in landmark_codes.iter().enumerate() {
+                let mut counts: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+                for &c in &codes[t] {
+                    // Landmark codes are by construction in-vocabulary.
+                    let j = codebooks[t].index_of(c).expect("landmark code in B");
+                    *counts.entry(j).or_insert(0.0) += 1.0;
+                }
+                for (j, v) in counts {
+                    triplets.push((row, j as usize, v));
+                }
+            }
+            Csr::from_triplets(s, codebooks[t].len(), triplets)
+        })
+        .collect();
+    let kse_schedules = NysHdcModel::build_kse_schedules(&landmark_hists, config.pes);
+
+    // MPH lookup engines over each codebook.
+    let lookups: Vec<MphLookup> = codebooks
+        .iter()
+        .map(|cb| {
+            let keys: Vec<u64> = cb.codes.iter().map(|&c| code_key(c)).collect();
+            let values: Vec<u32> = (0..cb.len() as u32).collect();
+            MphLookup::build(&keys, &values, config.mph_gamma)
+        })
+        .collect();
+
+    // (5) Landmark kernel H_Z from signatures (Σ_t h_i^(t)·h_j^(t)) and the
+    // Nyström projection.
+    let landmark_sigs: Vec<GraphSignature> = landmark_indices
+        .iter()
+        .map(|&i| GraphSignature::compute(graphs[i], &lsh))
+        .collect();
+    let mut h_z = Mat::zeros(s, s);
+    for i in 0..s {
+        for j in i..s {
+            let v = landmark_sigs[i].kernel(&landmark_sigs[j]);
+            h_z[(i, j)] = v;
+            h_z[(j, i)] = v;
+        }
+    }
+    let projection = NystromProjection::build(&h_z, config.hv_dim, &mut rng);
+
+    let mut model = NysHdcModel {
+        config: config.clone(),
+        dataset_name: dataset.name.clone(),
+        num_classes: dataset.num_classes,
+        feature_dim: dataset.feature_dim,
+        lsh,
+        codebooks,
+        lookups,
+        landmark_hists,
+        kse_schedules,
+        projection,
+        prototypes: PrototypeAccumulator::new(dataset.num_classes, config.hv_dim).finalize(),
+        landmark_indices,
+    };
+
+    // (6) Single-pass prototype training: encode every training graph.
+    let mut acc = PrototypeAccumulator::new(dataset.num_classes, config.hv_dim);
+    let mut c_buf = vec![0.0f64; s];
+    let mut y_buf = vec![0.0f64; config.hv_dim];
+    for (g, y) in &dataset.train {
+        encode_kernel_vector(&model, g, &mut c_buf);
+        model.projection.project_into(&c_buf, &mut y_buf);
+        acc.add(*y, &Hypervector::from_real(&y_buf));
+    }
+    model.prototypes = acc.finalize();
+    model
+}
+
+/// Compute the kernel-similarity vector C(x) ∈ R^s for a graph (Alg. 1
+/// lines 1-12) using hashmap codebook lookups — the shared training-side
+/// encoder. (The optimized inference engine in `infer::optimized` has its
+/// own MPH/scheduled implementation; both are property-tested equal.)
+pub fn encode_kernel_vector(model: &NysHdcModel, graph: &Graph, c_out: &mut [f64]) {
+    assert_eq!(c_out.len(), model.s());
+    c_out.iter_mut().for_each(|v| *v = 0.0);
+    let codes = node_codes(graph, &model.lsh);
+    for t in 0..model.hops() {
+        let cb = &model.codebooks[t];
+        let mut hist = vec![0.0f64; cb.len()];
+        for &c in &codes[t] {
+            if let Some(j) = cb.index_of(c) {
+                hist[j as usize] += 1.0;
+            }
+        }
+        // v^(t) = H^(t) h^(t); C += v^(t)
+        let h = &model.landmark_hists[t];
+        for r in 0..h.rows {
+            let mut acc = 0.0;
+            for k in h.row_ptr[r]..h.row_ptr[r + 1] {
+                acc += h.val[k] * hist[h.col_idx[k] as usize];
+            }
+            c_out[r] += acc;
+        }
+    }
+}
+
+/// Encode a graph all the way to its query HV (training-side path).
+pub fn encode_hv(model: &NysHdcModel, graph: &Graph) -> Hypervector {
+    let mut c = vec![0.0; model.s()];
+    encode_kernel_vector(model, graph, &mut c);
+    Hypervector::from_real(&model.projection.project(&c))
+}
+
+/// Classification accuracy of a model over a labeled split.
+pub fn evaluate(model: &NysHdcModel, split: &[(Graph, usize)]) -> f64 {
+    if split.is_empty() {
+        return 0.0;
+    }
+    let correct = split
+        .iter()
+        .filter(|(g, y)| model.prototypes.classify(&encode_hv(model, g)) == *y)
+        .count();
+    correct as f64 / split.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tudataset::spec_by_name;
+    use crate::nystrom::LandmarkStrategy;
+
+    fn small_config(s: usize) -> ModelConfig {
+        ModelConfig {
+            hops: 3,
+            hv_dim: 2048,
+            num_landmarks: s,
+            ..ModelConfig::default()
+        }
+    }
+
+    #[test]
+    fn trains_and_beats_chance_on_mutag_scaled() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, s_uni, _) = spec.generate_scaled(1, 0.5);
+        let model = train(&ds, &small_config(s_uni));
+        assert_eq!(model.s(), s_uni);
+        assert_eq!(model.codebooks.len(), 3);
+        assert_eq!(model.landmark_hists.len(), 3);
+        for t in 0..3 {
+            assert_eq!(model.landmark_hists[t].rows, s_uni);
+            assert_eq!(model.landmark_hists[t].cols, model.codebooks[t].len());
+        }
+        let train_acc = evaluate(&model, &ds.train);
+        let test_acc = evaluate(&model, &ds.test);
+        let chance = 1.0 / ds.num_classes as f64;
+        assert!(train_acc > chance + 0.1, "train acc {train_acc} ~ chance");
+        assert!(test_acc > chance, "test acc {test_acc} below chance");
+    }
+
+    #[test]
+    fn landmark_rows_consistent_with_kernel() {
+        // H_Z reconstructed from stored CSR hists must equal the kernel of
+        // the landmark signatures: row dot products over hops.
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(2, 0.2);
+        let mut cfg = small_config(8);
+        cfg.strategy = LandmarkStrategy::Uniform;
+        let model = train(&ds, &cfg);
+        // For landmark i, encode_kernel_vector over its own graph must
+        // reproduce K(z_i, z_j) = Σ_t h_i·h_j for all j.
+        let mut c = vec![0.0; model.s()];
+        let li = model.landmark_indices[3];
+        let g = &ds.train[li].0;
+        encode_kernel_vector(&model, g, &mut c);
+        let lsh = &model.lsh;
+        let sig_i = GraphSignature::compute(g, lsh);
+        for (j, &lj) in model.landmark_indices.iter().enumerate() {
+            let sig_j = GraphSignature::compute(&ds.train[lj].0, lsh);
+            let want = sig_i.kernel(&sig_j);
+            assert!(
+                (c[j] - want).abs() < 1e-9,
+                "C[{j}]={} vs kernel {want}",
+                c[j]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(3, 0.2);
+        let m1 = train(&ds, &small_config(10));
+        let m2 = train(&ds, &small_config(10));
+        assert_eq!(m1.landmark_indices, m2.landmark_indices);
+        assert_eq!(m1.prototypes.prototypes, m2.prototypes.prototypes);
+    }
+
+    #[test]
+    fn memory_report_dominated_by_projection() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, s_uni, _) = spec.generate_scaled(4, 0.4);
+        let mut cfg = small_config(s_uni);
+        cfg.hv_dim = 10_000;
+        let model = train(&ds, &cfg);
+        let mem = model.memory_report();
+        assert!(
+            mem.p_nys_fraction() > 0.8,
+            "P_nys fraction {} (paper: >90%)",
+            mem.p_nys_fraction()
+        );
+        assert_eq!(mem.p_nys, 10_000 * s_uni * 4);
+        assert!(mem.total_deployed() > mem.p_nys);
+    }
+}

@@ -1,0 +1,433 @@
+//! Minimal perfect hashing (paper §5.2.2) — a BBHash-style [36] cascade of
+//! level bit-arrays with a rank vector, giving O(1) code→index lookups at
+//! ≈3 bits/key.
+//!
+//! Construction: at level `d`, every still-unresolved key hashes into bit
+//! array `A_d` (sized `γ × remaining`). Positions hit by exactly one key
+//! get a 1 and resolve that key; colliding keys advance to level `d+1`.
+//! The final structure concatenates all bit arrays; the **rank vector**
+//! stores the cumulative popcount at the start of each 64-bit word, so the
+//! MPH index of a key resolved at global bit position `p` is
+//! `rank[word(p)] + popcount(bits within word up to p) - 1` — exactly the
+//! paper's step (3).
+//!
+//! Queries use Wang's 64-bit integer hash [57] seeded per level via an
+//! xorshift-based rehash sequence [51]. A queried key absent from the
+//! original key set either falls through every level (no 1 hit) or lands
+//! on some 1 bit — which the **codebook verification** step (paper step 4)
+//! catches by comparing the stored code at the returned index.
+
+/// Thomas Wang's 64-bit mix — the paper's seeded integer hash function.
+#[inline]
+pub fn wang_hash64(mut key: u64) -> u64 {
+    key = (!key).wrapping_add(key << 21);
+    key ^= key >> 24;
+    key = key.wrapping_add(key << 3).wrapping_add(key << 8);
+    key ^= key >> 14;
+    key = key.wrapping_add(key << 2).wrapping_add(key << 4);
+    key ^= key >> 28;
+    key = key.wrapping_add(key << 31);
+    key
+}
+
+/// xorshift64* step — generates the per-level seed sequence (the paper's
+/// "xorshift-based rehash generator").
+#[inline]
+fn xorshift_next(mut seed: u64) -> u64 {
+    seed ^= seed << 13;
+    seed ^= seed >> 7;
+    seed ^= seed << 17;
+    seed.wrapping_mul(0x2545F4914F6CDD1D)
+}
+
+/// Level-d hash of a key.
+#[inline]
+fn level_hash(key: u64, level_seed: u64) -> u64 {
+    wang_hash64(key ^ level_seed)
+}
+
+/// One level's bit array (64-bit words, as banked in BRAM).
+#[derive(Debug, Clone)]
+struct Level {
+    /// Bit capacity |A_d|.
+    bits: u64,
+    /// Offset (in bits) of this level within the concatenated structure.
+    bit_offset: u64,
+    seed: u64,
+}
+
+/// The minimal perfect hash function over a fixed key set.
+#[derive(Debug, Clone)]
+pub struct Mph {
+    levels: Vec<Level>,
+    /// Concatenated bit arrays of all levels.
+    words: Vec<u64>,
+    /// rank[w] = number of 1s in words[0..w].
+    rank: Vec<u32>,
+    /// Number of keys (= number of set bits).
+    num_keys: usize,
+    /// Keys that failed to resolve within `max_levels` (kept for
+    /// completeness; γ=1.5 makes this virtually empty).
+    fallback: std::collections::HashMap<u64, u32>,
+    /// Load factor γ used at construction.
+    gamma: f64,
+}
+
+/// Construction/lookup statistics (drives the §5.2.2 "≈3 bits/key" claim
+/// and the MPHE cycle model).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MphStats {
+    pub num_keys: usize,
+    pub levels: usize,
+    pub total_bits: u64,
+    pub bits_per_key: f64,
+    /// Expected number of level probes for a present key.
+    pub expected_probes: f64,
+    pub fallback_keys: usize,
+}
+
+impl Mph {
+    /// Build over a distinct key set with load factor `gamma` (paper-style
+    /// default 1.5; larger = fewer levels, more bits).
+    pub fn build(keys: &[u64], gamma: f64) -> Self {
+        assert!(gamma >= 1.0);
+        let mut remaining: Vec<u64> = keys.to_vec();
+        {
+            let mut seen = std::collections::HashSet::with_capacity(keys.len());
+            for &k in keys {
+                assert!(seen.insert(k), "duplicate key {k} in MPH key set");
+            }
+        }
+        let mut levels = Vec::new();
+        let mut all_bits: Vec<u64> = Vec::new(); // words
+        let mut bit_offset = 0u64;
+        let mut seed = 0x9E3779B97F4A7C15u64;
+        let max_levels = 48;
+
+        while !remaining.is_empty() && levels.len() < max_levels {
+            seed = xorshift_next(seed);
+            let bits = ((remaining.len() as f64 * gamma).ceil() as u64).max(64);
+            let nwords = bits.div_ceil(64) as usize;
+            let word_base = all_bits.len();
+            all_bits.resize(word_base + nwords, 0);
+
+            // Count collisions: 0 = empty, 1 = unique, 2 = collision.
+            let mut occupancy = vec![0u8; bits as usize];
+            for &k in &remaining {
+                let pos = (level_hash(k, seed) % bits) as usize;
+                occupancy[pos] = occupancy[pos].saturating_add(1);
+            }
+            let mut next = Vec::new();
+            for &k in &remaining {
+                let pos = (level_hash(k, seed) % bits) as usize;
+                if occupancy[pos] == 1 {
+                    all_bits[word_base + pos / 64] |= 1u64 << (pos % 64);
+                } else {
+                    next.push(k);
+                }
+            }
+            levels.push(Level {
+                bits,
+                bit_offset,
+                seed,
+            });
+            bit_offset += nwords as u64 * 64;
+            remaining = next;
+        }
+
+        // Rank vector over the concatenated words.
+        let mut rank = Vec::with_capacity(all_bits.len() + 1);
+        let mut acc = 0u32;
+        for &w in &all_bits {
+            rank.push(acc);
+            acc += w.count_ones();
+        }
+        rank.push(acc);
+
+        let resolved = acc as usize;
+        let mut mph = Self {
+            levels,
+            words: all_bits,
+            rank,
+            num_keys: keys.len(),
+            fallback: std::collections::HashMap::new(),
+            gamma,
+        };
+        // Any stragglers (astronomically rare at γ≥1.5 with 48 levels) get
+        // indices after the rank-addressable range.
+        if resolved < keys.len() {
+            let mut next_idx = resolved as u32;
+            for &k in keys {
+                if mph.rank_index(k).is_none() {
+                    mph.fallback.insert(k, next_idx);
+                    next_idx += 1;
+                }
+            }
+        }
+        mph
+    }
+
+    /// Probe the level cascade; `Some((index, probes))` when a set bit is
+    /// hit. NOTE: for keys outside the construction set this may return a
+    /// bogus index — callers verify via their codebook store (paper step 4).
+    #[inline]
+    fn rank_index_probes(&self, key: u64) -> Option<(u32, u32)> {
+        for (d, level) in self.levels.iter().enumerate() {
+            let pos = level_hash(key, level.seed) % level.bits;
+            let global = level.bit_offset + pos;
+            let w = (global / 64) as usize;
+            let b = global % 64;
+            let word = self.words[w];
+            if (word >> b) & 1 == 1 {
+                let within = (word & ((1u64 << b) | ((1u64 << b) - 1))).count_ones();
+                return Some((self.rank[w] + within - 1, d as u32 + 1));
+            }
+        }
+        None
+    }
+
+    fn rank_index(&self, key: u64) -> Option<u32> {
+        self.rank_index_probes(key).map(|(i, _)| i)
+    }
+
+    /// O(1) lookup: MPH index in [0, num_keys) for keys in the key set;
+    /// arbitrary-or-None for other keys (must be verified downstream).
+    #[inline]
+    pub fn index(&self, key: u64) -> Option<u32> {
+        if let Some(&i) = self.fallback.get(&key) {
+            return Some(i);
+        }
+        self.rank_index(key)
+    }
+
+    /// Lookup returning the number of level probes performed (feeds the
+    /// MPHE cycle model).
+    #[inline]
+    pub fn index_with_probes(&self, key: u64) -> (Option<u32>, u32) {
+        if let Some(&i) = self.fallback.get(&key) {
+            return (Some(i), 1);
+        }
+        match self.rank_index_probes(key) {
+            Some((i, p)) => (Some(i), p),
+            None => (None, self.levels.len() as u32),
+        }
+    }
+
+    pub fn num_keys(&self) -> usize {
+        self.num_keys
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// On-chip bytes: level bit arrays + rank vector (+ fallback).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8 + self.rank.len() * 4 + self.fallback.len() * 12
+    }
+
+    pub fn stats(&self, sample_keys: &[u64]) -> MphStats {
+        let total_bits = self.words.len() as u64 * 64;
+        let probes: u64 = sample_keys
+            .iter()
+            .map(|&k| self.index_with_probes(k).1 as u64)
+            .sum();
+        MphStats {
+            num_keys: self.num_keys,
+            levels: self.levels.len(),
+            total_bits,
+            bits_per_key: if self.num_keys > 0 {
+                total_bits as f64 / self.num_keys as f64
+            } else {
+                0.0
+            },
+            expected_probes: if sample_keys.is_empty() {
+                0.0
+            } else {
+                probes as f64 / sample_keys.len() as f64
+            },
+            fallback_keys: self.fallback.len(),
+        }
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+}
+
+/// The full MPHE lookup structure: MPH + the compact codebook store of
+/// `(code, hist_idx)` pairs addressed by MPH index (paper step 4).
+#[derive(Debug, Clone)]
+pub struct MphLookup {
+    pub mph: Mph,
+    /// store[mph_index] = (code, hist_idx)
+    store: Vec<(u64, u32)>,
+}
+
+impl MphLookup {
+    /// Build from parallel arrays: key i maps to value `values[i]`.
+    pub fn build(keys: &[u64], values: &[u32], gamma: f64) -> Self {
+        assert_eq!(keys.len(), values.len());
+        let mph = Mph::build(keys, gamma);
+        let mut store = vec![(0u64, 0u32); keys.len()];
+        for (i, &k) in keys.iter().enumerate() {
+            let idx = mph.index(k).expect("constructed key must resolve") as usize;
+            store[idx] = (k, values[i]);
+        }
+        Self { mph, store }
+    }
+
+    /// Verified O(1) lookup: returns the stored value only when the code
+    /// matches (paper's codebook-verification step).
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<u32> {
+        match self.mph.index(key) {
+            Some(idx) => {
+                let (stored_key, value) = self.store[idx as usize];
+                (stored_key == key).then_some(value)
+            }
+            None => None,
+        }
+    }
+
+    /// Lookup with probe count (cycle model hook).
+    #[inline]
+    pub fn get_with_probes(&self, key: u64) -> (Option<u32>, u32) {
+        let (idx, probes) = self.mph.index_with_probes(key);
+        match idx {
+            Some(idx) => {
+                let (stored_key, value) = self.store[idx as usize];
+                ((stored_key == key).then_some(value), probes)
+            }
+            None => (None, probes),
+        }
+    }
+
+    /// Total on-chip bytes: MPH structure + (code, hist_idx) store.
+    pub fn bytes(&self) -> usize {
+        self.mph.bytes() + self.store.len() * 12
+    }
+}
+
+/// Map an i64 LSH code to the u64 key domain (order-preserving offset).
+#[inline]
+pub fn code_key(code: i64) -> u64 {
+    (code as u64) ^ (1u64 << 63)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_keys(n: usize, rng: &mut Xoshiro256) -> Vec<u64> {
+        let mut set = std::collections::HashSet::new();
+        while set.len() < n {
+            set.insert(rng.next_u64());
+        }
+        set.into_iter().collect()
+    }
+
+    /// Property: the function is *perfect* (injective) and *minimal*
+    /// (image is exactly [0, n)).
+    #[test]
+    fn perfect_and_minimal() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for &n in &[1usize, 2, 10, 100, 1000, 5000] {
+            let keys = random_keys(n, &mut rng);
+            let mph = Mph::build(&keys, 1.5);
+            let mut seen = vec![false; n];
+            for &k in &keys {
+                let idx = mph.index(k).expect("present key must resolve") as usize;
+                assert!(idx < n, "index {idx} out of range for n={n}");
+                assert!(!seen[idx], "collision at index {idx}");
+                seen[idx] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "not minimal for n={n}");
+        }
+    }
+
+    #[test]
+    fn compact_bits_per_key() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let keys = random_keys(10_000, &mut rng);
+        let mph = Mph::build(&keys, 1.5);
+        let stats = mph.stats(&keys);
+        assert!(
+            stats.bits_per_key < 4.5,
+            "bits/key too high: {}",
+            stats.bits_per_key
+        );
+        assert_eq!(stats.fallback_keys, 0);
+        // Expected probes should be small (geometric-ish decay).
+        assert!(stats.expected_probes < 3.0, "probes {}", stats.expected_probes);
+    }
+
+    #[test]
+    fn verified_lookup_rejects_absent_keys() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let keys = random_keys(2000, &mut rng);
+        let values: Vec<u32> = (0..2000u32).collect();
+        let lookup = MphLookup::build(&keys, &values, 1.5);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(lookup.get(k), Some(values[i]));
+        }
+        let key_set: std::collections::HashSet<u64> = keys.iter().copied().collect();
+        let mut absent_checked = 0;
+        while absent_checked < 2000 {
+            let k = rng.next_u64();
+            if !key_set.contains(&k) {
+                assert_eq!(lookup.get(k), None, "absent key {k} returned a value");
+                absent_checked += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_sequential_keys() {
+        // LSH codes are small sequential integers — the actual key
+        // distribution in NysX.
+        let keys: Vec<u64> = (0..3000i64).map(code_key).collect();
+        let mph = Mph::build(&keys, 1.5);
+        let mut seen = std::collections::HashSet::new();
+        for &k in &keys {
+            let idx = mph.index(k).unwrap();
+            assert!(seen.insert(idx));
+            assert!((idx as usize) < keys.len());
+        }
+    }
+
+    #[test]
+    fn code_key_order_preserving() {
+        assert!(code_key(-5) < code_key(-4));
+        assert!(code_key(-1) < code_key(0));
+        assert!(code_key(0) < code_key(1));
+        assert!(code_key(i64::MIN) < code_key(i64::MAX));
+    }
+
+    #[test]
+    fn gamma_tradeoff() {
+        // Larger gamma => fewer levels (fewer probes), more bits/key.
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let keys = random_keys(5000, &mut rng);
+        let tight = Mph::build(&keys, 1.1);
+        let loose = Mph::build(&keys, 3.0);
+        let st = tight.stats(&keys);
+        let sl = loose.stats(&keys);
+        assert!(sl.bits_per_key > st.bits_per_key);
+        assert!(sl.expected_probes <= st.expected_probes);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate key")]
+    fn rejects_duplicates() {
+        Mph::build(&[1, 2, 1], 1.5);
+    }
+
+    #[test]
+    fn empty_key_set() {
+        let mph = Mph::build(&[], 1.5);
+        assert_eq!(mph.index(123), None);
+        assert_eq!(mph.num_keys(), 0);
+    }
+}

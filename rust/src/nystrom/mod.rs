@@ -1,0 +1,10 @@
+//! Nyström substrate: landmark selection (uniform / hybrid-DPP / full-DPP)
+//! and construction of the `P_nys` projection matrix.
+
+pub mod landmarks;
+pub mod projection;
+
+pub use landmarks::{
+    greedy_dpp_map, mean_pairwise_similarity, select_landmarks, LandmarkStrategy,
+};
+pub use projection::{nystrom_gram_approx, NystromProjection};

@@ -1,0 +1,236 @@
+//! Nyström projection construction (paper §2.1.2): from the landmark
+//! kernel `H_Z = QΛQ^T`, build `P_nys = P_rp Λ^{-1/2} Q^T ∈ R^{d×s}` which
+//! maps a kernel-similarity vector `C(x)` straight to HV space.
+//!
+//! `P_nys` is stored row-major in `f32` — the precision the accelerator
+//! streams from DDR (16 FP32 values per 512-bit AXI beat, §6.1).
+
+use crate::linalg::{sym_eigen, Mat, SymEigen};
+use crate::util::rng::Xoshiro256;
+
+/// The d×s Nyström projection matrix in streaming (f32, row-major) layout.
+#[derive(Debug, Clone)]
+pub struct NystromProjection {
+    pub d: usize,
+    pub s: usize,
+    /// Row-major d×s f32 — one row per HV dimension.
+    pub data: Vec<f32>,
+    /// Effective rank of H_Z after the rcond cutoff (diagnostics).
+    pub rank: usize,
+}
+
+impl NystromProjection {
+    /// Build from the landmark kernel `h_z` (s×s PSD) with HV dimension
+    /// `d`. `P_rp` entries are i.i.d. N(0,1) random-hyperplane directions.
+    pub fn build(h_z: &Mat, d: usize, rng: &mut Xoshiro256) -> Self {
+        let s = h_z.rows;
+        assert_eq!(h_z.rows, h_z.cols);
+        let eig: SymEigen = sym_eigen(h_z);
+        let rcond = 1e-10;
+        let w = eig.whitening(rcond); // s×s: Λ^{-1/2} Q^T (rank-truncated)
+        let lmax = eig.values.first().copied().unwrap_or(0.0).max(0.0);
+        let rank = eig.values.iter().filter(|&&l| l > rcond * lmax).count();
+        // P_nys = P_rp @ W. Build row-by-row to avoid materializing P_rp.
+        let mut data = vec![0.0f32; d * s];
+        let mut p_row = vec![0.0f64; s];
+        for r in 0..d {
+            for x in p_row.iter_mut() {
+                *x = rng.normal();
+            }
+            let out = &mut data[r * s..(r + 1) * s];
+            // out = p_row @ W  (W is s×s)
+            for (j, o) in out.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for (k, &p) in p_row.iter().enumerate() {
+                    acc += p * w[(k, j)];
+                }
+                *o = acc as f32;
+            }
+        }
+        Self { d, s, data, rank }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.s..(r + 1) * self.s]
+    }
+
+    /// y = P_nys @ c (f32 accumulation in f64 — matches the accelerator's
+    /// wide accumulators).
+    pub fn project(&self, c: &[f64]) -> Vec<f64> {
+        assert_eq!(c.len(), self.s);
+        let mut y = vec![0.0f64; self.d];
+        self.project_into(c, &mut y);
+        y
+    }
+
+    /// Allocation-free projection for the hot path.
+    ///
+    /// Perf (§Perf L3): C is converted to f32 once per call and the dot
+    /// products run in four independent f32 lanes (auto-vectorizes),
+    /// instead of converting every streamed P element to f64 — this
+    /// matches the accelerator (FP32 MAC lanes) and the L2 jax graph
+    /// (f32 matmul), and both rust inference paths share this function so
+    /// reference/optimized equality is preserved.
+    #[inline]
+    pub fn project_into(&self, c: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(c.len(), self.s);
+        debug_assert_eq!(y.len(), self.d);
+        // One conversion of the small C vector per call (s ≤ a few
+        // hundred) beats d×s per-element converts of the matrix stream.
+        let mut stack = [0.0f32; 1024];
+        let mut heap: Vec<f32>;
+        let c32: &mut [f32] = if self.s <= 1024 {
+            &mut stack[..self.s]
+        } else {
+            // Rare oversized case (s > 1024): one allocation per call.
+            heap = vec![0.0f32; self.s];
+            &mut heap
+        };
+        for (dst, &src) in c32.iter_mut().zip(c.iter()) {
+            *dst = src as f32;
+        }
+        for (r, yr) in y.iter_mut().enumerate() {
+            let row = self.row(r);
+            // Four independent accumulator lanes -> SIMD-friendly.
+            let mut acc = [0.0f32; 4];
+            let chunks = self.s / 4;
+            for k in 0..chunks {
+                let base = k * 4;
+                acc[0] += row[base] * c32[base];
+                acc[1] += row[base + 1] * c32[base + 1];
+                acc[2] += row[base + 2] * c32[base + 2];
+                acc[3] += row[base + 3] * c32[base + 3];
+            }
+            let mut tail = 0.0f32;
+            for k in chunks * 4..self.s {
+                tail += row[k] * c32[k];
+            }
+            *yr = ((acc[0] + acc[1]) + (acc[2] + acc[3]) + tail) as f64;
+        }
+    }
+
+    /// Bytes at the streaming precision (Table 2's dominant `ds·b_P`).
+    pub fn bytes(&self) -> usize {
+        self.d * self.s * 4
+    }
+}
+
+/// Exact Nyström kernel approximation `Ĝ = C H_Z^+ C^T` for validation:
+/// given cross-kernel rows `c_i = K(x_i, ·landmarks·)`, approximate
+/// `K(x_i, x_j)`. Used by tests to verify the whole construction.
+pub fn nystrom_gram_approx(c: &Mat, h_z: &Mat) -> Mat {
+    let eig = sym_eigen(h_z);
+    let pinv = eig.pseudo_inverse(1e-10);
+    c.matmul(&pinv).matmul(&c.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::cosine;
+
+    fn random_psd(n: usize, rank: usize, rng: &mut Xoshiro256) -> Mat {
+        let a = Mat::randn(n, rank, rng);
+        a.matmul(&a.transpose())
+    }
+
+    #[test]
+    fn exact_when_landmarks_are_all_points() {
+        // With Z = X, Ĝ = K K^+ K = K.
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let k = random_psd(10, 10, &mut rng);
+        let approx = nystrom_gram_approx(&k, &k);
+        assert!(
+            approx.max_abs_diff(&k) < 1e-6 * (1.0 + k.fro_norm()),
+            "err {}",
+            approx.max_abs_diff(&k)
+        );
+    }
+
+    #[test]
+    fn exact_for_low_rank_kernels() {
+        // K has rank 3; any 5 landmarks spanning the range reconstruct K
+        // exactly. Build K = B B^T with B 12×3, landmarks = first 5 rows.
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let b = Mat::randn(12, 3, &mut rng);
+        let k = b.matmul(&b.transpose());
+        let s = 5;
+        // C = K[:, :s]; H_Z = K[:s, :s]
+        let mut c = Mat::zeros(12, s);
+        let mut hz = Mat::zeros(s, s);
+        for i in 0..12 {
+            for j in 0..s {
+                c[(i, j)] = k[(i, j)];
+            }
+        }
+        for i in 0..s {
+            for j in 0..s {
+                hz[(i, j)] = k[(i, j)];
+            }
+        }
+        let approx = nystrom_gram_approx(&c, &hz);
+        assert!(
+            approx.max_abs_diff(&k) < 1e-6 * (1.0 + k.fro_norm()),
+            "err {}",
+            approx.max_abs_diff(&k)
+        );
+    }
+
+    #[test]
+    fn projection_shape_and_rank() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let hz = random_psd(8, 4, &mut rng);
+        let p = NystromProjection::build(&hz, 64, &mut rng);
+        assert_eq!(p.d, 64);
+        assert_eq!(p.s, 8);
+        assert_eq!(p.data.len(), 64 * 8);
+        assert_eq!(p.rank, 4);
+        assert_eq!(p.bytes(), 64 * 8 * 4);
+    }
+
+    /// The point of the construction: angles between projected embeddings
+    /// approximate kernel similarity. For two kernel-similar points the
+    /// Nyström HV embeddings must be closer than for dissimilar points.
+    #[test]
+    fn projection_preserves_kernel_geometry() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        // Feature-space points: x0 ≈ x1, x2 far away; linear kernel.
+        let pts = Mat::from_rows(vec![
+            vec![1.0, 0.0, 0.2],
+            vec![0.95, 0.05, 0.25],
+            vec![-0.1, 1.0, -0.8],
+            vec![0.8, 0.1, 0.1],
+            vec![0.0, 0.9, -0.6],
+        ]);
+        let k = pts.matmul(&pts.transpose());
+        // Landmarks = all 5 points.
+        let p = NystromProjection::build(&k, 8192, &mut rng);
+        // C(x_i) = K[:, i] (kernel vector vs landmarks).
+        let emb = |i: usize| -> Vec<f64> {
+            let c: Vec<f64> = (0..5).map(|j| k[(i, j)]).collect();
+            p.project(&c)
+        };
+        let e0 = emb(0);
+        let e1 = emb(1);
+        let e2 = emb(2);
+        let close = cosine(&e0, &e1);
+        let far = cosine(&e0, &e2);
+        assert!(
+            close > far + 0.1,
+            "kernel geometry lost: close={close} far={far}"
+        );
+    }
+
+    #[test]
+    fn project_into_matches_project() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let hz = random_psd(6, 6, &mut rng);
+        let p = NystromProjection::build(&hz, 32, &mut rng);
+        let c: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let a = p.project(&c);
+        let mut b = vec![0.0; 32];
+        p.project_into(&c, &mut b);
+        assert_eq!(a, b);
+    }
+}

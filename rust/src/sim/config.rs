@@ -1,0 +1,85 @@
+//! Accelerator design point: the ZCU104 configuration of §6.1 plus the
+//! knobs the ablation benches sweep (PE counts, lane counts, FIFO depth).
+
+/// Device + design-point parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Fabric clock (paper: 300 MHz achieved).
+    pub freq_hz: f64,
+    /// Theoretical DDR4 bandwidth (ZCU104 PL-DDR4: 19.2 GB/s).
+    pub ddr_bandwidth_gbps: f64,
+    /// Sustained fraction of theoretical BW (paper: ~90% with contiguous
+    /// 512-bit bursts).
+    pub ddr_efficiency: f64,
+    /// DRAM round-trip latency in fabric cycles (first-beat latency the
+    /// stream FIFO hides after fill).
+    pub ddr_latency_cycles: u64,
+    /// AXI/memory-port width in bits (512 per §6.1).
+    pub axi_width_bits: usize,
+    /// PEs in LSHU/KSE/HUE (paper instantiates 4).
+    pub pes: usize,
+    /// MAC lanes in the NEE (one per FP32 in a 512-bit beat: 16).
+    pub nee_lanes: usize,
+    /// Stream FIFO depth in beats (paper: 512).
+    pub fifo_depth: usize,
+    /// Operand precision in bits streamed from DDR (FP32).
+    pub operand_bits: usize,
+    /// MPHE pipeline depth (hash + probe + rank + verify stages).
+    pub mphe_pipeline_depth: u64,
+    /// On-chip BRAM capacity in bytes (ZCU104: 4.5 MB).
+    pub bram_bytes: usize,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        Self::zcu104()
+    }
+}
+
+impl AcceleratorConfig {
+    /// The paper's ZCU104 design point.
+    pub fn zcu104() -> Self {
+        Self {
+            freq_hz: 300e6,
+            ddr_bandwidth_gbps: 19.2,
+            ddr_efficiency: 0.90,
+            ddr_latency_cycles: 120,
+            axi_width_bits: 512,
+            pes: 4,
+            nee_lanes: 16,
+            fifo_depth: 512,
+            operand_bits: 32,
+            mphe_pipeline_depth: 8,
+            bram_bytes: 4_500_000,
+        }
+    }
+
+    /// Sustained DDR bytes per fabric cycle.
+    pub fn ddr_bytes_per_cycle(&self) -> f64 {
+        self.ddr_bandwidth_gbps * 1e9 * self.ddr_efficiency / self.freq_hz
+    }
+
+    /// Operands delivered per 512-bit beat (the paper's y/x unpacking).
+    pub fn operands_per_beat(&self) -> usize {
+        self.axi_width_bits / self.operand_bits
+    }
+
+    /// Convert cycles to milliseconds.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu104_constants() {
+        let c = AcceleratorConfig::zcu104();
+        // 19.2 GB/s * 0.9 / 300 MHz = 57.6 bytes/cycle
+        assert!((c.ddr_bytes_per_cycle() - 57.6).abs() < 1e-9);
+        assert_eq!(c.operands_per_beat(), 16);
+        assert!((c.cycles_to_ms(300_000) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,53 @@
+//! HUE cycle model (paper §5.2.3): each PE increments a private histogram
+//! copy (conflict-free), then local copies merge into the hop-global
+//! histogram via a reduction.
+
+use crate::infer::HopTrace;
+use crate::sim::config::AcceleratorConfig;
+
+/// Cycles for one hop's histogram updates + merge.
+///
+/// Updates: `vocab_hits` increments spread over `pes` private copies
+/// (1 increment/cycle each). Merge: the `pes` local copies reduce through
+/// an adder tree, one bin per cycle over |B^(t)| bins.
+pub fn cycles(hop: &HopTrace, cfg: &AcceleratorConfig) -> u64 {
+    let updates = hop.vocab_hits.div_ceil(cfg.pes as u64);
+    let merge = hop.hist_bins as u64;
+    updates + merge
+}
+
+/// Contended single-copy alternative: concurrent increments to one banked
+/// histogram serialize on conflicts; model as one update per cycle total
+/// (the paper's "contention-prone" baseline).
+pub fn cycles_contended(hop: &HopTrace) -> u64 {
+    hop.vocab_hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn private_copies_beat_contended() {
+        let cfg = AcceleratorConfig::zcu104();
+        let hop = HopTrace {
+            vocab_hits: 1000,
+            hist_bins: 100,
+            ..HopTrace::default()
+        };
+        let c = cycles(&hop, &cfg);
+        assert_eq!(c, 250 + 100);
+        assert!(c < cycles_contended(&hop));
+    }
+
+    #[test]
+    fn merge_dominates_small_graphs() {
+        let cfg = AcceleratorConfig::zcu104();
+        let hop = HopTrace {
+            vocab_hits: 8,
+            hist_bins: 512,
+            ..HopTrace::default()
+        };
+        assert_eq!(cycles(&hop, &cfg), 2 + 512);
+    }
+}

@@ -1,0 +1,43 @@
+//! KSE cycle model (paper §5.2.4): scheduled SpMV of the query histogram
+//! against the CSR landmark histogram matrix `H^(t)`.
+
+use crate::infer::HopTrace;
+
+/// Cycles for one hop's landmark-similarity SpMV. The schedule table's
+/// per-iteration max-row cost is computed on the *actual* trained `H^(t)`
+/// during inference tracing, so this is a direct read-out.
+pub fn cycles(hop: &HopTrace, load_balanced: bool) -> u64 {
+    let fill = 4u64; // schedule fetch + row_ptr read pipeline fill
+    if load_balanced {
+        hop.kse_cycles_lb + fill
+    } else {
+        hop.kse_cycles_nolb + fill
+    }
+}
+
+/// Dense alternative (what CPU/GPU baselines do): s×|B| MACs over `pes`
+/// lanes, ignoring sparsity.
+pub fn cycles_dense(hop: &HopTrace, s: usize, pes: usize) -> u64 {
+    (s as u64 * hop.hist_bins as u64).div_ceil(pes as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lb_le_nolb_le_dense() {
+        let hop = HopTrace {
+            kse_cycles_lb: 500,
+            kse_cycles_nolb: 800,
+            kse_nnz: 1900,
+            hist_bins: 1000,
+            ..HopTrace::default()
+        };
+        let lb = cycles(&hop, true);
+        let nolb = cycles(&hop, false);
+        let dense = cycles_dense(&hop, 64, 4);
+        assert!(lb < nolb);
+        assert!(nolb < dense, "sparse ({nolb}) must beat dense ({dense})");
+    }
+}

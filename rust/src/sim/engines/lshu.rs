@@ -1,0 +1,59 @@
+//! LSHU cycle model (paper §5.2.1 / Fig 2): a DenseMV unit for `c = F u`
+//! plus a scheduled SpMV unit for the hop-wise `c ← A c` applications.
+
+use crate::infer::InferTrace;
+use crate::sim::config::AcceleratorConfig;
+
+/// Cycles for all hops of LSH code generation.
+///
+/// * DenseMV: `N×f` MACs spread over `pes` PEs, once per hop (the
+///   restructured chain recomputes `F u^(t)` per hop with fresh `u`).
+/// * SpMV: one scheduled pass over `A` per chain application; the
+///   schedule already encodes load (im)balance, so its cycle count is the
+///   per-iteration max row cost summed over iterations.
+/// * Floor/quantize is fused into the MAC drain (1 cycle/element,
+///   pipelined — absorbed into the DenseMV term).
+pub fn cycles(trace: &InferTrace, cfg: &AcceleratorConfig, load_balanced: bool) -> u64 {
+    let hops = trace.hops.len() as u64;
+    let dense_mv = hops * (trace.n as u64 * trace.f as u64).div_ceil(cfg.pes as u64);
+    let per_apply = if load_balanced {
+        trace.a_spmv_cycles_lb
+    } else {
+        trace.a_spmv_cycles_nolb
+    };
+    // Per-application pipeline fill (schedule fetch + CSR row_ptr read).
+    let fill = 4u64;
+    dense_mv + trace.a_spmv_applications * (per_apply + fill)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::HopTrace;
+
+    fn trace() -> InferTrace {
+        InferTrace {
+            n: 100,
+            f: 10,
+            nnz_a: 400,
+            a_spmv_cycles_lb: 110,
+            a_spmv_cycles_nolb: 200,
+            a_spmv_applications: 3,
+            hops: vec![HopTrace::default(); 3],
+            s: 32,
+            d: 1024,
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_terms() {
+        let cfg = AcceleratorConfig::zcu104();
+        let lb = cycles(&trace(), &cfg, true);
+        // dense: 3 * ceil(1000/4)=750; sparse: 3*(110+4)=342
+        assert_eq!(lb, 750 + 342);
+        let nolb = cycles(&trace(), &cfg, false);
+        assert!(nolb > lb);
+        assert_eq!(nolb, 750 + 3 * 204);
+    }
+}

@@ -1,0 +1,11 @@
+//! Per-engine cycle models. Each engine consumes the relevant slice of an
+//! [`crate::infer::InferTrace`] (real per-graph work counts) plus the
+//! design point, and returns its cycle cost. The composition lives in
+//! [`crate::sim::accelerator`].
+
+pub mod hue;
+pub mod kse;
+pub mod lshu;
+pub mod mphe;
+pub mod nee;
+pub mod sce;

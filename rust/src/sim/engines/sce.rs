@@ -1,0 +1,33 @@
+//! SCE cycle model (paper §5.2.6): dense `s = G h` over bipolar operands
+//! (adds/subs, no DSPs needed), one block of rows per PE, then a
+//! sequential argmax.
+
+use crate::sim::config::AcceleratorConfig;
+
+/// Cycles for prototype matching + argmax.
+///
+/// Bipolar dot products are add/sub trees; each PE covers a block of
+/// prototype rows, consuming `simd` HV elements per cycle (wide BRAM
+/// word). Argmax is C sequential compares.
+pub fn cycles(num_classes: usize, d: usize, cfg: &AcceleratorConfig) -> u64 {
+    // 64 bipolar elements per cycle per PE (512-bit BRAM word of i8).
+    let simd = (cfg.axi_width_bits / 8) as u64;
+    let per_pe_rows = (num_classes as u64).div_ceil(cfg.pes as u64);
+    let mac = per_pe_rows * (d as u64).div_ceil(simd);
+    mac + num_classes as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_fraction_of_total() {
+        let cfg = AcceleratorConfig::zcu104();
+        let c = cycles(6, 10_000, &cfg);
+        // 2 rows per PE * ceil(10000/64)=157 + 6 = 320
+        assert_eq!(c, 2 * 157 + 6);
+        // vs NEE at s=300: ~208k cycles — SCE is noise (paper Table 1).
+        assert!(c < 1000);
+    }
+}

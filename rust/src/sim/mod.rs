@@ -1,0 +1,18 @@
+//! Cycle-approximate model of the NysX accelerator (paper §5): six engine
+//! cycle models driven by real per-inference work traces, composed along
+//! the Fig-5 compute flow, with power/energy, resource-utilization and
+//! roofline models. This is the hardware substitute for the ZCU104 — see
+//! DESIGN.md §2.
+
+pub mod accelerator;
+pub mod config;
+pub mod engines;
+pub mod power;
+pub mod resources;
+pub mod roofline;
+
+pub use accelerator::{latency_ms, simulate, CycleBreakdown, SimOptions};
+pub use config::AcceleratorConfig;
+pub use power::{EnergyReport, PowerModel};
+pub use resources::{estimate as estimate_resources, ResourceReport};
+pub use roofline::{analyze, machine_balance, nee_point, Bound, RooflinePoint};

@@ -1,0 +1,181 @@
+//! FPGA resource estimation (reproduces Table 3). LUT/FF/DSP counts are
+//! composed from per-engine primitive costs at the §6.1 design point;
+//! BRAM is derived from the actual on-chip buffer inventory of a trained
+//! model. Constants follow typical Vitis HLS FP32 operator costs on
+//! UltraScale+ (fmul ≈ 3 DSP, fadd ≈ 2 DSP, ~450 LUT / ~600 FF per MAC
+//! lane) plus AXI SmartConnect overhead [1].
+
+use super::config::AcceleratorConfig;
+use crate::model::MemoryReport;
+
+/// ZCU104 device budgets (Table 3 "Available" column).
+pub const ZCU104_LUT: usize = 230_400;
+pub const ZCU104_FF: usize = 460_800;
+pub const ZCU104_BRAM18: usize = 624;
+pub const ZCU104_DSP: usize = 1_728;
+pub const ZCU104_URAM: usize = 96;
+
+/// Estimated utilization of one design point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceReport {
+    pub lut: usize,
+    pub ff: usize,
+    pub bram18: usize,
+    pub dsp: usize,
+    pub uram: usize,
+}
+
+impl ResourceReport {
+    pub fn utilization(&self) -> [(&'static str, usize, usize, f64); 5] {
+        [
+            ("LUT", self.lut, ZCU104_LUT, self.lut as f64 / ZCU104_LUT as f64),
+            ("FF", self.ff, ZCU104_FF, self.ff as f64 / ZCU104_FF as f64),
+            (
+                "BRAM (18K)",
+                self.bram18,
+                ZCU104_BRAM18,
+                self.bram18 as f64 / ZCU104_BRAM18 as f64,
+            ),
+            ("DSP", self.dsp, ZCU104_DSP, self.dsp as f64 / ZCU104_DSP as f64),
+            ("URAM", self.uram, ZCU104_URAM, self.uram as f64 / ZCU104_URAM as f64),
+        ]
+    }
+
+    pub fn fits(&self) -> bool {
+        self.lut <= ZCU104_LUT
+            && self.ff <= ZCU104_FF
+            && self.bram18 <= ZCU104_BRAM18
+            && self.dsp <= ZCU104_DSP
+            && self.uram <= ZCU104_URAM
+    }
+}
+
+// Per-primitive costs (Vitis HLS FP32 on UltraScale+; see module docs).
+const DSP_PER_FP32_MAC: usize = 5; // 3 (fmul) + 2 (fadd)
+const LUT_PER_FP32_MAC: usize = 450;
+const FF_PER_FP32_MAC: usize = 640;
+
+/// 18Kb BRAM blocks for `bytes` of storage (2,304 bytes per block, ≥1
+/// block per physically separate bank).
+fn bram_blocks(bytes: usize, banks: usize) -> usize {
+    let per_bank = bytes.div_ceil(banks.max(1));
+    banks.max(1) * per_bank.div_ceil(2_304)
+}
+
+/// Estimate the design's resource utilization. The logic estimate is a
+/// static function of the design point; the BRAM estimate additionally
+/// needs the deployed model's on-chip buffer sizes.
+pub fn estimate(cfg: &AcceleratorConfig, mem: &MemoryReport, max_hist_bins: usize) -> ResourceReport {
+    let pes = cfg.pes;
+    let lanes = cfg.nee_lanes;
+
+    // --- DSP ---
+    let nee_dsp = lanes * DSP_PER_FP32_MAC;
+    let lshu_dsp = pes * DSP_PER_FP32_MAC + pes * 3; // MACs + 1/w quantize fmul
+    let kse_dsp = pes * DSP_PER_FP32_MAC;
+    let mphe_dsp = 8; // xorshift rehash 64-bit constant multiplier
+    let misc_dsp = 16; // similarity scaling, argmax tie-break datapath
+    let dsp = nee_dsp + lshu_dsp + kse_dsp + mphe_dsp + misc_dsp;
+
+    // --- LUT / FF ---
+    let mac_lut = (lanes + 2 * pes) * LUT_PER_FP32_MAC;
+    let mac_ff = (lanes + 2 * pes) * FF_PER_FP32_MAC;
+    let lut = mac_lut
+        + 6_200          // MPHE: 4 hash engines + rank/popcount units
+        + 2_600          // HUE adder trees
+        + 4_800          // SCE bipolar add trees (64-wide)
+        + 7_400          // bank conflict resolvers + schedule fetch logic
+        + 13_500         // AXI SmartConnect + DDR4 stream interface [1]
+        + 9_000          // control FSMs, CSRs, top-level plumbing
+        + cfg.fifo_depth / 8; // FIFO pointers/flags scale with depth
+    let ff = mac_ff
+        + 8_200
+        + 3_400
+        + 5_600
+        + 9_800
+        + 21_000
+        + 12_000
+        + cfg.fifo_depth / 4;
+
+    // --- BRAM ---
+    // Stream FIFO: depth × beat-width bits.
+    let fifo_bytes = cfg.fifo_depth * cfg.axi_width_bits / 8;
+    let mut bram = bram_blocks(fifo_bytes, lanes.min(8));
+    // Query histograms: pes private copies + merged, banked per PE.
+    bram += bram_blocks((pes + 1) * max_hist_bins * 4, pes + 1);
+    // Landmark hists (CSR), codebook stores, MPH level tables + ranks,
+    // schedule tables, prototypes — all banked across PEs.
+    bram += bram_blocks(mem.hists_csr, pes);
+    bram += bram_blocks(mem.codebooks, pes);
+    bram += bram_blocks(mem.mph, pes);
+    bram += bram_blocks(mem.schedules, pes);
+    bram += bram_blocks(mem.prototypes, 2);
+    // C vector + output HV staging (cyclically partitioned).
+    bram += bram_blocks(4 * 1024, 4) + bram_blocks(16 * 1024, 4);
+
+    ResourceReport {
+        lut,
+        ff,
+        bram18: bram,
+        dsp,
+        uram: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn typical_mem() -> MemoryReport {
+        // Representative trained model (MUTAG-scale): small CSR hists,
+        // codebooks of a few thousand entries, MPH ≈ 3 bits/key.
+        MemoryReport {
+            codebooks: 60_000,
+            hists_dense: 2_000_000,
+            hists_csr: 220_000,
+            p_nys: 12_000_000,
+            prototypes: 20_000,
+            mph: 12_000,
+            schedules: 6_000,
+        }
+    }
+
+    #[test]
+    fn near_table3_at_paper_design_point() {
+        let cfg = AcceleratorConfig::zcu104();
+        let r = estimate(&cfg, &typical_mem(), 4_096);
+        // Paper Table 3: LUT 71,900; FF 87,800; BRAM 329; DSP 156.
+        assert!(
+            (r.lut as f64 - 71_900.0).abs() / 71_900.0 < 0.25,
+            "LUT {} vs 71900",
+            r.lut
+        );
+        assert!(
+            (r.ff as f64 - 87_800.0).abs() / 87_800.0 < 0.25,
+            "FF {} vs 87800",
+            r.ff
+        );
+        assert!(
+            (r.dsp as f64 - 156.0).abs() / 156.0 < 0.25,
+            "DSP {} vs 156",
+            r.dsp
+        );
+        assert!(
+            (r.bram18 as f64 - 329.0).abs() / 329.0 < 0.5,
+            "BRAM {} vs 329",
+            r.bram18
+        );
+        assert_eq!(r.uram, 0);
+        assert!(r.fits());
+    }
+
+    #[test]
+    fn scaling_with_lanes() {
+        let mut cfg = AcceleratorConfig::zcu104();
+        let base = estimate(&cfg, &typical_mem(), 4_096);
+        cfg.nee_lanes = 32;
+        let wide = estimate(&cfg, &typical_mem(), 4_096);
+        assert!(wide.dsp > base.dsp);
+        assert!(wide.lut > base.lut);
+    }
+}

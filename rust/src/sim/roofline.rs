@@ -1,0 +1,119 @@
+//! Roofline model (paper §5.2.5, Williams et al. [60]): arithmetic
+//! intensity vs machine balance for the NEE projection, and the attainable
+//! performance it implies.
+
+use super::config::AcceleratorConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    MemoryBound,
+    ComputeBound,
+}
+
+/// One point on the roofline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RooflinePoint {
+    /// Arithmetic intensity in ops/byte.
+    pub ai: f64,
+    /// Peak compute of the design point in GOPS.
+    pub peak_gops: f64,
+    /// Sustained memory bandwidth in GB/s.
+    pub sustained_bw_gbps: f64,
+    /// Machine balance in ops/byte.
+    pub machine_balance: f64,
+    /// Attainable performance = min(peak, AI × BW) in GOPS.
+    pub attainable_gops: f64,
+    pub bound: Bound,
+}
+
+/// Peak MAC throughput of the NEE in GOPS (2 ops per MAC per cycle).
+pub fn peak_gops(cfg: &AcceleratorConfig) -> f64 {
+    2.0 * cfg.nee_lanes as f64 * cfg.freq_hz / 1e9
+}
+
+/// Machine balance (ops/byte) of the design point.
+pub fn machine_balance(cfg: &AcceleratorConfig) -> f64 {
+    peak_gops(cfg) / (cfg.ddr_bandwidth_gbps * cfg.ddr_efficiency)
+}
+
+/// Classify an arbitrary kernel by arithmetic intensity.
+pub fn analyze(cfg: &AcceleratorConfig, ai: f64) -> RooflinePoint {
+    let peak = peak_gops(cfg);
+    let bw = cfg.ddr_bandwidth_gbps * cfg.ddr_efficiency;
+    let attainable = peak.min(ai * bw);
+    RooflinePoint {
+        ai,
+        peak_gops: peak,
+        sustained_bw_gbps: bw,
+        machine_balance: machine_balance(cfg),
+        attainable_gops: attainable,
+        bound: if ai < machine_balance(cfg) {
+            Bound::MemoryBound
+        } else {
+            Bound::ComputeBound
+        },
+    }
+}
+
+/// The NEE projection's point: 2 ops per streamed operand.
+pub fn nee_point(cfg: &AcceleratorConfig) -> RooflinePoint {
+    let ai = 2.0 / (cfg.operand_bits as f64 / 8.0);
+    analyze(cfg, ai)
+}
+
+/// Measured-efficiency helper: achieved GOPS of an NEE run.
+pub fn achieved_gops(d: usize, s: usize, cycles: u64, cfg: &AcceleratorConfig) -> f64 {
+    let ops = 2.0 * d as f64 * s as f64;
+    let seconds = cycles as f64 / cfg.freq_hz;
+    ops / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engines::nee;
+
+    #[test]
+    fn paper_design_point() {
+        // The paper's illustration uses 32 lanes: 19.2 GOPS peak, 17.3
+        // GB/s sustained, balance ≈ 1.11 ops/byte, AI = 0.5 → memory
+        // bound.
+        let mut cfg = AcceleratorConfig::zcu104();
+        cfg.nee_lanes = 32;
+        let p = nee_point(&cfg);
+        assert!((p.peak_gops - 19.2).abs() < 1e-9);
+        assert!((p.sustained_bw_gbps - 17.28).abs() < 0.01);
+        assert!((p.machine_balance - 1.111).abs() < 0.01);
+        assert!((p.ai - 0.5).abs() < 1e-12);
+        assert_eq!(p.bound, Bound::MemoryBound);
+        // Attainable = 0.5 * 17.28 = 8.64 GOPS.
+        assert!((p.attainable_gops - 8.64).abs() < 0.01);
+    }
+
+    #[test]
+    fn simulated_nee_tracks_roofline() {
+        // The cycle model's achieved GOPS must approach (and not exceed)
+        // the roofline's attainable GOPS.
+        let cfg = AcceleratorConfig::zcu104();
+        let (d, s) = (10_000, 300);
+        let cycles = nee::cycles(d, s, &cfg);
+        let achieved = achieved_gops(d, s, cycles, &cfg);
+        let p = nee_point(&cfg);
+        assert!(achieved <= p.attainable_gops + 1e-9);
+        assert!(
+            achieved > 0.95 * p.attainable_gops,
+            "streaming should sustain ≥95% of roofline: {achieved} vs {}",
+            p.attainable_gops
+        );
+    }
+
+    #[test]
+    fn crossover_with_lane_sweep() {
+        // With very few lanes the kernel becomes compute bound.
+        let mut cfg = AcceleratorConfig::zcu104();
+        cfg.nee_lanes = 2;
+        assert_eq!(nee_point(&cfg).bound, Bound::ComputeBound);
+        cfg.nee_lanes = 64;
+        assert_eq!(nee_point(&cfg).bound, Bound::MemoryBound);
+    }
+}

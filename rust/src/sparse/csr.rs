@@ -1,0 +1,291 @@
+//! CSR sparse matrices — the storage format the accelerator uses for the
+//! adjacency matrix `A` and the landmark histogram matrices `H^(t)`
+//! (paper §5.2.1, §5.2.4).
+
+use crate::linalg::dense::Mat;
+
+/// Compressed sparse row matrix over `f64` values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// len rows+1
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        mut triplets: Vec<(usize, usize, f64)>,
+    ) -> Self {
+        triplets.retain(|&(_, _, v)| v != 0.0);
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut row_ptr = vec![0usize; rows + 1];
+        let mut col_idx = Vec::with_capacity(triplets.len());
+        let mut val: Vec<f64> = Vec::with_capacity(triplets.len());
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet out of range");
+            if !col_idx.is_empty()
+                && row_ptr[r + 1] > 0
+                && *col_idx.last().unwrap() == c as u32
+                && row_ptr[rows] == 0
+            {
+                // handled below via merge pass; keep simple: push all then merge
+            }
+            let _ = v;
+            col_idx.push(c as u32);
+            val.push(v);
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        // Merge duplicates within each row (entries are sorted).
+        let mut m_row_ptr = vec![0usize; rows + 1];
+        let mut m_col = Vec::with_capacity(col_idx.len());
+        let mut m_val = Vec::with_capacity(val.len());
+        for r in 0..rows {
+            let (start, end) = (row_ptr[r], row_ptr[r + 1]);
+            let mut i = start;
+            while i < end {
+                let c = col_idx[i];
+                let mut acc = val[i];
+                let mut j = i + 1;
+                while j < end && col_idx[j] == c {
+                    acc += val[j];
+                    j += 1;
+                }
+                if acc != 0.0 {
+                    m_col.push(c);
+                    m_val.push(acc);
+                }
+                i = j;
+            }
+            m_row_ptr[r + 1] = m_col.len();
+        }
+        Self {
+            rows,
+            cols,
+            row_ptr: m_row_ptr,
+            col_idx: m_col,
+            val: m_val,
+        }
+    }
+
+    /// Build from a dense matrix, dropping entries with |x| <= tol.
+    pub fn from_dense(m: &Mat, tol: f64) -> Self {
+        let mut triplets = Vec::new();
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                let v = m[(i, j)];
+                if v.abs() > tol {
+                    triplets.push((i, j, v));
+                }
+            }
+        }
+        Self::from_triplets(m.rows, m.cols, triplets)
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                m[(r, self.col_idx[k] as usize)] = self.val[k];
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Average per-row density φ (paper Tables 1-2 use this).
+    pub fn avg_row_density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// y = A x
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "spmv shape mismatch");
+        let mut y = vec![0.0; self.rows];
+        self.spmv_into(x, &mut y);
+        y
+    }
+
+    /// y = A x into a caller-provided buffer (hot-path, allocation-free).
+    #[inline]
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(self.cols, x.len());
+        debug_assert_eq!(self.rows, y.len());
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            let start = self.row_ptr[r];
+            let end = self.row_ptr[r + 1];
+            for k in start..end {
+                // SAFETY-free fast path: indices are validated at build.
+                acc += self.val[k] * x[self.col_idx[k] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Dense product A (rows×cols) @ B (cols×k) -> rows×k.
+    pub fn spmm(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "spmm shape mismatch");
+        let mut out = Mat::zeros(self.rows, b.cols);
+        for r in 0..self.rows {
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                let c = self.col_idx[k] as usize;
+                let v = self.val[k];
+                let b_row = b.row(c);
+                let out_row = out.row_mut(r);
+                for (o, &x) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += v * x;
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-row nnz histogram spread statistics (drives Fig 8 analysis).
+    pub fn row_nnz_stats(&self) -> RowNnzStats {
+        let nnzs: Vec<usize> = (0..self.rows).map(|r| self.row_nnz(r)).collect();
+        let max = nnzs.iter().copied().max().unwrap_or(0);
+        let min = nnzs.iter().copied().min().unwrap_or(0);
+        let mean = if self.rows > 0 {
+            self.nnz() as f64 / self.rows as f64
+        } else {
+            0.0
+        };
+        let var = if self.rows > 0 {
+            nnzs.iter()
+                .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+                .sum::<f64>()
+                / self.rows as f64
+        } else {
+            0.0
+        };
+        RowNnzStats {
+            min,
+            max,
+            mean,
+            std: var.sqrt(),
+        }
+    }
+
+    /// Bytes to store this matrix in CSR with the given value bit-width
+    /// (row_ptr as u32, col_idx as u32) — used by the memory accounting.
+    pub fn csr_bytes(&self, value_bits: usize) -> usize {
+        4 * (self.rows + 1) + 4 * self.nnz() + (value_bits / 8) * self.nnz()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowNnzStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub std: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_sparse(rows: usize, cols: usize, p: f64, rng: &mut Xoshiro256) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.bernoulli(p) {
+                    m[(i, j)] = rng.normal();
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let m = random_sparse(13, 9, 0.3, &mut rng);
+        let csr = Csr::from_dense(&m, 0.0);
+        assert!(csr.to_dense().max_abs_diff(&m) < 1e-15);
+    }
+
+    #[test]
+    fn spmv_matches_dense_property() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for trial in 0..20 {
+            let rows = 1 + rng.gen_range(40);
+            let cols = 1 + rng.gen_range(40);
+            let p = rng.uniform(0.0, 0.5);
+            let m = random_sparse(rows, cols, p, &mut rng);
+            let csr = Csr::from_dense(&m, 0.0);
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let want = m.matvec(&x);
+            let got = csr.spmv(&x);
+            for (a, b) in want.iter().zip(&got) {
+                assert!((a - b).abs() < 1e-10, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let m = random_sparse(10, 8, 0.25, &mut rng);
+        let b = Mat::randn(8, 5, &mut rng);
+        let csr = Csr::from_dense(&m, 0.0);
+        assert!(csr.spmm(&b).max_abs_diff(&m.matmul(&b)) < 1e-10);
+    }
+
+    #[test]
+    fn triplets_sum_duplicates() {
+        let csr = Csr::from_triplets(2, 2, vec![(0, 1, 1.0), (0, 1, 2.0), (1, 0, -1.0)]);
+        assert_eq!(csr.nnz(), 2);
+        let d = csr.to_dense();
+        assert_eq!(d[(0, 1)], 3.0);
+        assert_eq!(d[(1, 0)], -1.0);
+    }
+
+    #[test]
+    fn duplicate_cancellation_dropped() {
+        let csr = Csr::from_triplets(1, 2, vec![(0, 0, 1.0), (0, 0, -1.0)]);
+        assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let csr = Csr::from_triplets(4, 4, vec![(2, 3, 5.0)]);
+        assert_eq!(csr.row_nnz(0), 0);
+        assert_eq!(csr.row_nnz(2), 1);
+        let y = csr.spmv(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn stats_and_bytes() {
+        let csr = Csr::from_triplets(3, 3, vec![(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0)]);
+        let s = csr.row_nnz_stats();
+        assert_eq!(s.max, 2);
+        assert_eq!(s.min, 0);
+        assert!((s.mean - 1.0).abs() < 1e-12);
+        assert_eq!(csr.csr_bytes(32), 4 * 4 + 4 * 3 + 4 * 3);
+        assert!((csr.avg_row_density() - 3.0 / 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! Sparse-matrix substrate: CSR storage/SpMV and the paper's §4.2 static
+//! load-balancing schedule tables.
+
+pub mod csr;
+pub mod schedule;
+
+pub use csr::{Csr, RowNnzStats};
+pub use schedule::{SchedulePolicy, ScheduleTable, NO_ROW};

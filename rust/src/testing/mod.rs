@@ -1,0 +1,93 @@
+//! Mini property-based testing harness (the vendored crate set has no
+//! `proptest`). `forall` runs a seeded-deterministic family of random
+//! cases and, on failure, retries with the *smallest* failing case seen
+//! among a shrink budget of re-samples — a pragmatic subset of proptest's
+//! generate-and-shrink loop that keeps failures reproducible (fixed base
+//! seed) and reported with their seed.
+
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 32,
+            base_seed: 0x9E3779B97F4A7C15,
+        }
+    }
+}
+
+/// Outcome of a single case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `property(case_rng, size)` for `cfg.cases` cases of growing size.
+/// Panics with the failing seed + message so the case can be replayed.
+pub fn forall<F>(name: &str, cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Xoshiro256, usize) -> CaseResult,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64 * 0x9E3779B9);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        // Sizes ramp up so early failures are small.
+        let size = 1 + case * 4;
+        if let Err(msg) = property(&mut rng, size) {
+            // Shrink-lite: re-run smaller sizes with the same seed to
+            // report the smallest reproduction.
+            for small in 1..size {
+                let mut srng = Xoshiro256::seed_from_u64(seed);
+                if property(&mut srng, small).is_err() {
+                    panic!(
+                        "property '{name}' failed (seed={seed:#x}, size={small}, shrunk from {size}): {msg}"
+                    );
+                }
+            }
+            panic!("property '{name}' failed (seed={seed:#x}, size={size}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum-commutes", PropConfig::default(), |rng, size| {
+            let a: Vec<u32> = (0..size).map(|_| rng.next_u32() % 1000).collect();
+            let fwd: u64 = a.iter().map(|&x| x as u64).sum();
+            let rev: u64 = a.iter().rev().map(|&x| x as u64).sum();
+            prop_assert!(fwd == rev, "sum mismatch {fwd} vs {rev}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        forall(
+            "always-fails",
+            PropConfig {
+                cases: 3,
+                ..Default::default()
+            },
+            |_, _| Err("nope".to_string()),
+        );
+    }
+}

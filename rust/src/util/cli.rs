@@ -1,0 +1,113 @@
+//! Tiny command-line flag parser (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, which covers every binary in this repo.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(rest) = item.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    flags.insert(rest.to_string(), v);
+                } else {
+                    flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(item);
+            }
+        }
+        Self { flags, positional }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} must be a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true" | "1" | "yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flag_forms() {
+        // Note: a bare `--flag` greedily consumes a following non-flag
+        // token as its value, so positionals go first (or use --flag=v).
+        let a = parse("run --dataset MUTAG --seed=7 --verbose");
+        assert_eq!(a.get("dataset"), Some("MUTAG"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_usize("pes", 4), 4);
+        assert_eq!(a.get_f64("w", 1.0), 1.0);
+        assert!(!a.get_bool("dpp"));
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("--dpp --dataset DD");
+        assert!(a.get_bool("dpp"));
+        assert_eq!(a.get("dataset"), Some("DD"));
+    }
+}

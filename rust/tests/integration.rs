@@ -1,0 +1,169 @@
+//! Cross-layer integration tests: rust (L3) executing the jax-exported
+//! HLO artifacts (L2, containing the L1 Pallas kernel) through PJRT, and
+//! checking numerics against the pure-rust functional model.
+//!
+//! These tests need `make artifacts` to have run (they are skipped with a
+//! message when the manifest is missing, so `cargo test` works before the
+//! first artifact build).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use nysx::graph::tudataset::spec_by_name;
+use nysx::infer::{infer_reference, NysxEngine};
+use nysx::model::train::train;
+use nysx::model::ModelConfig;
+use nysx::nystrom::LandmarkStrategy;
+use nysx::runtime::{Manifest, PjrtRuntime, XlaEncoder, XlaNee};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+/// A model whose shapes fit the default test-scale encode artifact
+/// (n=64, f=16, hops=3, bmax=512, s=48, d=2048, classes=4).
+fn artifact_compatible_model() -> (nysx::graph::GraphDataset, nysx::model::NysHdcModel) {
+    let spec = spec_by_name("NCI1").unwrap();
+    // Tiny scale: graphs ~30 nodes < 64, f fixed by spec... NCI1 has f=37
+    // which exceeds the artifact's f=16, so build a custom dataset from
+    // MUTAG (f=7) padded? The artifact requires f == 16 exactly; instead
+    // synthesize with a 16-label alphabet via ENZYMES-like spec below.
+    let _ = spec;
+    let mut custom = *spec_by_name("MUTAG").unwrap();
+    custom.num_labels = 16;
+    custom.hops = 3;
+    custom.num_train = 60;
+    custom.num_test = 16;
+    let ds = custom.generate(123);
+    let cfg = ModelConfig {
+        hops: 3,
+        hv_dim: 2048,
+        num_landmarks: 24,
+        strategy: LandmarkStrategy::Uniform,
+        lsh_width: 1.0,
+        ..ModelConfig::default()
+    };
+    let model = train(&ds, &cfg);
+    (ds, model)
+}
+
+#[test]
+fn xla_nee_matches_native_projection() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(dir).expect("manifest loads");
+    let (_ds, model) = artifact_compatible_model();
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let nee = XlaNee::new(&rt, &manifest, &model).expect("NEE artifact");
+
+    // Random kernel vectors through both paths.
+    let mut rng = nysx::util::rng::Xoshiro256::seed_from_u64(5);
+    for _ in 0..5 {
+        let c: Vec<f64> = (0..model.s()).map(|_| rng.uniform(0.0, 50.0)).collect();
+        let xla_hv = nee.project_sign(&c).expect("xla exec");
+        let y = model.projection.project(&c);
+        let native_hv = nysx::hdc::Hypervector::from_real(&y);
+        assert_eq!(xla_hv.len(), model.d());
+        // f32-vs-f64 accumulation can flip signs only at |y| ≈ ulp scale.
+        let mismatches = xla_hv
+            .iter()
+            .zip(&native_hv.data)
+            .filter(|(&x, &n)| (x as i8) != n)
+            .count();
+        assert!(
+            (mismatches as f64) < 0.005 * model.d() as f64,
+            "{mismatches}/{} HV sign mismatches",
+            model.d()
+        );
+    }
+}
+
+#[test]
+fn xla_full_encoder_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(dir).expect("manifest loads");
+    let (ds, model) = artifact_compatible_model();
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let encoder = XlaEncoder::new(&rt, &manifest, &model).expect("encode artifact");
+
+    let mut engine = NysxEngine::new(&model);
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for (g, _) in ds.test.iter() {
+        if !encoder.fits(g) {
+            continue;
+        }
+        total += 1;
+        let (xla_pred, xla_scores, xla_hv) = encoder.encode_classify(g).expect("xla exec");
+        let (rust_pred, rust_hv) = infer_reference(&model, g);
+        let opt = engine.infer(g);
+        assert_eq!(opt.predicted, rust_pred, "rust paths disagree");
+        // HVs agree except at fp32 sign-boundary coordinates.
+        let mismatches = xla_hv
+            .iter()
+            .zip(&rust_hv.data)
+            .filter(|(&x, &n)| (x as i8) != n)
+            .count();
+        assert!(
+            (mismatches as f64) < 0.01 * model.d() as f64,
+            "{mismatches} HV mismatches"
+        );
+        assert_eq!(xla_scores.len(), encoder.classes_art);
+        if xla_pred == rust_pred {
+            agree += 1;
+        }
+    }
+    assert!(total >= 10, "too few test graphs fit the artifact ({total})");
+    assert!(
+        agree as f64 >= 0.9 * total as f64,
+        "XLA vs rust predictions agree on only {agree}/{total}"
+    );
+}
+
+#[test]
+fn model_file_roundtrip_via_disk() {
+    let (ds, model) = artifact_compatible_model();
+    let dir = std::env::temp_dir().join(format!("nysx-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.nysx");
+    nysx::model::io::save_file(&model, &path).unwrap();
+    let back = nysx::model::io::load_file(&path).unwrap();
+    let mut e1 = NysxEngine::new(&model);
+    let mut e2 = NysxEngine::new(&back);
+    for (g, _) in ds.test.iter().take(8) {
+        assert_eq!(e1.infer(g).predicted, e2.infer(g).predicted);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_serve_end_to_end() {
+    // The full L3 story: train, serve through the coordinator, verify
+    // accuracy matches offline evaluation.
+    let (ds, model) = artifact_compatible_model();
+    let offline_acc = nysx::model::train::evaluate(&model, &ds.test);
+    let model = Arc::new(model);
+    let mut server = nysx::coordinator::Server::start(
+        model,
+        nysx::coordinator::ServerConfig {
+            workers: 3,
+            ..Default::default()
+        },
+    );
+    for (g, _) in ds.test.iter() {
+        server.submit(g.clone()).unwrap();
+    }
+    let responses = server.shutdown();
+    assert_eq!(responses.len(), ds.test.len());
+    let correct = responses
+        .iter()
+        .filter(|r| r.predicted == ds.test[r.id as usize].1)
+        .count();
+    let served_acc = correct as f64 / ds.test.len() as f64;
+    assert!((served_acc - offline_acc).abs() < 1e-9, "serving changed accuracy");
+}
