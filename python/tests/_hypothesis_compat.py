@@ -1,0 +1,86 @@
+"""Use `hypothesis` when available; otherwise fall back to a tiny
+seeded-deterministic sampler with the same surface (`given`, `settings`,
+`st.integers/floats/sampled_from`) so the property suites still run in
+environments without the dependency (mirroring the rust side's in-repo
+`testing::forall` harness). The fallback draws `max_examples` random
+cases from a fixed per-test seed and reports the failing case's kwargs —
+no shrinking, but fully reproducible.
+"""
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in dep-free containers
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    class _Profile:
+        def __init__(self, max_examples=20, **_ignored):
+            self.max_examples = max_examples
+
+    class settings:  # noqa: N801 - mimics `hypothesis.settings`
+        _profiles = {}
+        _current = _Profile()
+
+        def __init__(self, **_ignored):
+            pass
+
+        @classmethod
+        def register_profile(cls, name, **kwargs):
+            cls._profiles[name] = _Profile(**kwargs)
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._current = cls._profiles.get(name, _Profile())
+
+    def given(**strategies_by_arg):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                # Per-test deterministic seed so failures replay.
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(settings._current.max_examples):
+                    kwargs = {
+                        name: strat.sample(rng)
+                        for name, strat in strategies_by_arg.items()
+                    }
+                    try:
+                        fn(**kwargs)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"property {fn.__name__} failed for {kwargs!r}: {exc}"
+                        ) from exc
+
+            # pytest introspects signatures (via __wrapped__) to resolve
+            # fixtures; present a zero-arg test, not the property args.
+            wrapper.__dict__.pop("__wrapped__", None)
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return decorate

@@ -1,0 +1,9 @@
+"""Pytest bootstrap: make the `compile` package importable when the suite
+is run from the repository root (`python -m pytest python/tests -q`)."""
+
+import os
+import sys
+
+_PYTHON_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _PYTHON_DIR not in sys.path:
+    sys.path.insert(0, _PYTHON_DIR)

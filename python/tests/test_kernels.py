@@ -7,7 +7,7 @@ comparisons are exact (same fp32 ops, same sign convention).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels.lsh import lsh_codes
 from compile.kernels.nee import nee_project_sign, vmem_footprint_bytes

@@ -3,7 +3,7 @@ implementation of Algorithm 1, plus padding-invariance properties."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile import model
 from compile.kernels.ref import INT_SENTINEL

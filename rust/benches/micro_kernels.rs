@@ -1,14 +1,23 @@
 //! Micro-benchmarks of the L3 hot-path kernels (in-repo harness; no
-//! criterion in the vendored crate set): scheduled SpMV vs plain CSR vs
-//! dense, MPH lookup vs hashmap vs binary search, the NEE projection, the
-//! full optimized inference, and the MPH γ ablation.
+//! criterion in the vendored crate set): packed-vs-i8 hypervector
+//! kernels, scheduled SpMV vs plain CSR vs dense, MPH lookup vs hashmap
+//! vs binary search, the NEE projection (f64 and fused packed), the full
+//! optimized inference, and the MPH γ ablation.
 //!
 //!     cargo bench --bench micro_kernels
+//!
+//! Smoke mode (for CI, no `cargo bench` needed — any way of running the
+//! bench binary works, e.g. `NYSX_BENCH_SMOKE=1 cargo bench --bench
+//! micro_kernels` or executing the built binary directly): set
+//! `NYSX_BENCH_SMOKE=1` to shrink measurement budgets and the trained
+//! model so the whole suite — including the packed-vs-i8 comparison —
+//! compiles and completes in a few seconds.
 
 use std::time::Duration;
 
-use nysx::bench::harness::{bench, black_box, print_results};
+use nysx::bench::harness::{bench, black_box, print_results, BenchResult};
 use nysx::graph::tudataset::spec_by_name;
+use nysx::hdc::{bundle, packed_bundle, Hypervector, PackedHypervector};
 use nysx::infer::NysxEngine;
 use nysx::kernel::node_codes;
 use nysx::model::train::train;
@@ -17,20 +26,94 @@ use nysx::mph::{code_key, Mph, MphLookup};
 use nysx::sparse::{SchedulePolicy, ScheduleTable};
 use nysx::util::rng::Xoshiro256;
 
+fn smoke_mode() -> bool {
+    std::env::var("NYSX_BENCH_SMOKE").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+/// Mean-time ratio of two named results (old/new > 1 means `new` wins).
+fn speedup(results: &[BenchResult], old: &str, new: &str) -> Option<(String, f64)> {
+    let find = |n: &str| results.iter().find(|r| r.name == n);
+    let (o, n) = (find(old)?, find(new)?);
+    Some((format!("{old} → {new}"), o.mean_ns / n.mean_ns))
+}
+
 fn main() {
-    let budget = Duration::from_millis(300);
+    let smoke = smoke_mode();
+    let budget = if smoke {
+        Duration::from_millis(8)
+    } else {
+        Duration::from_millis(300)
+    };
     let mut results = Vec::new();
 
+    // --- packed vs i8 hypervector kernels at the paper's d = 10^4 ---
+    let d = 10_000;
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let a8 = Hypervector::random(d, &mut rng);
+    let b8 = Hypervector::random(d, &mut rng);
+    let (pa, pb) = (a8.pack(), b8.pack());
+    results.push(bench("hv/dot-i8", budget, || {
+        black_box(a8.dot(black_box(&b8)));
+    }));
+    results.push(bench("hv/dot-packed", budget, || {
+        black_box(pa.dot(black_box(&pb)));
+    }));
+    results.push(bench("hv/hamming-i8", budget, || {
+        black_box(a8.hamming(black_box(&b8)));
+    }));
+    results.push(bench("hv/hamming-packed", budget, || {
+        black_box(pa.hamming(black_box(&pb)));
+    }));
+    results.push(bench("hv/bind-i8", budget, || {
+        black_box(a8.bind(black_box(&b8)));
+    }));
+    results.push(bench("hv/bind-packed", budget, || {
+        black_box(pa.bind(black_box(&pb)));
+    }));
+    results.push(bench("hv/permute-i8", budget, || {
+        black_box(a8.permute(black_box(12_345)));
+    }));
+    results.push(bench("hv/permute-packed", budget, || {
+        black_box(pa.permute(black_box(12_345)));
+    }));
+    let members8: Vec<Hypervector> = (0..16).map(|_| Hypervector::random(d, &mut rng)).collect();
+    let member_refs8: Vec<&Hypervector> = members8.iter().collect();
+    let members_p: Vec<PackedHypervector> = members8.iter().map(|h| h.pack()).collect();
+    let member_refs_p: Vec<&PackedHypervector> = members_p.iter().collect();
+    results.push(bench("hv/bundle16-i8", budget, || {
+        black_box(bundle(black_box(&member_refs8)));
+    }));
+    results.push(bench("hv/bundle16-packed", budget, || {
+        black_box(packed_bundle(black_box(&member_refs_p)));
+    }));
+
     // --- a trained model + a representative query graph ---
-    let spec = spec_by_name("NCI1").unwrap();
-    let (ds, _s_uni, s_dpp) = spec.generate_scaled(42, 0.15);
-    let cfg = ModelConfig {
-        hops: spec.hops,
-        hv_dim: 10_000,
-        num_landmarks: s_dpp.min(ds.train.len()),
-        ..ModelConfig::default()
+    let (ds, cfg) = if smoke {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, s_uni, _) = spec.generate_scaled(42, 0.15);
+        let cfg = ModelConfig {
+            hops: 2,
+            hv_dim: 1000,
+            num_landmarks: s_uni.min(8),
+            ..ModelConfig::default()
+        };
+        (ds, cfg)
+    } else {
+        let spec = spec_by_name("NCI1").unwrap();
+        let (ds, _s_uni, s_dpp) = spec.generate_scaled(42, 0.15);
+        let cfg = ModelConfig {
+            hops: spec.hops,
+            hv_dim: 10_000,
+            num_landmarks: s_dpp.min(ds.train.len()),
+            ..ModelConfig::default()
+        };
+        (ds, cfg)
     };
-    eprintln!("training NCI1@0.15 model for the micro benches...");
+    eprintln!(
+        "training {}@0.15 model for the micro benches{}...",
+        ds.name,
+        if smoke { " (smoke mode)" } else { "" }
+    );
     let model = train(&ds, &cfg);
     let graph = &ds.train[0].0;
 
@@ -95,13 +178,29 @@ fn main() {
         black_box(acc);
     }));
 
-    // --- NEE projection (the paper's dominant kernel) ---
+    // --- NEE projection (the paper's dominant kernel): f64 path vs the
+    // fused project-bipolarize-pack hot path ---
     let c_vec: Vec<f64> = (0..model.s()).map(|i| (i % 11) as f64).collect();
     let mut hv = vec![0.0f64; model.d()];
     results.push(bench("nee/project-f32-rowmajor", budget, || {
         model
             .projection
             .project_into(black_box(&c_vec), black_box(&mut hv));
+    }));
+    let mut packed_hv = PackedHypervector::zeros(model.d());
+    results.push(bench("nee/project-pack-fused", budget, || {
+        model
+            .projection
+            .project_pack_into(black_box(&c_vec), black_box(&mut packed_hv));
+    }));
+
+    // --- SCE: prototype matching, i8 vs packed ---
+    let q8 = packed_hv.unpack();
+    results.push(bench("sce/classify-i8", budget, || {
+        black_box(model.prototypes.classify(black_box(&q8)));
+    }));
+    results.push(bench("sce/classify-packed", budget, || {
+        black_box(model.packed_prototypes.classify(black_box(&packed_hv)));
     }));
 
     // --- whole optimized inference ---
@@ -112,9 +211,28 @@ fn main() {
 
     print_results(&results);
 
+    println!("\npacked vs i8 speedups (mean-time ratio, d={d}):");
+    for (old, new) in [
+        ("hv/dot-i8", "hv/dot-packed"),
+        ("hv/hamming-i8", "hv/hamming-packed"),
+        ("hv/bind-i8", "hv/bind-packed"),
+        ("hv/permute-i8", "hv/permute-packed"),
+        ("hv/bundle16-i8", "hv/bundle16-packed"),
+        ("sce/classify-i8", "sce/classify-packed"),
+    ] {
+        if let Some((label, ratio)) = speedup(&results, old, new) {
+            println!("  {label:<44} {ratio:6.1}x");
+        }
+    }
+
     // --- MPH γ ablation (paper §5.2.2 sizing trade-off) ---
+    let n_keys = if smoke { 2_000 } else { 20_000 };
     let mut rng = Xoshiro256::seed_from_u64(1);
-    let keys: Vec<u64> = (0..20_000).map(|_| rng.next_u64()).collect::<std::collections::HashSet<_>>().into_iter().collect();
+    let keys: Vec<u64> = (0..n_keys)
+        .map(|_| rng.next_u64())
+        .collect::<std::collections::HashSet<_>>()
+        .into_iter()
+        .collect();
     let values: Vec<u32> = (0..keys.len() as u32).collect();
     println!("\nMPH gamma ablation ({} keys):", keys.len());
     println!("{:>6} {:>10} {:>8} {:>14}", "gamma", "bits/key", "levels", "mean probes");

@@ -161,7 +161,9 @@ mod tests {
             &ds,
             &ModelConfig {
                 hops: 2,
-                hv_dim: 512,
+                // Off a word boundary: the packed tail word is live in
+                // every worker inference below.
+                hv_dim: 500,
                 num_landmarks: 8,
                 ..ModelConfig::default()
             },
@@ -170,16 +172,28 @@ mod tests {
     }
 
     /// The coordinator's end-to-end invariant: every submitted request is
-    /// answered exactly once, with the same prediction the engine gives
-    /// single-threaded, regardless of worker count / routing policy.
+    /// answered exactly once, with the same prediction as the
+    /// single-threaded oracle, regardless of worker count / routing
+    /// policy. The workers run the bit-packed engine, so the oracle here
+    /// is deliberately the *i8* verbatim-Algorithm-1 reference — this
+    /// property doubles as the serving-level packed-vs-i8 regression
+    /// test. A fast sanity pass first confirms the packed engine agrees
+    /// with that oracle single-threaded, so any failure inside the
+    /// property isolates to the coordinator.
     #[test]
     fn serving_matches_single_threaded() {
         let (ds, model) = small_model();
-        let mut reference = NysxEngine::new(&model);
+        let mut packed_engine = NysxEngine::new(&model);
         let want: Vec<usize> = ds
             .test
             .iter()
-            .map(|(g, _)| reference.infer(g).predicted)
+            .map(|(g, _)| {
+                let (oracle_pred, oracle_hv) = crate::infer::infer_reference(&model, g);
+                let packed = packed_engine.infer(g);
+                assert_eq!(packed.predicted, oracle_pred, "packed engine != i8 oracle");
+                assert_eq!(packed.hv, oracle_hv.pack(), "packed HV != i8 oracle HV");
+                oracle_pred
+            })
             .collect();
 
         forall(

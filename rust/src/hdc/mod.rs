@@ -1,9 +1,17 @@
 //! Hyperdimensional computing core (paper §2.1.1): bipolar hypervectors,
 //! the bundling/binding/permutation operators, similarity metrics and
 //! class prototypes.
+//!
+//! Two representations coexist: [`Hypervector`] (`Vec<i8>`, the readable
+//! reference/oracle) and [`packed::PackedHypervector`] (one sign bit per
+//! element, the deployed hot-path representation). They are lossless
+//! converses of each other and every operator pair is property-tested
+//! bit-identical.
 
+pub mod packed;
 pub mod prototypes;
 
+pub use packed::{packed_bundle, PackedAccumulator, PackedHypervector, PackedPrototypes};
 pub use prototypes::{ClassPrototypes, PrototypeAccumulator};
 
 /// A bipolar hypervector h ∈ {-1, +1}^d stored as i8 (the accelerator's
@@ -83,6 +91,12 @@ impl Hypervector {
             return 0.0;
         }
         self.dot(other) as f64 / self.dim() as f64
+    }
+
+    /// Pack into the 1-bit-per-element representation (lossless for
+    /// bipolar data; see [`packed::PackedHypervector`]).
+    pub fn pack(&self) -> PackedHypervector {
+        PackedHypervector::pack(self)
     }
 
     /// Hamming distance (number of disagreeing coordinates).

@@ -1,0 +1,720 @@
+//! Bit-packed bipolar hypervectors — the representation the accelerator's
+//! SCE actually consumes (sign bits), 8× denser than the `Vec<i8>`
+//! reference in [`super::Hypervector`].
+//!
+//! # Word layout
+//!
+//! A `d`-dimensional HV occupies `⌈d/64⌉` little-endian `u64` words:
+//! element `i` lives in word `i / 64` at bit `i % 64`. Bit value `1`
+//! encodes element `-1`; bit `0` encodes `+1`. This matches the repo-wide
+//! sign convention `sign(0) = +1` — bipolarizing a real value sets the
+//! bit iff the value is strictly negative (see
+//! [`PackedHypervector::from_real`]).
+//!
+//! # Tail-masking convention
+//!
+//! When `d` is not a multiple of 64 the last word has `64 - d % 64`
+//! *tail bits* above the logical dimension. The invariant maintained by
+//! every constructor and operator in this module is that **tail bits are
+//! always zero**, so `popcount`-based kernels (dot, Hamming, bundle
+//! counters) never see phantom coordinates. Anything that writes raw
+//! words ([`PackedHypervector::words_mut`]) is `pub(crate)` and must
+//! re-establish the invariant; the property suite checks it after every
+//! operation.
+//!
+//! # Operator correspondences (all bit-identical to the i8 reference)
+//!
+//! | i8 op                  | packed realization                       |
+//! |------------------------|------------------------------------------|
+//! | bind (elementwise ×)   | word-wise XOR                            |
+//! | permute (cyclic shift) | cross-word bit rotate                    |
+//! | hamming                | `Σ popcount(a ^ b)`                      |
+//! | dot                    | `d − 2·hamming`                          |
+//! | bundle (majority sign) | per-bit minus-counters, threshold `n/2`  |
+
+use super::Hypervector;
+
+/// Bits per storage word.
+const WORD_BITS: usize = 64;
+
+/// Number of words needed for `d` logical bits.
+#[inline]
+pub const fn words_for(d: usize) -> usize {
+    (d + WORD_BITS - 1) / WORD_BITS
+}
+
+/// Mask of valid bits in the *last* word of a `d`-bit vector.
+#[inline]
+const fn tail_mask(d: usize) -> u64 {
+    let r = d % WORD_BITS;
+    if r == 0 {
+        u64::MAX
+    } else {
+        (1u64 << r) - 1
+    }
+}
+
+/// A bipolar hypervector h ∈ {-1, +1}^d packed one sign bit per element.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedHypervector {
+    words: Box<[u64]>,
+    dim: usize,
+}
+
+impl PackedHypervector {
+    /// All-(+1) vector (every bit clear).
+    pub fn zeros(d: usize) -> Self {
+        Self {
+            words: vec![0u64; words_for(d)].into_boxed_slice(),
+            dim: d,
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Raw word storage (tail bits guaranteed zero).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Mutable word storage for fused producers (e.g. the NEE
+    /// project-bipolarize-pack path). Crate-internal: writers must keep
+    /// tail bits zero.
+    #[inline]
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Storage bytes (the Table-2 `b_G = 1` accounting, word-rounded).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Re-zero any tail bits after a raw word-level write.
+    #[inline]
+    fn mask_tail(&mut self) {
+        if let Some(last) = self.words.last_mut() {
+            *last &= tail_mask(self.dim);
+        }
+    }
+
+    /// Element `i` as ±1.
+    #[inline]
+    pub fn get(&self, i: usize) -> i8 {
+        debug_assert!(i < self.dim);
+        if (self.words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1 {
+            -1
+        } else {
+            1
+        }
+    }
+
+    /// Rebuild from raw words (deserialization). Rejects payloads whose
+    /// word count is wrong or whose tail bits are set — the invariant
+    /// must hold before any popcount kernel runs.
+    pub fn from_words(dim: usize, words: Vec<u64>) -> Result<Self, &'static str> {
+        if words.len() != words_for(dim) {
+            return Err("word count does not match dimension");
+        }
+        if let Some(&last) = words.last() {
+            if last & !tail_mask(dim) != 0 {
+                return Err("tail bits set beyond logical dimension");
+            }
+        }
+        Ok(Self {
+            words: words.into_boxed_slice(),
+            dim,
+        })
+    }
+
+    /// Pack an i8 reference HV losslessly (bit set ⇔ element negative).
+    pub fn pack(hv: &Hypervector) -> Self {
+        let mut out = Self::zeros(hv.dim());
+        for (i, &v) in hv.data.iter().enumerate() {
+            if v < 0 {
+                out.words[i / WORD_BITS] |= 1 << (i % WORD_BITS);
+            }
+        }
+        out
+    }
+
+    /// Unpack to the i8 reference representation (lossless inverse of
+    /// [`Self::pack`]).
+    pub fn unpack(&self) -> Hypervector {
+        Hypervector {
+            data: (0..self.dim).map(|i| self.get(i)).collect(),
+        }
+    }
+
+    /// Bipolarize-and-pack a real vector: bit i set iff `y[i] < 0`
+    /// (`sign(0) = +1`, matching [`Hypervector::from_real`]).
+    pub fn from_real(y: &[f64]) -> Self {
+        let mut out = Self::zeros(y.len());
+        for (i, &v) in y.iter().enumerate() {
+            if v < 0.0 {
+                out.words[i / WORD_BITS] |= 1 << (i % WORD_BITS);
+            }
+        }
+        out
+    }
+
+    pub fn from_real_f32(y: &[f32]) -> Self {
+        let mut out = Self::zeros(y.len());
+        for (i, &v) in y.iter().enumerate() {
+            if v < 0.0 {
+                out.words[i / WORD_BITS] |= 1 << (i % WORD_BITS);
+            }
+        }
+        out
+    }
+
+    /// Random bipolar HV drawn word-at-a-time. NOTE: consumes the RNG
+    /// stream differently from [`Hypervector::random`] (one `u64` per 64
+    /// elements instead of one per element), so the two are *not*
+    /// bit-equal for the same seed — pack an i8 HV when a matched pair is
+    /// needed.
+    pub fn random(d: usize, rng: &mut crate::util::rng::Xoshiro256) -> Self {
+        let mut out = Self::zeros(d);
+        for w in out.words.iter_mut() {
+            *w = rng.next_u64();
+        }
+        out.mask_tail();
+        out
+    }
+
+    /// Binding (⊗): element-wise product = word-wise XOR. Tail bits stay
+    /// zero (0 ^ 0 = 0).
+    pub fn bind(&self, other: &PackedHypervector) -> PackedHypervector {
+        assert_eq!(self.dim, other.dim);
+        PackedHypervector {
+            words: self
+                .words
+                .iter()
+                .zip(other.words.iter())
+                .map(|(&a, &b)| a ^ b)
+                .collect(),
+            dim: self.dim,
+        }
+    }
+
+    /// Permutation (ρ^i): cyclic shift by `i` positions, identical to
+    /// [`Hypervector::permute`] — result element `j` is input element
+    /// `(j - i) mod d`, i.e. a `d`-bit rotate towards higher bit indices,
+    /// carried across word boundaries.
+    pub fn permute(&self, i: usize) -> PackedHypervector {
+        let d = self.dim;
+        if d == 0 {
+            return self.clone();
+        }
+        let shift = i % d;
+        if shift == 0 {
+            return self.clone();
+        }
+        let mut out = Self::zeros(d);
+        shl_into(&self.words, d, shift, &mut out.words);
+        let mut lo = vec![0u64; self.words.len()];
+        shr_into(&self.words, d - shift, &mut lo);
+        for (o, l) in out.words.iter_mut().zip(&lo) {
+            *o |= l;
+        }
+        out.mask_tail();
+        out
+    }
+
+    /// Hamming distance: popcount over the XOR. Tail bits are zero in
+    /// both operands, so they contribute nothing.
+    pub fn hamming(&self, other: &PackedHypervector) -> usize {
+        assert_eq!(self.dim, other.dim);
+        self.words
+            .iter()
+            .zip(other.words.iter())
+            .map(|(&a, &b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Dot-product similarity: `d − 2·hamming` (exact for bipolar).
+    pub fn dot(&self, other: &PackedHypervector) -> i64 {
+        self.dim as i64 - 2 * self.hamming(other) as i64
+    }
+
+    /// Cosine similarity in [-1, 1] (bipolar norm is √d).
+    pub fn cosine(&self, other: &PackedHypervector) -> f64 {
+        if self.dim == 0 {
+            return 0.0;
+        }
+        self.dot(other) as f64 / self.dim as f64
+    }
+
+    /// Number of −1 elements (set bits).
+    pub fn count_negatives(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+/// Multiword shift towards higher bit indices by `s`, masked to `d` bits.
+fn shl_into(src: &[u64], d: usize, s: usize, out: &mut [u64]) {
+    let n = src.len();
+    let (ws, bs) = (s / WORD_BITS, s % WORD_BITS);
+    for k in 0..n {
+        out[k] = if k < ws {
+            0
+        } else if bs == 0 {
+            src[k - ws]
+        } else {
+            let lo = src[k - ws] << bs;
+            let hi = if k >= ws + 1 {
+                src[k - ws - 1] >> (WORD_BITS - bs)
+            } else {
+                0
+            };
+            lo | hi
+        };
+    }
+    if n > 0 {
+        out[n - 1] &= tail_mask(d);
+    }
+}
+
+/// Multiword shift towards lower bit indices by `s`.
+fn shr_into(src: &[u64], s: usize, out: &mut [u64]) {
+    let n = src.len();
+    let (ws, bs) = (s / WORD_BITS, s % WORD_BITS);
+    for k in 0..n {
+        out[k] = if k + ws >= n {
+            0
+        } else if bs == 0 {
+            src[k + ws]
+        } else {
+            let lo = src[k + ws] >> bs;
+            let hi = if k + ws + 1 < n {
+                src[k + ws + 1] << (WORD_BITS - bs)
+            } else {
+                0
+            };
+            lo | hi
+        };
+    }
+}
+
+/// Bundling (⊕) of packed HVs: majority sign per element, ties to +1 —
+/// bit-identical to [`super::bundle`] on the unpacked operands.
+pub fn packed_bundle(hvs: &[&PackedHypervector]) -> PackedHypervector {
+    assert!(!hvs.is_empty(), "bundle of nothing");
+    let d = hvs[0].dim();
+    let mut acc = PackedAccumulator::new(1, d);
+    for hv in hvs {
+        acc.add(0, hv);
+    }
+    acc.finalize().prototypes.pop().expect("one bundle class")
+}
+
+/// Accumulates per-class, per-bit −1 counters during training, then
+/// thresholds into packed prototypes. The element-wise sum of `n` bipolar
+/// values with `m` minus-ones is `n − 2m`, so the bundled sign is −1 iff
+/// `2m > n` (ties, `2m == n`, break to +1) — exactly the
+/// [`super::PrototypeAccumulator`] rule without ever materializing i8.
+///
+/// The counters are *bit-sliced*: plane `p`, word `w` holds bit `p` of
+/// the 64 per-coordinate counts covering elements `64w .. 64w+63`, and
+/// adding an HV is a word-parallel carry-save ripple
+/// (`sum = plane ^ carry; carry = plane & carry`) that touches
+/// `⌈log₂ count⌉` words per input word instead of 64 scalar counters —
+/// this is what makes packed bundling beat the i8 accumulator by far
+/// more than the 8× storage factor. Planes grow on demand, so memory is
+/// `⌈log₂(n+1)⌉ · ⌈d/64⌉` words per class.
+#[derive(Debug, Clone)]
+pub struct PackedAccumulator {
+    pub num_classes: usize,
+    pub dim: usize,
+    /// Words per plane (= `words_for(dim)`).
+    words: usize,
+    /// Per class: concatenated counter planes, each `words` long.
+    planes: Vec<Vec<u64>>,
+    counts: Vec<usize>,
+}
+
+impl PackedAccumulator {
+    pub fn new(num_classes: usize, dim: usize) -> Self {
+        Self {
+            num_classes,
+            dim,
+            words: words_for(dim),
+            planes: vec![Vec::new(); num_classes],
+            counts: vec![0; num_classes],
+        }
+    }
+
+    pub fn add(&mut self, class: usize, hv: &PackedHypervector) {
+        assert!(class < self.num_classes);
+        assert_eq!(hv.dim(), self.dim);
+        let words = self.words;
+        let planes = &mut self.planes[class];
+        for (wi, &w) in hv.words().iter().enumerate() {
+            let mut carry = w;
+            let mut p = 0;
+            while carry != 0 {
+                if p * words >= planes.len() {
+                    // Counter overflowed every existing plane: grow by one
+                    // zeroed plane (appending keeps plane p at offset p·words).
+                    planes.resize((p + 1) * words, 0);
+                }
+                let slot = &mut planes[p * words + wi];
+                let old = *slot;
+                *slot = old ^ carry;
+                carry = old & carry;
+                p += 1;
+            }
+        }
+        self.counts[class] += 1;
+    }
+
+    /// Per-coordinate −1 count for `class` (reassembled from the planes;
+    /// test/diagnostic helper, not on the training path).
+    pub fn minus_count(&self, class: usize, i: usize) -> usize {
+        assert!(class < self.num_classes && i < self.dim);
+        let (wi, b) = (i / WORD_BITS, i % WORD_BITS);
+        let planes = &self.planes[class];
+        let nplanes = planes.len() / self.words.max(1);
+        let mut m = 0usize;
+        for p in 0..nplanes {
+            m |= (((planes[p * self.words + wi] >> b) & 1) as usize) << p;
+        }
+        m
+    }
+
+    pub fn finalize(self) -> PackedPrototypes {
+        let words = self.words;
+        let prototypes = self
+            .planes
+            .iter()
+            .zip(&self.counts)
+            .map(|(planes, &n)| {
+                let nplanes = if words == 0 { 0 } else { planes.len() / words };
+                let mut p = PackedHypervector::zeros(self.dim);
+                for i in 0..self.dim {
+                    let (wi, b) = (i / WORD_BITS, i % WORD_BITS);
+                    let mut m = 0usize;
+                    for pl in 0..nplanes {
+                        m |= (((planes[pl * words + wi] >> b) & 1) as usize) << pl;
+                    }
+                    // sum = n − 2m < 0  ⇔  2m > n (ties → +1).
+                    if 2 * m > n {
+                        p.words[wi] |= 1 << b;
+                    }
+                }
+                p
+            })
+            .collect();
+        PackedPrototypes {
+            prototypes,
+            counts: self.counts,
+        }
+    }
+}
+
+/// The trained prototype matrix G ∈ {-1,+1}^{C×d} at one bit per element —
+/// the SCE's deployed operand. `scores`/`classify` are bit-identical to
+/// [`super::ClassPrototypes`] on the unpacked prototypes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedPrototypes {
+    pub prototypes: Vec<PackedHypervector>,
+    /// Training samples bundled into each class (diagnostics).
+    pub counts: Vec<usize>,
+}
+
+impl PackedPrototypes {
+    pub fn num_classes(&self) -> usize {
+        self.prototypes.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.prototypes.first().map(|p| p.dim()).unwrap_or(0)
+    }
+
+    /// All class scores s = G h (integer dot products via popcount).
+    pub fn scores(&self, hv: &PackedHypervector) -> Vec<i64> {
+        self.prototypes.iter().map(|p| p.dot(hv)).collect()
+    }
+
+    /// Predicted class: argmax similarity, first max wins on ties (the
+    /// hardware argmax unit's sequential compare).
+    pub fn classify(&self, hv: &PackedHypervector) -> usize {
+        let mut best = 0usize;
+        let mut best_score = i64::MIN;
+        for (c, p) in self.prototypes.iter().enumerate() {
+            let s = p.dot(hv);
+            if s > best_score {
+                best = c;
+                best_score = s;
+            }
+        }
+        best
+    }
+
+    /// Deployed G bytes (1 bit/element, word-rounded per prototype).
+    pub fn bytes(&self) -> usize {
+        self.prototypes.iter().map(|p| p.bytes()).sum()
+    }
+
+    /// Lossless conversion from the i8 reference prototypes.
+    pub fn from_reference(protos: &super::ClassPrototypes) -> Self {
+        Self {
+            prototypes: protos.prototypes.iter().map(PackedHypervector::pack).collect(),
+            counts: protos.counts.clone(),
+        }
+    }
+
+    /// Lossless conversion back to the i8 reference prototypes.
+    pub fn to_reference(&self) -> super::ClassPrototypes {
+        super::ClassPrototypes {
+            prototypes: self.prototypes.iter().map(|p| p.unpack()).collect(),
+            counts: self.counts.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{bundle, ClassPrototypes, Hypervector, PrototypeAccumulator};
+    use super::*;
+    use crate::testing::{forall, PropConfig};
+    use crate::util::rng::Xoshiro256;
+
+    /// The tail-masking invariant: no bit above the logical dimension.
+    fn tail_clean(p: &PackedHypervector) -> bool {
+        p.words
+            .last()
+            .map_or(true, |&w| w & !tail_mask(p.dim) == 0)
+    }
+
+    /// A dimension that deliberately hovers around word boundaries as the
+    /// case size ramps: mixes exact multiples of 64, off-by-one dims and
+    /// arbitrary ones.
+    fn random_dim(rng: &mut Xoshiro256, size: usize) -> usize {
+        match rng.gen_range(4) {
+            0 => 64 * (1 + rng.gen_range(size.max(1))),
+            1 => 64 * (1 + rng.gen_range(size.max(1))) + 1,
+            2 => 64 * (1 + rng.gen_range(size.max(1))) - 1,
+            _ => 1 + rng.gen_range(64 * size.max(1)),
+        }
+    }
+
+    fn matched_pair(rng: &mut Xoshiro256, d: usize) -> (Hypervector, PackedHypervector) {
+        let h = Hypervector::random(d, rng);
+        let p = h.pack();
+        (h, p)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_and_tail_invariant() {
+        forall("pack-roundtrip", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size);
+            let (h, p) = matched_pair(rng, d);
+            crate::prop_assert!(p.unpack() == h, "roundtrip lost data at d={d}");
+            crate::prop_assert!(tail_clean(&p), "tail bits set after pack at d={d}");
+            crate::prop_assert!(p.dim() == d && p.words().len() == words_for(d), "shape d={d}");
+            // Element accessor agrees with the i8 data.
+            for i in 0..d.min(130) {
+                crate::prop_assert!(p.get(i) == h.data[i], "get({i}) mismatch at d={d}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bind_matches_reference_and_is_self_inverse() {
+        forall("bind-differential", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size);
+            let (a, pa) = matched_pair(rng, d);
+            let (b, pb) = matched_pair(rng, d);
+            let bound = pa.bind(&pb);
+            crate::prop_assert!(bound == a.bind(&b).pack(), "bind differs at d={d}");
+            crate::prop_assert!(tail_clean(&bound), "bind leaked tail bits at d={d}");
+            // Self-inverse law: (a⊗b)⊗b == a.
+            crate::prop_assert!(bound.bind(&pb) == pa, "bind not self-inverse at d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn permute_matches_reference_and_forms_cyclic_group() {
+        forall("permute-differential", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size);
+            let (h, p) = matched_pair(rng, d);
+            let shift = rng.gen_range(3 * d + 2);
+            let rotated = p.permute(shift);
+            crate::prop_assert!(
+                rotated == h.permute(shift).pack(),
+                "permute({shift}) differs at d={d}"
+            );
+            crate::prop_assert!(tail_clean(&rotated), "permute leaked tail bits at d={d}");
+            // Cyclic-group laws: identity, full cycle, inverse composition.
+            crate::prop_assert!(p.permute(0) == p, "permute(0) != id at d={d}");
+            crate::prop_assert!(p.permute(d) == p, "permute(d) != id at d={d}");
+            let s = shift % d;
+            crate::prop_assert!(
+                rotated.permute(d - s) == p,
+                "permute({s}) then permute({}) != id at d={d}",
+                d - s
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn similarities_match_reference() {
+        forall("similarity-differential", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size);
+            let (a, pa) = matched_pair(rng, d);
+            let (b, pb) = matched_pair(rng, d);
+            let (ham, pham) = (a.hamming(&b), pa.hamming(&pb));
+            crate::prop_assert!(ham == pham, "hamming {ham} vs {pham} at d={d}");
+            let (dot, pdot) = (a.dot(&b), pa.dot(&pb));
+            crate::prop_assert!(dot == pdot, "dot {dot} vs {pdot} at d={d}");
+            // Bipolar identity ties the two kernels together.
+            crate::prop_assert!(
+                pdot == d as i64 - 2 * pham as i64,
+                "dot != d-2*hamming at d={d}"
+            );
+            // Cosine is dot/d in both representations — exact f64 equality.
+            crate::prop_assert!(
+                a.cosine(&b) == pa.cosine(&pb),
+                "cosine differs at d={d}"
+            );
+            crate::prop_assert!(
+                pa.count_negatives() == a.data.iter().filter(|&&v| v < 0).count(),
+                "count_negatives differs at d={d}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bundle_matches_reference() {
+        forall("bundle-differential", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size);
+            // Odd and even member counts exercise the tie→+1 rule.
+            let k = 1 + rng.gen_range(size.max(1) + 4);
+            let pairs: Vec<(Hypervector, PackedHypervector)> =
+                (0..k).map(|_| matched_pair(rng, d)).collect();
+            let i8_refs: Vec<&Hypervector> = pairs.iter().map(|(h, _)| h).collect();
+            let packed_refs: Vec<&PackedHypervector> = pairs.iter().map(|(_, p)| p).collect();
+            let want = bundle(&i8_refs).pack();
+            let got = packed_bundle(&packed_refs);
+            crate::prop_assert!(got == want, "bundle of {k} differs at d={d}");
+            crate::prop_assert!(tail_clean(&got), "bundle leaked tail bits at d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_real_matches_reference_sign_convention() {
+        forall("from-real-differential", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size);
+            // Sprinkle exact zeros: sign(0) must go to +1 (bit clear).
+            let y: Vec<f64> = (0..d)
+                .map(|_| if rng.bernoulli(0.15) { 0.0 } else { rng.normal() })
+                .collect();
+            let packed = PackedHypervector::from_real(&y);
+            crate::prop_assert!(
+                packed == Hypervector::from_real(&y).pack(),
+                "from_real differs at d={d}"
+            );
+            let y32: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            crate::prop_assert!(
+                PackedHypervector::from_real_f32(&y32) == Hypervector::from_real_f32(&y32).pack(),
+                "from_real_f32 differs at d={d}"
+            );
+            crate::prop_assert!(tail_clean(&packed), "from_real leaked tail bits at d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accumulator_matches_i8_prototype_training() {
+        forall("accumulator-differential", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size.min(8));
+            let classes = 1 + rng.gen_range(4);
+            let n = 1 + rng.gen_range(size.max(1) + 6);
+            let mut i8_acc = PrototypeAccumulator::new(classes, d);
+            let mut packed_acc = PackedAccumulator::new(classes, d);
+            for _ in 0..n {
+                let class = rng.gen_range(classes);
+                let (h, p) = matched_pair(rng, d);
+                i8_acc.add(class, &h);
+                packed_acc.add(class, &p);
+            }
+            let want: ClassPrototypes = i8_acc.finalize();
+            let got: PackedPrototypes = packed_acc.finalize();
+            crate::prop_assert!(
+                got == PackedPrototypes::from_reference(&want),
+                "packed prototypes differ at d={d}, classes={classes}, n={n}"
+            );
+            crate::prop_assert!(
+                got.to_reference().prototypes == want.prototypes,
+                "unpacked prototypes differ at d={d}"
+            );
+            crate::prop_assert!(got.counts == want.counts, "counts differ");
+            // Classification agrees on fresh queries (same scores, same
+            // first-max tie-break).
+            let (q, pq) = matched_pair(rng, d);
+            crate::prop_assert!(
+                got.scores(&pq) == want.scores(&q),
+                "scores differ at d={d}"
+            );
+            crate::prop_assert!(
+                got.classify(&pq) == want.classify(&q),
+                "classify differs at d={d}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_words_validates_payload() {
+        // Wrong word count.
+        assert!(PackedHypervector::from_words(65, vec![0u64]).is_err());
+        // Tail bit set beyond the logical dimension.
+        assert!(PackedHypervector::from_words(65, vec![0, 0b10]).is_err());
+        // Valid payloads roundtrip.
+        let p = PackedHypervector::from_words(65, vec![u64::MAX, 1]).unwrap();
+        assert_eq!(p.dim(), 65);
+        assert_eq!(p.get(64), -1);
+        assert_eq!(p.count_negatives(), 65);
+        // dim 0 and exact-multiple dims.
+        assert!(PackedHypervector::from_words(0, vec![]).is_ok());
+        assert!(PackedHypervector::from_words(128, vec![u64::MAX; 2]).is_ok());
+    }
+
+    #[test]
+    fn fixed_boundary_dims_differential_spot_checks() {
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        for &d in &[1usize, 2, 63, 64, 65, 127, 128, 129, 191, 192, 1000, 10_000] {
+            let (a, pa) = matched_pair(&mut rng, d);
+            let (b, pb) = matched_pair(&mut rng, d);
+            assert_eq!(pa.bind(&pb), a.bind(&b).pack(), "bind d={d}");
+            assert_eq!(pa.hamming(&pb), a.hamming(&b), "hamming d={d}");
+            assert_eq!(pa.dot(&pb), a.dot(&b), "dot d={d}");
+            for shift in [0usize, 1, 63, 64, 65, d / 2, d - 1, d, d + 1, 3 * d] {
+                assert_eq!(pa.permute(shift), a.permute(shift).pack(), "permute({shift}) d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_packed_is_balanced_and_masked() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let p = PackedHypervector::random(10_001, &mut rng);
+        assert!(tail_clean(&p));
+        let neg = p.count_negatives() as f64 / 10_001.0;
+        assert!((neg - 0.5).abs() < 0.05, "negative fraction {neg}");
+        // Packed random HVs stay quasi-orthogonal, like the i8 ones.
+        let q = PackedHypervector::random(10_001, &mut rng);
+        assert!(p.cosine(&q).abs() < 0.05);
+        assert!((p.cosine(&p) - 1.0).abs() < 1e-12);
+    }
+}

@@ -6,8 +6,13 @@
 //! * MPHE: O(1) minimal-perfect-hash codebook lookups with verification;
 //! * HUE: histogram accumulation;
 //! * KSE: scheduled SpMV against the CSR landmark histograms;
-//! * NEE: f32 streaming projection with fused bipolarization;
-//! * SCE: prototype matching + argmax.
+//! * NEE: f32 streaming projection with fused bipolarize-and-pack — the
+//!   query HV is produced directly as sign bits
+//!   ([`crate::hdc::PackedHypervector`]), no i8 (or f64 y) ever hits the
+//!   hot path;
+//! * SCE: popcount prototype matching against the packed prototypes +
+//!   argmax (bit-identical to the i8 reference, which
+//!   [`crate::infer::reference`] keeps serving as the oracle).
 //!
 //! All scratch buffers live in [`NysxEngine`], so the per-request hot path
 //! is allocation-free. Every inference also produces an [`InferTrace`] —
@@ -16,7 +21,7 @@
 //! [`crate::sim`].
 
 use crate::graph::Graph;
-use crate::hdc::Hypervector;
+use crate::hdc::PackedHypervector;
 use crate::model::NysHdcModel;
 use crate::mph::code_key;
 use crate::sparse::{SchedulePolicy, ScheduleTable};
@@ -62,7 +67,9 @@ pub struct InferTrace {
 #[derive(Debug, Clone)]
 pub struct InferenceResult {
     pub predicted: usize,
-    pub hv: Hypervector,
+    /// The query HV as the SCE saw it: bit-packed sign bits. Call
+    /// `.unpack()` for the i8 view (lossless).
+    pub hv: PackedHypervector,
     pub trace: InferTrace,
 }
 
@@ -73,7 +80,7 @@ pub struct NysxEngine<'m> {
     kse_nolb: Vec<ScheduleTable>,
     // --- scratch (hot path is allocation-free) ---
     c_sim: Vec<f64>,
-    y: Vec<f64>,
+    hv: PackedHypervector,
     proj: Vec<f64>,
     proj_scratch: Vec<f64>,
     codes: Vec<i64>,
@@ -97,7 +104,7 @@ impl<'m> NysxEngine<'m> {
             model,
             kse_nolb,
             c_sim: vec![0.0; model.s()],
-            y: vec![0.0; model.d()],
+            hv: PackedHypervector::zeros(model.d()),
             proj: Vec::new(),
             proj_scratch: Vec::new(),
             codes: Vec::new(),
@@ -202,11 +209,16 @@ impl<'m> NysxEngine<'m> {
         (&self.c_sim, trace)
     }
 
-    /// NEE + SCE from a kernel vector: project, bipolarize, classify.
-    pub fn classify_kernel_vector(&mut self, c_sim: &[f64]) -> (usize, Hypervector) {
-        self.model.projection.project_into(c_sim, &mut self.y);
-        let hv = Hypervector::from_real(&self.y);
-        (self.model.prototypes.classify(&hv), hv)
+    /// NEE + SCE from a kernel vector: fused project-bipolarize-pack into
+    /// the reusable packed scratch HV, then popcount-classify against the
+    /// packed prototypes. Zero i8 materialization; bit-identical to the
+    /// i8 reference path.
+    pub fn classify_kernel_vector(&mut self, c_sim: &[f64]) -> (usize, PackedHypervector) {
+        self.model.projection.project_pack_into(c_sim, &mut self.hv);
+        (
+            self.model.packed_prototypes.classify(&self.hv),
+            self.hv.clone(),
+        )
     }
 
     /// Full Algorithm 1.
@@ -250,7 +262,9 @@ mod tests {
         let (ds, _, _) = spec.generate_scaled(31, 0.3);
         let cfg = ModelConfig {
             hops: 3,
-            hv_dim: 1024,
+            // Off a 64 boundary so the packed tail word is exercised on
+            // every inference.
+            hv_dim: 1000,
             num_landmarks: 14,
             ..ModelConfig::default()
         };
@@ -259,8 +273,9 @@ mod tests {
     }
 
     /// THE core equivalence property: the optimized pipeline (vector
-    /// chain + MPH + scheduled SpMV + f32 streaming projection) produces
-    /// bit-identical HVs and predictions to the verbatim Algorithm 1.
+    /// chain + MPH + scheduled SpMV + fused f32 project-bipolarize-pack +
+    /// popcount SCE) produces bit-identical HVs and predictions to the
+    /// verbatim i8 Algorithm 1.
     #[test]
     fn optimized_equals_reference() {
         let (ds, model) = trained();
@@ -268,7 +283,8 @@ mod tests {
         for (g, _) in ds.test.iter() {
             let opt = engine.infer(g);
             let (want_pred, want_hv) = infer_reference(&model, g);
-            assert_eq!(opt.hv, want_hv, "HV mismatch");
+            assert_eq!(opt.hv, want_hv.pack(), "packed HV mismatch");
+            assert_eq!(opt.hv.unpack(), want_hv, "unpacked HV mismatch");
             assert_eq!(opt.predicted, want_pred, "prediction mismatch");
         }
     }

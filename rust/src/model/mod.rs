@@ -5,7 +5,7 @@
 pub mod io;
 pub mod train;
 
-use crate::hdc::ClassPrototypes;
+use crate::hdc::{ClassPrototypes, PackedPrototypes};
 use crate::kernel::{Codebook, LshParams};
 use crate::mph::MphLookup;
 use crate::nystrom::{LandmarkStrategy, NystromProjection};
@@ -67,8 +67,14 @@ pub struct NysHdcModel {
     pub kse_schedules: Vec<ScheduleTable>,
     /// Nyström projection P_nys ∈ R^{d×s} (f32 streaming layout).
     pub projection: NystromProjection,
-    /// Class prototypes G ∈ {-1,+1}^{C×d}.
+    /// Class prototypes G ∈ {-1,+1}^{C×d} (i8 reference representation —
+    /// the oracle for the packed hot path).
     pub prototypes: ClassPrototypes,
+    /// The same prototypes at one sign bit per element — the operand the
+    /// SCE hot path actually matches against. Invariant:
+    /// `packed_prototypes == PackedPrototypes::from_reference(&prototypes)`,
+    /// maintained by training and (de)serialization.
+    pub packed_prototypes: PackedPrototypes,
     /// Indices of the selected landmark graphs in the training set.
     pub landmark_indices: Vec<usize>,
 }

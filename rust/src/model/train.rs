@@ -10,7 +10,7 @@
 
 use super::{ModelConfig, NysHdcModel};
 use crate::graph::{Graph, GraphDataset};
-use crate::hdc::{Hypervector, PrototypeAccumulator};
+use crate::hdc::{Hypervector, PackedAccumulator, PackedHypervector, PrototypeAccumulator};
 use crate::kernel::{node_codes, Codebook, GraphSignature, LshParams};
 use crate::linalg::Mat;
 use crate::mph::{code_key, MphLookup};
@@ -111,19 +111,25 @@ pub fn train(dataset: &GraphDataset, config: &ModelConfig) -> NysHdcModel {
         kse_schedules,
         projection,
         prototypes: PrototypeAccumulator::new(dataset.num_classes, config.hv_dim).finalize(),
+        packed_prototypes: PackedAccumulator::new(dataset.num_classes, config.hv_dim).finalize(),
         landmark_indices,
     };
 
-    // (6) Single-pass prototype training: encode every training graph.
-    let mut acc = PrototypeAccumulator::new(dataset.num_classes, config.hv_dim);
+    // (6) Single-pass prototype training through the fused
+    // project-bipolarize-pack path: no i8 (or even f64 y) HV is ever
+    // materialized, and the per-bit minus-counters reproduce the i64-sum
+    // accumulator bit-for-bit (see `hdc::packed::PackedAccumulator`).
+    let mut acc = PackedAccumulator::new(dataset.num_classes, config.hv_dim);
     let mut c_buf = vec![0.0f64; s];
-    let mut y_buf = vec![0.0f64; config.hv_dim];
+    let mut hv_buf = PackedHypervector::zeros(config.hv_dim);
     for (g, y) in &dataset.train {
         encode_kernel_vector(&model, g, &mut c_buf);
-        model.projection.project_into(&c_buf, &mut y_buf);
-        acc.add(*y, &Hypervector::from_real(&y_buf));
+        model.projection.project_pack_into(&c_buf, &mut hv_buf);
+        acc.add(*y, &hv_buf);
     }
-    model.prototypes = acc.finalize();
+    let packed = acc.finalize();
+    model.prototypes = packed.to_reference();
+    model.packed_prototypes = packed;
     model
 }
 
@@ -234,6 +240,21 @@ mod tests {
                 c[j]
             );
         }
+    }
+
+    #[test]
+    fn packed_prototypes_consistent_with_reference() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(6, 0.2);
+        // hv_dim off a word boundary to exercise the tail-masked path.
+        let mut cfg = small_config(8);
+        cfg.hv_dim = 1000;
+        let model = train(&ds, &cfg);
+        assert_eq!(
+            model.packed_prototypes,
+            crate::hdc::PackedPrototypes::from_reference(&model.prototypes)
+        );
+        assert_eq!(model.packed_prototypes.to_reference(), model.prototypes);
     }
 
     #[test]

@@ -64,6 +64,50 @@ impl NystromProjection {
         y
     }
 
+    /// Run `f` with the C vector converted to f32. One conversion of the
+    /// small C vector per call (s ≤ a few hundred) beats d×s per-element
+    /// converts of the matrix stream; the stack buffer keeps the common
+    /// case allocation-free.
+    #[inline]
+    fn with_c32<R>(&self, c: &[f64], f: impl FnOnce(&[f32]) -> R) -> R {
+        debug_assert_eq!(c.len(), self.s);
+        if self.s <= 1024 {
+            let mut stack = [0.0f32; 1024];
+            for (dst, &src) in stack[..self.s].iter_mut().zip(c.iter()) {
+                *dst = src as f32;
+            }
+            f(&stack[..self.s])
+        } else {
+            // Rare oversized case (s > 1024): one allocation per call.
+            let heap: Vec<f32> = c.iter().map(|&x| x as f32).collect();
+            f(&heap)
+        }
+    }
+
+    /// One output coordinate: `y[r] = P_nys[r, :] · c32` in four
+    /// independent f32 lanes (auto-vectorizes) — the single accumulation
+    /// kernel shared by every projection entry point, so the f64 path,
+    /// the fused packed path and (transitively) reference/optimized
+    /// inference all see bit-identical sums.
+    #[inline]
+    fn row_dot(&self, r: usize, c32: &[f32]) -> f32 {
+        let row = self.row(r);
+        let mut acc = [0.0f32; 4];
+        let chunks = self.s / 4;
+        for k in 0..chunks {
+            let base = k * 4;
+            acc[0] += row[base] * c32[base];
+            acc[1] += row[base + 1] * c32[base + 1];
+            acc[2] += row[base + 2] * c32[base + 2];
+            acc[3] += row[base + 3] * c32[base + 3];
+        }
+        let mut tail = 0.0f32;
+        for k in chunks * 4..self.s {
+            tail += row[k] * c32[k];
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    }
+
     /// Allocation-free projection for the hot path.
     ///
     /// Perf (§Perf L3): C is converted to f32 once per call and the dot
@@ -74,40 +118,37 @@ impl NystromProjection {
     /// reference/optimized equality is preserved.
     #[inline]
     pub fn project_into(&self, c: &[f64], y: &mut [f64]) {
-        debug_assert_eq!(c.len(), self.s);
         debug_assert_eq!(y.len(), self.d);
-        // One conversion of the small C vector per call (s ≤ a few
-        // hundred) beats d×s per-element converts of the matrix stream.
-        let mut stack = [0.0f32; 1024];
-        let mut heap: Vec<f32>;
-        let c32: &mut [f32] = if self.s <= 1024 {
-            &mut stack[..self.s]
-        } else {
-            // Rare oversized case (s > 1024): one allocation per call.
-            heap = vec![0.0f32; self.s];
-            &mut heap
-        };
-        for (dst, &src) in c32.iter_mut().zip(c.iter()) {
-            *dst = src as f32;
-        }
-        for (r, yr) in y.iter_mut().enumerate() {
-            let row = self.row(r);
-            // Four independent accumulator lanes -> SIMD-friendly.
-            let mut acc = [0.0f32; 4];
-            let chunks = self.s / 4;
-            for k in 0..chunks {
-                let base = k * 4;
-                acc[0] += row[base] * c32[base];
-                acc[1] += row[base + 1] * c32[base + 1];
-                acc[2] += row[base + 2] * c32[base + 2];
-                acc[3] += row[base + 3] * c32[base + 3];
+        self.with_c32(c, |c32| {
+            for (r, yr) in y.iter_mut().enumerate() {
+                *yr = self.row_dot(r, c32) as f64;
             }
-            let mut tail = 0.0f32;
-            for k in chunks * 4..self.s {
-                tail += row[k] * c32[k];
+        });
+    }
+
+    /// Fused project-bipolarize-pack: `out = pack(sign(P_nys c))` with no
+    /// f64 `y` or i8 HV ever materialized — the NEE→SCE hot path. The
+    /// per-row sum is the same f32 [`Self::row_dot`] used by
+    /// [`Self::project_into`], and `x < 0.0` over f32 agrees exactly with
+    /// the sign of the widened f64 (widening is value-preserving), so the
+    /// resulting bits equal `Hypervector::from_real(&self.project(c)).pack()`
+    /// bit-for-bit.
+    pub fn project_pack_into(&self, c: &[f64], out: &mut crate::hdc::PackedHypervector) {
+        assert_eq!(out.dim(), self.d);
+        self.with_c32(c, |c32| {
+            let words = out.words_mut();
+            for (wi, w) in words.iter_mut().enumerate() {
+                let base = wi * 64;
+                let top = (base + 64).min(self.d);
+                let mut bits = 0u64;
+                for r in base..top {
+                    if self.row_dot(r, c32) < 0.0 {
+                        bits |= 1 << (r - base);
+                    }
+                }
+                *w = bits;
             }
-            *yr = ((acc[0] + acc[1]) + (acc[2] + acc[3]) + tail) as f64;
-        }
+        });
     }
 
     /// Bytes at the streaming precision (Table 2's dominant `ds·b_P`).
@@ -220,6 +261,21 @@ mod tests {
             close > far + 0.1,
             "kernel geometry lost: close={close} far={far}"
         );
+    }
+
+    #[test]
+    fn project_pack_matches_project_sign() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let hz = random_psd(6, 6, &mut rng);
+        // d=100 exercises the non-multiple-of-64 tail word.
+        let p = NystromProjection::build(&hz, 100, &mut rng);
+        let mut packed = crate::hdc::PackedHypervector::zeros(100);
+        for _ in 0..10 {
+            let c: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            p.project_pack_into(&c, &mut packed);
+            let want = crate::hdc::Hypervector::from_real(&p.project(&c)).pack();
+            assert_eq!(packed, want);
+        }
     }
 
     #[test]

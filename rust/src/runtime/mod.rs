@@ -3,14 +3,26 @@
 //! the `xla` crate (PJRT CPU client). Python never runs at inference
 //! time — the interchange is HLO text (see /opt/xla-example/README.md for
 //! why text, not serialized protos).
+//!
+//! The manifest layer below is dependency-free and always compiled; the
+//! executing layer ([`PjrtRuntime`], [`XlaNee`], [`XlaEncoder`]) needs
+//! the external `xla` + `anyhow` crates and is gated behind the
+//! `xla-runtime` cargo feature (off by default — the crates are not in
+//! the vendored set).
 
+use std::io;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use crate::graph::Graph;
-use crate::model::NysHdcModel;
 use crate::util::json::Json;
+
+#[cfg(feature = "xla-runtime")]
+mod pjrt;
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::{PjrtRuntime, XlaEncoder, XlaNee};
+
+fn invalid_data(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
 
 /// A parsed `artifacts/manifest.json` entry.
 #[derive(Debug, Clone)]
@@ -29,15 +41,14 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn load(dir: &Path) -> Result<Self> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading manifest in {}", dir.display()))?;
-        let doc = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    pub fn load(dir: &Path) -> io::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let doc = Json::parse(&text).map_err(|e| invalid_data(format!("manifest parse: {e}")))?;
         let mut entries = Vec::new();
         for item in doc
             .get("artifacts")
             .and_then(|a| a.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?
+            .ok_or_else(|| invalid_data("manifest missing artifacts array".into()))?
         {
             let mut dims = std::collections::BTreeMap::new();
             if let Json::Obj(map) = item {
@@ -51,7 +62,7 @@ impl Manifest {
                 name: item
                     .get("name")
                     .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .ok_or_else(|| invalid_data("artifact missing name".into()))?
                     .to_string(),
                 kind: item
                     .get("kind")
@@ -61,7 +72,7 @@ impl Manifest {
                 path: dir.join(
                     item.get("path")
                         .and_then(|v| v.as_str())
-                        .ok_or_else(|| anyhow!("artifact missing path"))?,
+                        .ok_or_else(|| invalid_data("artifact missing path".into()))?,
                 ),
                 dims,
             });
@@ -105,257 +116,5 @@ impl Manifest {
                 && e.dims.get("d") == Some(&d)
                 && e.dims.get("classes").is_some_and(|&v| v >= classes)
         })
-    }
-}
-
-/// The PJRT CPU runtime.
-pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        Ok(Self {
-            client: xla::PjRtClient::cpu()?,
-        })
-    }
-
-    /// Load + compile an HLO-text artifact.
-    pub fn compile_artifact(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
-    }
-}
-
-fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
-
-/// The XLA-backed NEE: executes `sign(P_nys C)` through the AOT artifact,
-/// with `P_nys` zero-padded to the artifact's `s` and kept as a
-/// pre-staged literal (the DDR-resident matrix of the paper).
-pub struct XlaNee {
-    exe: xla::PjRtLoadedExecutable,
-    p_literal: xla::Literal,
-    pub d: usize,
-    pub s_model: usize,
-    pub s_artifact: usize,
-}
-
-impl XlaNee {
-    pub fn new(rt: &PjrtRuntime, manifest: &Manifest, model: &NysHdcModel) -> Result<Self> {
-        let d = model.d();
-        let s = model.s();
-        let entry = manifest
-            .find_nee(d, s)
-            .ok_or_else(|| anyhow!("no NEE artifact for d={d}, s>={s}"))?;
-        let s_art = entry.dims["s"];
-        let exe = rt.compile_artifact(&entry.path)?;
-        // Zero-pad P_nys columns [s, s_art).
-        let mut padded = vec![0.0f32; d * s_art];
-        for r in 0..d {
-            padded[r * s_art..r * s_art + s].copy_from_slice(model.projection.row(r));
-        }
-        let p_literal = literal_f32(&padded, &[d as i64, s_art as i64])?;
-        Ok(Self {
-            exe,
-            p_literal,
-            d,
-            s_model: s,
-            s_artifact: s_art,
-        })
-    }
-
-    /// h = sign(P_nys C) — returns the bipolar HV as f32 ±1.
-    pub fn project_sign(&self, c: &[f64]) -> Result<Vec<f32>> {
-        if c.len() != self.s_model {
-            bail!("C length {} != model s {}", c.len(), self.s_model);
-        }
-        let mut c_pad = vec![0.0f32; self.s_artifact];
-        for (dst, &src) in c_pad.iter_mut().zip(c.iter()) {
-            *dst = src as f32;
-        }
-        let c_lit = xla::Literal::vec1(&c_pad);
-        let result = self.exe.execute::<&xla::Literal>(&[&self.p_literal, &c_lit])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-/// The XLA-backed full encoder: executes the whole Algorithm-1 graph
-/// (L2 export) for cross-layer equivalence testing and small-graph
-/// serving. Model parameters are packed once; per query only the padded
-/// (A, F, mask) change.
-pub struct XlaEncoder {
-    exe: xla::PjRtLoadedExecutable,
-    params: Vec<xla::Literal>,
-    pub n_max: usize,
-    pub f: usize,
-    pub hops: usize,
-    pub bmax: usize,
-    pub s_art: usize,
-    pub d: usize,
-    pub classes_art: usize,
-    pub num_classes: usize,
-}
-
-impl XlaEncoder {
-    pub fn new(rt: &PjrtRuntime, manifest: &Manifest, model: &NysHdcModel) -> Result<Self> {
-        let hops = model.hops();
-        let f = model.feature_dim;
-        let bmax_needed = model.codebooks.iter().map(|c| c.len()).max().unwrap_or(0);
-        let entry = manifest
-            .find_encode(
-                1,
-                f,
-                hops,
-                bmax_needed,
-                model.s(),
-                model.d(),
-                model.num_classes,
-            )
-            .ok_or_else(|| {
-                anyhow!(
-                    "no encode artifact for f={f} hops={hops} bmax>={bmax_needed} s>={} d={} c>={}",
-                    model.s(),
-                    model.d(),
-                    model.num_classes
-                )
-            })?;
-        let (n_max, bmax, s_art, d, classes_art) = (
-            entry.dims["n"],
-            entry.dims["bmax"],
-            entry.dims["s"],
-            entry.dims["d"],
-            entry.dims["classes"],
-        );
-        let exe = rt.compile_artifact(&entry.path)?;
-
-        // --- pack model parameters (padded) ---
-        let mut params = Vec::new();
-        // u: (hops, f)
-        let u_flat: Vec<f32> = model
-            .lsh
-            .u
-            .iter()
-            .flat_map(|u| u.iter().map(|&x| x as f32))
-            .collect();
-        params.push(literal_f32(&u_flat, &[hops as i64, f as i64])?);
-        // b: (hops,)
-        let b_flat: Vec<f32> = model.lsh.b.iter().map(|&x| x as f32).collect();
-        params.push(xla::Literal::vec1(&b_flat));
-        // w: ()
-        params.push(xla::Literal::scalar(model.lsh.w as f32));
-        // codebooks: (hops, bmax) i32, sentinel-padded.
-        let mut cb = vec![i32::MAX; hops * bmax];
-        for (t, book) in model.codebooks.iter().enumerate() {
-            for (i, &code) in book.codes.iter().enumerate() {
-                cb[t * bmax + i] = i32::try_from(code)
-                    .map_err(|_| anyhow!("LSH code {code} exceeds i32 (hop {t})"))?;
-            }
-        }
-        params.push(xla::Literal::vec1(&cb).reshape(&[hops as i64, bmax as i64])?);
-        // hists: (hops, s_art, bmax)
-        let mut hists = vec![0.0f32; hops * s_art * bmax];
-        for (t, h) in model.landmark_hists.iter().enumerate() {
-            for r in 0..h.rows {
-                for k in h.row_ptr[r]..h.row_ptr[r + 1] {
-                    let cidx = h.col_idx[k] as usize;
-                    hists[t * s_art * bmax + r * bmax + cidx] = h.val[k] as f32;
-                }
-            }
-        }
-        params.push(literal_f32(
-            &hists,
-            &[hops as i64, s_art as i64, bmax as i64],
-        )?);
-        // p_nys: (d, s_art)
-        let mut p = vec![0.0f32; d * s_art];
-        for r in 0..d {
-            p[r * s_art..r * s_art + model.s()].copy_from_slice(model.projection.row(r));
-        }
-        params.push(literal_f32(&p, &[d as i64, s_art as i64])?);
-        // protos: (classes_art, d) — padded classes get all -1 rows with
-        // score strictly below any real class only if real scores are
-        // higher; we guard by taking argmax over real classes on the rust
-        // side anyway.
-        let mut g = vec![0.0f32; classes_art * d];
-        for (ci, proto) in model.prototypes.prototypes.iter().enumerate() {
-            for (j, &v) in proto.data.iter().enumerate() {
-                g[ci * d + j] = v as f32;
-            }
-        }
-        params.push(literal_f32(&g, &[classes_art as i64, d as i64])?);
-
-        Ok(Self {
-            exe,
-            params,
-            n_max,
-            f,
-            hops,
-            bmax,
-            s_art,
-            d,
-            classes_art,
-            num_classes: model.num_classes,
-        })
-    }
-
-    /// Can this artifact hold the graph?
-    pub fn fits(&self, graph: &Graph) -> bool {
-        graph.num_nodes() <= self.n_max && graph.feature_dim() == self.f
-    }
-
-    /// Run Algorithm 1 through XLA: returns (predicted, scores, hv±1).
-    pub fn encode_classify(&self, graph: &Graph) -> Result<(usize, Vec<f32>, Vec<f32>)> {
-        if !self.fits(graph) {
-            bail!(
-                "graph ({} nodes, f={}) exceeds artifact (n_max={}, f={})",
-                graph.num_nodes(),
-                graph.feature_dim(),
-                self.n_max,
-                self.f
-            );
-        }
-        let n = self.n_max;
-        let real = graph.num_nodes();
-        // A padded dense.
-        let mut adj = vec![0.0f32; n * n];
-        for r in 0..real {
-            for k in graph.adj.row_ptr[r]..graph.adj.row_ptr[r + 1] {
-                adj[r * n + graph.adj.col_idx[k] as usize] = 1.0;
-            }
-        }
-        let mut feats = vec![0.0f32; n * self.f];
-        for r in 0..real {
-            for (j, &v) in graph.features.row(r).iter().enumerate() {
-                feats[r * self.f + j] = v as f32;
-            }
-        }
-        let mut mask = vec![0.0f32; n];
-        mask[..real].iter_mut().for_each(|m| *m = 1.0);
-
-        let a_lit = literal_f32(&adj, &[n as i64, n as i64])?;
-        let f_lit = literal_f32(&feats, &[n as i64, self.f as i64])?;
-        let m_lit = xla::Literal::vec1(&mask);
-
-        let mut args: Vec<&xla::Literal> = vec![&a_lit, &f_lit, &m_lit];
-        args.extend(self.params.iter());
-        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let (scores_lit, hv_lit) = result.to_tuple2()?;
-        let scores = scores_lit.to_vec::<f32>()?;
-        let hv = hv_lit.to_vec::<f32>()?;
-        // Argmax over REAL classes only.
-        let mut best = 0usize;
-        for c in 0..self.num_classes {
-            if scores[c] > scores[best] {
-                best = c;
-            }
-        }
-        Ok((best, scores, hv))
     }
 }

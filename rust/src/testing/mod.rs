@@ -1,11 +1,16 @@
 //! Mini property-based testing harness (the vendored crate set has no
 //! `proptest`). `forall` runs a seeded-deterministic family of random
-//! cases and, on failure, retries with the *smallest* failing case seen
-//! among a shrink budget of re-samples — a pragmatic subset of proptest's
-//! generate-and-shrink loop that keeps failures reproducible (fixed base
-//! seed) and reported with their seed.
+//! cases and, on failure, shrinks in two stages — same-seed size
+//! reduction, then a budget of *fresh* seeds re-sampled at or below the
+//! shrunken size — and reports the overall smallest reproduction with its
+//! seed, a pragmatic subset of proptest's generate-and-shrink loop that
+//! keeps failures reproducible (fixed base seed).
+//!
+//! CI can crank the case count without code edits via the
+//! `NYSX_PROP_CASES` environment variable (overrides every property's
+//! `PropConfig::cases` when set to a positive integer).
 
-use crate::util::rng::Xoshiro256;
+use crate::util::rng::{SplitMix64, Xoshiro256};
 
 /// Configuration for a property run.
 #[derive(Debug, Clone, Copy)]
@@ -23,32 +28,87 @@ impl Default for PropConfig {
     }
 }
 
+/// Fresh seeds re-sampled per failure while hunting for a smaller
+/// reproduction (stage 2 of the shrink loop).
+const SHRINK_SEED_BUDGET: usize = 8;
+
 /// Outcome of a single case.
 pub type CaseResult = Result<(), String>;
 
-/// Run `property(case_rng, size)` for `cfg.cases` cases of growing size.
-/// Panics with the failing seed + message so the case can be replayed.
+/// Resolve the effective case count: `NYSX_PROP_CASES` (when it parses
+/// to a positive integer) beats the per-property config.
+fn resolve_cases(cfg: &PropConfig, env_override: Option<&str>) -> usize {
+    env_override
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(cfg.cases)
+}
+
+/// The smallest reproduction found so far.
+struct Repro {
+    seed: u64,
+    size: usize,
+    msg: String,
+}
+
+/// Run `property(case_rng, size)` for the configured number of cases of
+/// growing size. Panics with the smallest failing (seed, size) found so
+/// the case can be replayed with `Xoshiro256::seed_from_u64(seed)`.
 pub fn forall<F>(name: &str, cfg: PropConfig, mut property: F)
 where
     F: FnMut(&mut Xoshiro256, usize) -> CaseResult,
 {
-    for case in 0..cfg.cases {
+    let cases = resolve_cases(&cfg, std::env::var("NYSX_PROP_CASES").ok().as_deref());
+    for case in 0..cases {
         let seed = cfg.base_seed.wrapping_add(case as u64 * 0x9E3779B9);
         let mut rng = Xoshiro256::seed_from_u64(seed);
         // Sizes ramp up so early failures are small.
         let size = 1 + case * 4;
         if let Err(msg) = property(&mut rng, size) {
-            // Shrink-lite: re-run smaller sizes with the same seed to
-            // report the smallest reproduction.
+            let mut best = Repro { seed, size, msg };
+
+            // Stage 1: same-seed shrink — smallest failing size for the
+            // original seed (sizes scan up, so the first hit is minimal).
             for small in 1..size {
                 let mut srng = Xoshiro256::seed_from_u64(seed);
-                if property(&mut srng, small).is_err() {
-                    panic!(
-                        "property '{name}' failed (seed={seed:#x}, size={small}, shrunk from {size}): {msg}"
-                    );
+                if let Err(m) = property(&mut srng, small) {
+                    best = Repro {
+                        seed,
+                        size: small,
+                        msg: m,
+                    };
+                    break;
                 }
             }
-            panic!("property '{name}' failed (seed={seed:#x}, size={size}): {msg}");
+
+            // Stage 2: re-sample a budget of fresh seeds, keeping only a
+            // *strictly smaller* reproduction than the best so far.
+            let mut seeder = SplitMix64::new(seed ^ 0xC0FF_EE00_D15E_A5E5);
+            for _ in 0..SHRINK_SEED_BUDGET {
+                let fresh = seeder.next_u64();
+                for small in 1..best.size {
+                    let mut frng = Xoshiro256::seed_from_u64(fresh);
+                    if let Err(m) = property(&mut frng, small) {
+                        best = Repro {
+                            seed: fresh,
+                            size: small,
+                            msg: m,
+                        };
+                        break;
+                    }
+                }
+            }
+
+            if best.seed == seed && best.size == size {
+                panic!(
+                    "property '{name}' failed (seed={seed:#x}, size={size}): {}",
+                    best.msg
+                );
+            }
+            panic!(
+                "property '{name}' failed (seed={:#x}, size={}, shrunk from seed={seed:#x}, size={size}): {}",
+                best.seed, best.size, best.msg
+            );
         }
     }
 }
@@ -89,5 +149,78 @@ mod tests {
             },
             |_, _| Err("nope".to_string()),
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "size=4")]
+    fn shrinks_to_smallest_failing_size() {
+        // Fails for size >= 4. First failing scheduled case is size 5
+        // (sizes ramp 1, 5, 9, ...); the shrink loop must land on 4.
+        forall(
+            "size-threshold",
+            PropConfig {
+                cases: 4,
+                ..Default::default()
+            },
+            |_, size| {
+                if size >= 4 {
+                    Err(format!("too big: {size}"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn fresh_seed_resampling_finds_smaller_repro() {
+        // Fails iff any of the `size` draws is divisible by 5. With the
+        // default base seed the first scheduled failure is case 1
+        // (size 5), whose own stream first hits a multiple of 5 at draw 3
+        // — so same-seed shrinking bottoms out at size 3, and only the
+        // fresh-seed stage can (and deterministically does) reach a
+        // size-1 reproduction. (Outcome precomputed from the PRNG
+        // definition; it changes only if the rng, base seed or shrink
+        // constants change.)
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                "divisible-draw",
+                PropConfig {
+                    cases: 16,
+                    ..Default::default()
+                },
+                |rng, size| {
+                    for _ in 0..size {
+                        if rng.next_u64() % 5 == 0 {
+                            return Err("divisible draw".to_string());
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains("size=1, shrunk from"),
+            "expected a fresh-seed size-1 repro, got: {msg}"
+        );
+    }
+
+    #[test]
+    fn env_override_beats_config() {
+        let cfg = PropConfig {
+            cases: 32,
+            ..Default::default()
+        };
+        assert_eq!(resolve_cases(&cfg, None), 32);
+        assert_eq!(resolve_cases(&cfg, Some("128")), 128);
+        assert_eq!(resolve_cases(&cfg, Some(" 7 ")), 7);
+        // Garbage and zero fall back to the config.
+        assert_eq!(resolve_cases(&cfg, Some("lots")), 32);
+        assert_eq!(resolve_cases(&cfg, Some("0")), 32);
     }
 }

@@ -1,12 +1,15 @@
-//! Cross-layer integration tests: rust (L3) executing the jax-exported
-//! HLO artifacts (L2, containing the L1 Pallas kernel) through PJRT, and
-//! checking numerics against the pure-rust functional model.
+//! Cross-layer integration tests: the packed-engine serving path against
+//! the i8 reference oracle, model-file round-trips through disk, the
+//! full train→serve story, and — when built with the `xla-runtime`
+//! feature AND `make artifacts` has run — rust (L3) executing the
+//! jax-exported HLO artifacts (L2, containing the L1 Pallas kernel)
+//! through PJRT.
 //!
-//! These tests need `make artifacts` to have run (they are skipped with a
-//! message when the manifest is missing, so `cargo test` works before the
-//! first artifact build).
+//! The XLA tests are skipped with a message when the manifest is missing,
+//! so `cargo test` works before the first artifact build; without the
+//! `xla-runtime` feature they are not compiled at all (the `xla` crate is
+//! not in the vendored set).
 
-use std::path::Path;
 use std::sync::Arc;
 
 use nysx::graph::tudataset::spec_by_name;
@@ -14,17 +17,6 @@ use nysx::infer::{infer_reference, NysxEngine};
 use nysx::model::train::train;
 use nysx::model::ModelConfig;
 use nysx::nystrom::LandmarkStrategy;
-use nysx::runtime::{Manifest, PjrtRuntime, XlaEncoder, XlaNee};
-
-fn artifacts_dir() -> Option<&'static Path> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(Box::leak(dir.into_boxed_path()))
-    } else {
-        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
-        None
-    }
-}
 
 /// A model whose shapes fit the default test-scale encode artifact
 /// (n=64, f=16, hops=3, bmax=512, s=48, d=2048, classes=4).
@@ -53,76 +45,37 @@ fn artifact_compatible_model() -> (nysx::graph::GraphDataset, nysx::model::NysHd
     (ds, model)
 }
 
+/// End-to-end differential test for the bit-packed engine: train a small
+/// MUTAG-spec model (d off a word boundary so the tail word is live) and
+/// assert the packed pipeline's predictions AND hypervectors are
+/// bit-identical to the verbatim-Algorithm-1 i8 reference on every
+/// train/test graph.
 #[test]
-fn xla_nee_matches_native_projection() {
-    let Some(dir) = artifacts_dir() else { return };
-    let manifest = Manifest::load(dir).expect("manifest loads");
-    let (_ds, model) = artifact_compatible_model();
-    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
-    let nee = XlaNee::new(&rt, &manifest, &model).expect("NEE artifact");
-
-    // Random kernel vectors through both paths.
-    let mut rng = nysx::util::rng::Xoshiro256::seed_from_u64(5);
-    for _ in 0..5 {
-        let c: Vec<f64> = (0..model.s()).map(|_| rng.uniform(0.0, 50.0)).collect();
-        let xla_hv = nee.project_sign(&c).expect("xla exec");
-        let y = model.projection.project(&c);
-        let native_hv = nysx::hdc::Hypervector::from_real(&y);
-        assert_eq!(xla_hv.len(), model.d());
-        // f32-vs-f64 accumulation can flip signs only at |y| ≈ ulp scale.
-        let mismatches = xla_hv
-            .iter()
-            .zip(&native_hv.data)
-            .filter(|(&x, &n)| (x as i8) != n)
-            .count();
-        assert!(
-            (mismatches as f64) < 0.005 * model.d() as f64,
-            "{mismatches}/{} HV sign mismatches",
-            model.d()
-        );
-    }
-}
-
-#[test]
-fn xla_full_encoder_matches_rust_reference() {
-    let Some(dir) = artifacts_dir() else { return };
-    let manifest = Manifest::load(dir).expect("manifest loads");
-    let (ds, model) = artifact_compatible_model();
-    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
-    let encoder = XlaEncoder::new(&rt, &manifest, &model).expect("encode artifact");
-
+fn packed_engine_matches_i8_reference_end_to_end() {
+    let spec = spec_by_name("MUTAG").unwrap();
+    let (ds, _, _) = spec.generate_scaled(17, 0.25);
+    let cfg = ModelConfig {
+        hops: 3,
+        hv_dim: 1000, // 15 full words + a 40-bit tail word
+        num_landmarks: 12,
+        ..ModelConfig::default()
+    };
+    let model = train(&ds, &cfg);
     let mut engine = NysxEngine::new(&model);
-    let mut agree = 0usize;
-    let mut total = 0usize;
-    for (g, _) in ds.test.iter() {
-        if !encoder.fits(g) {
-            continue;
-        }
-        total += 1;
-        let (xla_pred, xla_scores, xla_hv) = encoder.encode_classify(g).expect("xla exec");
-        let (rust_pred, rust_hv) = infer_reference(&model, g);
-        let opt = engine.infer(g);
-        assert_eq!(opt.predicted, rust_pred, "rust paths disagree");
-        // HVs agree except at fp32 sign-boundary coordinates.
-        let mismatches = xla_hv
-            .iter()
-            .zip(&rust_hv.data)
-            .filter(|(&x, &n)| (x as i8) != n)
-            .count();
-        assert!(
-            (mismatches as f64) < 0.01 * model.d() as f64,
-            "{mismatches} HV mismatches"
+    for (g, _) in ds.train.iter().chain(ds.test.iter()) {
+        let packed = engine.infer(g);
+        let (want_pred, want_hv) = infer_reference(&model, g);
+        assert_eq!(packed.predicted, want_pred, "prediction mismatch");
+        assert_eq!(packed.hv.unpack(), want_hv, "HV mismatch (unpacked)");
+        assert_eq!(packed.hv, want_hv.pack(), "HV mismatch (packed)");
+        // The packed prototypes must agree with the i8 prototypes on the
+        // full score vector, not just the argmax.
+        assert_eq!(
+            model.packed_prototypes.scores(&packed.hv),
+            model.prototypes.scores(&want_hv),
+            "score vector mismatch"
         );
-        assert_eq!(xla_scores.len(), encoder.classes_art);
-        if xla_pred == rust_pred {
-            agree += 1;
-        }
     }
-    assert!(total >= 10, "too few test graphs fit the artifact ({total})");
-    assert!(
-        agree as f64 >= 0.9 * total as f64,
-        "XLA vs rust predictions agree on only {agree}/{total}"
-    );
 }
 
 #[test]
@@ -133,6 +86,7 @@ fn model_file_roundtrip_via_disk() {
     let path = dir.join("model.nysx");
     nysx::model::io::save_file(&model, &path).unwrap();
     let back = nysx::model::io::load_file(&path).unwrap();
+    assert_eq!(back.packed_prototypes, model.packed_prototypes);
     let mut e1 = NysxEngine::new(&model);
     let mut e2 = NysxEngine::new(&back);
     for (g, _) in ds.test.iter().take(8) {
@@ -166,4 +120,95 @@ fn train_serve_end_to_end() {
         .count();
     let served_acc = correct as f64 / ds.test.len() as f64;
     assert!((served_acc - offline_acc).abs() < 1e-9, "serving changed accuracy");
+}
+
+#[cfg(feature = "xla-runtime")]
+mod xla_tests {
+    use super::artifact_compatible_model;
+    use std::path::Path;
+
+    use nysx::infer::{infer_reference, NysxEngine};
+    use nysx::runtime::{Manifest, PjrtRuntime, XlaEncoder, XlaNee};
+
+    fn artifacts_dir() -> Option<&'static Path> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Box::leak(dir.into_boxed_path()))
+        } else {
+            eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+            None
+        }
+    }
+
+    #[test]
+    fn xla_nee_matches_native_projection() {
+        let Some(dir) = artifacts_dir() else { return };
+        let manifest = Manifest::load(dir).expect("manifest loads");
+        let (_ds, model) = artifact_compatible_model();
+        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+        let nee = XlaNee::new(&rt, &manifest, &model).expect("NEE artifact");
+
+        // Random kernel vectors through both paths.
+        let mut rng = nysx::util::rng::Xoshiro256::seed_from_u64(5);
+        for _ in 0..5 {
+            let c: Vec<f64> = (0..model.s()).map(|_| rng.uniform(0.0, 50.0)).collect();
+            let xla_hv = nee.project_sign(&c).expect("xla exec");
+            let y = model.projection.project(&c);
+            let native_hv = nysx::hdc::Hypervector::from_real(&y);
+            assert_eq!(xla_hv.len(), model.d());
+            // f32-vs-f64 accumulation can flip signs only at |y| ≈ ulp scale.
+            let mismatches = xla_hv
+                .iter()
+                .zip(&native_hv.data)
+                .filter(|(&x, &n)| (x as i8) != n)
+                .count();
+            assert!(
+                (mismatches as f64) < 0.005 * model.d() as f64,
+                "{mismatches}/{} HV sign mismatches",
+                model.d()
+            );
+        }
+    }
+
+    #[test]
+    fn xla_full_encoder_matches_rust_reference() {
+        let Some(dir) = artifacts_dir() else { return };
+        let manifest = Manifest::load(dir).expect("manifest loads");
+        let (ds, model) = artifact_compatible_model();
+        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+        let encoder = XlaEncoder::new(&rt, &manifest, &model).expect("encode artifact");
+
+        let mut engine = NysxEngine::new(&model);
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for (g, _) in ds.test.iter() {
+            if !encoder.fits(g) {
+                continue;
+            }
+            total += 1;
+            let (xla_pred, xla_scores, xla_hv) = encoder.encode_classify(g).expect("xla exec");
+            let (rust_pred, rust_hv) = infer_reference(&model, g);
+            let opt = engine.infer(g);
+            assert_eq!(opt.predicted, rust_pred, "rust paths disagree");
+            // HVs agree except at fp32 sign-boundary coordinates.
+            let mismatches = xla_hv
+                .iter()
+                .zip(&rust_hv.data)
+                .filter(|(&x, &n)| (x as i8) != n)
+                .count();
+            assert!(
+                (mismatches as f64) < 0.01 * model.d() as f64,
+                "{mismatches} HV mismatches"
+            );
+            assert_eq!(xla_scores.len(), encoder.classes_art);
+            if xla_pred == rust_pred {
+                agree += 1;
+            }
+        }
+        assert!(total >= 10, "too few test graphs fit the artifact ({total})");
+        assert!(
+            agree as f64 >= 0.9 * total as f64,
+            "XLA vs rust predictions agree on only {agree}/{total}"
+        );
+    }
 }
