@@ -14,7 +14,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use nysx::coordinator::{RoutingPolicy, Server, ServerConfig};
+use nysx::coordinator::{RoutingPolicy, Server, ServerConfig, SubmitError};
 use nysx::graph::tudataset::spec_by_name;
 use nysx::model::train::{evaluate, train};
 use nysx::model::ModelConfig;
@@ -77,9 +77,12 @@ fn main() {
         loop {
             match server.submit(graph) {
                 Ok(_) => break,
-                Err(g) => {
+                Err(SubmitError::Backpressure(g)) => {
                     graph = g;
-                    server.recv(); // backpressure: free a slot
+                    server.recv(); // backpressure: free a slot, then retry
+                }
+                Err(SubmitError::Closed(_)) => {
+                    panic!("server closed mid-replay")
                 }
             }
         }

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use nysx::bench::harness::{bench, black_box, print_results, BenchResult};
 use nysx::graph::tudataset::spec_by_name;
-use nysx::hdc::{bundle, packed_bundle, Hypervector, PackedHypervector};
+use nysx::hdc::{bundle, packed_bundle, Hypervector, PackedBatch, PackedHypervector};
 use nysx::infer::NysxEngine;
 use nysx::kernel::node_codes;
 use nysx::model::train::train;
@@ -27,7 +27,7 @@ use nysx::sparse::{SchedulePolicy, ScheduleTable};
 use nysx::util::rng::Xoshiro256;
 
 fn smoke_mode() -> bool {
-    std::env::var("NYSX_BENCH_SMOKE").map_or(false, |v| !v.is_empty() && v != "0")
+    std::env::var("NYSX_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
 }
 
 /// Mean-time ratio of two named results (old/new > 1 means `new` wins).
@@ -203,6 +203,38 @@ fn main() {
         black_box(model.packed_prototypes.classify(black_box(&packed_hv)));
     }));
 
+    // --- SCE batch-major: W queries per dispatch, single-query loop vs
+    // the blocked C×W matcher (one pass over G per batch). Runs in smoke
+    // mode too so CI covers the batched-vs-single comparison. ---
+    let w_batch = if smoke { 8 } else { 32 };
+    let mut qrng = Xoshiro256::seed_from_u64(11);
+    let batch_queries: Vec<PackedHypervector> = (0..w_batch)
+        .map(|_| PackedHypervector::random(model.d(), &mut qrng))
+        .collect();
+    let mut batch = PackedBatch::new(model.d());
+    for q in &batch_queries {
+        batch.push(q);
+    }
+    let single_name = format!("sce/batch{w_batch}-single-loop");
+    let blocked_name = format!("sce/batch{w_batch}-blocked");
+    results.push(bench(&single_name, budget, || {
+        let mut acc = 0usize;
+        for q in &batch_queries {
+            acc = acc.wrapping_add(model.packed_prototypes.classify(black_box(q)));
+        }
+        black_box(acc);
+    }));
+    let mut batch_scores = Vec::new();
+    let mut batch_preds = Vec::new();
+    results.push(bench(&blocked_name, budget, || {
+        model.packed_prototypes.classify_batch_into(
+            black_box(&batch),
+            &mut batch_scores,
+            &mut batch_preds,
+        );
+        black_box(batch_preds.len());
+    }));
+
     // --- whole optimized inference ---
     let mut engine = NysxEngine::new(&model);
     results.push(bench("infer/optimized-e2e", budget, || {
@@ -223,6 +255,11 @@ fn main() {
         if let Some((label, ratio)) = speedup(&results, old, new) {
             println!("  {label:<44} {ratio:6.1}x");
         }
+    }
+
+    println!("\nbatched vs single-query SCE (mean-time ratio per batch, W={w_batch}):");
+    if let Some((label, ratio)) = speedup(&results, &single_name, &blocked_name) {
+        println!("  {label:<44} {ratio:6.2}x");
     }
 
     // --- MPH γ ablation (paper §5.2.2 sizing trade-off) ---

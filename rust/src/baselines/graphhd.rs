@@ -3,18 +3,40 @@
 //! rank, edges are bound node-HV pairs, the graph HV bundles all edges.
 //! Node labels/attributes are ignored, which is exactly the expressiveness
 //! gap NysHD/NysX close (paper §7).
+//!
+//! The deployed path runs fully on [`PackedHypervector`]s so baseline
+//! benches compare like-for-like with the packed NysX engine: edge
+//! binding is a word-wise XOR into a reusable scratch HV, edge bundling
+//! goes through the bit-sliced [`PackedAccumulator`] counters, and
+//! classification is popcount matching against [`PackedPrototypes`]. The
+//! i8 path ([`GraphHdModel::encode_reference`], `prototypes`) is retained
+//! as the oracle; the tests pin the two bit-identical.
+//!
+//! Node ranking is *total and deterministic*: centralities are compared
+//! with `f64::total_cmp` (no NaN panic) and exact ties break by node id,
+//! so regular graphs — where every node has identical centrality — encode
+//! reproducibly.
 
 use crate::graph::{Graph, GraphDataset};
-use crate::hdc::{Hypervector, PrototypeAccumulator};
+use crate::hdc::{
+    Hypervector, PackedAccumulator, PackedHypervector, PackedPrototypes, PrototypeAccumulator,
+};
 use crate::util::rng::Xoshiro256;
 
-/// GraphHD model: a codebook of rank-HVs plus class prototypes.
+/// GraphHD model: a codebook of rank-HVs plus class prototypes, in both
+/// the deployed packed representation and the i8 oracle one.
 #[derive(Debug, Clone)]
 pub struct GraphHdModel {
     /// HV per centrality rank slot (rank r of a node indexes slot
-    /// min(r, slots-1)).
+    /// min(r, slots-1)) — i8 oracle representation.
     pub rank_hvs: Vec<Hypervector>,
+    /// The same codebook packed to sign bits (deployed representation;
+    /// bit-identical to `rank_hvs`).
+    pub rank_hvs_packed: Vec<PackedHypervector>,
+    /// i8 oracle prototypes.
     pub prototypes: crate::hdc::ClassPrototypes,
+    /// Packed prototypes (deployed; bit-identical to `prototypes`).
+    pub packed_prototypes: PackedPrototypes,
     pub dim: usize,
 }
 
@@ -49,18 +71,60 @@ pub fn pagerank(graph: &Graph, iters: usize) -> Vec<f64> {
 }
 
 impl GraphHdModel {
-    /// Encode one graph: nodes get rank-slot HVs by descending PageRank;
-    /// each edge contributes bind(hv_u, hv_v); the graph HV bundles edges.
-    pub fn encode(&self, graph: &Graph) -> Hypervector {
+    /// Rank-slot assignment shared by the packed and i8 encoders: nodes
+    /// sorted by descending PageRank under `total_cmp` (total over every
+    /// f64, NaN included), exact ties broken by ascending node id — the
+    /// encoding is deterministic even on regular graphs where all
+    /// centralities coincide.
+    fn rank_slots(&self, graph: &Graph) -> Vec<usize> {
         let n = graph.num_nodes();
         let pr = pagerank(graph, 30);
-        // Rank nodes by centrality (descending).
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| pr[b].partial_cmp(&pr[a]).unwrap());
+        order.sort_by(|&a, &b| pr[b].total_cmp(&pr[a]).then(a.cmp(&b)));
         let mut slot_of = vec![0usize; n];
         for (rank, &v) in order.iter().enumerate() {
-            slot_of[v] = rank.min(self.rank_hvs.len() - 1);
+            slot_of[v] = rank.min(self.rank_hvs_packed.len() - 1);
         }
+        slot_of
+    }
+
+    /// Encode one graph on the deployed packed path: nodes get rank-slot
+    /// HVs by descending PageRank; each edge contributes
+    /// `bind(hv_u, hv_v)` (word-wise XOR); the graph HV bundles all edges
+    /// through the bit-sliced accumulator. Bit-identical to
+    /// [`Self::encode_reference`] packed.
+    pub fn encode(&self, graph: &Graph) -> PackedHypervector {
+        let n = graph.num_nodes();
+        let slot_of = self.rank_slots(graph);
+        let mut acc = PackedAccumulator::new(1, self.dim);
+        let mut edge_hv = PackedHypervector::zeros(self.dim);
+        let mut any_edge = false;
+        for u in 0..n {
+            for k in graph.adj.row_ptr[u]..graph.adj.row_ptr[u + 1] {
+                let v = graph.adj.col_idx[k] as usize;
+                if v <= u {
+                    continue; // undirected: each edge once
+                }
+                any_edge = true;
+                self.rank_hvs_packed[slot_of[u]]
+                    .bind_into(&self.rank_hvs_packed[slot_of[v]], &mut edge_hv);
+                acc.add(0, &edge_hv);
+            }
+        }
+        if !any_edge {
+            // Degenerate edgeless graph: bundle node HVs instead.
+            for v in 0..n {
+                acc.add(0, &self.rank_hvs_packed[slot_of[v]]);
+            }
+        }
+        acc.finalize().prototypes.pop().expect("one bundle class")
+    }
+
+    /// The i8 oracle encoder (verbatim element-wise sums + sign), kept
+    /// for differential testing against [`Self::encode`].
+    pub fn encode_reference(&self, graph: &Graph) -> Hypervector {
+        let n = graph.num_nodes();
+        let slot_of = self.rank_slots(graph);
         let mut acc = vec![0i64; self.dim];
         let mut any_edge = false;
         for u in 0..n {
@@ -89,9 +153,16 @@ impl GraphHdModel {
             data: acc.iter().map(|&v| if v < 0 { -1 } else { 1 }).collect(),
         }
     }
+
+    /// Deployed classification: packed encode + popcount prototype
+    /// matching.
+    pub fn classify(&self, graph: &Graph) -> usize {
+        self.packed_prototypes.classify(&self.encode(graph))
+    }
 }
 
-/// Train GraphHD on a dataset.
+/// Train GraphHD on a dataset (packed end to end; the i8 oracle views are
+/// derived losslessly from the packed training state).
 pub fn train_graphhd(dataset: &GraphDataset, dim: usize, seed: u64) -> GraphHdModel {
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let max_nodes = dataset
@@ -101,30 +172,37 @@ pub fn train_graphhd(dataset: &GraphDataset, dim: usize, seed: u64) -> GraphHdMo
         .map(|(g, _)| g.num_nodes())
         .max()
         .unwrap_or(1);
+    // Draw the codebook in the i8 representation (keeps the RNG stream —
+    // and therefore every trained model — identical to the pre-packed
+    // implementation), then pack losslessly.
     let rank_hvs: Vec<Hypervector> = (0..max_nodes)
         .map(|_| Hypervector::random(dim, &mut rng))
         .collect();
+    let rank_hvs_packed: Vec<PackedHypervector> = rank_hvs.iter().map(|h| h.pack()).collect();
     let mut model = GraphHdModel {
         rank_hvs,
+        rank_hvs_packed,
         prototypes: PrototypeAccumulator::new(dataset.num_classes, dim).finalize(),
+        packed_prototypes: PackedAccumulator::new(dataset.num_classes, dim).finalize(),
         dim,
     };
-    let mut acc = PrototypeAccumulator::new(dataset.num_classes, dim);
+    let mut acc = PackedAccumulator::new(dataset.num_classes, dim);
     for (g, y) in &dataset.train {
         acc.add(*y, &model.encode(g));
     }
-    model.prototypes = acc.finalize();
+    model.packed_prototypes = acc.finalize();
+    model.prototypes = model.packed_prototypes.to_reference();
     model
 }
 
-/// Test-set accuracy.
+/// Test-set accuracy on the deployed packed path.
 pub fn evaluate_graphhd(model: &GraphHdModel, split: &[(Graph, usize)]) -> f64 {
     if split.is_empty() {
         return 0.0;
     }
     let correct = split
         .iter()
-        .filter(|(g, y)| model.prototypes.classify(&model.encode(g)) == *y)
+        .filter(|(g, y)| model.classify(g) == *y)
         .count();
     correct as f64 / split.len() as f64
 }
@@ -177,5 +255,80 @@ mod tests {
         let model = train_graphhd(&ds, 1024, 3);
         let g = &ds.test[0].0;
         assert_eq!(model.encode(g), model.encode(g));
+        assert_eq!(model.encode_reference(g), model.encode_reference(g));
+    }
+
+    /// The packed encoder/classifier is bit-identical to the i8 oracle on
+    /// real (structure-rich) graphs, prototypes included.
+    #[test]
+    fn packed_path_matches_i8_oracle() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(53, 0.2);
+        // Off a 64 boundary so the tail word is live.
+        let model = train_graphhd(&ds, 1000, 5);
+        assert_eq!(
+            model.packed_prototypes,
+            PackedPrototypes::from_reference(&model.prototypes),
+            "prototype representations diverged"
+        );
+        for (g, _) in ds.test.iter().take(8) {
+            let packed = model.encode(g);
+            let oracle = model.encode_reference(g);
+            assert_eq!(packed, oracle.pack(), "encode != packed oracle");
+            assert_eq!(
+                model.classify(g),
+                model.prototypes.classify(&oracle),
+                "classification diverged from i8 oracle"
+            );
+        }
+    }
+
+    /// Regression (total ordering): on a regular graph every node has the
+    /// same centrality, so ranking is pure tie-breaking. The encoder must
+    /// not panic, must be deterministic, and must agree with the oracle.
+    #[test]
+    fn tie_heavy_regular_graph_encodes_deterministically() {
+        // 8-cycle: every node has degree 2 and identical PageRank.
+        let n = 8;
+        let edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let g = Graph::from_edges(n, &edges, &[0; 8], 1);
+        let pr = pagerank(&g, 30);
+        for v in 1..n {
+            assert!(
+                (pr[v] - pr[0]).abs() < 1e-12,
+                "cycle graph should have uniform centrality"
+            );
+        }
+        let ds = GraphDataset {
+            name: "cycle".to_string(),
+            train: vec![(g.clone(), 0)],
+            test: vec![(g.clone(), 0)],
+            num_classes: 1,
+            feature_dim: 1,
+        };
+        let model = train_graphhd(&ds, 257, 11);
+        let a = model.encode(&g);
+        let b = model.encode(&g);
+        assert_eq!(a, b, "tie-heavy encoding must be deterministic");
+        assert_eq!(a, model.encode_reference(&g).pack(), "packed != oracle on ties");
+        // With uniform centrality the tie-break is node id: node v must
+        // occupy rank slot v exactly.
+        let slots = model.rank_slots(&g);
+        assert_eq!(slots, (0..n).collect::<Vec<_>>(), "id tie-break violated");
+    }
+
+    /// Edgeless and empty graphs take the bundling fallback on both paths.
+    #[test]
+    fn degenerate_graphs_agree_with_oracle() {
+        let edgeless = Graph::from_edges(5, &[], &[0; 5], 1);
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(54, 0.15);
+        let model = train_graphhd(&ds, 130, 7);
+        let packed = model.encode(&edgeless);
+        assert_eq!(packed, model.encode_reference(&edgeless).pack());
+        assert_eq!(
+            model.packed_prototypes.classify(&packed),
+            model.prototypes.classify(&model.encode_reference(&edgeless))
+        );
     }
 }

@@ -1,6 +1,12 @@
 //! Bounded batch queue: requests accumulate until `batch_size` are ready
 //! or `max_wait` expires (edge mode: batch_size = 1, so every request is
 //! dispatched immediately). Mutex + Condvar, no busy-waiting.
+//!
+//! The partial-batch deadline is anchored to the **oldest queued
+//! request's** submission instant (`front().submitted + max_wait`), not
+//! to when a popper happens to arrive — so a request's end-to-end queue
+//! wait is bounded by `max_wait` plus scheduling slack even when the
+//! consumer shows up late.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -15,7 +21,8 @@ pub struct BatcherConfig {
     pub batch_size: usize,
     /// Maximum time the first queued request may wait for batch-mates.
     pub max_wait: Duration,
-    /// Queue capacity; `push` returns false (backpressure) beyond it.
+    /// Queue capacity; `push` returns [`PushError::Full`] (retryable
+    /// backpressure) beyond it.
     pub capacity: usize,
 }
 
@@ -26,6 +33,32 @@ impl Default for BatcherConfig {
             max_wait: Duration::from_micros(200),
             capacity: 4096,
         }
+    }
+}
+
+/// Why a push was rejected. The two cases demand different caller
+/// behavior: `Full` is retryable backpressure (the queue is live but at
+/// capacity — shed load or retry after draining a response), `Closed` is
+/// terminal (the queue is shutting down and will never accept the
+/// request). Both hand the request back.
+#[derive(Debug)]
+pub enum PushError {
+    /// Queue at capacity — retryable.
+    Full(Request),
+    /// Queue closed — terminal.
+    Closed(Request),
+}
+
+impl PushError {
+    /// Take the rejected request back, whatever the reason.
+    pub fn into_request(self) -> Request {
+        match self {
+            PushError::Full(req) | PushError::Closed(req) => req,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, PushError::Closed(_))
     }
 }
 
@@ -52,12 +85,19 @@ impl BatchQueue {
         }
     }
 
-    /// Enqueue a request. On backpressure (full or closed) the request
-    /// is handed back to the caller as `Err`.
-    pub fn push(&self, req: Request) -> Result<(), Request> {
+    /// Enqueue a request. The request is handed back inside a
+    /// [`PushError`] that distinguishes retryable backpressure
+    /// ([`PushError::Full`]) from terminal shutdown ([`PushError::Closed`]).
+    // The Err variant carries the whole Request back by design: the
+    // caller keeps ownership to retry or reroute without a clone.
+    #[allow(clippy::result_large_err)]
+    pub fn push(&self, req: Request) -> Result<(), PushError> {
         let mut st = self.state.lock().unwrap();
-        if st.closed || st.items.len() >= self.cfg.capacity {
-            return Err(req);
+        if st.closed {
+            return Err(PushError::Closed(req));
+        }
+        if st.items.len() >= self.cfg.capacity {
+            return Err(PushError::Full(req));
         }
         st.items.push_back(req);
         drop(st);
@@ -71,7 +111,7 @@ impl BatchQueue {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.state.lock().unwrap().items.is_empty()
     }
 
     /// Blocking pop of the next batch. Returns None after close+drain.
@@ -85,23 +125,26 @@ impl BatchQueue {
                 st = self.cv.wait(st).unwrap();
                 continue;
             }
-            // Have at least one; maybe wait for batch-mates.
-            if st.items.len() < self.cfg.batch_size && !st.closed {
-                let deadline = Instant::now() + self.cfg.max_wait;
-                while st.items.len() < self.cfg.batch_size && !st.closed {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
-                    st = guard;
-                    if timeout.timed_out() {
-                        break;
-                    }
+            // Have at least one; maybe wait for batch-mates. The deadline
+            // is anchored to the *oldest queued request's* submission
+            // instant, not the popper's arrival — a request that already
+            // sat in the queue must not be granted a fresh max_wait, or
+            // its end-to-end wait could approach 2x the budget. Re-read
+            // the front each iteration: a rival popper may have drained
+            // the queue, making a younger request the new anchor.
+            while st.items.len() < self.cfg.batch_size && !st.closed {
+                let deadline = match st.items.front() {
+                    Some(oldest) => oldest.submitted + self.cfg.max_wait,
+                    None => break, // drained by a rival popper
+                };
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
                 }
-                if st.items.is_empty() {
-                    continue; // drained by a rival worker; go back to wait
-                }
+                st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+            }
+            if st.items.is_empty() {
+                continue; // drained by a rival worker; go back to wait
             }
             let take = st.items.len().min(self.cfg.batch_size);
             let batch: Vec<Request> = st.items.drain(..take).collect();
@@ -173,6 +216,79 @@ mod tests {
         assert!(q.push(req(0)).is_ok());
         assert!(q.push(req(1)).is_ok());
         assert!(q.push(req(2)).is_err(), "push beyond capacity must fail");
+    }
+
+    /// Backpressure and shutdown are different errors: the server retries
+    /// the first and must treat the second as terminal.
+    #[test]
+    fn push_errors_distinguish_full_from_closed() {
+        let q = BatchQueue::new(BatcherConfig {
+            batch_size: 1,
+            max_wait: Duration::ZERO,
+            capacity: 1,
+        });
+        assert!(q.push(req(0)).is_ok());
+        match q.push(req(1)) {
+            Err(PushError::Full(r)) => {
+                assert_eq!(r.id, 1, "Full must hand the request back");
+            }
+            other => panic!("want Full, got {other:?}"),
+        }
+        q.close();
+        match q.push(req(2)) {
+            Err(e @ PushError::Closed(_)) => {
+                assert!(e.is_closed());
+                assert_eq!(e.into_request().id, 2, "Closed must hand the request back");
+            }
+            other => panic!("want Closed, got {other:?}"),
+        }
+        // Closed wins over Full: the queue still holds req 0 (at capacity),
+        // but shutdown is the terminal, more informative error.
+        match q.push(req(3)) {
+            Err(PushError::Closed(_)) => {}
+            other => panic!("want Closed after close, got {other:?}"),
+        }
+    }
+
+    /// Regression (batch-deadline anchoring): the partial-batch deadline
+    /// is `oldest.submitted + max_wait`, not `popper arrival + max_wait`.
+    /// A consumer that shows up late may only wait out the *remaining*
+    /// budget, keeping the oldest request's end-to-end queue wait at
+    /// max_wait plus scheduling slack. The pre-fix code granted a fresh
+    /// max_wait from popper arrival (~2x end to end) and trips both
+    /// assertions below.
+    #[test]
+    fn max_wait_anchored_to_oldest_request() {
+        let max_wait = Duration::from_millis(200);
+        let q = BatchQueue::new(BatcherConfig {
+            batch_size: 8,
+            max_wait,
+            capacity: 100,
+        });
+        let submitted = Instant::now();
+        q.push(req(0)).unwrap(); // req() stamps `submitted` with now
+        // The consumer arrives after most of the wait budget is gone.
+        std::thread::sleep(Duration::from_millis(120));
+        let delayed_by = submitted.elapsed();
+        let popper_arrived = Instant::now();
+        let batch = q.pop_batch().unwrap();
+        let popper_waited = popper_arrived.elapsed();
+        let end_to_end = submitted.elapsed();
+        assert_eq!(batch.len(), 1);
+
+        let slack = Duration::from_millis(100);
+        let remaining_budget = max_wait.saturating_sub(delayed_by);
+        assert!(
+            popper_waited <= remaining_budget + slack,
+            "popper waited {popper_waited:?}, but only {remaining_budget:?} of the budget was left"
+        );
+        // max(delayed_by, max_wait) guards against oversleep on loaded
+        // runners: if the consumer itself showed up past the deadline the
+        // pop must return immediately.
+        assert!(
+            end_to_end <= max_wait.max(delayed_by) + slack,
+            "oldest request queued for {end_to_end:?}, budget was {max_wait:?}"
+        );
     }
 
     #[test]

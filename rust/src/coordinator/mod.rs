@@ -16,10 +16,10 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
-pub use batcher::{BatchQueue, BatcherConfig};
+pub use batcher::{BatchQueue, BatcherConfig, PushError};
 pub use metrics::{LatencyStats, MetricsRegistry};
 pub use router::{Router, RoutingPolicy};
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, SubmitError};
 
 use crate::graph::Graph;
 
@@ -37,9 +37,14 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub predicted: usize,
-    /// Host wall-clock inference time (µs) inside the worker.
+    /// Host wall-clock inference time (µs) inside the worker. For a
+    /// batched dispatch this is the request's amortized share of the
+    /// batch (batch wall time / batch size) — the whole batch went
+    /// through one blocked SCE call, so per-request attribution below
+    /// that granularity does not exist.
     pub host_us: f64,
-    /// Queueing delay before the worker picked the request up (µs).
+    /// Queueing delay before the worker picked the request up (µs),
+    /// always measured from this request's own submission instant.
     pub queue_us: f64,
     /// Simulated FPGA latency (ms) from the cycle model.
     pub fpga_ms: f64,
@@ -47,4 +52,7 @@ pub struct Response {
     pub fpga_mj: f64,
     /// Which worker served it.
     pub worker: usize,
+    /// How many requests shared the dispatch that served this one (1 for
+    /// edge mode).
+    pub batch_size: usize,
 }

@@ -6,7 +6,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use super::batcher::BatchQueue;
+use super::batcher::{BatchQueue, PushError};
 use super::Request;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,9 +62,13 @@ impl Router {
         }
     }
 
-    /// Route: returns the chosen worker, or hands the request back on
-    /// backpressure (caller decides: retry, shed, or block).
-    pub fn route(&self, req: Request) -> Result<usize, Request> {
+    /// Route: returns the chosen worker, or hands the request back inside
+    /// a [`PushError`] — `Full` is retryable backpressure (caller decides:
+    /// retry, shed, or block), `Closed` means the stack is shutting down.
+    // The Err variant hands the Request back by design (no clone on the
+    // backpressure path).
+    #[allow(clippy::result_large_err)]
+    pub fn route(&self, req: Request) -> Result<usize, PushError> {
         let idx = self.pick(&req);
         let est = Self::estimate(&req);
         match self.queues[idx].push(req) {
@@ -72,7 +76,7 @@ impl Router {
                 self.work[idx].fetch_add(est, Ordering::Relaxed);
                 Ok(idx)
             }
-            Err(req) => Err(req),
+            Err(e) => Err(e),
         }
     }
 

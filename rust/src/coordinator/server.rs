@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::batcher::{BatchQueue, BatcherConfig};
+use super::batcher::{BatchQueue, BatcherConfig, PushError};
 use super::metrics::MetricsRegistry;
 use super::router::{Router, RoutingPolicy};
 use super::worker::worker_loop;
@@ -14,6 +14,31 @@ use super::{Request, Response};
 use crate::graph::Graph;
 use crate::model::NysHdcModel;
 use crate::sim::{AcceleratorConfig, PowerModel};
+
+/// Why a submission was rejected. Mirrors [`PushError`] at the serving
+/// API surface: `Backpressure` is retryable (drain a response, resubmit),
+/// `Closed` is terminal (the stack is shutting down — resubmitting can
+/// never succeed). Both hand the query graph back.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Worker queue at capacity — retry after draining.
+    Backpressure(Graph),
+    /// Serving stack shut down — give up.
+    Closed(Graph),
+}
+
+impl SubmitError {
+    /// Take the rejected query graph back, whatever the reason.
+    pub fn into_graph(self) -> Graph {
+        match self {
+            SubmitError::Backpressure(g) | SubmitError::Closed(g) => g,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, SubmitError::Closed(_))
+    }
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -82,9 +107,13 @@ impl Server {
         }
     }
 
-    /// Submit a query graph; returns its request id, or the graph back on
-    /// backpressure.
-    pub fn submit(&mut self, graph: Graph) -> Result<u64, Graph> {
+    /// Submit a query graph; returns its request id, or a [`SubmitError`]
+    /// handing the graph back — [`SubmitError::Backpressure`] is worth
+    /// retrying after draining a response, [`SubmitError::Closed`] is not.
+    // The Err variant hands the query graph back by design (no clone on
+    // the backpressure path).
+    #[allow(clippy::result_large_err)]
+    pub fn submit(&mut self, graph: Graph) -> Result<u64, SubmitError> {
         let id = self.next_id;
         let req = Request {
             id,
@@ -97,7 +126,8 @@ impl Server {
                 self.outstanding += 1;
                 Ok(id)
             }
-            Err(req) => Err(req.graph),
+            Err(PushError::Full(req)) => Err(SubmitError::Backpressure(req.graph)),
+            Err(PushError::Closed(req)) => Err(SubmitError::Closed(req.graph)),
         }
     }
 
@@ -209,11 +239,19 @@ mod tests {
                     1 => RoutingPolicy::LeastLoaded,
                     _ => RoutingPolicy::SizeAware,
                 };
+                // batch_size > 1 exercises the blocked batch-major SCE
+                // dispatch in the workers; 1 is the paper's edge mode.
+                let batch_size = 1 + rng.gen_range(4);
                 let mut server = Server::start(
                     model.clone(),
                     ServerConfig {
                         workers,
                         routing: policy,
+                        batcher: BatcherConfig {
+                            batch_size,
+                            max_wait: std::time::Duration::from_millis(2),
+                            ..Default::default()
+                        },
                         ..Default::default()
                     },
                 );
@@ -241,6 +279,42 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// The serving API must tell retryable backpressure apart from
+    /// terminal shutdown — the caller's recovery differs.
+    #[test]
+    fn submit_distinguishes_backpressure_from_shutdown() {
+        let (ds, model) = small_model();
+        let g = ds.test[0].0.clone();
+        // capacity 0: every push is immediate backpressure.
+        let mut server = Server::start(
+            model,
+            ServerConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    capacity: 0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        match server.submit(g.clone()) {
+            Err(e @ SubmitError::Backpressure(_)) => assert!(!e.is_closed()),
+            other => panic!("want Backpressure, got {other:?}"),
+        }
+        // After close, the same submit is terminal — and the graph comes
+        // back intact for the caller to reroute elsewhere.
+        server.router.close_all();
+        match server.submit(g.clone()) {
+            Err(e @ SubmitError::Closed(_)) => {
+                assert!(e.is_closed());
+                let returned = e.into_graph();
+                assert_eq!(returned.num_nodes(), g.num_nodes());
+            }
+            other => panic!("want Closed, got {other:?}"),
+        }
+        server.shutdown();
     }
 
     #[test]

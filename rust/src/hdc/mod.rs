@@ -11,7 +11,9 @@
 pub mod packed;
 pub mod prototypes;
 
-pub use packed::{packed_bundle, PackedAccumulator, PackedHypervector, PackedPrototypes};
+pub use packed::{
+    packed_bundle, PackedAccumulator, PackedBatch, PackedHypervector, PackedPrototypes,
+};
 pub use prototypes::{ClassPrototypes, PrototypeAccumulator};
 
 /// A bipolar hypervector h ∈ {-1, +1}^d stored as i8 (the accelerator's

@@ -31,6 +31,25 @@
 //! | hamming                | `Σ popcount(a ^ b)`                      |
 //! | dot                    | `d − 2·hamming`                          |
 //! | bundle (majority sign) | per-bit minus-counters, threshold `n/2`  |
+//!
+//! # Batch-major matching layout
+//!
+//! The serving path amortizes prototype traffic across queries (the
+//! paper's SCE streams G once per *batch*, not once per query). The
+//! operand for that is [`PackedBatch`]: W query HVs stored back-to-back,
+//! query-major, each occupying exactly `words_for(d)` words with the same
+//! tail-zero invariant as a single [`PackedHypervector`].
+//! [`PackedPrototypes::scores_batch_into`] then walks the C×W similarity
+//! matrix **blocked over words**: for each word-block of at most
+//! [`BLOCK_WORDS`] words, every prototype slice is matched against every
+//! query slice before the block advances, so the prototype block stays in
+//! L1 while the query blocks stream through exactly once per class. The
+//! inner kernel ([`xor_popcount`]) is a `u64`-chunked, four-lane unrolled
+//! XOR+popcount reduction — independent accumulator lanes with no
+//! loop-carried dependency, the shape the autovectorizer (or a future
+//! `std::arch` specialization) widens into SIMD popcount sequences.
+//! Scores and argmax are bit-identical to the single-query
+//! [`PackedPrototypes::classify`], which the property suite enforces.
 
 use super::Hypervector;
 
@@ -40,7 +59,7 @@ const WORD_BITS: usize = 64;
 /// Number of words needed for `d` logical bits.
 #[inline]
 pub const fn words_for(d: usize) -> usize {
-    (d + WORD_BITS - 1) / WORD_BITS
+    d.div_ceil(WORD_BITS)
 }
 
 /// Mask of valid bits in the *last* word of a `d`-bit vector.
@@ -186,6 +205,18 @@ impl PackedHypervector {
         out
     }
 
+    /// Binding (⊗) into a caller-owned output — the allocation-free
+    /// variant of [`Self::bind`] for hot loops that rebind a scratch HV
+    /// per iteration (e.g. the packed GraphHD edge encoder). Tail bits
+    /// stay zero (0 ^ 0 = 0).
+    pub fn bind_into(&self, other: &PackedHypervector, out: &mut PackedHypervector) {
+        assert_eq!(self.dim, other.dim);
+        assert_eq!(self.dim, out.dim);
+        for ((o, &a), &b) in out.words.iter_mut().zip(self.words.iter()).zip(other.words.iter()) {
+            *o = a ^ b;
+        }
+    }
+
     /// Binding (⊗): element-wise product = word-wise XOR. Tail bits stay
     /// zero (0 ^ 0 = 0).
     pub fn bind(&self, other: &PackedHypervector) -> PackedHypervector {
@@ -297,6 +328,126 @@ fn shr_into(src: &[u64], s: usize, out: &mut [u64]) {
             };
             lo | hi
         };
+    }
+}
+
+/// Words per cache block in the batch matcher: 512 words = 4 KiB per HV
+/// slice, so a prototype slice plus a handful of query slices fit L1
+/// comfortably while still amortizing the loop overhead.
+const BLOCK_WORDS: usize = 512;
+
+/// XOR+popcount over two equal-length word slices, four independent
+/// accumulator lanes. The lanes carry no cross-iteration dependency, so
+/// the autovectorizer can widen this into SIMD popcount sequences (and a
+/// `std::arch` specialization can drop in without changing call sites).
+#[inline]
+fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0u32; 4];
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let base = k * 4;
+        lanes[0] += (a[base] ^ b[base]).count_ones();
+        lanes[1] += (a[base + 1] ^ b[base + 1]).count_ones();
+        lanes[2] += (a[base + 2] ^ b[base + 2]).count_ones();
+        lanes[3] += (a[base + 3] ^ b[base + 3]).count_ones();
+    }
+    let mut tail = 0u32;
+    for k in chunks * 4..a.len() {
+        tail += (a[k] ^ b[k]).count_ones();
+    }
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+}
+
+/// W query hypervectors stored back-to-back, query-major — the SCE's
+/// batch operand (see the module docs' batch-major matching section).
+/// Every slot is `words_for(dim)` words and upholds the tail-zero
+/// invariant; slots are appended with [`Self::push`] (copying an existing
+/// HV) or filled in place by fused producers via the crate-internal
+/// [`Self::push_zeroed`] + [`Self::query_words_mut`] pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedBatch {
+    words: Vec<u64>,
+    dim: usize,
+    words_per_hv: usize,
+    len: usize,
+}
+
+impl PackedBatch {
+    /// Empty batch of `d`-dimensional queries.
+    pub fn new(d: usize) -> Self {
+        Self {
+            words: Vec::new(),
+            dim: d,
+            words_per_hv: words_for(d),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of queries currently in the batch (W).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop all queries; keeps the allocation for reuse across batches.
+    pub fn clear(&mut self) {
+        self.words.clear();
+        self.len = 0;
+    }
+
+    /// Append a query by copying its words.
+    pub fn push(&mut self, hv: &PackedHypervector) {
+        assert_eq!(hv.dim(), self.dim, "batch/query dimension mismatch");
+        self.words.extend_from_slice(hv.words());
+        self.len += 1;
+    }
+
+    /// Append a zeroed slot and return its index, for producers that pack
+    /// directly into the batch (e.g. the fused NEE project-bipolarize-pack
+    /// path). Writers must uphold the tail-zero invariant.
+    pub(crate) fn push_zeroed(&mut self) -> usize {
+        self.words.resize(self.words.len() + self.words_per_hv, 0);
+        self.len += 1;
+        self.len - 1
+    }
+
+    /// Word slice of query `q` (tail bits guaranteed zero).
+    #[inline]
+    pub fn query_words(&self, q: usize) -> &[u64] {
+        assert!(q < self.len);
+        &self.words[q * self.words_per_hv..(q + 1) * self.words_per_hv]
+    }
+
+    /// Mutable word slice of query `q`. Crate-internal: writers must keep
+    /// tail bits zero.
+    #[inline]
+    pub(crate) fn query_words_mut(&mut self, q: usize) -> &mut [u64] {
+        assert!(q < self.len);
+        &mut self.words[q * self.words_per_hv..(q + 1) * self.words_per_hv]
+    }
+
+    /// Copy query `q` out as a standalone hypervector.
+    pub fn get(&self, q: usize) -> PackedHypervector {
+        PackedHypervector {
+            words: self.query_words(q).to_vec().into_boxed_slice(),
+            dim: self.dim,
+        }
+    }
+
+    /// Storage bytes of the whole batch.
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
     }
 }
 
@@ -455,6 +606,97 @@ impl PackedPrototypes {
         best
     }
 
+    /// Blocked batch scores: the full C×W similarity matrix `S = G Q^T`
+    /// written row-major by query (`out[q * C + c]` = dot of query `q`
+    /// with prototype `c`), bit-identical to calling [`Self::scores`] per
+    /// query. `out` must hold exactly `num_classes × batch.len()` values.
+    ///
+    /// The walk is cache-blocked over words: within each block of at most
+    /// [`BLOCK_WORDS`] words, every prototype slice is matched against
+    /// every query slice ([`xor_popcount`] inner kernel), so G's block is
+    /// read from L1 W times instead of streaming all of G once per query.
+    pub fn scores_batch_into(&self, batch: &PackedBatch, out: &mut [i64]) {
+        let c = self.num_classes();
+        let w = batch.len();
+        assert_eq!(out.len(), c * w, "scores buffer must be C x W");
+        if c == 0 || w == 0 {
+            return;
+        }
+        let d = self.dim();
+        assert_eq!(batch.dim(), d, "batch/prototype dimension mismatch");
+        // Accumulate Hamming distances blockwise, then convert in place.
+        out.iter_mut().for_each(|v| *v = 0);
+        let nw = words_for(d);
+        let mut w0 = 0;
+        while w0 < nw {
+            let w1 = (w0 + BLOCK_WORDS).min(nw);
+            for (ci, proto) in self.prototypes.iter().enumerate() {
+                let pw = &proto.words()[w0..w1];
+                for qi in 0..w {
+                    let qw = &batch.query_words(qi)[w0..w1];
+                    out[qi * c + ci] += xor_popcount(pw, qw) as i64;
+                }
+            }
+            w0 = w1;
+        }
+        for v in out.iter_mut() {
+            *v = d as i64 - 2 * *v;
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::scores_batch_into`].
+    pub fn scores_batch(&self, batch: &PackedBatch) -> Vec<i64> {
+        let mut out = vec![0i64; self.num_classes() * batch.len()];
+        self.scores_batch_into(batch, &mut out);
+        out
+    }
+
+    /// Batch classification into caller-owned scratch: `preds[q]` is the
+    /// argmax class for query `q` under the same first-max-wins tie rule
+    /// as [`Self::classify`] (bit-identical per query). `scores` is the
+    /// reusable C×W staging buffer; both vectors are cleared and refilled.
+    pub fn classify_batch_into(
+        &self,
+        batch: &PackedBatch,
+        scores: &mut Vec<i64>,
+        preds: &mut Vec<usize>,
+    ) {
+        let c = self.num_classes();
+        let w = batch.len();
+        scores.clear();
+        scores.resize(c * w, 0);
+        preds.clear();
+        if w == 0 {
+            return;
+        }
+        if c == 0 {
+            // Degenerate prototype-less model: classify() returns 0.
+            preds.resize(w, 0);
+            return;
+        }
+        self.scores_batch_into(batch, scores);
+        for qi in 0..w {
+            let row = &scores[qi * c..(qi + 1) * c];
+            let mut best = 0usize;
+            let mut best_score = i64::MIN;
+            for (ci, &s) in row.iter().enumerate() {
+                if s > best_score {
+                    best = ci;
+                    best_score = s;
+                }
+            }
+            preds.push(best);
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::classify_batch_into`].
+    pub fn classify_batch(&self, batch: &PackedBatch) -> Vec<usize> {
+        let mut scores = Vec::new();
+        let mut preds = Vec::new();
+        self.classify_batch_into(batch, &mut scores, &mut preds);
+        preds
+    }
+
     /// Deployed G bytes (1 bit/element, word-rounded per prototype).
     pub fn bytes(&self) -> usize {
         self.prototypes.iter().map(|p| p.bytes()).sum()
@@ -486,9 +728,7 @@ mod tests {
 
     /// The tail-masking invariant: no bit above the logical dimension.
     fn tail_clean(p: &PackedHypervector) -> bool {
-        p.words
-            .last()
-            .map_or(true, |&w| w & !tail_mask(p.dim) == 0)
+        p.words.last().map(|&w| w & !tail_mask(p.dim)).unwrap_or(0) == 0
     }
 
     /// A dimension that deliberately hovers around word boundaries as the
@@ -672,6 +912,143 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn bind_into_matches_bind() {
+        forall("bind-into", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size);
+            let (_, pa) = matched_pair(rng, d);
+            let (_, pb) = matched_pair(rng, d);
+            let mut out = PackedHypervector::zeros(d);
+            pa.bind_into(&pb, &mut out);
+            crate::prop_assert!(out == pa.bind(&pb), "bind_into differs at d={d}");
+            crate::prop_assert!(tail_clean(&out), "bind_into leaked tail bits at d={d}");
+            Ok(())
+        });
+    }
+
+    /// THE batch-major equivalence property: blocked C×W matching is
+    /// bit-identical to W independent single-query calls, which are
+    /// themselves bit-identical to the i8 oracle.
+    #[test]
+    fn batch_matching_matches_single_query_and_oracle() {
+        forall("batch-matching-differential", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size.min(12));
+            let classes = 1 + rng.gen_range(5);
+            let n = classes + rng.gen_range(size.max(1) + 4);
+            let mut i8_acc = PrototypeAccumulator::new(classes, d);
+            let mut packed_acc = PackedAccumulator::new(classes, d);
+            for _ in 0..n {
+                let class = rng.gen_range(classes);
+                let (h, p) = matched_pair(rng, d);
+                i8_acc.add(class, &h);
+                packed_acc.add(class, &p);
+            }
+            let oracle: ClassPrototypes = i8_acc.finalize();
+            let protos: PackedPrototypes = packed_acc.finalize();
+
+            // Odd batch widths around the blocking/unroll boundaries.
+            let w = 1 + rng.gen_range(2 * size.max(1) + 9);
+            let queries: Vec<(Hypervector, PackedHypervector)> =
+                (0..w).map(|_| matched_pair(rng, d)).collect();
+            let mut batch = PackedBatch::new(d);
+            for (_, p) in &queries {
+                batch.push(p);
+            }
+            crate::prop_assert!(batch.len() == w && batch.dim() == d, "batch shape");
+
+            let scores = protos.scores_batch(&batch);
+            let preds = protos.classify_batch(&batch);
+            crate::prop_assert!(preds.len() == w, "preds length");
+            for (qi, (h, p)) in queries.iter().enumerate() {
+                let row = &scores[qi * classes..(qi + 1) * classes];
+                crate::prop_assert!(
+                    row == protos.scores(p).as_slice(),
+                    "batch scores != single-query scores at q={qi}, d={d}"
+                );
+                crate::prop_assert!(
+                    row == oracle.scores(h).as_slice(),
+                    "batch scores != i8 oracle at q={qi}, d={d}"
+                );
+                crate::prop_assert!(
+                    preds[qi] == protos.classify(p),
+                    "batch classify != single classify at q={qi}, d={d}"
+                );
+                crate::prop_assert!(
+                    preds[qi] == oracle.classify(h),
+                    "batch classify != i8 oracle at q={qi}, d={d}"
+                );
+                // Batch slots roundtrip losslessly.
+                crate::prop_assert!(batch.get(qi) == *p, "batch slot {qi} corrupted");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_fused_slot_writes_match_push() {
+        // push_zeroed + query_words_mut (the fused-producer path) must
+        // produce the same batch as push() of the same HVs.
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        for &d in &[1usize, 64, 65, 1000] {
+            let hvs: Vec<PackedHypervector> = (0..5)
+                .map(|_| PackedHypervector::random(d, &mut rng))
+                .collect();
+            let mut pushed = PackedBatch::new(d);
+            let mut fused = PackedBatch::new(d);
+            for hv in &hvs {
+                pushed.push(hv);
+                let slot = fused.push_zeroed();
+                fused.query_words_mut(slot).copy_from_slice(hv.words());
+            }
+            assert_eq!(pushed, fused, "fused batch differs at d={d}");
+            assert_eq!(pushed.bytes(), 5 * words_for(d) * 8);
+        }
+    }
+
+    #[test]
+    fn batch_reuse_and_degenerate_shapes() {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let d = 130;
+        let mut acc = PackedAccumulator::new(2, d);
+        for _ in 0..6 {
+            let class = rng.gen_range(2);
+            let hv = PackedHypervector::random(d, &mut rng);
+            acc.add(class, &hv);
+        }
+        let protos = acc.finalize();
+
+        // Empty batch: no scores, no predictions.
+        let mut batch = PackedBatch::new(d);
+        assert!(batch.is_empty());
+        assert!(protos.scores_batch(&batch).is_empty());
+        assert!(protos.classify_batch(&batch).is_empty());
+
+        // clear() keeps the batch usable and results stay correct.
+        for round in 0..3 {
+            batch.clear();
+            let w = 1 + round;
+            let queries: Vec<PackedHypervector> = (0..w)
+                .map(|_| PackedHypervector::random(d, &mut rng))
+                .collect();
+            for q in &queries {
+                batch.push(q);
+            }
+            let preds = protos.classify_batch(&batch);
+            for (qi, q) in queries.iter().enumerate() {
+                assert_eq!(preds[qi], protos.classify(q), "round {round} q {qi}");
+            }
+        }
+
+        // Zero classes: every query maps to class 0, like classify().
+        let none = PackedAccumulator::new(0, d).finalize();
+        let q = PackedHypervector::random(d, &mut rng);
+        batch.clear();
+        batch.push(&q);
+        assert_eq!(none.classify(&q), 0);
+        assert_eq!(none.classify_batch(&batch), vec![0]);
+        assert!(none.scores_batch(&batch).is_empty());
     }
 
     #[test]

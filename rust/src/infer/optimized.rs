@@ -19,9 +19,23 @@
 //! the per-stage work counts (real nnz, real MPH probe counts, real
 //! histogram sizes) that drive the cycle-accurate accelerator model in
 //! [`crate::sim`].
+//!
+//! # Batch-major serving path
+//!
+//! [`NysxEngine::infer_batch`] runs W queries through one engine with a
+//! single scratch set: the per-graph stages (LSHU/MPHE/HUE/KSE) reuse the
+//! same buffers request after request, each kernel vector is
+//! project-bipolarize-packed straight into a slot of the engine's
+//! [`crate::hdc::PackedBatch`], and the SCE runs **once** for the whole
+//! batch via the blocked C×W popcount matcher
+//! ([`crate::hdc::PackedPrototypes::classify_batch_into`]) instead of W
+//! independent prototype sweeps. [`NysxEngine::classify_kernel_vectors`]
+//! exposes the same NEE+SCE tail for callers that already hold kernel
+//! vectors. Both are bit-identical to the single-query path (and so to
+//! the i8 oracle), which the tests below enforce.
 
 use crate::graph::Graph;
-use crate::hdc::PackedHypervector;
+use crate::hdc::{PackedBatch, PackedHypervector};
 use crate::model::NysHdcModel;
 use crate::mph::code_key;
 use crate::sparse::{SchedulePolicy, ScheduleTable};
@@ -85,6 +99,10 @@ pub struct NysxEngine<'m> {
     proj_scratch: Vec<f64>,
     codes: Vec<i64>,
     hist: Vec<f64>,
+    // --- batch scratch (one set, reused across batches) ---
+    batch: PackedBatch,
+    batch_scores: Vec<i64>,
+    batch_preds: Vec<usize>,
 }
 
 impl<'m> NysxEngine<'m> {
@@ -109,6 +127,9 @@ impl<'m> NysxEngine<'m> {
             proj_scratch: Vec::new(),
             codes: Vec::new(),
             hist: vec![0.0; max_bins],
+            batch: PackedBatch::new(model.d()),
+            batch_scores: Vec::new(),
+            batch_preds: Vec::new(),
         }
     }
 
@@ -219,6 +240,63 @@ impl<'m> NysxEngine<'m> {
             self.model.packed_prototypes.classify(&self.hv),
             self.hv.clone(),
         )
+    }
+
+    /// NEE + SCE for a whole batch of kernel vectors: each C(x) is
+    /// project-bipolarize-packed into a slot of the engine's reusable
+    /// [`PackedBatch`], then ONE blocked C×W popcount matching call
+    /// classifies every query. Per query this is bit-identical to
+    /// [`Self::classify_kernel_vector`].
+    pub fn classify_kernel_vectors(
+        &mut self,
+        c_sims: &[Vec<f64>],
+    ) -> Vec<(usize, PackedHypervector)> {
+        self.batch.clear();
+        for c in c_sims {
+            let slot = self.batch.push_zeroed();
+            self.model
+                .projection
+                .project_pack_words(c, self.batch.query_words_mut(slot));
+        }
+        self.model.packed_prototypes.classify_batch_into(
+            &self.batch,
+            &mut self.batch_scores,
+            &mut self.batch_preds,
+        );
+        (0..c_sims.len())
+            .map(|qi| (self.batch_preds[qi], self.batch.get(qi)))
+            .collect()
+    }
+
+    /// Batched Algorithm 1: the per-graph stages run back-to-back on one
+    /// scratch set, the SCE runs once for the whole batch (blocked C×W
+    /// matching). Results are bit-identical to calling [`Self::infer`] on
+    /// each graph in order, traces included.
+    pub fn infer_batch(&mut self, graphs: &[&Graph]) -> Vec<InferenceResult> {
+        let mut traces = Vec::with_capacity(graphs.len());
+        self.batch.clear();
+        for &g in graphs {
+            let (_, trace) = self.kernel_vector(g);
+            traces.push(trace);
+            let slot = self.batch.push_zeroed();
+            self.model
+                .projection
+                .project_pack_words(&self.c_sim, self.batch.query_words_mut(slot));
+        }
+        self.model.packed_prototypes.classify_batch_into(
+            &self.batch,
+            &mut self.batch_scores,
+            &mut self.batch_preds,
+        );
+        traces
+            .into_iter()
+            .enumerate()
+            .map(|(qi, trace)| InferenceResult {
+                predicted: self.batch_preds[qi],
+                hv: self.batch.get(qi),
+                trace,
+            })
+            .collect()
     }
 
     /// Full Algorithm 1.
@@ -338,5 +416,73 @@ mod tests {
         let (pred, hv) = engine.classify_kernel_vector(&c);
         assert_eq!(pred, full.predicted);
         assert_eq!(hv, full.hv);
+    }
+
+    /// The batched pipeline is bit-identical to per-graph [`NysxEngine::infer`]
+    /// — predictions, packed HVs, and traces — across batch widths,
+    /// including interleaving batched and single calls on one engine.
+    #[test]
+    fn batch_inference_bit_identical_to_single() {
+        let (ds, model) = trained();
+        let mut engine = NysxEngine::new(&model);
+        let graphs: Vec<&crate::graph::Graph> = ds.test.iter().map(|(g, _)| g).collect();
+        let singles: Vec<InferenceResult> = graphs.iter().map(|&g| engine.infer(g)).collect();
+
+        // Whole split as one batch.
+        let batched = engine.infer_batch(&graphs);
+        assert_eq!(batched.len(), singles.len());
+        for (b, s) in batched.iter().zip(&singles) {
+            assert_eq!(b.predicted, s.predicted, "prediction drift in batch");
+            assert_eq!(b.hv, s.hv, "packed HV drift in batch");
+            assert_eq!(b.trace.n, s.trace.n);
+            assert_eq!(b.trace.total_probes(), s.trace.total_probes());
+            assert_eq!(b.trace.total_hits(), s.trace.total_hits());
+        }
+
+        // Varying widths interleaved with single calls: scratch reuse must
+        // not leak state in either direction.
+        let mid = graphs.len() / 2;
+        let first = engine.infer_batch(&graphs[..mid]);
+        let lone = engine.infer(graphs[mid]);
+        let rest = engine.infer_batch(&graphs[mid + 1..]);
+        assert_eq!(lone.predicted, singles[mid].predicted);
+        assert_eq!(lone.hv, singles[mid].hv);
+        for (b, s) in first.iter().zip(&singles[..mid]) {
+            assert_eq!(b.predicted, s.predicted);
+            assert_eq!(b.hv, s.hv);
+        }
+        for (b, s) in rest.iter().zip(&singles[mid + 1..]) {
+            assert_eq!(b.predicted, s.predicted);
+            assert_eq!(b.hv, s.hv);
+        }
+
+        // Degenerate widths.
+        assert!(engine.infer_batch(&[]).is_empty());
+        let one = engine.infer_batch(&graphs[..1]);
+        assert_eq!(one[0].predicted, singles[0].predicted);
+        assert_eq!(one[0].hv, singles[0].hv);
+    }
+
+    #[test]
+    fn batch_kernel_vector_api_matches_staged_single() {
+        let (ds, model) = trained();
+        let mut engine = NysxEngine::new(&model);
+        let c_sims: Vec<Vec<f64>> = ds
+            .test
+            .iter()
+            .take(6)
+            .map(|(g, _)| {
+                let (c, _) = engine.kernel_vector(g);
+                c.to_vec()
+            })
+            .collect();
+        let batch_out = engine.classify_kernel_vectors(&c_sims);
+        assert_eq!(batch_out.len(), c_sims.len());
+        for (c, (pred, hv)) in c_sims.iter().zip(&batch_out) {
+            let (want_pred, want_hv) = engine.classify_kernel_vector(c);
+            assert_eq!(*pred, want_pred);
+            assert_eq!(*hv, want_hv);
+        }
+        assert!(engine.classify_kernel_vectors(&[]).is_empty());
     }
 }

@@ -15,7 +15,7 @@ use nysx::bench::tables::{
     evaluate_all, render_fig6, render_fig7, render_fig8, render_roofline, render_table3,
     render_table4, render_table6, render_table7, render_table8, EvalConfig,
 };
-use nysx::coordinator::{Server, ServerConfig};
+use nysx::coordinator::{Server, ServerConfig, SubmitError};
 use nysx::graph::tudataset::{spec_by_name, TU_SPECS};
 use nysx::model::train::{evaluate, train};
 use nysx::model::ModelConfig;
@@ -144,8 +144,16 @@ fn cmd_serve(args: &Args) {
     let mut rng = nysx::util::rng::Xoshiro256::seed_from_u64(7);
     for _ in 0..requests {
         let (g, _) = &ds.test[rng.gen_range(ds.test.len())];
-        while server.submit(g.clone()).is_err() {
-            server.recv();
+        loop {
+            match server.submit(g.clone()) {
+                Ok(_) => break,
+                Err(SubmitError::Backpressure(_)) => {
+                    server.recv(); // free a slot, then retry
+                }
+                Err(SubmitError::Closed(_)) => {
+                    unreachable!("server closed mid-replay")
+                }
+            }
         }
     }
     server.drain();

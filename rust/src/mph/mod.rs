@@ -86,10 +86,23 @@ pub struct MphStats {
     pub fallback_keys: usize,
 }
 
+/// Default maximum number of cascade levels: deep enough that fallback
+/// stays virtually empty at any sane γ.
+const DEFAULT_MAX_LEVELS: usize = 48;
+
 impl Mph {
     /// Build over a distinct key set with load factor `gamma` (paper-style
     /// default 1.5; larger = fewer levels, more bits).
     pub fn build(keys: &[u64], gamma: f64) -> Self {
+        Self::build_capped(keys, gamma, DEFAULT_MAX_LEVELS)
+    }
+
+    /// Build with an explicit cascade-depth cap. Keys unresolved after
+    /// `max_levels` land in the exact-match `fallback` store. Production
+    /// goes through [`Self::build`] (deep cascade, fallback virtually
+    /// empty); a small cap deterministically forces fallback population,
+    /// which the absent-key property tests and sizing ablations rely on.
+    pub fn build_capped(keys: &[u64], gamma: f64, max_levels: usize) -> Self {
         assert!(gamma >= 1.0);
         let mut remaining: Vec<u64> = keys.to_vec();
         {
@@ -102,7 +115,6 @@ impl Mph {
         let mut all_bits: Vec<u64> = Vec::new(); // words
         let mut bit_offset = 0u64;
         let mut seed = 0x9E3779B97F4A7C15u64;
-        let max_levels = 48;
 
         while !remaining.is_empty() && levels.len() < max_levels {
             seed = xorshift_next(seed);
@@ -267,8 +279,16 @@ pub struct MphLookup {
 impl MphLookup {
     /// Build from parallel arrays: key i maps to value `values[i]`.
     pub fn build(keys: &[u64], values: &[u32], gamma: f64) -> Self {
+        Self::build_capped(keys, values, gamma, DEFAULT_MAX_LEVELS)
+    }
+
+    /// [`Self::build`] with an explicit cascade-depth cap (see
+    /// [`Mph::build_capped`]): small caps force keys into the fallback
+    /// store, exercising the verification path the deep cascade almost
+    /// never reaches.
+    pub fn build_capped(keys: &[u64], values: &[u32], gamma: f64, max_levels: usize) -> Self {
         assert_eq!(keys.len(), values.len());
-        let mph = Mph::build(keys, gamma);
+        let mph = Mph::build_capped(keys, gamma, max_levels);
         let mut store = vec![(0u64, 0u32); keys.len()];
         for (i, &k) in keys.iter().enumerate() {
             let idx = mph.index(k).expect("constructed key must resolve") as usize;
@@ -381,6 +401,91 @@ mod tests {
                 absent_checked += 1;
             }
         }
+    }
+
+    /// Property (paper step 4): a key OUTSIDE the build set either falls
+    /// through every cascade level (`None`) or lands on some set bit —
+    /// in which case the rank index stays in `[0, n)` and the codebook
+    /// verification rejects it. Never a silent wrong value. Half the
+    /// cases cap the cascade depth so the structure carries fallback
+    /// keys, covering collisions around the fallback range too.
+    #[test]
+    fn absent_keys_never_silently_resolve() {
+        use crate::testing::{forall, PropConfig};
+        forall("mph-absent-keys", PropConfig::default(), |rng, size| {
+            let n = 1 + rng.gen_range(96 * size.max(1));
+            let keys = random_keys(n, rng);
+            let values: Vec<u32> = (0..n as u32).collect();
+            let gamma = [1.0, 1.1, 1.5][rng.gen_range(3)];
+            let max_levels = if rng.bernoulli(0.5) {
+                1 + rng.gen_range(2) // forces fallback population
+            } else {
+                48
+            };
+            let lookup = MphLookup::build_capped(&keys, &values, gamma, max_levels);
+            // Every built key resolves to its own value — including the
+            // ones that collided into the fallback store.
+            for (i, &k) in keys.iter().enumerate() {
+                crate::prop_assert!(
+                    lookup.get(k) == Some(values[i]),
+                    "present key {k} lost (n={n}, gamma={gamma}, levels<={max_levels})"
+                );
+            }
+            let key_set: std::collections::HashSet<u64> = keys.iter().copied().collect();
+            let mut checked = 0;
+            while checked < 100 {
+                let k = rng.next_u64();
+                if key_set.contains(&k) {
+                    continue;
+                }
+                // The raw MPH may hand back a bogus index, but it must be
+                // in range (so the codebook probe is well-defined)...
+                let (idx, probes) = lookup.mph.index_with_probes(k);
+                if let Some(idx) = idx {
+                    crate::prop_assert!(
+                        (idx as usize) < n,
+                        "absent key {k} indexed out of range ({idx} >= {n})"
+                    );
+                    crate::prop_assert!(probes >= 1, "a hit needs at least one probe");
+                }
+                // ...and the verified lookup must reject it outright.
+                crate::prop_assert!(
+                    lookup.get(k).is_none(),
+                    "absent key {k} silently resolved (n={n}, gamma={gamma})"
+                );
+                let (verified, _) = lookup.get_with_probes(k);
+                crate::prop_assert!(verified.is_none(), "get_with_probes leaked a value");
+                checked += 1;
+            }
+            Ok(())
+        });
+    }
+
+    /// A capped cascade deterministically lands keys in `fallback`; the
+    /// lookup must stay perfect for them and still reject absent keys.
+    #[test]
+    fn capped_cascade_populates_fallback_and_stays_verified() {
+        let keys: Vec<u64> = (0..512i64).map(code_key).collect();
+        let values: Vec<u32> = (0..512u32).collect();
+        let lookup = MphLookup::build_capped(&keys, &values, 1.0, 1);
+        let st = lookup.mph.stats(&keys);
+        assert!(
+            st.fallback_keys > 0,
+            "a 1-level cascade at gamma=1 must overflow into fallback"
+        );
+        assert_eq!(st.levels, 1);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(lookup.get(k), Some(values[i]));
+            // Fallback hits report exactly one probe (exact-match store).
+            let (v, probes) = lookup.get_with_probes(k);
+            assert_eq!(v, Some(values[i]));
+            assert!(probes >= 1);
+        }
+        // Keys adjacent to (but outside) the build range must be rejected.
+        for code in 512i64..1024 {
+            assert_eq!(lookup.get(code_key(code)), None);
+        }
+        assert_eq!(lookup.get(code_key(-1)), None);
     }
 
     #[test]

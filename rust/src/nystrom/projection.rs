@@ -135,8 +135,16 @@ impl NystromProjection {
     /// bit-for-bit.
     pub fn project_pack_into(&self, c: &[f64], out: &mut crate::hdc::PackedHypervector) {
         assert_eq!(out.dim(), self.d);
+        self.project_pack_words(c, out.words_mut());
+    }
+
+    /// Word-level core of [`Self::project_pack_into`], shared with batch
+    /// producers that pack straight into a [`crate::hdc::PackedBatch`]
+    /// slot. `words` must be exactly `words_for(d)` long; tail bits are
+    /// written zero (bits at and above `d` are never set).
+    pub(crate) fn project_pack_words(&self, c: &[f64], words: &mut [u64]) {
+        assert_eq!(words.len(), crate::hdc::packed::words_for(self.d));
         self.with_c32(c, |c32| {
-            let words = out.words_mut();
             for (wi, w) in words.iter_mut().enumerate() {
                 let base = wi * 64;
                 let top = (base + 64).min(self.d);
