@@ -14,7 +14,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use nysx::coordinator::{RoutingPolicy, Server, ServerConfig, SubmitError};
+use nysx::coordinator::{BatcherConfig, RoutingPolicy, Server, ServerConfig, SubmitError};
 use nysx::graph::tudataset::spec_by_name;
 use nysx::model::train::{evaluate, train};
 use nysx::model::ModelConfig;
@@ -30,6 +30,9 @@ fn main() {
     let requests = args.get_usize("requests", 2000);
     let rate_rps = args.get_f64("rate", 2000.0);
     let scale = args.get_f64("scale", 1.0);
+    // --batch N > 1 lets workers pop whole batches and run one blocked
+    // C×W SCE pass per batch (1 = the paper's real-time edge mode).
+    let batch = args.get_usize("batch", 1).max(1);
 
     let spec = spec_by_name(dataset).unwrap_or_else(|| panic!("unknown dataset {dataset}"));
     let (ds, _s_uni, s_dpp) = spec.generate_scaled(42, scale);
@@ -49,12 +52,16 @@ fn main() {
         100.0 * evaluate(&model, &ds.test)
     );
 
-    eprintln!("[2/4] starting coordinator: {workers} workers, size-aware routing, batch=1");
+    eprintln!("[2/4] starting coordinator: {workers} workers, size-aware routing, batch={batch}");
     let mut server = Server::start(
         model.clone(),
         ServerConfig {
             workers,
             routing: RoutingPolicy::SizeAware,
+            batcher: BatcherConfig {
+                batch_size: batch,
+                ..Default::default()
+            },
             ..Default::default()
         },
     );
@@ -96,6 +103,7 @@ fn main() {
         .count();
     let m = server.metrics.summary();
     println!("\n=== edge serving report ({} on {} workers) ===", ds.name, workers);
+    println!("batch size          {batch}");
     println!("requests            {requests} in {wall:.2}s -> {:.0} req/s", requests as f64 / wall);
     println!("served accuracy     {:.1}%", 100.0 * correct as f64 / requests as f64);
     println!(

@@ -17,7 +17,10 @@ use std::time::Duration;
 
 use nysx::bench::harness::{bench, black_box, print_results, BenchResult};
 use nysx::graph::tudataset::spec_by_name;
-use nysx::hdc::{bundle, packed_bundle, Hypervector, PackedBatch, PackedHypervector};
+use nysx::hdc::simd;
+use nysx::hdc::{
+    bundle, packed_bundle, Hypervector, PackedBatch, PackedHypervector, PopcountBackend,
+};
 use nysx::infer::NysxEngine;
 use nysx::kernel::node_codes;
 use nysx::model::train::train;
@@ -203,6 +206,27 @@ fn main() {
         black_box(model.packed_prototypes.classify(black_box(&packed_hv)));
     }));
 
+    // --- per-backend SIMD kernels: every compiled-in backend vs the
+    // scalar oracle on the same operands (raw xor_popcount at d=10^4 and
+    // the full SCE classify). Runs in smoke mode too, so CI reports the
+    // comparison — and asserts bit-equality — on its own hardware. ---
+    let backends = simd::available();
+    let want_pop = simd::scalar().xor_popcount(pa.words(), pb.words());
+    for be in &backends {
+        assert_eq!(
+            be.xor_popcount(pa.words(), pb.words()),
+            want_pop,
+            "backend {} diverges from scalar",
+            be.name()
+        );
+        results.push(bench(&format!("backend/{}/xor-popcount", be.name()), budget, || {
+            black_box(be.xor_popcount(black_box(pa.words()), black_box(pb.words())));
+        }));
+        results.push(bench(&format!("backend/{}/sce-classify", be.name()), budget, || {
+            black_box(model.packed_prototypes.classify_with(*be, black_box(&packed_hv)));
+        }));
+    }
+
     // --- SCE batch-major: W queries per dispatch, single-query loop vs
     // the blocked C×W matcher (one pass over G per batch). Runs in smoke
     // mode too so CI covers the batched-vs-single comparison. ---
@@ -260,6 +284,26 @@ fn main() {
     println!("\nbatched vs single-query SCE (mean-time ratio per batch, W={w_batch}):");
     if let Some((label, ratio)) = speedup(&results, &single_name, &blocked_name) {
         println!("  {label:<44} {ratio:6.2}x");
+    }
+
+    println!(
+        "\nSIMD backends vs scalar (mean-time ratio; active dispatch: {}):",
+        simd::active().name()
+    );
+    if backends.len() == 1 {
+        println!("  (scalar only — no SIMD backend available on this host)");
+    }
+    for be in &backends {
+        if be.name() == "scalar" {
+            continue;
+        }
+        for kernel in ["xor-popcount", "sce-classify"] {
+            let old = format!("backend/scalar/{kernel}");
+            let new = format!("backend/{}/{kernel}", be.name());
+            if let Some((label, ratio)) = speedup(&results, &old, &new) {
+                println!("  {label:<44} {ratio:6.2}x");
+            }
+        }
     }
 
     // --- MPH γ ablation (paper §5.2.2 sizing trade-off) ---

@@ -8,9 +8,12 @@
 //! benches compare like-for-like with the packed NysX engine: edge
 //! binding is a word-wise XOR into a reusable scratch HV, edge bundling
 //! goes through the bit-sliced [`PackedAccumulator`] counters, and
-//! classification is popcount matching against [`PackedPrototypes`]. The
-//! i8 path ([`GraphHdModel::encode_reference`], `prototypes`) is retained
-//! as the oracle; the tests pin the two bit-identical.
+//! classification is popcount matching against [`PackedPrototypes`] —
+//! both of which dispatch through the same runtime-selected SIMD backend
+//! ([`crate::hdc::simd`]) as the NysX engine, so a backend win shows up
+//! identically on the baseline side of every comparison. The i8 path
+//! ([`GraphHdModel::encode_reference`], `prototypes`) is retained as the
+//! oracle; the tests pin the two bit-identical.
 //!
 //! Node ranking is *total and deterministic*: centralities are compared
 //! with `f64::total_cmp` (no NaN panic) and exact ties break by node id,

@@ -7,14 +7,28 @@
 //! element, the deployed hot-path representation). They are lossless
 //! converses of each other and every operator pair is property-tested
 //! bit-identical.
+//!
+//! # SIMD backends
+//!
+//! The packed hot kernels (XOR+popcount matching, the carry-save bundle
+//! counters) run on a runtime-dispatched [`simd::PopcountBackend`]:
+//! scalar (the oracle), AVX2 on x86_64 (when detected at startup), NEON
+//! on aarch64. The backend is chosen once per process by
+//! [`simd::active`]; `NYSX_FORCE_SCALAR=1` pins the scalar oracle for
+//! differential testing, and the `*_with` kernel variants accept an
+//! explicit backend so tests and benches can compare them side by side.
+//! All backends are property-tested bit-identical to scalar — and scalar
+//! to the i8 reference — so dispatch never changes results.
 
 pub mod packed;
 pub mod prototypes;
+pub mod simd;
 
 pub use packed::{
     packed_bundle, PackedAccumulator, PackedBatch, PackedHypervector, PackedPrototypes,
 };
 pub use prototypes::{ClassPrototypes, PrototypeAccumulator};
+pub use simd::PopcountBackend;
 
 /// A bipolar hypervector h ∈ {-1, +1}^d stored as i8 (the accelerator's
 /// SCE consumes sign bits; i8 keeps the functional model simple and

@@ -43,14 +43,24 @@
 //! matrix **blocked over words**: for each word-block of at most
 //! [`BLOCK_WORDS`] words, every prototype slice is matched against every
 //! query slice before the block advances, so the prototype block stays in
-//! L1 while the query blocks stream through exactly once per class. The
-//! inner kernel ([`xor_popcount`]) is a `u64`-chunked, four-lane unrolled
-//! XOR+popcount reduction — independent accumulator lanes with no
-//! loop-carried dependency, the shape the autovectorizer (or a future
-//! `std::arch` specialization) widens into SIMD popcount sequences.
+//! L1 while the query blocks stream through exactly once per class.
 //! Scores and argmax are bit-identical to the single-query
 //! [`PackedPrototypes::classify`], which the property suite enforces.
+//!
+//! # SIMD backend dispatch
+//!
+//! The popcount-shaped inner kernels — XOR+popcount for matching, the
+//! carry-save ripple for the bundle counters — are routed through the
+//! runtime-dispatched [`super::simd::PopcountBackend`] layer (scalar
+//! oracle, AVX2, NEON; `NYSX_FORCE_SCALAR=1` pins the oracle). The plain
+//! entry points (`hamming`, `classify`, `scores_batch_into`,
+//! [`PackedAccumulator::add`], …) use the process-wide
+//! [`super::simd::active`] backend; each has a `*_with` variant taking an
+//! explicit `&dyn PopcountBackend` so differential tests and benches can
+//! compare backends side by side. Every backend is property-tested
+//! bit-identical to scalar here, across dims straddling word boundaries.
 
+use super::simd::{self, PopcountBackend};
 use super::Hypervector;
 
 /// Bits per storage word.
@@ -257,19 +267,26 @@ impl PackedHypervector {
     }
 
     /// Hamming distance: popcount over the XOR. Tail bits are zero in
-    /// both operands, so they contribute nothing.
+    /// both operands, so they contribute nothing. Dispatches to the
+    /// process-wide SIMD backend ([`simd::active`]).
     pub fn hamming(&self, other: &PackedHypervector) -> usize {
+        self.hamming_with(simd::active(), other)
+    }
+
+    /// [`Self::hamming`] on an explicit backend (differential testing).
+    pub fn hamming_with(&self, be: &dyn PopcountBackend, other: &PackedHypervector) -> usize {
         assert_eq!(self.dim, other.dim);
-        self.words
-            .iter()
-            .zip(other.words.iter())
-            .map(|(&a, &b)| (a ^ b).count_ones() as usize)
-            .sum()
+        be.xor_popcount(&self.words, &other.words) as usize
     }
 
     /// Dot-product similarity: `d − 2·hamming` (exact for bipolar).
     pub fn dot(&self, other: &PackedHypervector) -> i64 {
-        self.dim as i64 - 2 * self.hamming(other) as i64
+        self.dot_with(simd::active(), other)
+    }
+
+    /// [`Self::dot`] on an explicit backend (differential testing).
+    pub fn dot_with(&self, be: &dyn PopcountBackend, other: &PackedHypervector) -> i64 {
+        self.dim as i64 - 2 * self.hamming_with(be, other) as i64
     }
 
     /// Cosine similarity in [-1, 1] (bipolar norm is √d).
@@ -333,31 +350,11 @@ fn shr_into(src: &[u64], s: usize, out: &mut [u64]) {
 
 /// Words per cache block in the batch matcher: 512 words = 4 KiB per HV
 /// slice, so a prototype slice plus a handful of query slices fit L1
-/// comfortably while still amortizing the loop overhead.
+/// comfortably while still amortizing the loop overhead. The inner
+/// XOR+popcount over each block pair is a single
+/// [`PopcountBackend::xor_popcount`] call, so per-call dispatch overhead
+/// amortizes over whole blocks.
 const BLOCK_WORDS: usize = 512;
-
-/// XOR+popcount over two equal-length word slices, four independent
-/// accumulator lanes. The lanes carry no cross-iteration dependency, so
-/// the autovectorizer can widen this into SIMD popcount sequences (and a
-/// `std::arch` specialization can drop in without changing call sites).
-#[inline]
-fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut lanes = [0u32; 4];
-    let chunks = a.len() / 4;
-    for k in 0..chunks {
-        let base = k * 4;
-        lanes[0] += (a[base] ^ b[base]).count_ones();
-        lanes[1] += (a[base + 1] ^ b[base + 1]).count_ones();
-        lanes[2] += (a[base + 2] ^ b[base + 2]).count_ones();
-        lanes[3] += (a[base + 3] ^ b[base + 3]).count_ones();
-    }
-    let mut tail = 0u32;
-    for k in chunks * 4..a.len() {
-        tail += (a[k] ^ b[k]).count_ones();
-    }
-    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
-}
 
 /// W query hypervectors stored back-to-back, query-major — the SCE's
 /// batch operand (see the module docs' batch-major matching section).
@@ -475,7 +472,10 @@ pub fn packed_bundle(hvs: &[&PackedHypervector]) -> PackedHypervector {
 /// (`sum = plane ^ carry; carry = plane & carry`) that touches
 /// `⌈log₂ count⌉` words per input word instead of 64 scalar counters —
 /// this is what makes packed bundling beat the i8 accumulator by far
-/// more than the 8× storage factor. Planes grow on demand, so memory is
+/// more than the 8× storage factor. The ripple walks **plane-major**
+/// (one [`PopcountBackend::carry_save_step`] over the whole plane slice
+/// per level), so the SIMD backend widens it the same way it widens the
+/// matching kernels. Planes grow on demand, so memory is
 /// `⌈log₂(n+1)⌉ · ⌈d/64⌉` words per class.
 #[derive(Debug, Clone)]
 pub struct PackedAccumulator {
@@ -486,6 +486,8 @@ pub struct PackedAccumulator {
     /// Per class: concatenated counter planes, each `words` long.
     planes: Vec<Vec<u64>>,
     counts: Vec<usize>,
+    /// Carry scratch for the plane-major ripple (reused across adds).
+    carry: Vec<u64>,
 }
 
 impl PackedAccumulator {
@@ -496,29 +498,37 @@ impl PackedAccumulator {
             words: words_for(dim),
             planes: vec![Vec::new(); num_classes],
             counts: vec![0; num_classes],
+            carry: Vec::new(),
         }
     }
 
+    /// Bundle one HV into `class` on the process-wide SIMD backend.
     pub fn add(&mut self, class: usize, hv: &PackedHypervector) {
+        self.add_with(simd::active(), class, hv);
+    }
+
+    /// [`Self::add`] on an explicit backend (differential testing). The
+    /// counter state after an add is backend-independent — every backend's
+    /// carry-save step is bit-identical to scalar.
+    pub fn add_with(&mut self, be: &dyn PopcountBackend, class: usize, hv: &PackedHypervector) {
         assert!(class < self.num_classes);
         assert_eq!(hv.dim(), self.dim);
         let words = self.words;
+        self.carry.clear();
+        self.carry.extend_from_slice(hv.words());
         let planes = &mut self.planes[class];
-        for (wi, &w) in hv.words().iter().enumerate() {
-            let mut carry = w;
-            let mut p = 0;
-            while carry != 0 {
-                if p * words >= planes.len() {
-                    // Counter overflowed every existing plane: grow by one
-                    // zeroed plane (appending keeps plane p at offset p·words).
-                    planes.resize((p + 1) * words, 0);
-                }
-                let slot = &mut planes[p * words + wi];
-                let old = *slot;
-                *slot = old ^ carry;
-                carry = old & carry;
-                p += 1;
+        // Ripple the incoming bits up the counter planes, one word-parallel
+        // carry-save step per level, until no carry survives.
+        let mut more = self.carry.iter().any(|&c| c != 0);
+        let mut p = 0;
+        while more {
+            if (p + 1) * words > planes.len() {
+                // Counter overflowed every existing plane: grow by one
+                // zeroed plane (appending keeps plane p at offset p·words).
+                planes.resize((p + 1) * words, 0);
             }
+            more = be.carry_save_step(&mut planes[p * words..(p + 1) * words], &mut self.carry);
+            p += 1;
         }
         self.counts[class] += 1;
     }
@@ -588,16 +598,26 @@ impl PackedPrototypes {
 
     /// All class scores s = G h (integer dot products via popcount).
     pub fn scores(&self, hv: &PackedHypervector) -> Vec<i64> {
-        self.prototypes.iter().map(|p| p.dot(hv)).collect()
+        self.scores_with(simd::active(), hv)
+    }
+
+    /// [`Self::scores`] on an explicit backend (differential testing).
+    pub fn scores_with(&self, be: &dyn PopcountBackend, hv: &PackedHypervector) -> Vec<i64> {
+        self.prototypes.iter().map(|p| p.dot_with(be, hv)).collect()
     }
 
     /// Predicted class: argmax similarity, first max wins on ties (the
     /// hardware argmax unit's sequential compare).
     pub fn classify(&self, hv: &PackedHypervector) -> usize {
+        self.classify_with(simd::active(), hv)
+    }
+
+    /// [`Self::classify`] on an explicit backend (differential testing).
+    pub fn classify_with(&self, be: &dyn PopcountBackend, hv: &PackedHypervector) -> usize {
         let mut best = 0usize;
         let mut best_score = i64::MIN;
         for (c, p) in self.prototypes.iter().enumerate() {
-            let s = p.dot(hv);
+            let s = p.dot_with(be, hv);
             if s > best_score {
                 best = c;
                 best_score = s;
@@ -613,9 +633,21 @@ impl PackedPrototypes {
     ///
     /// The walk is cache-blocked over words: within each block of at most
     /// [`BLOCK_WORDS`] words, every prototype slice is matched against
-    /// every query slice ([`xor_popcount`] inner kernel), so G's block is
-    /// read from L1 W times instead of streaming all of G once per query.
+    /// every query slice ([`PopcountBackend::xor_popcount`] inner
+    /// kernel), so G's block is read from L1 W times instead of streaming
+    /// all of G once per query.
     pub fn scores_batch_into(&self, batch: &PackedBatch, out: &mut [i64]) {
+        self.scores_batch_into_with(simd::active(), batch, out)
+    }
+
+    /// [`Self::scores_batch_into`] on an explicit backend (differential
+    /// testing).
+    pub fn scores_batch_into_with(
+        &self,
+        be: &dyn PopcountBackend,
+        batch: &PackedBatch,
+        out: &mut [i64],
+    ) {
         let c = self.num_classes();
         let w = batch.len();
         assert_eq!(out.len(), c * w, "scores buffer must be C x W");
@@ -634,7 +666,7 @@ impl PackedPrototypes {
                 let pw = &proto.words()[w0..w1];
                 for qi in 0..w {
                     let qw = &batch.query_words(qi)[w0..w1];
-                    out[qi * c + ci] += xor_popcount(pw, qw) as i64;
+                    out[qi * c + ci] += be.xor_popcount(pw, qw) as i64;
                 }
             }
             w0 = w1;
@@ -661,6 +693,18 @@ impl PackedPrototypes {
         scores: &mut Vec<i64>,
         preds: &mut Vec<usize>,
     ) {
+        self.classify_batch_into_with(simd::active(), batch, scores, preds)
+    }
+
+    /// [`Self::classify_batch_into`] on an explicit backend (differential
+    /// testing).
+    pub fn classify_batch_into_with(
+        &self,
+        be: &dyn PopcountBackend,
+        batch: &PackedBatch,
+        scores: &mut Vec<i64>,
+        preds: &mut Vec<usize>,
+    ) {
         let c = self.num_classes();
         let w = batch.len();
         scores.clear();
@@ -674,7 +718,7 @@ impl PackedPrototypes {
             preds.resize(w, 0);
             return;
         }
-        self.scores_batch_into(batch, scores);
+        self.scores_batch_into_with(be, batch, scores);
         for qi in 0..w {
             let row = &scores[qi * c..(qi + 1) * c];
             let mut best = 0usize;
@@ -1093,5 +1137,140 @@ mod tests {
         let q = PackedHypervector::random(10_001, &mut rng);
         assert!(p.cosine(&q).abs() < 0.05);
         assert!((p.cosine(&p) - 1.0).abs() < 1e-12);
+    }
+
+    /// THE backend-differential property: every SIMD backend compiled
+    /// into this binary is bit-identical to the scalar oracle on the
+    /// three threaded hot paths — similarity kernels, blocked C×W batch
+    /// scoring, and the carry-save bundle counters through finalize —
+    /// across dims that straddle word boundaries.
+    #[test]
+    fn backends_match_scalar_on_all_kernels() {
+        let scalar = simd::scalar();
+        forall("backend-differential", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size.min(10));
+            let backends = simd::available();
+
+            // Pairwise similarity kernels.
+            let a = PackedHypervector::random(d, rng);
+            let b = PackedHypervector::random(d, rng);
+            let want_ham = a.hamming_with(scalar, &b);
+            for be in &backends {
+                crate::prop_assert!(
+                    a.hamming_with(*be, &b) == want_ham,
+                    "{} hamming differs at d={d}",
+                    be.name()
+                );
+                crate::prop_assert!(
+                    a.dot_with(*be, &b) == a.dot_with(scalar, &b),
+                    "{} dot differs at d={d}",
+                    be.name()
+                );
+            }
+
+            // Bundle counters: identical prototypes whichever backend ran
+            // the carry-save ripple during training.
+            let classes = 1 + rng.gen_range(3);
+            let n = 1 + rng.gen_range(size.max(1) + 5);
+            let members: Vec<(usize, PackedHypervector)> = (0..n)
+                .map(|_| (rng.gen_range(classes), PackedHypervector::random(d, rng)))
+                .collect();
+            let mut scalar_acc = PackedAccumulator::new(classes, d);
+            for (class, hv) in &members {
+                scalar_acc.add_with(scalar, *class, hv);
+            }
+            let want_protos = scalar_acc.finalize();
+            for be in &backends {
+                let mut acc = PackedAccumulator::new(classes, d);
+                for (class, hv) in &members {
+                    acc.add_with(*be, *class, hv);
+                }
+                crate::prop_assert!(
+                    acc.finalize() == want_protos,
+                    "{} accumulator finalize differs at d={d}, n={n}",
+                    be.name()
+                );
+            }
+
+            // Single-query classify and blocked batch scoring.
+            let w = 1 + rng.gen_range(size.max(1) + 4);
+            let mut batch = PackedBatch::new(d);
+            for _ in 0..w {
+                batch.push(&PackedHypervector::random(d, rng));
+            }
+            let mut want_scores = vec![0i64; classes * w];
+            want_protos.scores_batch_into_with(scalar, &batch, &mut want_scores);
+            for be in &backends {
+                let mut got = vec![0i64; classes * w];
+                want_protos.scores_batch_into_with(*be, &batch, &mut got);
+                crate::prop_assert!(
+                    got == want_scores,
+                    "{} batch scores differ at d={d}, w={w}",
+                    be.name()
+                );
+                for qi in 0..w {
+                    let q = batch.get(qi);
+                    crate::prop_assert!(
+                        want_protos.classify_with(*be, &q)
+                            == want_protos.classify_with(scalar, &q),
+                        "{} classify differs at d={d}, q={qi}",
+                        be.name()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Deterministic spot-check of the same three kernels at the fixed
+    /// word-boundary dims (63/64/65, 1000).
+    #[test]
+    fn backends_match_scalar_at_boundary_dims() {
+        let scalar = simd::scalar();
+        let mut rng = Xoshiro256::seed_from_u64(313);
+        for &d in &[63usize, 64, 65, 1000] {
+            let classes = 3;
+            let mut scalar_acc = PackedAccumulator::new(classes, d);
+            let members: Vec<(usize, PackedHypervector)> = (0..11)
+                .map(|i| (i % classes, PackedHypervector::random(d, &mut rng)))
+                .collect();
+            for (class, hv) in &members {
+                scalar_acc.add_with(scalar, *class, hv);
+            }
+            let protos = scalar_acc.finalize();
+            let queries: Vec<PackedHypervector> = (0..5)
+                .map(|_| PackedHypervector::random(d, &mut rng))
+                .collect();
+            let mut batch = PackedBatch::new(d);
+            for q in &queries {
+                batch.push(q);
+            }
+            let mut want = vec![0i64; classes * queries.len()];
+            protos.scores_batch_into_with(scalar, &batch, &mut want);
+            for be in simd::available() {
+                let mut acc = PackedAccumulator::new(classes, d);
+                for (class, hv) in &members {
+                    acc.add_with(be, *class, hv);
+                }
+                assert_eq!(acc.finalize(), protos, "{} finalize d={d}", be.name());
+                let mut got = vec![0i64; classes * queries.len()];
+                protos.scores_batch_into_with(be, &batch, &mut got);
+                assert_eq!(got, want, "{} batch scores d={d}", be.name());
+                for q in &queries {
+                    assert_eq!(
+                        protos.classify_with(be, q),
+                        protos.classify_with(scalar, q),
+                        "{} classify d={d}",
+                        be.name()
+                    );
+                    assert_eq!(
+                        q.hamming_with(be, &queries[0]),
+                        q.hamming_with(scalar, &queries[0]),
+                        "{} hamming d={d}",
+                        be.name()
+                    );
+                }
+            }
+        }
     }
 }

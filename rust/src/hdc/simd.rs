@@ -1,0 +1,456 @@
+//! Runtime-dispatched SIMD backends for the packed popcount kernels.
+//!
+//! Every hot kernel of the bit-packed engine reduces to two word-slice
+//! primitives: XOR+popcount (SCE matching, Hamming/dot) and the
+//! carry-save ripple step of the bit-sliced bundle counters (training).
+//! This module defines them as a [`PopcountBackend`] trait with three
+//! implementations:
+//!
+//! * **scalar** — the portable four-lane `u64::count_ones` kernel that
+//!   shipped with PR 1/2, kept as the in-process oracle every other
+//!   backend must match bit-for-bit;
+//! * **avx2** (x86_64) — a `std::arch` sub-byte-LUT popcount over 256-bit
+//!   lanes (Mula's `vpshufb` nibble table + `vpsadbw` horizontal sums),
+//!   the CPU analogue of the DSP/LUT popcount parallelism the paper's SCE
+//!   exploits;
+//! * **neon** (aarch64) — `vcnt`-based byte popcount over 128-bit lanes.
+//!
+//! # Dispatch rule
+//!
+//! [`active`] picks the backend **once** per process, at first use:
+//! `NYSX_FORCE_SCALAR=1` forces the scalar oracle (the CI matrix runs the
+//! whole test suite under both dispatch outcomes); otherwise x86_64 uses
+//! AVX2 when `is_x86_feature_detected!` confirms it at runtime, aarch64
+//! uses NEON (baseline on that architecture), and anything else falls
+//! back to scalar. Kernels accept an explicit `&dyn PopcountBackend` via
+//! their `*_with` variants so the property suite and the micro benches
+//! can pin a backend regardless of the ambient dispatch; the plain entry
+//! points all delegate to [`active`].
+//!
+//! # Equivalence contract
+//!
+//! Backends are required to be *bit-identical* to scalar (and therefore,
+//! transitively, to the i8 reference oracle) on every input, including
+//! slices whose length is not a multiple of the vector width — each
+//! vector implementation handles the ragged tail with the scalar kernel.
+//! `tests` below and the differential suite in [`super::packed`] enforce
+//! this for every backend compiled into the current binary.
+
+use std::sync::OnceLock;
+
+/// Word-slice popcount kernels. Implementations must be bit-identical to
+/// the scalar oracle; see the module docs for the contract.
+pub trait PopcountBackend: Send + Sync {
+    /// Short stable identifier ("scalar", "avx2", "neon") used by benches,
+    /// test diagnostics and the serve summary.
+    fn name(&self) -> &'static str;
+
+    /// `Σ popcount(a[i] ^ b[i])` over two equal-length word slices — the
+    /// SCE inner kernel (Hamming distance of two packed hypervector
+    /// slices).
+    fn xor_popcount(&self, a: &[u64], b: &[u64]) -> u32;
+
+    /// One carry-save ripple step of the bit-sliced bundle counters:
+    /// `plane' = plane ^ carry; carry' = plane & carry`, word-parallel
+    /// over the slice. Returns `true` iff any carry bit survives (the
+    /// ripple must continue into the next plane).
+    fn carry_save_step(&self, plane: &mut [u64], carry: &mut [u64]) -> bool {
+        scalar_carry_save_step(plane, carry)
+    }
+}
+
+/// The portable scalar backend — the in-process oracle.
+pub struct Scalar;
+
+impl PopcountBackend for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn xor_popcount(&self, a: &[u64], b: &[u64]) -> u32 {
+        scalar_xor_popcount(a, b)
+    }
+}
+
+/// XOR+popcount over two equal-length word slices, four independent
+/// accumulator lanes. The lanes carry no cross-iteration dependency, so
+/// even without an explicit SIMD backend the autovectorizer can widen
+/// this into SIMD popcount sequences.
+fn scalar_xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0u32; 4];
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let base = k * 4;
+        lanes[0] += (a[base] ^ b[base]).count_ones();
+        lanes[1] += (a[base + 1] ^ b[base + 1]).count_ones();
+        lanes[2] += (a[base + 2] ^ b[base + 2]).count_ones();
+        lanes[3] += (a[base + 3] ^ b[base + 3]).count_ones();
+    }
+    let mut tail = 0u32;
+    for k in chunks * 4..a.len() {
+        tail += (a[k] ^ b[k]).count_ones();
+    }
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+}
+
+/// Scalar carry-save ripple step (also the trait's default method, so
+/// vector backends only override it where the win is real).
+fn scalar_carry_save_step(plane: &mut [u64], carry: &mut [u64]) -> bool {
+    debug_assert_eq!(plane.len(), carry.len());
+    let mut any = 0u64;
+    for (p, c) in plane.iter_mut().zip(carry.iter_mut()) {
+        let old = *p;
+        *p = old ^ *c;
+        *c = old & *c;
+        any |= *c;
+    }
+    any != 0
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 sub-byte-LUT popcount (Mula): split each byte of `a ^ b` into
+    //! nibbles, look both up in a 16-entry popcount table with `vpshufb`,
+    //! and horizontally reduce the byte counts into four u64 lanes with
+    //! `vpsadbw` — 256 bits of XOR+popcount per iteration with no
+    //! cross-iteration dependency beyond the wide accumulator.
+
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi64, _mm256_add_epi8, _mm256_and_si256, _mm256_loadu_si256,
+        _mm256_or_si256, _mm256_sad_epu8, _mm256_set1_epi8, _mm256_setzero_si256,
+        _mm256_shuffle_epi8, _mm256_srli_epi16, _mm256_storeu_si256, _mm256_testz_si256,
+        _mm256_xor_si256,
+    };
+
+    use super::PopcountBackend;
+
+    /// Per-nibble popcounts, replicated across both 128-bit halves (the
+    /// `vpshufb` LUT operand).
+    const NIBBLE_POP: [i8; 32] = [
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3,
+        3, 4,
+    ];
+
+    pub struct Avx2;
+
+    impl PopcountBackend for Avx2 {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn xor_popcount(&self, a: &[u64], b: &[u64]) -> u32 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: `Avx2` is only handed out by `native`/`available`
+            // after `is_x86_feature_detected!("avx2")` confirmed support.
+            unsafe { xor_popcount_avx2(a, b) }
+        }
+
+        fn carry_save_step(&self, plane: &mut [u64], carry: &mut [u64]) -> bool {
+            debug_assert_eq!(plane.len(), carry.len());
+            // SAFETY: as above — construction is gated on AVX2 detection.
+            unsafe { carry_save_step_avx2(plane, carry) }
+        }
+    }
+
+    /// Safety: caller must ensure the CPU supports AVX2 and
+    /// `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len();
+        let vecs = n / 4; // four u64 words per 256-bit vector
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let lut = _mm256_loadu_si256(NIBBLE_POP.as_ptr() as *const __m256i);
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        // u64×4 accumulator: each `vpsadbw` contributes ≤ 64 per lane, so
+        // overflow would need > 2^58 words — unreachable.
+        let mut acc = zero;
+        for k in 0..vecs {
+            let va = _mm256_loadu_si256(pa.add(k * 4) as *const __m256i);
+            let vb = _mm256_loadu_si256(pb.add(k * 4) as *const __m256i);
+            let x = _mm256_xor_si256(va, vb);
+            let lo = _mm256_and_si256(x, low_mask);
+            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), low_mask);
+            let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+        }
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut total = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        // Ragged tail (< 4 words): scalar popcount, bit-identical.
+        for k in vecs * 4..n {
+            total += (*pa.add(k) ^ *pb.add(k)).count_ones() as u64;
+        }
+        total as u32
+    }
+
+    /// Safety: caller must ensure the CPU supports AVX2 and
+    /// `plane.len() == carry.len()`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn carry_save_step_avx2(plane: &mut [u64], carry: &mut [u64]) -> bool {
+        let n = plane.len();
+        let vecs = n / 4;
+        let pp = plane.as_mut_ptr();
+        let pc = carry.as_mut_ptr();
+        let mut any = _mm256_setzero_si256();
+        for k in 0..vecs {
+            let vp = _mm256_loadu_si256(pp.add(k * 4) as *const __m256i);
+            let vc = _mm256_loadu_si256(pc.add(k * 4) as *const __m256i);
+            let new_c = _mm256_and_si256(vp, vc);
+            _mm256_storeu_si256(pp.add(k * 4) as *mut __m256i, _mm256_xor_si256(vp, vc));
+            _mm256_storeu_si256(pc.add(k * 4) as *mut __m256i, new_c);
+            any = _mm256_or_si256(any, new_c);
+        }
+        let mut more = _mm256_testz_si256(any, any) == 0;
+        for k in vecs * 4..n {
+            let old = *pp.add(k);
+            let c = *pc.add(k);
+            *pp.add(k) = old ^ c;
+            *pc.add(k) = old & c;
+            more |= (old & c) != 0;
+        }
+        more
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON `vcnt`-based popcount: XOR two 128-bit lanes, count bits per
+    //! byte with `vcnt`, and horizontally reduce with `vaddlv`. The
+    //! carry-save step keeps the scalar default — two bitwise ops per
+    //! word autovectorize trivially on aarch64.
+
+    use std::arch::aarch64::{vaddlvq_u8, vcntq_u8, veorq_u64, vld1q_u64, vreinterpretq_u8_u64};
+
+    use super::PopcountBackend;
+
+    pub struct Neon;
+
+    impl PopcountBackend for Neon {
+        fn name(&self) -> &'static str {
+            "neon"
+        }
+
+        fn xor_popcount(&self, a: &[u64], b: &[u64]) -> u32 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: NEON is a baseline feature of aarch64, the only
+            // architecture this module compiles for.
+            unsafe { xor_popcount_neon(a, b) }
+        }
+    }
+
+    /// Safety: caller must ensure `a.len() == b.len()` (NEON itself is
+    /// baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    unsafe fn xor_popcount_neon(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len();
+        let vecs = n / 2; // two u64 words per 128-bit vector
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut total = 0u64;
+        for k in 0..vecs {
+            let x = veorq_u64(vld1q_u64(pa.add(k * 2)), vld1q_u64(pb.add(k * 2)));
+            total += vaddlvq_u8(vcntq_u8(vreinterpretq_u8_u64(x))) as u64;
+        }
+        // Ragged tail (< 2 words): scalar popcount, bit-identical.
+        for k in vecs * 2..n {
+            total += (*pa.add(k) ^ *pb.add(k)).count_ones() as u64;
+        }
+        total as u32
+    }
+}
+
+/// The scalar oracle as a trait object (handy for differential tests and
+/// benches that compare other backends against it).
+pub fn scalar() -> &'static dyn PopcountBackend {
+    &Scalar
+}
+
+/// Every backend compiled into this binary *and* usable on this host:
+/// scalar first (the oracle), then the vector backend runtime detection
+/// admits, if any. Differential tests iterate this list.
+pub fn available() -> Vec<&'static dyn PopcountBackend> {
+    let mut backends: Vec<&'static dyn PopcountBackend> = vec![&Scalar];
+    let native = native();
+    if native.name() != Scalar.name() {
+        backends.push(native);
+    }
+    backends
+}
+
+/// Interpret the `NYSX_FORCE_SCALAR` value (unset, empty and "0" mean
+/// "use native dispatch"; anything else forces the scalar oracle).
+fn force_scalar_from(value: Option<&str>) -> bool {
+    value.is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Pure dispatch rule, split out from the cached [`active`] so tests can
+/// exercise both outcomes in one process.
+fn select(force_scalar: bool) -> &'static dyn PopcountBackend {
+    if force_scalar {
+        return &Scalar;
+    }
+    native()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn native() -> &'static dyn PopcountBackend {
+    if is_x86_feature_detected!("avx2") {
+        &avx2::Avx2
+    } else {
+        &Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn native() -> &'static dyn PopcountBackend {
+    &neon::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn native() -> &'static dyn PopcountBackend {
+    &Scalar
+}
+
+static ACTIVE: OnceLock<&'static dyn PopcountBackend> = OnceLock::new();
+
+/// The process-wide backend, selected once at first use: scalar when
+/// `NYSX_FORCE_SCALAR=1`, otherwise the best the host supports (see the
+/// module docs). Every plain packed-kernel entry point dispatches here.
+pub fn active() -> &'static dyn PopcountBackend {
+    *ACTIVE.get_or_init(|| {
+        select(force_scalar_from(
+            std::env::var("NYSX_FORCE_SCALAR").ok().as_deref(),
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, PropConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn random_words(rng: &mut Xoshiro256, len: usize) -> Vec<u64> {
+        (0..len).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_first() {
+        let backends = available();
+        assert!(!backends.is_empty());
+        assert_eq!(backends[0].name(), "scalar");
+        // Names are unique — benches key comparisons on them.
+        let names: std::collections::HashSet<_> = backends.iter().map(|b| b.name()).collect();
+        assert_eq!(names.len(), backends.len());
+    }
+
+    #[test]
+    fn dispatch_rule() {
+        // Forcing scalar always yields the oracle...
+        assert_eq!(select(true).name(), "scalar");
+        // ...and native dispatch yields something from the available set.
+        let native = select(false);
+        assert!(available().iter().any(|b| b.name() == native.name()));
+        // The cached process-wide choice is consistent with the rule.
+        assert!(available().iter().any(|b| b.name() == active().name()));
+    }
+
+    #[test]
+    fn force_scalar_env_parsing() {
+        assert!(!force_scalar_from(None));
+        assert!(!force_scalar_from(Some("")));
+        assert!(!force_scalar_from(Some("0")));
+        assert!(force_scalar_from(Some("1")));
+        assert!(force_scalar_from(Some("true")));
+    }
+
+    /// Every available backend matches the scalar oracle on XOR+popcount,
+    /// across lengths that straddle every vector-width boundary (the
+    /// ragged sub-width tails included).
+    #[test]
+    fn xor_popcount_matches_scalar_on_all_backends() {
+        forall("simd-xor-popcount", PropConfig::default(), |rng, size| {
+            let len = rng.gen_range(4 * size.max(1) + 10);
+            let a = random_words(rng, len);
+            let b = random_words(rng, len);
+            let want = scalar().xor_popcount(&a, &b);
+            for be in available() {
+                let got = be.xor_popcount(&a, &b);
+                crate::prop_assert!(
+                    got == want,
+                    "{}: {got} != scalar {want} at len={len}",
+                    be.name()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Every available backend performs the identical carry-save step —
+    /// same planes, same carries, same "ripple continues" flag.
+    #[test]
+    fn carry_save_step_matches_scalar_on_all_backends() {
+        forall("simd-carry-save", PropConfig::default(), |rng, size| {
+            let len = rng.gen_range(4 * size.max(1) + 10);
+            let plane0 = random_words(rng, len);
+            let carry0 = random_words(rng, len);
+            let mut want_plane = plane0.clone();
+            let mut want_carry = carry0.clone();
+            let want_more = scalar().carry_save_step(&mut want_plane, &mut want_carry);
+            for be in available() {
+                let mut plane = plane0.clone();
+                let mut carry = carry0.clone();
+                let more = be.carry_save_step(&mut plane, &mut carry);
+                crate::prop_assert!(
+                    plane == want_plane && carry == want_carry && more == want_more,
+                    "{} carry-save diverged at len={len}",
+                    be.name()
+                );
+            }
+            // The step must preserve the per-word sum plane + 2·carry
+            // (carry-save invariant) — checked once on the oracle output.
+            for i in 0..len {
+                let before = (plane0[i] & carry0[i]).count_ones() * 2
+                    + (plane0[i] ^ carry0[i]).count_ones();
+                let after = want_carry[i].count_ones() * 2 + want_plane[i].count_ones();
+                crate::prop_assert!(
+                    before == after,
+                    "carry-save sum invariant broken at word {i}, len={len}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_slices() {
+        for be in available() {
+            assert_eq!(be.xor_popcount(&[], &[]), 0, "{}", be.name());
+            assert!(!be.carry_save_step(&mut [], &mut []), "{}", be.name());
+            // All-zero carry: planes untouched, ripple stops.
+            let mut plane = vec![0xDEAD_BEEFu64; 5];
+            let mut carry = vec![0u64; 5];
+            assert!(!be.carry_save_step(&mut plane, &mut carry), "{}", be.name());
+            assert_eq!(plane, vec![0xDEAD_BEEFu64; 5], "{}", be.name());
+            assert_eq!(carry, vec![0u64; 5], "{}", be.name());
+        }
+    }
+
+    #[test]
+    fn known_popcounts() {
+        for be in available() {
+            // Single fully-set word against zero: 64 bits differ.
+            assert_eq!(be.xor_popcount(&[u64::MAX], &[0]), 64, "{}", be.name());
+            // Identical slices: zero distance regardless of content.
+            let a: Vec<u64> = (0..9u64).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+            assert_eq!(be.xor_popcount(&a, &a), 0, "{}", be.name());
+            // 5 words of alternating bits vs their complement: 5 × 64.
+            let x = vec![0xAAAA_AAAA_AAAA_AAAAu64; 5];
+            let y = vec![0x5555_5555_5555_5555u64; 5];
+            assert_eq!(be.xor_popcount(&x, &y), 320, "{}", be.name());
+        }
+    }
+}

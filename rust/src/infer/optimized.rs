@@ -12,7 +12,12 @@
 //!   hot path;
 //! * SCE: popcount prototype matching against the packed prototypes +
 //!   argmax (bit-identical to the i8 reference, which
-//!   [`crate::infer::reference`] keeps serving as the oracle).
+//!   [`crate::infer::reference`] keeps serving as the oracle). The
+//!   popcount inner kernels dispatch through the process-wide
+//!   [`crate::hdc::simd`] backend (scalar/AVX2/NEON, selected once at
+//!   startup; `NYSX_FORCE_SCALAR=1` pins the scalar oracle), so the same
+//!   engine runs wide SIMD popcount where the host supports it without
+//!   any change in results.
 //!
 //! All scratch buffers live in [`NysxEngine`], so the per-request hot path
 //! is allocation-free. Every inference also produces an [`InferTrace`] —

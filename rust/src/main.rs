@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   train   --dataset MUTAG [--dpp] [--out model.nysx] [--scale 1.0]
 //!   infer   --model model.nysx --dataset MUTAG [--count 32]
-//!   serve   --dataset MUTAG [--workers 4] [--requests 500] [--dpp]
+//!   serve   --dataset MUTAG [--workers 4] [--requests 500] [--batch 1] [--dpp]
 //!   eval    [--scale 1.0] [--ablation]      # all tables & figures
 //!   roofline
 //!
@@ -15,7 +15,7 @@ use nysx::bench::tables::{
     evaluate_all, render_fig6, render_fig7, render_fig8, render_roofline, render_table3,
     render_table4, render_table6, render_table7, render_table8, EvalConfig,
 };
-use nysx::coordinator::{Server, ServerConfig, SubmitError};
+use nysx::coordinator::{BatcherConfig, Server, ServerConfig, SubmitError};
 use nysx::graph::tudataset::{spec_by_name, TU_SPECS};
 use nysx::model::train::{evaluate, train};
 use nysx::model::ModelConfig;
@@ -122,10 +122,16 @@ fn cmd_infer(args: &Args) {
             e.energy_mj
         );
     }
-    println!(
-        "accuracy on {count} graphs: {:.1}%",
-        100.0 * correct as f64 / count as f64
-    );
+    if count == 0 {
+        // Guard the division: `--count 0` or an empty test split would
+        // otherwise print "NaN%".
+        println!("no graphs evaluated (empty test split or --count 0)");
+    } else {
+        println!(
+            "accuracy on {count} graphs: {:.1}%",
+            100.0 * correct as f64 / count as f64
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) {
@@ -134,10 +140,18 @@ fn cmd_serve(args: &Args) {
     let model = Arc::new(train(&ds, &cfg));
     let workers = args.get_usize("workers", 4);
     let requests = args.get_usize("requests", 500);
+    // Batch-major dispatch: each worker pops up to --batch requests and
+    // runs them as ONE blocked C×W SCE pass (1 = the paper's real-time
+    // edge mode; >1 amortizes prototype traffic across the batch).
+    let batch = args.get_usize("batch", 1).max(1);
     let mut server = Server::start(
         model,
         ServerConfig {
             workers,
+            batcher: BatcherConfig {
+                batch_size: batch,
+                ..Default::default()
+            },
             ..Default::default()
         },
     );
@@ -159,7 +173,7 @@ fn cmd_serve(args: &Args) {
     server.drain();
     let s = server.metrics.summary();
     println!(
-        "served {} requests on {workers} workers\n  host latency  p50={:.0}µs p95={:.0}µs p99={:.0}µs\n  queue wait    p50={:.0}µs p99={:.0}µs\n  sim FPGA      mean={:.3}ms p99={:.3}ms\n  host throughput {:.0} req/s; simulated energy {:.1} mJ total\n  per-worker {:?}",
+        "served {} requests on {workers} workers (batch size {batch})\n  host latency  p50={:.0}µs p95={:.0}µs p99={:.0}µs\n  queue wait    p50={:.0}µs p99={:.0}µs\n  sim FPGA      mean={:.3}ms p99={:.3}ms\n  host throughput {:.0} req/s; simulated energy {:.1} mJ total\n  per-worker {:?}",
         s.requests,
         s.host_us.p50,
         s.host_us.p95,

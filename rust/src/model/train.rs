@@ -119,6 +119,10 @@ pub fn train(dataset: &GraphDataset, config: &ModelConfig) -> NysHdcModel {
     // project-bipolarize-pack path: no i8 (or even f64 y) HV is ever
     // materialized, and the per-bit minus-counters reproduce the i64-sum
     // accumulator bit-for-bit (see `hdc::packed::PackedAccumulator`).
+    // The counter updates ripple plane-major through the runtime-
+    // dispatched SIMD backend (`hdc::simd::active`), which is
+    // bit-identical to scalar by construction, so trained models do not
+    // depend on the host's vector ISA.
     let mut acc = PackedAccumulator::new(dataset.num_classes, config.hv_dim);
     let mut c_buf = vec![0.0f64; s];
     let mut hv_buf = PackedHypervector::zeros(config.hv_dim);

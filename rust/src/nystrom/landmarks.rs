@@ -60,11 +60,33 @@ fn dpp_over_pool(graphs: &[&Graph], pool: &[usize], s: usize, lsh: &LshParams) -
     chosen.into_iter().map(|i| pool[i]).collect()
 }
 
+/// Gain threshold below which the kernel's numerical rank counts as
+/// exhausted. Must dominate the stabilizing `ridge` (1e-9) plus the
+/// cancellation noise of O(1) Cholesky updates, while sitting far below
+/// any meaningful conditional gain on a normalized kernel (diag ≈ 1).
+const GAIN_EPS: f64 = 1e-6;
+
 /// Greedy MAP inference for a k-DPP: iteratively add the item with the
 /// largest conditional determinant gain (Chen et al.'s fast greedy MAP,
 /// O(s²·n) via incremental Cholesky). The kernel must be PSD; a small
 /// ridge keeps the algorithm stable when items are near-duplicates.
+///
+/// When the best remaining gain falls below [`GAIN_EPS`] the kernel's
+/// rank is exhausted: continuing would divide the Cholesky update by
+/// `≈ √ridge` and drive the remaining picks with noise-amplified
+/// garbage. Instead the greedy loop stops and the remaining slots are
+/// filled uniformly (fixed-seed RNG, deterministic for a given `n`) from
+/// the unselected pool, keeping the "exactly `s` distinct indices"
+/// contract.
 pub fn greedy_dpp_map(kernel: &Mat, s: usize) -> Vec<usize> {
+    greedy_dpp_map_with_gains(kernel, s).0
+}
+
+/// [`greedy_dpp_map`] plus the conditional gain of each *greedy* pick
+/// (`gains.len() < s` means the tail of the selection came from the
+/// uniform rank-exhaustion fallback). Exposed for diagnostics and the
+/// rank-deficiency regression tests.
+pub fn greedy_dpp_map_with_gains(kernel: &Mat, s: usize) -> (Vec<usize>, Vec<f64>) {
     let n = kernel.rows;
     assert_eq!(kernel.rows, kernel.cols);
     assert!(s <= n);
@@ -74,6 +96,7 @@ pub fn greedy_dpp_map(kernel: &Mat, s: usize) -> Vec<usize> {
     // cis[t][i] = t-th Cholesky row for candidate i.
     let mut cis: Vec<Vec<f64>> = Vec::with_capacity(s);
     let mut selected: Vec<usize> = Vec::with_capacity(s);
+    let mut gains: Vec<f64> = Vec::with_capacity(s);
     let mut in_set = vec![false; n];
 
     for _ in 0..s {
@@ -86,11 +109,11 @@ pub fn greedy_dpp_map(kernel: &Mat, s: usize) -> Vec<usize> {
                 best = i;
             }
         }
-        if best == usize::MAX {
-            break;
+        if best == usize::MAX || best_gain <= GAIN_EPS {
+            break; // rank exhausted — fall back to the uniform fill below
         }
         let j = best;
-        let dj = d2[j].max(1e-300).sqrt();
+        let dj = best_gain.sqrt();
         // e_i = (K[j][i] - <c_j, c_i>) / d_j for all i.
         let mut e = vec![0.0f64; n];
         for i in 0..n {
@@ -114,8 +137,21 @@ pub fn greedy_dpp_map(kernel: &Mat, s: usize) -> Vec<usize> {
         cis.push(e);
         in_set[j] = true;
         selected.push(j);
+        gains.push(best_gain);
     }
-    selected
+
+    // Rank exhausted before `s` picks: beyond the kernel's span every
+    // remaining item adds (numerically) zero determinant, so any subset
+    // is as good as any other — fill uniformly, deterministically.
+    if selected.len() < s {
+        let mut pool: Vec<usize> = (0..n).filter(|&i| !in_set[i]).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0x5EED_D1CE ^ n as u64);
+        while selected.len() < s {
+            let k = rng.gen_range(pool.len());
+            selected.push(pool.swap_remove(k));
+        }
+    }
+    (selected, gains)
 }
 
 /// Diversity diagnostic: mean pairwise normalized-kernel similarity of a
@@ -181,6 +217,48 @@ mod tests {
         let sel = greedy_dpp_map(&k, 2);
         let c0 = sel.iter().filter(|&&i| i < 5).count();
         assert_eq!(c0, 1, "one per cluster expected: {sel:?}");
+    }
+
+    /// Regression (degenerate-gain blow-up): on a rank-deficient kernel
+    /// with `s > rank`, the old code divided by `√(d2.max(1e-300)) ≈
+    /// 1e-150` once the rank was exhausted and filled the remaining
+    /// slots with noise-driven garbage. Now the greedy loop stops at the
+    /// gain epsilon and the tail comes from a deterministic uniform fill.
+    #[test]
+    fn rank_deficient_kernel_falls_back_to_uniform_fill() {
+        // Two blocks of four exact duplicates → kernel rank 2, s = 6.
+        let n = 8;
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k[(i, j)] = if (i < 4) == (j < 4) { 1.0 } else { 0.0 };
+            }
+        }
+        let (sel, gains) = greedy_dpp_map_with_gains(&k, 6);
+        // Contract: exactly s distinct, in-range indices.
+        assert_eq!(sel.len(), 6);
+        let set: std::collections::HashSet<_> = sel.iter().collect();
+        assert_eq!(set.len(), 6, "duplicate indices: {sel:?}");
+        assert!(sel.iter().all(|&i| i < n));
+        // Exactly rank-many greedy picks, all finite and meaningful; the
+        // rest came from the uniform fill, not from garbage gains.
+        assert_eq!(gains.len(), 2, "gains {gains:?}");
+        assert!(gains.iter().all(|g| g.is_finite() && *g > GAIN_EPS));
+        // The two greedy picks straddle the duplicate blocks.
+        assert_ne!(sel[0] < 4, sel[1] < 4, "greedy picks {sel:?}");
+        // Deterministic, and the plain entry point agrees.
+        assert_eq!(greedy_dpp_map(&k, 6), sel);
+        // s = n still returns everything exactly once.
+        let all = greedy_dpp_map(&k, n);
+        let all_set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(all_set.len(), n);
+        // All-zero kernel: pure uniform fill, contract intact.
+        let zero = Mat::zeros(5, 5);
+        let (zsel, zgains) = greedy_dpp_map_with_gains(&zero, 4);
+        assert_eq!(zsel.len(), 4);
+        assert!(zgains.is_empty(), "zero kernel has no real gains: {zgains:?}");
+        let zset: std::collections::HashSet<_> = zsel.iter().collect();
+        assert_eq!(zset.len(), 4);
     }
 
     #[test]

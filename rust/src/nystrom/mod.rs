@@ -5,6 +5,7 @@ pub mod landmarks;
 pub mod projection;
 
 pub use landmarks::{
-    greedy_dpp_map, mean_pairwise_similarity, select_landmarks, LandmarkStrategy,
+    greedy_dpp_map, greedy_dpp_map_with_gains, mean_pairwise_similarity, select_landmarks,
+    LandmarkStrategy,
 };
 pub use projection::{nystrom_gram_approx, NystromProjection};
