@@ -2,7 +2,9 @@
 //! (Tables 3/4/6/7/8, Figures 6/7/8, the §5.2.5 roofline) on the
 //! synthetic TUDataset suite, writing the report to
 //! `results/full_evaluation.txt` and the per-dataset JSON to
-//! `results/cache/`.
+//! `results/cache/`. The Fig 7 accuracy rows all come from the
+//! `nysx::api::Classifier` dispatch path — NysX, NysHD and GraphHD are
+//! scored by the exact same loop.
 //!
 //!     cargo run --release --example full_evaluation [-- --scale 0.25 --ablation]
 //!
@@ -10,18 +12,31 @@
 //! minutes; the JSON cache makes reruns and the `cargo bench` targets
 //! instant.
 
+use nysx::api::NysxError;
 use nysx::bench::tables::*;
 use nysx::util::cli::Args;
 
 fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<(), NysxError> {
     let args = Args::from_env();
     let cfg = EvalConfig {
-        scale: args.get_f64("scale", EvalConfig::default().scale),
-        seed: args.get_u64("seed", 42),
-        hv_dim: args.get_usize("d", 10_000),
+        scale: args
+            .try_f64("scale", EvalConfig::default().scale)
+            .map_err(NysxError::Config)?,
+        seed: args.try_u64("seed", 42).map_err(NysxError::Config)?,
+        hv_dim: args.try_usize("d", 10_000).map_err(NysxError::Config)?,
         ablation: args.get_bool("ablation"),
     };
-    eprintln!("full evaluation: scale={} seed={} d={}", cfg.scale, cfg.seed, cfg.hv_dim);
+    eprintln!(
+        "full evaluation: scale={} seed={} d={}",
+        cfg.scale, cfg.seed, cfg.hv_dim
+    );
     let t0 = std::time::Instant::now();
     let evals = evaluate_all(&cfg);
 
@@ -49,8 +64,9 @@ fn main() {
     }
     println!("{report}");
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
-    std::fs::create_dir_all(&out).ok();
+    std::fs::create_dir_all(&out)?;
     let path = out.join("full_evaluation.txt");
-    std::fs::write(&path, &report).expect("write report");
+    std::fs::write(&path, &report)?;
     eprintln!("report written to {}", path.display());
+    Ok(())
 }

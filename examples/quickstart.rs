@@ -1,34 +1,37 @@
 //! Quickstart: train a Nyström-HDC classifier on a synthetic TUDataset,
 //! classify the test split, and report accuracy plus simulated edge-FPGA
 //! latency/energy for a single query — the 60-second tour of the public
-//! API.
+//! API (`nysx::api`).
 //!
 //!     cargo run --release --example quickstart
 
-use nysx::graph::tudataset::spec_by_name;
-use nysx::infer::NysxEngine;
-use nysx::model::train::{evaluate, train};
-use nysx::model::ModelConfig;
-use nysx::nystrom::LandmarkStrategy;
+use nysx::api::{NysxError, Pipeline};
 use nysx::sim::{simulate, AcceleratorConfig, PowerModel, SimOptions};
 
 fn main() {
-    // 1. A dataset: MUTAG-like synthetic graphs (Table 4 statistics).
-    let spec = spec_by_name("MUTAG").unwrap();
-    let ds = spec.generate(42);
-    println!("dataset {}: {} train / {} test graphs", ds.name, ds.train.len(), ds.test.len());
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+}
 
-    // 2. Train NysX: hybrid Uniform+DPP landmark selection (Alg. 2) at
-    //    the reduced landmark budget, d = 10^4 bipolar HVs.
-    let cfg = ModelConfig {
-        hops: spec.hops,
-        hv_dim: 10_000,
-        num_landmarks: spec.s_dpp,
-        strategy: LandmarkStrategy::HybridDpp { pool_factor: 2 },
-        ..ModelConfig::default()
-    };
+fn run() -> Result<(), NysxError> {
+    // 1+2. Build and train through the facade: MUTAG-like synthetic
+    //    graphs (Table 4 statistics), hybrid Uniform+DPP landmark
+    //    selection (Alg. 2) at the reduced budget — the builder default —
+    //    and d = 10^4 bipolar HVs.
     let t0 = std::time::Instant::now();
-    let model = train(&ds, &cfg);
+    let mut pipeline = Pipeline::for_dataset("MUTAG")?
+        .hv_dim(10_000)
+        .seed(42)
+        .train()?;
+    let model = pipeline.model().clone();
+    println!(
+        "dataset {}: {} train / {} test graphs",
+        pipeline.dataset().name,
+        pipeline.dataset().train.len(),
+        pipeline.dataset().test.len()
+    );
     println!(
         "trained in {:.1}s: s={} landmarks, {} hop codebooks, P_nys {}x{}",
         t0.elapsed().as_secs_f64(),
@@ -39,11 +42,14 @@ fn main() {
     );
 
     // 3. Accuracy (Fig 7 metric).
-    println!("test accuracy: {:.1}%", 100.0 * evaluate(&model, &ds.test));
+    match pipeline.evaluate() {
+        Some(acc) => println!("test accuracy: {:.1}%", 100.0 * acc),
+        None => println!("test accuracy: n/a (empty test split)"),
+    }
 
-    // 4. One inference through the optimized engine, with the ZCU104
-    //    cycle model attached (Table 6/7 metrics).
-    let mut engine = NysxEngine::new(&model);
+    // 4. One inference through the owned engine, with the ZCU104 cycle
+    //    model attached (Table 6/7 metrics).
+    let (ds, engine) = pipeline.parts();
     let (graph, label) = &ds.test[0];
     let result = engine.infer(graph);
     let accel = AcceleratorConfig::zcu104();
@@ -71,4 +77,5 @@ fn main() {
         mem.total_dense() as f64 / 1048576.0,
         100.0 * mem.p_nys_fraction()
     );
+    Ok(())
 }

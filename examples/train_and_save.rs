@@ -1,58 +1,71 @@
 //! Train both model variants (NysHD uniform, NysX hybrid-DPP) on one
-//! dataset, persist them with the binary model format, reload, and verify
-//! behavioural equality — the offline half of the deployment story.
+//! dataset, persist them with the binary model format, reload through
+//! the facade, and verify behavioural equality — the offline half of the
+//! deployment story. An unknown dataset name, a malformed flag, or a
+//! corrupt artifact surfaces as a typed `NysxError`, not a panic.
 //!
 //!     cargo run --release --example train_and_save -- --dataset COX2
 
-use nysx::infer::NysxEngine;
-use nysx::model::io::{load_file, save_file};
-use nysx::model::train::{evaluate, train};
-use nysx::model::ModelConfig;
+use std::path::Path;
+
+use nysx::api::{NysxError, Pipeline};
 use nysx::nystrom::LandmarkStrategy;
 use nysx::util::cli::Args;
 
 fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<(), NysxError> {
     let args = Args::from_env();
     let name = args.get_or("dataset", "COX2");
-    let scale = args.get_f64("scale", 1.0);
-    let spec = nysx::graph::tudataset::spec_by_name(name).expect("unknown dataset");
-    let (ds, s_uni, s_dpp) = spec.generate_scaled(42, scale);
+    let scale = args.try_f64("scale", 1.0).map_err(NysxError::Config)?;
 
-    let out_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results/models");
-    std::fs::create_dir_all(&out_dir).expect("mkdir");
+    let out_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("results/models");
+    std::fs::create_dir_all(&out_dir)?;
 
-    for (tag, s, strategy) in [
-        ("nyshd", s_uni, LandmarkStrategy::Uniform),
-        ("nysx", s_dpp, LandmarkStrategy::HybridDpp { pool_factor: 2 }),
+    for (tag, strategy) in [
+        ("nyshd", LandmarkStrategy::Uniform),
+        ("nysx", LandmarkStrategy::HybridDpp { pool_factor: 2 }),
     ] {
-        let cfg = ModelConfig {
-            hops: spec.hops,
-            hv_dim: 10_000,
-            num_landmarks: s,
-            strategy,
-            ..ModelConfig::default()
-        };
         let t0 = std::time::Instant::now();
-        let model = train(&ds, &cfg);
-        let acc = evaluate(&model, &ds.test);
-        let path = out_dir.join(format!("{}_{tag}.nysx", ds.name.to_lowercase()));
-        save_file(&model, &path).expect("save");
-        let bytes = std::fs::metadata(&path).unwrap().len();
+        let mut trained = Pipeline::for_dataset(name)?
+            .scale(scale)
+            .seed(42)
+            .hv_dim(10_000)
+            .landmarks(strategy)
+            .train()?;
+        let acc = trained.evaluate();
+        let train_secs = t0.elapsed().as_secs_f64();
+        let path = out_dir.join(format!(
+            "{}_{tag}.nysx",
+            trained.dataset().name.to_lowercase()
+        ));
+        trained.save(&path)?;
+        let bytes = std::fs::metadata(&path)?.len();
         println!(
-            "{tag:>6}: s={s:<4} acc={:.1}%  train {:.1}s  artifact {:.1} MB -> {}",
-            100.0 * acc,
-            t0.elapsed().as_secs_f64(),
+            "{tag:>6}: s={:<4} acc={}  train {train_secs:.1}s  artifact {:.1} MB -> {}",
+            trained.model().s(),
+            acc.map_or("n/a".to_string(), |a| format!("{:.1}%", 100.0 * a)),
             bytes as f64 / 1048576.0,
             path.display()
         );
 
-        // Reload and verify bit-identical inference.
-        let back = load_file(&path).expect("load");
-        let mut e1 = NysxEngine::new(&model);
-        let mut e2 = NysxEngine::new(&back);
+        // Reload through the facade and verify bit-identical inference.
+        // `reload` reuses this pipeline's dataset (no regeneration).
+        let mut back = trained.reload(&path)?;
+        let (ds, engine) = trained.parts();
         for (g, _) in ds.test.iter().take(16) {
-            assert_eq!(e1.infer(g).hv, e2.infer(g).hv, "roundtrip changed the model");
+            assert_eq!(
+                engine.infer(g).hv,
+                back.infer(g).hv,
+                "roundtrip changed the model"
+            );
         }
         println!("        reload verified: bit-identical HVs on 16 queries");
     }
+    Ok(())
 }

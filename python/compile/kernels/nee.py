@@ -3,7 +3,7 @@
 The FPGA streams ``P_nys`` (d×s FP32) from DDR through a 512-bit AXI port
 into 16 MAC lanes, with the similarity vector ``C`` resident on chip and
 ``sign()`` fused into the accumulator drain. The TPU-shaped analogue
-(DESIGN.md §Hardware-Adaptation):
+(DESIGN.md §5, "Hardware adaptation"):
 
 * ``P_nys`` lives in HBM (the "DDR"); a ``BlockSpec`` of ``(BLOCK_D, s)``
   tiles it into VMEM — the HBM→VMEM block copy plays the AXI burst + FIFO
@@ -17,7 +17,7 @@ into 16 MAC lanes, with the similarity vector ``C`` resident on chip and
 
 ``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
 custom-calls; real-TPU perf is estimated from the VMEM footprint + lane
-utilization recorded in DESIGN.md §Perf.
+utilization notes in DESIGN.md §5.
 """
 
 import functools
@@ -28,7 +28,7 @@ from jax.experimental import pallas as pl
 
 # Rows of P_nys per VMEM block. 256 rows × s=512 × 4B = 512 KiB blocks —
 # two in flight fit comfortably in 16 MiB VMEM while amortizing copy
-# startup; a multiple of 8 sublanes. (Perf log: EXPERIMENTS.md §Perf L1.)
+# startup; a multiple of 8 sublanes. (Perf notes: DESIGN.md §5.)
 DEFAULT_BLOCK_D = 256
 
 

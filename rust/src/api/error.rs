@@ -1,0 +1,147 @@
+//! The crate-wide error type: every fallible user-input boundary —
+//! dataset lookup, model (de)serialization, configuration validation,
+//! serving submission — reports a [`NysxError`] instead of panicking.
+//!
+//! Internal invariants (scratch-buffer sizing, bit-identity between the
+//! packed and i8 paths, schedule-table consistency) remain `assert!`s:
+//! violating them is a bug in this crate, not bad input.
+
+use std::fmt;
+
+use crate::coordinator::SubmitError;
+
+/// Why an API call failed.
+///
+/// Constructed by [`crate::api::Pipeline`], [`crate::model::io`],
+/// [`crate::coordinator::Server::try_start`], and the
+/// [`crate::api::Classifier`] implementations.
+#[derive(Debug)]
+pub enum NysxError {
+    /// A configuration value is invalid (zero hops, zero workers, a
+    /// non-finite LSH width, more landmarks than training graphs, ...).
+    Config(String),
+    /// The requested dataset name matches no synthetic TUDataset spec.
+    UnknownDataset {
+        /// The name that failed to resolve.
+        name: String,
+        /// The names that would have resolved, for the error message.
+        available: Vec<&'static str>,
+    },
+    /// A model artifact failed to decode: wrong magic, truncation, a
+    /// corrupt length prefix, or an internal inconsistency. `offset` is
+    /// the byte position in the stream where decoding stopped.
+    ModelFormat {
+        /// Bytes consumed from the stream before the failure.
+        offset: u64,
+        /// What the decoder was doing and why it gave up.
+        detail: String,
+    },
+    /// A plain I/O failure outside the decoder (opening or creating the
+    /// artifact file, writing the serialized bytes).
+    Io(std::io::Error),
+    /// The serving stack rejected a submission because every queue is at
+    /// capacity. Retryable: drain a response and resubmit.
+    Backpressure,
+    /// The serving stack has shut down; resubmitting can never succeed.
+    Closed,
+}
+
+impl NysxError {
+    /// Shorthand for a [`NysxError::Config`] with a formatted message.
+    pub fn config(msg: impl Into<String>) -> Self {
+        NysxError::Config(msg.into())
+    }
+
+    /// True when retrying the same call later could succeed (currently
+    /// only serving backpressure).
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, NysxError::Backpressure)
+    }
+}
+
+impl fmt::Display for NysxError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NysxError::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            NysxError::UnknownDataset { name, available } => write!(
+                f,
+                "unknown dataset {name:?} (available: {})",
+                available.join(", ")
+            ),
+            NysxError::ModelFormat { offset, detail } => {
+                write!(f, "model format error at byte {offset}: {detail}")
+            }
+            NysxError::Io(e) => write!(f, "i/o error: {e}"),
+            NysxError::Backpressure => {
+                write!(f, "serving backpressure: all queues at capacity (retryable)")
+            }
+            NysxError::Closed => write!(f, "serving stack is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for NysxError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NysxError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for NysxError {
+    fn from(e: std::io::Error) -> Self {
+        NysxError::Io(e)
+    }
+}
+
+/// The serving submit error maps onto the API error by dropping the
+/// returned graph: facade callers that want the graph back for a retry
+/// loop use [`crate::coordinator::Server::submit`] directly.
+impl From<SubmitError> for NysxError {
+    fn from(e: SubmitError) -> Self {
+        match e {
+            SubmitError::Backpressure(_) => NysxError::Backpressure,
+            SubmitError::Closed(_) => NysxError::Closed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_mentions_the_payload() {
+        let e = NysxError::UnknownDataset {
+            name: "NOPE".into(),
+            available: vec!["MUTAG", "NCI1"],
+        };
+        let s = e.to_string();
+        assert!(s.contains("NOPE") && s.contains("MUTAG"), "{s}");
+
+        let e = NysxError::ModelFormat {
+            offset: 1234,
+            detail: "bad magic".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("1234") && s.contains("bad magic"), "{s}");
+    }
+
+    #[test]
+    fn submit_error_conversion_preserves_retryability() {
+        let g = crate::graph::Graph::from_edges(2, &[(0, 1)], &[0, 0], 1);
+        let bp: NysxError = SubmitError::Backpressure(g.clone()).into();
+        assert!(bp.is_retryable());
+        let closed: NysxError = SubmitError::Closed(g).into();
+        assert!(!closed.is_retryable());
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: NysxError = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -1,0 +1,233 @@
+//! The crate's front door: typed errors, the pipeline builder, and the
+//! backend-agnostic [`Classifier`] trait.
+//!
+//! Everything a consumer needs sits behind three names:
+//!
+//! * [`NysxError`] — the crate-wide error type. Every user-input boundary
+//!   (dataset lookup, model files, configuration, serving submission)
+//!   returns it instead of panicking.
+//! * [`Pipeline`] / [`TrainedPipeline`] — the builder chain
+//!   `Pipeline::for_dataset("MUTAG")?.hv_dim(10_000).seed(42).train()?`
+//!   yielding an owned handle with `infer`, `infer_batch`, `evaluate`,
+//!   `save`, and `serve` — no `'m` borrow to juggle.
+//! * [`Classifier`] — one interface over every backend: the packed
+//!   [`NysxEngine`], the verbatim i8 Algorithm-1 oracle
+//!   ([`ReferenceClassifier`]), the GraphHD / NysHD baselines, and the
+//!   coordinator-backed [`ServedClassifier`]. The paper's Fig. 7 / Table
+//!   4 comparisons (and this repo's bench tables and differential suite)
+//!   drive all of them through this trait, so every number in a
+//!   head-to-head table comes from the same dispatch path.
+//!
+//! ```no_run
+//! use nysx::api::{Classifier, Pipeline};
+//! use nysx::nystrom::LandmarkStrategy;
+//!
+//! # fn main() -> Result<(), nysx::api::NysxError> {
+//! let mut pipeline = Pipeline::for_dataset("MUTAG")?
+//!     .hv_dim(10_000)
+//!     .landmarks(LandmarkStrategy::HybridDpp { pool_factor: 2 })
+//!     .seed(42)
+//!     .train()?;
+//! let accuracy = pipeline.evaluate();
+//! let mut serving = pipeline.serve(Default::default())?;
+//! let (graph, _) = &pipeline.dataset().test[0];
+//! let predicted = serving.classify(graph)?;
+//! # let _ = (accuracy, predicted);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod error;
+pub mod pipeline;
+
+pub use error::NysxError;
+pub use pipeline::{Pipeline, ServeHandle, ServedClassifier, TrainedPipeline};
+
+use std::borrow::Borrow;
+
+use crate::baselines::GraphHdModel;
+use crate::graph::Graph;
+use crate::infer::{infer_reference, NysxEngine};
+use crate::model::NysHdcModel;
+
+/// A graph classification backend.
+///
+/// `&mut self` because most backends keep reusable scratch (the packed
+/// engine) or per-call state (the serving round trip); stateless
+/// backends simply ignore the mutability. Errors only arise from
+/// backends with a fallible transport (serving); in-process backends
+/// always return `Ok`.
+pub trait Classifier {
+    /// Short stable name for report rows ("nysx", "graphhd", ...).
+    fn name(&self) -> &'static str;
+
+    /// Classify one graph.
+    fn classify(&mut self, graph: &Graph) -> Result<usize, NysxError>;
+
+    /// Classify a batch. Backends with a real batch path (blocked C×W
+    /// matching, batched serving dispatch) override this; the default
+    /// loops over [`Classifier::classify`].
+    fn classify_batch(&mut self, graphs: &[&Graph]) -> Result<Vec<usize>, NysxError> {
+        graphs.iter().map(|g| self.classify(g)).collect()
+    }
+}
+
+/// Forward through mutable references so call sites can build
+/// `[&mut dyn Classifier]` sweeps over backends they still own.
+impl<C: Classifier + ?Sized> Classifier for &mut C {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn classify(&mut self, graph: &Graph) -> Result<usize, NysxError> {
+        (**self).classify(graph)
+    }
+
+    fn classify_batch(&mut self, graphs: &[&Graph]) -> Result<Vec<usize>, NysxError> {
+        (**self).classify_batch(graphs)
+    }
+}
+
+/// The optimized packed engine is the production classifier: single
+/// queries ride the fused project-bipolarize-pack + popcount SCE,
+/// batches the blocked C×W matcher.
+impl<M: Borrow<NysHdcModel>> Classifier for NysxEngine<M> {
+    fn name(&self) -> &'static str {
+        "nysx"
+    }
+
+    fn classify(&mut self, graph: &Graph) -> Result<usize, NysxError> {
+        Ok(self.infer(graph).predicted)
+    }
+
+    fn classify_batch(&mut self, graphs: &[&Graph]) -> Result<Vec<usize>, NysxError> {
+        Ok(self
+            .infer_batch(graphs)
+            .into_iter()
+            .map(|r| r.predicted)
+            .collect())
+    }
+}
+
+/// The verbatim i8 Algorithm-1 oracle behind the [`Classifier`]
+/// interface, so differential suites can drive "reference vs optimized"
+/// through one dispatch path.
+pub struct ReferenceClassifier<M: Borrow<NysHdcModel>>(pub M);
+
+impl<M: Borrow<NysHdcModel>> Classifier for ReferenceClassifier<M> {
+    fn name(&self) -> &'static str {
+        "nysx-i8-reference"
+    }
+
+    fn classify(&mut self, graph: &Graph) -> Result<usize, NysxError> {
+        Ok(infer_reference(self.0.borrow(), graph).0)
+    }
+}
+
+/// The topology-only GraphHD baseline (packed encode + popcount match).
+impl Classifier for GraphHdModel {
+    fn name(&self) -> &'static str {
+        "graphhd"
+    }
+
+    fn classify(&mut self, graph: &Graph) -> Result<usize, NysxError> {
+        Ok(GraphHdModel::classify(self, graph))
+    }
+}
+
+/// Accuracy of any [`Classifier`] over a labeled split, batched through
+/// [`Classifier::classify_batch`]. `Ok(None)` on an empty split;
+/// transport errors (serving backends) propagate.
+pub fn accuracy(
+    classifier: &mut dyn Classifier,
+    split: &[(Graph, usize)],
+) -> Result<Option<f64>, NysxError> {
+    if split.is_empty() {
+        return Ok(None);
+    }
+    const BATCH: usize = 64;
+    let mut correct = 0usize;
+    for chunk in split.chunks(BATCH) {
+        let graphs: Vec<&Graph> = chunk.iter().map(|(g, _)| g).collect();
+        let preds = classifier.classify_batch(&graphs)?;
+        correct += preds
+            .iter()
+            .zip(chunk)
+            .filter(|(p, (_, y))| **p == *y)
+            .count();
+    }
+    Ok(Some(correct as f64 / split.len() as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::train_graphhd;
+    use crate::graph::tudataset::spec_by_name;
+    use crate::model::train::train;
+    use crate::model::ModelConfig;
+
+    fn trained() -> (crate::graph::GraphDataset, NysHdcModel) {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(91, 0.25);
+        let cfg = ModelConfig {
+            hops: 3,
+            // Off a 64 boundary: tail words live through the trait too.
+            hv_dim: 1000,
+            num_landmarks: 10,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        (ds, model)
+    }
+
+    /// The inference equivalence property driven through the trait: the
+    /// packed engine and the i8 oracle must agree graph by graph AND
+    /// batch by batch when both are behind `dyn Classifier`.
+    #[test]
+    fn packed_vs_i8_equivalence_through_the_trait() {
+        let (ds, model) = trained();
+        let mut engine = NysxEngine::new(&model);
+        let mut oracle = ReferenceClassifier(&model);
+        let backends: [&mut dyn Classifier; 2] = [&mut engine, &mut oracle];
+        let mut all_preds: Vec<Vec<usize>> = Vec::new();
+        for backend in backends {
+            let graphs: Vec<&Graph> = ds.test.iter().map(|(g, _)| g).collect();
+            let batched = backend.classify_batch(&graphs).expect("in-process backend");
+            let singles: Vec<usize> = graphs
+                .iter()
+                .map(|g| backend.classify(g).expect("in-process backend"))
+                .collect();
+            assert_eq!(batched, singles, "{}: batch != single", backend.name());
+            all_preds.push(batched);
+        }
+        assert_eq!(
+            all_preds[0], all_preds[1],
+            "packed engine != i8 oracle through the Classifier trait"
+        );
+    }
+
+    /// Baselines ride the same interface; accuracy() must agree with the
+    /// backend-specific evaluation helpers bit for bit.
+    #[test]
+    fn accuracy_matches_backend_specific_evaluators() {
+        let (ds, model) = trained();
+        let mut engine = NysxEngine::new(&model);
+        assert_eq!(
+            accuracy(&mut engine, &ds.test).unwrap(),
+            crate::model::train::evaluate(&model, &ds.test),
+            "trait-driven accuracy != evaluate()"
+        );
+
+        let ghd = train_graphhd(&ds, 512, 7);
+        let want = crate::baselines::evaluate_graphhd(&ghd, &ds.test);
+        let mut ghd = ghd;
+        assert_eq!(
+            accuracy(&mut ghd, &ds.test).unwrap(),
+            Some(want),
+            "trait-driven GraphHD accuracy != evaluate_graphhd()"
+        );
+
+        assert_eq!(accuracy(&mut engine, &[]).unwrap(), None);
+    }
+}

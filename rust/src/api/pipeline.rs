@@ -1,0 +1,545 @@
+//! The typed pipeline builder and the owned handles it yields.
+//!
+//! [`Pipeline`] validates every piece of user input (dataset name,
+//! dimensions, landmark budget vs training-set size) before any heavy
+//! work; [`TrainedPipeline`] owns the trained model behind an
+//! `Arc<NysHdcModel>` plus a ready packed engine, so callers get
+//! `infer` / `infer_batch` / `evaluate` / `save` / `serve` without ever
+//! touching the engine's borrow parameter; [`ServeHandle`] wraps the
+//! running coordinator and doubles as the coordinator-backed
+//! [`ServedClassifier`].
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use super::error::NysxError;
+use super::Classifier;
+use crate::coordinator::{MetricsSummary, Response, Server, ServerConfig, SubmitError};
+use crate::graph::tudataset::{spec_by_name, TuSpec, TU_SPECS};
+use crate::graph::{Graph, GraphDataset};
+use crate::infer::{InferenceResult, NysxEngine};
+use crate::model::{io as model_io, ModelConfig, NysHdcModel};
+use crate::nystrom::LandmarkStrategy;
+
+/// Scale is consumed by `generate_scaled` as a multiplier on split
+/// sizes; anything non-finite or non-positive is meaningless, and an
+/// absurdly large value would saturate the split arithmetic and abort
+/// on allocation — cap it like every other knob (paper scale is 1.0;
+/// 100x the paper's largest dataset is already ~350k graphs).
+fn check_scale(scale: f64) -> Result<(), NysxError> {
+    if scale.is_finite() && scale > 0.0 && scale <= 100.0 {
+        Ok(())
+    } else {
+        Err(NysxError::Config(format!(
+            "scale must be in (0, 100], got {scale}"
+        )))
+    }
+}
+
+/// A loaded artifact must match the dataset the pipeline evaluates on.
+fn check_dataset_match(model: &NysHdcModel, expected: &str, path: &Path) -> Result<(), NysxError> {
+    if model.dataset_name.eq_ignore_ascii_case(expected) {
+        Ok(())
+    } else {
+        Err(NysxError::Config(format!(
+            "model at {} was trained on {:?}, pipeline is for {expected:?}",
+            path.display(),
+            model.dataset_name
+        )))
+    }
+}
+
+/// Builder for a training (or model-loading) run on one synthetic
+/// TUDataset. Construct with [`Pipeline::for_dataset`]; finish with
+/// [`Pipeline::train`] or [`Pipeline::load`].
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    spec: &'static TuSpec,
+    scale: f64,
+    seed: u64,
+    hv_dim: usize,
+    hops: Option<usize>,
+    strategy: LandmarkStrategy,
+    num_landmarks: Option<usize>,
+}
+
+impl Pipeline {
+    /// Start a pipeline on a named dataset. The name is the first
+    /// user-input boundary: an unknown name is a typed
+    /// [`NysxError::UnknownDataset`] listing what would have matched.
+    pub fn for_dataset(name: &str) -> Result<Self, NysxError> {
+        let spec = spec_by_name(name).ok_or_else(|| NysxError::UnknownDataset {
+            name: name.to_string(),
+            available: TU_SPECS.iter().map(|s| s.name).collect(),
+        })?;
+        Ok(Self {
+            spec,
+            scale: 1.0,
+            seed: 42,
+            hv_dim: 10_000,
+            hops: None,
+            strategy: LandmarkStrategy::HybridDpp { pool_factor: 2 },
+            num_landmarks: None,
+        })
+    }
+
+    /// Dataset scale factor (1.0 = paper-size splits).
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Master seed for dataset generation and training.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// HV dimensionality d (default: the paper's 10^4).
+    pub fn hv_dim(mut self, d: usize) -> Self {
+        self.hv_dim = d;
+        self
+    }
+
+    /// Propagation hops H (default: the dataset spec's value).
+    pub fn hops(mut self, hops: usize) -> Self {
+        self.hops = Some(hops);
+        self
+    }
+
+    /// Landmark selection strategy. Unless [`Pipeline::num_landmarks`]
+    /// overrides it, the budget follows the strategy: `Uniform` uses the
+    /// spec's NysHD budget `s_uniform`, DPP strategies the reduced
+    /// `s_dpp`.
+    pub fn landmarks(mut self, strategy: LandmarkStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Explicit landmark count s, overriding the strategy default.
+    pub fn num_landmarks(mut self, s: usize) -> Self {
+        self.num_landmarks = Some(s);
+        self
+    }
+
+    /// Generate the dataset and the validated [`ModelConfig`].
+    fn materialize(&self) -> Result<(GraphDataset, ModelConfig), NysxError> {
+        check_scale(self.scale)?;
+        let (ds, s_uni, s_dpp) = self.spec.generate_scaled(self.seed, self.scale);
+        let num_landmarks = self.num_landmarks.unwrap_or_else(|| match self.strategy {
+            LandmarkStrategy::Uniform => s_uni,
+            _ => s_dpp,
+        });
+        let cfg = ModelConfig {
+            hops: self.hops.unwrap_or(self.spec.hops),
+            hv_dim: self.hv_dim,
+            num_landmarks,
+            strategy: self.strategy,
+            seed: self.seed,
+            ..ModelConfig::default()
+        };
+        cfg.validate()?;
+        if cfg.num_landmarks > ds.train.len() {
+            return Err(NysxError::Config(format!(
+                "num_landmarks = {} exceeds the {}-graph training split of {} at scale {}",
+                cfg.num_landmarks,
+                ds.train.len(),
+                self.spec.name,
+                self.scale
+            )));
+        }
+        Ok((ds, cfg))
+    }
+
+    /// Train a model on the generated dataset.
+    pub fn train(self) -> Result<TrainedPipeline, NysxError> {
+        let (ds, cfg) = self.materialize()?;
+        let model = Arc::new(crate::model::train::train(&ds, &cfg));
+        Ok(TrainedPipeline::from_parts(model, ds))
+    }
+
+    /// Load a model artifact instead of training. The builder's dataset
+    /// spec, seed and scale still generate the split that
+    /// [`TrainedPipeline::evaluate`] scores against; the artifact itself
+    /// defines the model hyper-parameters (the builder's `hv_dim` /
+    /// `landmarks` settings do not apply). Loading an artifact trained on
+    /// a different dataset is a typed error.
+    pub fn load(self, path: &Path) -> Result<TrainedPipeline, NysxError> {
+        check_scale(self.scale)?;
+        let model = model_io::load_file(path)?;
+        check_dataset_match(&model, self.spec.name, path)?;
+        let (ds, _, _) = self.spec.generate_scaled(self.seed, self.scale);
+        Ok(TrainedPipeline::from_parts(Arc::new(model), ds))
+    }
+}
+
+/// A trained model plus its dataset and a ready packed engine, fully
+/// owned — the facade's working handle.
+pub struct TrainedPipeline {
+    model: Arc<NysHdcModel>,
+    dataset: GraphDataset,
+    engine: NysxEngine,
+}
+
+impl TrainedPipeline {
+    fn from_parts(model: Arc<NysHdcModel>, dataset: GraphDataset) -> Self {
+        let engine = NysxEngine::new(model.clone());
+        Self {
+            model,
+            dataset,
+            engine,
+        }
+    }
+
+    /// The trained model (shareable: `serve` and extra classifiers clone
+    /// this `Arc`).
+    pub fn model(&self) -> &Arc<NysHdcModel> {
+        &self.model
+    }
+
+    /// The generated dataset this pipeline trained (or evaluates) on.
+    pub fn dataset(&self) -> &GraphDataset {
+        &self.dataset
+    }
+
+    /// Split borrows for loops that read the dataset while inferring:
+    /// `let (ds, engine) = pipeline.parts();` hands out the dataset and
+    /// the engine disjointly, so iterating `ds.test` while calling
+    /// `engine.infer` borrow-checks.
+    pub fn parts(&mut self) -> (&GraphDataset, &mut NysxEngine) {
+        (&self.dataset, &mut self.engine)
+    }
+
+    /// Full Algorithm 1 on one graph through the owned packed engine.
+    pub fn infer(&mut self, graph: &Graph) -> InferenceResult {
+        self.engine.infer(graph)
+    }
+
+    /// Batched Algorithm 1 (one blocked C×W SCE dispatch per call).
+    pub fn infer_batch(&mut self, graphs: &[&Graph]) -> Vec<InferenceResult> {
+        self.engine.infer_batch(graphs)
+    }
+
+    /// Accuracy on the dataset's test split (`None` if it is empty).
+    pub fn evaluate(&mut self) -> Option<f64> {
+        // The owned engine cannot fail transport-wise; collapse Result.
+        super::accuracy(&mut self.engine, &self.dataset.test).unwrap_or(None)
+    }
+
+    /// Accuracy on an arbitrary labeled split.
+    pub fn evaluate_split(&mut self, split: &[(Graph, usize)]) -> Option<f64> {
+        super::accuracy(&mut self.engine, split).unwrap_or(None)
+    }
+
+    /// Persist the model artifact (current v2 format).
+    pub fn save(&self, path: &Path) -> Result<(), NysxError> {
+        model_io::save_file(&self.model, path).map_err(NysxError::Io)
+    }
+
+    /// Start the serving coordinator over this model.
+    pub fn serve(&self, cfg: ServerConfig) -> Result<ServeHandle, NysxError> {
+        Ok(ServeHandle {
+            server: Server::try_start(self.model.clone(), cfg)?,
+            pending: HashMap::new(),
+        })
+    }
+
+    /// Load a saved artifact against THIS pipeline's dataset — no
+    /// dataset regeneration, unlike [`Pipeline::load`]. The go-to for
+    /// save/reload verification and A/B comparisons on one split.
+    pub fn reload(&self, path: &Path) -> Result<TrainedPipeline, NysxError> {
+        let model = model_io::load_file(path)?;
+        check_dataset_match(&model, &self.dataset.name, path)?;
+        Ok(TrainedPipeline::from_parts(
+            Arc::new(model),
+            self.dataset.clone(),
+        ))
+    }
+
+    /// A fresh owned packed-engine classifier over this model (for
+    /// side-by-side sweeps; the pipeline keeps its own engine).
+    pub fn classifier(&self) -> NysxEngine {
+        NysxEngine::new(self.model.clone())
+    }
+
+    /// The verbatim i8 Algorithm-1 oracle over this model.
+    pub fn reference_classifier(&self) -> super::ReferenceClassifier<Arc<NysHdcModel>> {
+        super::ReferenceClassifier(self.model.clone())
+    }
+}
+
+/// A running serving stack. Exposes the raw submit/recv surface for
+/// replay loops, and implements [`Classifier`] — a blocking
+/// submit-then-await round trip per query — which makes it the
+/// coordinator-backed [`ServedClassifier`] of the differential suites.
+pub struct ServeHandle {
+    server: Server,
+    /// Responses received while waiting for a different request id
+    /// (worker completion order is not submission order).
+    pending: HashMap<u64, usize>,
+}
+
+/// The coordinator-backed [`Classifier`]: every `classify` call crosses
+/// the real router → batch queue → worker path.
+pub type ServedClassifier = ServeHandle;
+
+impl ServeHandle {
+    /// Submit a query graph (non-blocking; see
+    /// [`Server::submit`] for the backpressure contract).
+    // The Err hands the graph back by design; see Server::submit.
+    #[allow(clippy::result_large_err)]
+    pub fn submit(&mut self, graph: Graph) -> Result<u64, SubmitError> {
+        self.server.submit(graph)
+    }
+
+    /// Blocking receive of one response.
+    pub fn recv(&mut self) -> Option<Response> {
+        self.server.recv()
+    }
+
+    /// Drain all outstanding responses.
+    pub fn drain(&mut self) -> Vec<Response> {
+        self.server.drain()
+    }
+
+    /// Serving metrics snapshot.
+    pub fn metrics(&self) -> MetricsSummary {
+        self.server.metrics.summary()
+    }
+
+    /// Drain, close the queues and join the workers.
+    pub fn shutdown(self) -> Vec<Response> {
+        self.server.shutdown()
+    }
+
+    /// Submit, absorbing backpressure by receiving (and buffering)
+    /// responses until a slot frees up.
+    fn submit_blocking(&mut self, mut graph: Graph) -> Result<u64, NysxError> {
+        loop {
+            match self.server.submit(graph) {
+                Ok(id) => return Ok(id),
+                Err(SubmitError::Backpressure(g)) => {
+                    graph = g;
+                    match self.server.recv() {
+                        Some(resp) => {
+                            self.pending.insert(resp.id, resp.predicted);
+                        }
+                        // Nothing outstanding to drain yet the queues are
+                        // full: retrying can never succeed, so this must
+                        // NOT be the retryable Backpressure error.
+                        None => {
+                            return Err(NysxError::config(
+                                "serving queues are full with zero responses \
+                                 outstanding — queue capacity too small to \
+                                 make progress",
+                            ))
+                        }
+                    }
+                }
+                Err(SubmitError::Closed(_)) => return Err(NysxError::Closed),
+            }
+        }
+    }
+
+    /// Wait for a specific request id, buffering other responses.
+    fn await_response(&mut self, id: u64) -> Result<usize, NysxError> {
+        loop {
+            if let Some(predicted) = self.pending.remove(&id) {
+                return Ok(predicted);
+            }
+            match self.server.recv() {
+                Some(resp) => {
+                    self.pending.insert(resp.id, resp.predicted);
+                }
+                None => return Err(NysxError::Closed),
+            }
+        }
+    }
+}
+
+impl Classifier for ServeHandle {
+    fn name(&self) -> &'static str {
+        "nysx-served"
+    }
+
+    fn classify(&mut self, graph: &Graph) -> Result<usize, NysxError> {
+        let id = self.submit_blocking(graph.clone())?;
+        self.await_response(id)
+    }
+
+    fn classify_batch(&mut self, graphs: &[&Graph]) -> Result<Vec<usize>, NysxError> {
+        let ids: Vec<u64> = graphs
+            .iter()
+            .map(|g| self.submit_blocking((*g).clone()))
+            .collect::<Result<_, _>>()?;
+        ids.into_iter().map(|id| self.await_response(id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatcherConfig;
+
+    fn small_pipeline() -> Pipeline {
+        Pipeline::for_dataset("MUTAG")
+            .expect("MUTAG exists")
+            .scale(0.2)
+            // Shallower than the MUTAG spec's H=6 and off a 64 boundary:
+            // fast tests with the packed tail word live.
+            .hops(3)
+            .hv_dim(500)
+            .seed(11)
+    }
+
+    #[test]
+    fn unknown_dataset_is_typed_and_lists_alternatives() {
+        match Pipeline::for_dataset("NOT_A_DATASET") {
+            Err(NysxError::UnknownDataset { name, available }) => {
+                assert_eq!(name, "NOT_A_DATASET");
+                assert!(available.contains(&"MUTAG"));
+            }
+            other => panic!("want UnknownDataset, got {other:?}"),
+        }
+        // Case-insensitive resolution still works.
+        assert!(Pipeline::for_dataset("mutag").is_ok());
+    }
+
+    #[test]
+    fn invalid_builder_inputs_are_config_errors() {
+        for (what, result) in [
+            ("hv_dim 0", small_pipeline().hv_dim(0).train()),
+            ("hops 0", small_pipeline().hops(0).train()),
+            ("scale NaN", small_pipeline().scale(f64::NAN).train()),
+            ("scale -1", small_pipeline().scale(-1.0).train()),
+            ("scale 1e30", small_pipeline().scale(1e30).train()),
+            (
+                "s > train split",
+                small_pipeline().num_landmarks(1_000_000).train(),
+            ),
+        ] {
+            match result {
+                Err(NysxError::Config(_)) => {}
+                Ok(_) => panic!("{what}: invalid input trained anyway"),
+                Err(other) => panic!("{what}: want Config, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn train_evaluate_infer_roundtrip() {
+        let mut p = small_pipeline().train().expect("small training run");
+        let acc = p.evaluate().expect("test split is non-empty");
+        let chance = 1.0 / p.dataset().num_classes as f64;
+        assert!(acc > chance, "facade accuracy {acc} at or below chance");
+        assert_eq!(
+            Some(acc),
+            crate::model::train::evaluate(p.model(), &p.dataset().test),
+            "facade evaluate != model::train::evaluate"
+        );
+        // infer / infer_batch agree with a fresh classifier; parts()
+        // splits the borrows so the loop reads the dataset while the
+        // engine infers.
+        let mut fresh = p.classifier();
+        let (ds, engine) = p.parts();
+        let graphs: Vec<&Graph> = ds.test.iter().map(|(g, _)| g).collect();
+        let batched: Vec<usize> = engine
+            .infer_batch(&graphs)
+            .iter()
+            .map(|r| r.predicted)
+            .collect();
+        for (g, want) in graphs.iter().zip(&batched) {
+            assert_eq!(engine.infer(g).predicted, *want);
+            assert_eq!(fresh.classify(g).expect("in-process"), *want);
+        }
+        assert_eq!(p.evaluate_split(&[]), None);
+    }
+
+    #[test]
+    fn save_then_load_preserves_predictions() {
+        let dir = std::env::temp_dir().join(format!("nysx-api-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join("facade.nysx");
+        let mut trained = small_pipeline().train().expect("train");
+        trained.save(&path).expect("save");
+        let mut loaded = small_pipeline().load(&path).expect("load");
+        let (ds, engine) = trained.parts();
+        for (g, _) in ds.test.iter().take(8) {
+            assert_eq!(engine.infer(g).hv, loaded.infer(g).hv, "roundtrip drift");
+        }
+        // reload() (dataset reuse, no regeneration) agrees with load().
+        let mut reloaded = trained.reload(&path).expect("reload");
+        let (lds, lengine) = loaded.parts();
+        for (g, _) in lds.test.iter().take(4) {
+            assert_eq!(lengine.infer(g).hv, reloaded.infer(g).hv, "reload != load");
+        }
+        // Loading under the wrong dataset spec is a typed error.
+        match Pipeline::for_dataset("NCI1").expect("NCI1 exists").load(&path) {
+            Err(NysxError::Config(msg)) => {
+                assert!(msg.contains("MUTAG"), "{msg}");
+            }
+            other => panic!("want Config, got {other:?}"),
+        }
+        // A missing file is Io, not ModelFormat.
+        match small_pipeline().load(&dir.join("absent.nysx")) {
+            Err(NysxError::Io(_)) => {}
+            other => panic!("want Io, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The serving-level packed-vs-i8 equivalence, driven through the
+    /// [`Classifier`] trait on every side: the coordinator-backed
+    /// classifier must agree with the in-process packed engine and the
+    /// i8 oracle on every test graph, including through the batched
+    /// dispatch path.
+    #[test]
+    fn served_classifier_matches_in_process_backends() {
+        let p = small_pipeline().train().expect("train");
+        let graphs: Vec<&Graph> = p.dataset.test.iter().map(|(g, _)| g).collect();
+        let mut engine = p.classifier();
+        let mut oracle = p.reference_classifier();
+        let want = engine.classify_batch(&graphs).expect("in-process");
+        assert_eq!(
+            want,
+            oracle.classify_batch(&graphs).expect("in-process"),
+            "packed engine != i8 oracle"
+        );
+
+        let mut served = p
+            .serve(ServerConfig {
+                workers: 3,
+                batcher: BatcherConfig {
+                    batch_size: 3,
+                    max_wait: std::time::Duration::from_millis(2),
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .expect("serve");
+        let got = served.classify_batch(&graphs).expect("serving transport");
+        assert_eq!(got, want, "served predictions diverge from the engine");
+        // Single-query round trips too.
+        for (g, want) in graphs.iter().take(5).zip(&want) {
+            assert_eq!(served.classify(g).expect("serving transport"), *want);
+        }
+        served.shutdown();
+    }
+
+    /// Serving errors surface as typed `NysxError`s through the trait.
+    #[test]
+    fn served_classifier_errors_are_typed() {
+        let p = small_pipeline().train().expect("train");
+        match p.serve(ServerConfig {
+            workers: 0,
+            ..Default::default()
+        }) {
+            Err(NysxError::Config(_)) => {}
+            other => panic!(
+                "want Config for zero workers, got {:?}",
+                other.err().map(|e| e.to_string())
+            ),
+        }
+    }
+}

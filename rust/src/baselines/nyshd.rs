@@ -47,8 +47,8 @@ mod tests {
         let nysx = train_nysx(&ds, s_dpp, &base);
         assert!(nysx.s() < nyshd.s(), "NysX must use fewer landmarks");
         let chance = 1.0 / ds.num_classes as f64;
-        assert!(evaluate(&nyshd, &ds.test) > chance);
-        assert!(evaluate(&nysx, &ds.test) > chance);
+        assert!(evaluate(&nyshd, &ds.test).expect("non-empty split") > chance);
+        assert!(evaluate(&nysx, &ds.test).expect("non-empty split") > chance);
         // Memory reduction follows directly from s.
         let m_uni = nyshd.memory_report().total_dense();
         let m_dpp = nysx.memory_report().total_dense();

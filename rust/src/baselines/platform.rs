@@ -5,8 +5,8 @@
 //! bytes/effective_bw)` plus a per-op dispatch overhead — with the
 //! complexity expressions of Table 1 supplying the per-op flops/bytes.
 //! Effective rates are calibrated once against the paper's reported CPU
-//! latencies (see EXPERIMENTS.md §Calibration); the quantities we then
-//! *reproduce* are the cross-platform ratios.
+//! latencies (see DESIGN.md §4, "Platform-model calibration"); the
+//! quantities we then *reproduce* are the cross-platform ratios.
 //!
 //! Baselines run **dense** kernels (the paper notes NysHD "does not
 //! exploit the sparsity in adjacency and histogram matrices"), and the

@@ -9,14 +9,14 @@
 
 use std::path::PathBuf;
 
+use crate::api::{accuracy, Classifier};
 use crate::baselines::{
-    estimate_latency_ms, evaluate_graphhd, train_graphhd, train_nyshd, train_nysx, Workload,
-    CPU_RYZEN_5625U, GPU_RTX_A4000,
+    estimate_latency_ms, train_graphhd, train_nyshd, train_nysx, Workload, CPU_RYZEN_5625U,
+    GPU_RTX_A4000,
 };
 use crate::graph::tudataset::{TuSpec, TU_SPECS};
 use crate::graph::GraphDataset;
 use crate::infer::NysxEngine;
-use crate::model::train::evaluate;
 use crate::model::{ModelConfig, NysHdcModel};
 use crate::sim::{
     estimate_resources, simulate, AcceleratorConfig, PowerModel, SimOptions,
@@ -346,18 +346,40 @@ pub fn evaluate_dataset(spec: &TuSpec, cfg: &EvalConfig) -> DatasetEval {
         ..ModelConfig::default()
     };
 
-    log::info!("[{}] training NysHD (uniform, s={s_uni})", spec.name);
+    eprintln!("[{}] training NysHD (uniform, s={s_uni})", spec.name);
     let nyshd = train_nyshd(&ds, s_uni, &base);
-    log::info!("[{}] training NysX (hybrid DPP, s={s_dpp})", spec.name);
+    eprintln!("[{}] training NysX (hybrid DPP, s={s_dpp})", spec.name);
     let nysx = train_nysx(&ds, s_dpp, &base);
-    log::info!("[{}] training GraphHD", spec.name);
-    let ghd = train_graphhd(&ds, cfg.hv_dim, cfg.seed ^ 0x6ead);
+    eprintln!("[{}] training GraphHD", spec.name);
+    let mut ghd = train_graphhd(&ds, cfg.hv_dim, cfg.seed ^ 0x6ead);
 
-    let acc_nyshd = evaluate(&nyshd, &ds.test);
-    let acc_nysx = evaluate(&nysx, &ds.test);
-    let acc_graphhd = evaluate_graphhd(&ghd, &ds.test);
+    // The Fig. 7 / Table 4 head-to-head: every backend — NysX, NysHD
+    // (both packed engines) and GraphHD — is scored through the SAME
+    // `dyn Classifier` dispatch path, so the comparison can never drift
+    // because one row took a different evaluation code path. In-process
+    // backends are infallible; a skipped row renders as NaN.
+    let mut nysx_engine = NysxEngine::new(&nysx);
+    let mut nyshd_engine = NysxEngine::new(&nyshd);
+    let mut acc_nysx = f64::NAN;
+    let mut acc_nyshd = f64::NAN;
+    let mut acc_graphhd = f64::NAN;
+    let sweep: [(&mut dyn Classifier, &mut f64); 3] = [
+        (&mut nysx_engine, &mut acc_nysx),
+        (&mut nyshd_engine, &mut acc_nyshd),
+        (&mut ghd, &mut acc_graphhd),
+    ];
+    for (classifier, out) in sweep {
+        *out = accuracy(classifier, &ds.test)
+            .ok()
+            .flatten()
+            .unwrap_or(f64::NAN);
+    }
     let acc_uniform_at_sdpp = if cfg.ablation {
-        evaluate(&train_nyshd(&ds, s_dpp, &base), &ds.test)
+        let mut ablated = NysxEngine::new(train_nyshd(&ds, s_dpp, &base));
+        accuracy(&mut ablated, &ds.test)
+            .ok()
+            .flatten()
+            .unwrap_or(f64::NAN)
     } else {
         f64::NAN
     };
@@ -633,7 +655,7 @@ pub fn render_fig8(evals: &[DatasetEval]) -> String {
     // paper's Fig 8 normalizes the SpMV-stage latency to the no-LB case.
     // We report both the stage-level speedup (the honest measure of the
     // optimization) and the end-to-end effect, which our NEE-dominated
-    // breakdown dilutes (see EXPERIMENTS.md §Known deviations).
+    // breakdown dilutes (see DESIGN.md §4, "Known deviations").
     let mut t = Table::new("Figure 8: Static load balancing speedup in SpMV stages (LSHU/KSE)")
         .header(&[
             "Dataset",

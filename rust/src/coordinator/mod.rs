@@ -17,7 +17,7 @@ pub mod server;
 pub mod worker;
 
 pub use batcher::{BatchQueue, BatcherConfig, PushError};
-pub use metrics::{LatencyStats, MetricsRegistry};
+pub use metrics::{LatencyStats, MetricsRegistry, MetricsSummary};
 pub use router::{Router, RoutingPolicy};
 pub use server::{Server, ServerConfig, SubmitError};
 

@@ -74,9 +74,43 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the worker pool and return the serving handle.
+    /// Validate the configuration and spawn the worker pool. This is the
+    /// user-input boundary: a zero worker count or a zero batch size is
+    /// a typed [`crate::api::NysxError::Config`] error, not an assert.
+    /// (A zero-capacity queue stays legal — it makes every submit
+    /// immediate backpressure, which the tests rely on.)
+    pub fn try_start(
+        model: Arc<NysHdcModel>,
+        cfg: ServerConfig,
+    ) -> Result<Self, crate::api::NysxError> {
+        use crate::api::NysxError;
+        if cfg.workers == 0 {
+            return Err(NysxError::config("ServerConfig.workers must be > 0"));
+        }
+        if cfg.workers > 4096 {
+            return Err(NysxError::Config(format!(
+                "ServerConfig.workers = {} is beyond any plausible host",
+                cfg.workers
+            )));
+        }
+        if cfg.batcher.batch_size == 0 {
+            return Err(NysxError::config("BatcherConfig.batch_size must be > 0"));
+        }
+        Ok(Self::spawn(model, cfg))
+    }
+
+    /// [`Self::try_start`] for infallible configs; panics on invalid
+    /// ones. Prefer `try_start` (or the [`crate::api::TrainedPipeline::serve`]
+    /// facade) anywhere the config comes from user input.
     pub fn start(model: Arc<NysHdcModel>, cfg: ServerConfig) -> Self {
-        assert!(cfg.workers > 0);
+        match Self::try_start(model, cfg) {
+            Ok(server) => server,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Spawn the (already validated) worker pool.
+    fn spawn(model: Arc<NysHdcModel>, cfg: ServerConfig) -> Self {
         let queues: Vec<Arc<BatchQueue>> = (0..cfg.workers)
             .map(|_| Arc::new(BatchQueue::new(cfg.batcher)))
             .collect();
@@ -213,7 +247,7 @@ mod tests {
     #[test]
     fn serving_matches_single_threaded() {
         let (ds, model) = small_model();
-        let mut packed_engine = NysxEngine::new(&model);
+        let mut packed_engine = NysxEngine::new(&*model);
         let want: Vec<usize> = ds
             .test
             .iter()
@@ -315,6 +349,40 @@ mod tests {
             other => panic!("want Closed, got {other:?}"),
         }
         server.shutdown();
+    }
+
+    /// The `workers > 0` (and `batch_size > 0`) user-input boundary is a
+    /// typed error, not an assert.
+    #[test]
+    fn try_start_rejects_bad_configs() {
+        let (_, model) = small_model();
+        let err = Server::try_start(
+            model.clone(),
+            ServerConfig {
+                workers: 0,
+                ..Default::default()
+            },
+        )
+        .err()
+        .expect("zero workers must be rejected");
+        assert!(matches!(err, crate::api::NysxError::Config(_)), "{err}");
+        let err = Server::try_start(
+            model.clone(),
+            ServerConfig {
+                batcher: BatcherConfig {
+                    batch_size: 0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .err()
+        .expect("zero batch size must be rejected");
+        assert!(matches!(err, crate::api::NysxError::Config(_)), "{err}");
+        // A valid config still starts and shuts down cleanly.
+        Server::try_start(model, ServerConfig::default())
+            .expect("default config is valid")
+            .shutdown();
     }
 
     #[test]

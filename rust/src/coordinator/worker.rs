@@ -34,7 +34,9 @@ pub fn worker_loop(
     power: PowerModel,
     responses: Sender<Response>,
 ) {
-    let mut engine = NysxEngine::new(&model);
+    // The engine takes the Arc itself: worker and engine share ownership
+    // of the model for the thread's lifetime.
+    let mut engine = NysxEngine::new(model);
     let opts = SimOptions::default();
     while let Some(batch) = queue.pop_batch() {
         let batch_size = batch.len();
@@ -118,7 +120,7 @@ mod tests {
         let responses: Vec<Response> = rx.iter().collect();
         assert_eq!(responses.len(), 6);
         // Predictions must match a fresh single-threaded engine.
-        let mut engine = NysxEngine::new(&model);
+        let mut engine = NysxEngine::new(&*model);
         for resp in &responses {
             let want = engine.infer(&ds.test[resp.id as usize].0).predicted;
             assert_eq!(resp.predicted, want);
@@ -181,7 +183,7 @@ mod tests {
         handle.join().unwrap();
         let responses: Vec<Response> = rx.iter().collect();
         assert_eq!(responses.len(), n);
-        let mut engine = NysxEngine::new(&model);
+        let mut engine = NysxEngine::new(&*model);
         let mut batched_requests = 0usize;
         for resp in &responses {
             let want = engine.infer(&ds.test[resp.id as usize].0).predicted;

@@ -39,6 +39,9 @@
 //! vectors. Both are bit-identical to the single-query path (and so to
 //! the i8 oracle), which the tests below enforce.
 
+use std::borrow::Borrow;
+use std::sync::Arc;
+
 use crate::graph::Graph;
 use crate::hdc::{PackedBatch, PackedHypervector};
 use crate::model::NysHdcModel;
@@ -93,8 +96,14 @@ pub struct InferenceResult {
 }
 
 /// Reusable inference engine bound to a trained model.
-pub struct NysxEngine<'m> {
-    pub model: &'m NysHdcModel,
+///
+/// Generic over the model *handle* `M`: borrow-based construction
+/// (`NysxEngine::new(&model)`) keeps the zero-copy shape the workers and
+/// benches use, while `NysxEngine::new(Arc<NysHdcModel>)` yields a fully
+/// owned engine — the form [`crate::api::TrainedPipeline`] hands out so
+/// facade callers never juggle a borrow lifetime.
+pub struct NysxEngine<M: Borrow<NysHdcModel> = Arc<NysHdcModel>> {
+    model: M,
     /// No-LB schedules for the KSE ablation (built once).
     kse_nolb: Vec<ScheduleTable>,
     // --- scratch (hot path is allocation-free) ---
@@ -110,44 +119,66 @@ pub struct NysxEngine<'m> {
     batch_preds: Vec<usize>,
 }
 
-impl<'m> NysxEngine<'m> {
-    pub fn new(model: &'m NysHdcModel) -> Self {
-        let max_bins = model
-            .codebooks
-            .iter()
-            .map(|cb| cb.len())
-            .max()
-            .unwrap_or(0);
-        let kse_nolb = model
-            .landmark_hists
-            .iter()
-            .map(|h| ScheduleTable::build(h, model.config.pes, SchedulePolicy::RowOrder))
-            .collect();
+impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
+    pub fn new(model: M) -> Self {
+        let (kse_nolb, c_sim, hv, hist, batch) = {
+            let m: &NysHdcModel = model.borrow();
+            let max_bins = m.codebooks.iter().map(|cb| cb.len()).max().unwrap_or(0);
+            let kse_nolb = m
+                .landmark_hists
+                .iter()
+                .map(|h| ScheduleTable::build(h, m.config.pes, SchedulePolicy::RowOrder))
+                .collect();
+            (
+                kse_nolb,
+                vec![0.0; m.s()],
+                PackedHypervector::zeros(m.d()),
+                vec![0.0; max_bins],
+                PackedBatch::new(m.d()),
+            )
+        };
         Self {
             model,
             kse_nolb,
-            c_sim: vec![0.0; model.s()],
-            hv: PackedHypervector::zeros(model.d()),
+            c_sim,
+            hv,
             proj: Vec::new(),
             proj_scratch: Vec::new(),
             codes: Vec::new(),
-            hist: vec![0.0; max_bins],
-            batch: PackedBatch::new(model.d()),
+            hist,
+            batch,
             batch_scores: Vec::new(),
             batch_preds: Vec::new(),
         }
     }
 
+    /// The trained model this engine serves.
+    pub fn model(&self) -> &NysHdcModel {
+        self.model.borrow()
+    }
+
     /// Alg. 1 lines 1-12: compute the kernel-similarity vector C(x) and
     /// the work trace. Returns a borrow of the internal C buffer.
     pub fn kernel_vector(&mut self, graph: &Graph) -> (&[f64], InferTrace) {
-        let model = self.model;
+        // Destructure to split the borrows: the model handle is read-only
+        // while every scratch buffer is mutated.
+        let Self {
+            model,
+            kse_nolb,
+            c_sim,
+            proj,
+            proj_scratch,
+            codes,
+            hist,
+            ..
+        } = self;
+        let model: &NysHdcModel = (*model).borrow();
         let n = graph.num_nodes();
         let hops = model.hops();
-        self.c_sim.iter_mut().for_each(|v| *v = 0.0);
-        self.proj.resize(n, 0.0);
-        self.proj_scratch.resize(n, 0.0);
-        self.codes.resize(n, 0);
+        c_sim.iter_mut().for_each(|v| *v = 0.0);
+        proj.resize(n, 0.0);
+        proj_scratch.resize(n, 0.0);
+        codes.resize(n, 0);
 
         // Per-query adjacency schedule (O(N) offline-style construction —
         // the paper builds it when the CSR operand is loaded).
@@ -171,7 +202,7 @@ impl<'m> NysxEngine<'m> {
 
         for t in 0..hops {
             // LSHU: c = F u^(t), then t scheduled applications of A.
-            for (i, p) in self.proj.iter_mut().enumerate() {
+            for (i, p) in proj.iter_mut().enumerate() {
                 let mut acc = 0.0;
                 let row = graph.features.row(i);
                 for (x, u) in row.iter().zip(&model.lsh.u[t]) {
@@ -180,21 +211,21 @@ impl<'m> NysxEngine<'m> {
                 *p = acc;
             }
             for _ in 0..t {
-                a_lb.run_spmv(&graph.adj, &self.proj, &mut self.proj_scratch);
-                std::mem::swap(&mut self.proj, &mut self.proj_scratch);
+                a_lb.run_spmv(&graph.adj, proj, proj_scratch);
+                std::mem::swap(proj, proj_scratch);
             }
-            for (c, &p) in self.codes.iter_mut().zip(self.proj.iter()) {
+            for (c, &p) in codes.iter_mut().zip(proj.iter()) {
                 *c = model.lsh.quantize(p, t);
             }
 
             // MPHE + HUE: verified O(1) lookups, histogram accumulation.
             let cb_len = model.codebooks[t].len();
-            let hist = &mut self.hist[..cb_len];
+            let hist = &mut hist[..cb_len];
             hist.iter_mut().for_each(|v| *v = 0.0);
             let lookup = &model.lookups[t];
             let mut probes = 0u64;
             let mut hits = 0u64;
-            for &code in self.codes.iter() {
+            for &code in codes.iter() {
                 let (idx, p) = lookup.get_with_probes(code_key(code));
                 probes += p as u64;
                 if let Some(j) = idx {
@@ -215,13 +246,13 @@ impl<'m> NysxEngine<'m> {
                         for k in h.row_ptr[r]..h.row_ptr[r + 1] {
                             acc += h.val[k] * hist[h.col_idx[k] as usize];
                         }
-                        self.c_sim[r] += acc;
+                        c_sim[r] += acc;
                     }
                 }
             }
 
             let (kse_lb, _) = sched.spmv_cycles(h);
-            let (kse_nolb, _) = self.kse_nolb[t].spmv_cycles(h);
+            let (kse_cycles_nolb, _) = kse_nolb[t].spmv_cycles(h);
             trace.hops.push(HopTrace {
                 lookups: n as u64,
                 mph_probes: probes,
@@ -229,10 +260,10 @@ impl<'m> NysxEngine<'m> {
                 hist_bins: cb_len,
                 kse_nnz: h.nnz() as u64,
                 kse_cycles_lb: kse_lb,
-                kse_cycles_nolb: kse_nolb,
+                kse_cycles_nolb,
             });
         }
-        (&self.c_sim, trace)
+        (c_sim.as_slice(), trace)
     }
 
     /// NEE + SCE from a kernel vector: fused project-bipolarize-pack into
@@ -240,11 +271,10 @@ impl<'m> NysxEngine<'m> {
     /// packed prototypes. Zero i8 materialization; bit-identical to the
     /// i8 reference path.
     pub fn classify_kernel_vector(&mut self, c_sim: &[f64]) -> (usize, PackedHypervector) {
-        self.model.projection.project_pack_into(c_sim, &mut self.hv);
-        (
-            self.model.packed_prototypes.classify(&self.hv),
-            self.hv.clone(),
-        )
+        let Self { model, hv, .. } = self;
+        let model: &NysHdcModel = (*model).borrow();
+        model.projection.project_pack_into(c_sim, hv);
+        (model.packed_prototypes.classify(hv), hv.clone())
     }
 
     /// NEE + SCE for a whole batch of kernel vectors: each C(x) is
@@ -256,20 +286,24 @@ impl<'m> NysxEngine<'m> {
         &mut self,
         c_sims: &[Vec<f64>],
     ) -> Vec<(usize, PackedHypervector)> {
-        self.batch.clear();
+        let Self {
+            model,
+            batch,
+            batch_scores,
+            batch_preds,
+            ..
+        } = self;
+        let model: &NysHdcModel = (*model).borrow();
+        batch.clear();
         for c in c_sims {
-            let slot = self.batch.push_zeroed();
-            self.model
-                .projection
-                .project_pack_words(c, self.batch.query_words_mut(slot));
+            let slot = batch.push_zeroed();
+            model.projection.project_pack_words(c, batch.query_words_mut(slot));
         }
-        self.model.packed_prototypes.classify_batch_into(
-            &self.batch,
-            &mut self.batch_scores,
-            &mut self.batch_preds,
-        );
+        model
+            .packed_prototypes
+            .classify_batch_into(batch, batch_scores, batch_preds);
         (0..c_sims.len())
-            .map(|qi| (self.batch_preds[qi], self.batch.get(qi)))
+            .map(|qi| (batch_preds[qi], batch.get(qi)))
             .collect()
     }
 
@@ -283,22 +317,30 @@ impl<'m> NysxEngine<'m> {
         for &g in graphs {
             let (_, trace) = self.kernel_vector(g);
             traces.push(trace);
-            let slot = self.batch.push_zeroed();
-            self.model
+            let Self { model, c_sim, batch, .. } = self;
+            let model: &NysHdcModel = (*model).borrow();
+            let slot = batch.push_zeroed();
+            model
                 .projection
-                .project_pack_words(&self.c_sim, self.batch.query_words_mut(slot));
+                .project_pack_words(c_sim, batch.query_words_mut(slot));
         }
-        self.model.packed_prototypes.classify_batch_into(
-            &self.batch,
-            &mut self.batch_scores,
-            &mut self.batch_preds,
-        );
+        let Self {
+            model,
+            batch,
+            batch_scores,
+            batch_preds,
+            ..
+        } = self;
+        let model: &NysHdcModel = (*model).borrow();
+        model
+            .packed_prototypes
+            .classify_batch_into(batch, batch_scores, batch_preds);
         traces
             .into_iter()
             .enumerate()
             .map(|(qi, trace)| InferenceResult {
-                predicted: self.batch_preds[qi],
-                hv: self.batch.get(qi),
+                predicted: batch_preds[qi],
+                hv: batch.get(qi),
                 trace,
             })
             .collect()

@@ -14,9 +14,14 @@
 //! * **L1 (python/compile/kernels/)** — the Nyström-encoding hot spot as a
 //!   Pallas kernel fused into the L2 graph.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! Start at [`api`] — the typed front door: `Pipeline` builds and trains
+//! (or loads) a model, `TrainedPipeline` owns it together with a packed
+//! engine, and the `Classifier` trait drives any backend (optimized
+//! engine, i8 oracle, GraphHD/NysHD baselines, the live serving stack)
+//! through one interface. `DESIGN.md` at the repository root holds the
+//! system inventory and the paper-vs-measured record.
 
+pub mod api;
 pub mod baselines;
 pub mod bench;
 pub mod coordinator;

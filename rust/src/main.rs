@@ -1,4 +1,7 @@
-//! `nysx` CLI — the L3 leader entrypoint.
+//! `nysx` CLI — the L3 leader entrypoint, built on the [`nysx::api`]
+//! facade: every user-input failure (unknown dataset, bad flag value,
+//! corrupt model file, invalid serving config) is a typed
+//! [`NysxError`] printed to stderr with exit code 2 — never a panic.
 //!
 //! Subcommands:
 //!   train   --dataset MUTAG [--dpp] [--out model.nysx] [--scale 1.0]
@@ -9,28 +12,30 @@
 //!
 //! Positional command first, then flags (the tiny parser is greedy).
 
-use std::sync::Arc;
+use std::path::Path;
 
+use nysx::api::{NysxError, Pipeline, TrainedPipeline};
 use nysx::bench::tables::{
     evaluate_all, render_fig6, render_fig7, render_fig8, render_roofline, render_table3,
     render_table4, render_table6, render_table7, render_table8, EvalConfig,
 };
-use nysx::coordinator::{BatcherConfig, Server, ServerConfig, SubmitError};
-use nysx::graph::tudataset::{spec_by_name, TU_SPECS};
-use nysx::model::train::{evaluate, train};
-use nysx::model::ModelConfig;
+use nysx::coordinator::{BatcherConfig, ServerConfig, SubmitError};
+use nysx::graph::tudataset::TU_SPECS;
 use nysx::nystrom::LandmarkStrategy;
 use nysx::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    let result = match cmd {
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
-        "roofline" => println!("{}", render_roofline()),
+        "roofline" => {
+            println!("{}", render_roofline());
+            Ok(())
+        }
         _ => {
             println!(
                 "nysx — Nyström-HDC graph classification (NysX reproduction)\n\n\
@@ -38,46 +43,61 @@ fn main() {
                  datasets: {}",
                 TU_SPECS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
             );
+            Ok(())
         }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(2);
     }
 }
 
-fn dataset_and_config(args: &Args) -> (nysx::graph::GraphDataset, ModelConfig) {
-    let name = args.get_or("dataset", "MUTAG");
-    let spec = spec_by_name(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
-    let scale = args.get_f64("scale", 1.0);
-    let seed = args.get_u64("seed", 42);
-    let (ds, s_uni, s_dpp) = spec.generate_scaled(seed, scale);
-    let dpp = args.get_bool("dpp");
-    let cfg = ModelConfig {
-        hops: spec.hops,
-        hv_dim: args.get_usize("d", 10_000),
-        num_landmarks: if dpp { s_dpp } else { s_uni },
-        strategy: if dpp {
-            LandmarkStrategy::HybridDpp { pool_factor: 2 }
-        } else {
-            LandmarkStrategy::Uniform
-        },
-        seed,
-        ..ModelConfig::default()
-    };
-    (ds, cfg)
+/// Map a malformed flag value onto the crate error type.
+fn flag_err(msg: String) -> NysxError {
+    NysxError::Config(msg)
 }
 
-fn cmd_train(args: &Args) {
-    let (ds, cfg) = dataset_and_config(args);
+/// Build the pipeline every subcommand shares from the CLI flags.
+fn pipeline_from_args(args: &Args) -> Result<Pipeline, NysxError> {
+    let name = args.get_or("dataset", "MUTAG");
+    let strategy = if args.get_bool("dpp") {
+        LandmarkStrategy::HybridDpp { pool_factor: 2 }
+    } else {
+        LandmarkStrategy::Uniform
+    };
+    Ok(Pipeline::for_dataset(name)?
+        .scale(args.try_f64("scale", 1.0).map_err(flag_err)?)
+        .seed(args.try_u64("seed", 42).map_err(flag_err)?)
+        .hv_dim(args.try_usize("d", 10_000).map_err(flag_err)?)
+        .landmarks(strategy))
+}
+
+fn report_accuracy(trained: &mut TrainedPipeline) {
+    match trained.evaluate() {
+        Some(acc) => println!("test accuracy: {:.2}%", 100.0 * acc),
+        None => println!("test accuracy: n/a (empty test split)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<(), NysxError> {
+    let pipeline = pipeline_from_args(args)?;
     eprintln!(
-        "training on {} ({} train graphs, s={}, {:?})",
-        ds.name,
-        ds.train.len(),
-        cfg.num_landmarks,
-        cfg.strategy
+        "generating {} and training...",
+        args.get_or("dataset", "MUTAG")
     );
     let t0 = std::time::Instant::now();
-    let model = train(&ds, &cfg);
-    eprintln!("trained in {:.1}s", t0.elapsed().as_secs_f64());
-    println!("test accuracy: {:.2}%", 100.0 * evaluate(&model, &ds.test));
-    let mem = model.memory_report();
+    let mut trained = pipeline.train()?;
+    let model = trained.model();
+    eprintln!(
+        "trained on {} ({} train graphs, s={}, {:?}) in {:.1}s incl. dataset generation",
+        trained.dataset().name,
+        trained.dataset().train.len(),
+        model.s(),
+        model.config.strategy,
+        t0.elapsed().as_secs_f64()
+    );
+    report_accuracy(&mut trained);
+    let mem = trained.model().memory_report();
     println!(
         "model memory: {:.2} MB dense / {:.2} MB deployed (P_nys {:.0}%)",
         mem.total_dense() as f64 / 1048576.0,
@@ -85,23 +105,27 @@ fn cmd_train(args: &Args) {
         100.0 * mem.p_nys_fraction()
     );
     if let Some(path) = args.get("out") {
-        nysx::model::io::save_file(&model, std::path::Path::new(path)).expect("save model");
+        trained.save(Path::new(path))?;
         println!("saved to {path}");
     }
+    Ok(())
 }
 
-fn cmd_infer(args: &Args) {
-    let (ds, cfg) = dataset_and_config(args);
-    let model = if let Some(path) = args.get("model") {
-        nysx::model::io::load_file(std::path::Path::new(path)).expect("load model")
+fn cmd_infer(args: &Args) -> Result<(), NysxError> {
+    let pipeline = pipeline_from_args(args)?;
+    let mut trained = if let Some(path) = args.get("model") {
+        pipeline.load(Path::new(path))?
     } else {
         eprintln!("no --model given; training one now");
-        train(&ds, &cfg)
+        pipeline.train()?
     };
-    let count = args.get_usize("count", 32).min(ds.test.len());
-    let mut engine = nysx::infer::NysxEngine::new(&model);
     let accel = nysx::sim::AcceleratorConfig::zcu104();
     let power = nysx::sim::PowerModel::default();
+    let (ds, engine) = trained.parts();
+    let count = args
+        .try_usize("count", 32)
+        .map_err(flag_err)?
+        .min(ds.test.len());
     let mut correct = 0;
     for (g, y) in ds.test.iter().take(count) {
         let t0 = std::time::Instant::now();
@@ -132,46 +156,44 @@ fn cmd_infer(args: &Args) {
             100.0 * correct as f64 / count as f64
         );
     }
+    Ok(())
 }
 
-fn cmd_serve(args: &Args) {
-    let (ds, cfg) = dataset_and_config(args);
-    eprintln!("training model for serving...");
-    let model = Arc::new(train(&ds, &cfg));
-    let workers = args.get_usize("workers", 4);
-    let requests = args.get_usize("requests", 500);
+fn cmd_serve(args: &Args) -> Result<(), NysxError> {
+    let workers = args.try_usize("workers", 4).map_err(flag_err)?;
+    let requests = args.try_usize("requests", 500).map_err(flag_err)?;
     // Batch-major dispatch: each worker pops up to --batch requests and
     // runs them as ONE blocked C×W SCE pass (1 = the paper's real-time
     // edge mode; >1 amortizes prototype traffic across the batch).
-    let batch = args.get_usize("batch", 1).max(1);
-    let mut server = Server::start(
-        model,
-        ServerConfig {
-            workers,
-            batcher: BatcherConfig {
-                batch_size: batch,
-                ..Default::default()
-            },
+    let batch = args.try_usize("batch", 1).map_err(flag_err)?.max(1);
+    eprintln!("training model for serving...");
+    let trained = pipeline_from_args(args)?.train()?;
+    let mut server = trained.serve(ServerConfig {
+        workers,
+        batcher: BatcherConfig {
+            batch_size: batch,
             ..Default::default()
         },
-    );
+        ..Default::default()
+    })?;
+    let ds = trained.dataset();
     let mut rng = nysx::util::rng::Xoshiro256::seed_from_u64(7);
     for _ in 0..requests {
         let (g, _) = &ds.test[rng.gen_range(ds.test.len())];
+        let mut graph = g.clone();
         loop {
-            match server.submit(g.clone()) {
+            match server.submit(graph) {
                 Ok(_) => break,
-                Err(SubmitError::Backpressure(_)) => {
+                Err(SubmitError::Backpressure(g)) => {
+                    graph = g;
                     server.recv(); // free a slot, then retry
                 }
-                Err(SubmitError::Closed(_)) => {
-                    unreachable!("server closed mid-replay")
-                }
+                Err(e @ SubmitError::Closed(_)) => return Err(e.into()),
             }
         }
     }
     server.drain();
-    let s = server.metrics.summary();
+    let s = server.metrics();
     println!(
         "served {} requests on {workers} workers (batch size {batch})\n  host latency  p50={:.0}µs p95={:.0}µs p99={:.0}µs\n  queue wait    p50={:.0}µs p99={:.0}µs\n  sim FPGA      mean={:.3}ms p99={:.3}ms\n  host throughput {:.0} req/s; simulated energy {:.1} mJ total\n  per-worker {:?}",
         s.requests,
@@ -187,13 +209,16 @@ fn cmd_serve(args: &Args) {
         s.per_worker
     );
     server.shutdown();
+    Ok(())
 }
 
-fn cmd_eval(args: &Args) {
+fn cmd_eval(args: &Args) -> Result<(), NysxError> {
     let cfg = EvalConfig {
-        scale: args.get_f64("scale", EvalConfig::default().scale),
-        seed: args.get_u64("seed", 42),
-        hv_dim: args.get_usize("d", 10_000),
+        scale: args
+            .try_f64("scale", EvalConfig::default().scale)
+            .map_err(flag_err)?,
+        seed: args.try_u64("seed", 42).map_err(flag_err)?,
+        hv_dim: args.try_usize("d", 10_000).map_err(flag_err)?,
         ablation: args.get_bool("ablation"),
     };
     let evals = evaluate_all(&cfg);
@@ -210,4 +235,5 @@ fn cmd_eval(args: &Args) {
     ] {
         println!("{section}");
     }
+    Ok(())
 }

@@ -14,10 +14,22 @@
 //! * v2 (`NYSXMDL\x02`, current): prototypes stored bit-packed (one sign
 //!   bit per element, `⌈d/64⌉` u64 words each — 8× smaller), with
 //!   tail-bit validation on load.
+//!
+//! ## Robustness contract
+//!
+//! [`load`] never panics on malformed bytes and never allocates
+//! proportionally to a corrupt length prefix: every failure — wrong
+//! magic, truncation, an implausible section length, an internal
+//! inconsistency between sections — comes back as a typed
+//! [`NysxError::ModelFormat`] carrying the byte offset at which decoding
+//! stopped. Vector reads grow incrementally (bounded by bytes actually
+//! present in the stream), so a bit-flipped length prefix produces an
+//! error, not an OOM-sized preallocation.
 
 use std::io::{self, Read, Write};
 
 use super::{ModelConfig, NysHdcModel};
+use crate::api::NysxError;
 use crate::hdc::{ClassPrototypes, Hypervector, PackedHypervector, PackedPrototypes};
 use crate::kernel::{Codebook, LshParams};
 use crate::mph::{code_key, MphLookup};
@@ -92,64 +104,112 @@ impl<W: Write> Writer<W> {
     }
 }
 
+/// Upper bound on any single serialized section, in bytes. A full-size
+/// model (d = 10^4, s ≈ 400 at FP32) is ~16 MB total; 1 GiB per section
+/// rejects corrupt length prefixes early without constraining any
+/// plausible deployment.
+const MAX_SECTION_BYTES: u64 = 1 << 30;
+
+/// Initial allocation granularity for incremental vector reads: memory
+/// growth is driven by bytes actually read, never by the length prefix.
+const ALLOC_CHUNK: usize = 1 << 16;
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
 struct Reader<R: Read> {
     r: R,
+    /// Bytes consumed so far — reported as the error offset.
+    offset: u64,
 }
 
 impl<R: Read> Reader<R> {
+    fn fill(&mut self, buf: &mut [u8]) -> io::Result<()> {
+        self.r.read_exact(buf)?;
+        self.offset += buf.len() as u64;
+        Ok(())
+    }
+    /// Read a vector length prefix for elements of `elem_bytes` each,
+    /// rejecting sizes no real model section can reach.
+    fn len_prefix(&mut self, elem_bytes: u64, what: &str) -> io::Result<usize> {
+        let n = self.u64()?;
+        if n.saturating_mul(elem_bytes) > MAX_SECTION_BYTES {
+            return Err(invalid(format!("implausible {what} length {n}")));
+        }
+        Ok(n as usize)
+    }
     fn u64(&mut self) -> io::Result<u64> {
         let mut b = [0u8; 8];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(u64::from_le_bytes(b))
     }
     fn i64(&mut self) -> io::Result<i64> {
         let mut b = [0u8; 8];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(i64::from_le_bytes(b))
     }
     fn f64(&mut self) -> io::Result<f64> {
         let mut b = [0u8; 8];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(f64::from_le_bytes(b))
     }
     fn bytes(&mut self) -> io::Result<Vec<u8>> {
-        let n = self.u64()? as usize;
-        let mut v = vec![0u8; n];
-        self.r.read_exact(&mut v)?;
+        let n = self.len_prefix(1, "byte string")?;
+        let mut v = Vec::with_capacity(n.min(ALLOC_CHUNK));
+        let mut chunk = [0u8; 4096];
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(chunk.len());
+            self.fill(&mut chunk[..take])?;
+            v.extend_from_slice(&chunk[..take]);
+            remaining -= take;
+        }
         Ok(v)
     }
     fn str(&mut self) -> io::Result<String> {
-        String::from_utf8(self.bytes()?)
-            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+        String::from_utf8(self.bytes()?).map_err(|e| invalid(e.to_string()))
     }
     fn f64s(&mut self) -> io::Result<Vec<f64>> {
-        let n = self.u64()? as usize;
-        (0..n).map(|_| self.f64()).collect()
+        let n = self.len_prefix(8, "f64 vector")?;
+        let mut out = Vec::with_capacity(n.min(ALLOC_CHUNK));
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
     }
     fn f32s(&mut self) -> io::Result<Vec<f32>> {
-        let n = self.u64()? as usize;
-        let mut out = Vec::with_capacity(n);
+        let n = self.len_prefix(4, "f32 vector")?;
+        let mut out = Vec::with_capacity(n.min(ALLOC_CHUNK));
         for _ in 0..n {
             let mut b = [0u8; 4];
-            self.r.read_exact(&mut b)?;
+            self.fill(&mut b)?;
             out.push(f32::from_le_bytes(b));
         }
         Ok(out)
     }
     fn i64s(&mut self) -> io::Result<Vec<i64>> {
-        let n = self.u64()? as usize;
-        (0..n).map(|_| self.i64()).collect()
+        let n = self.len_prefix(8, "i64 vector")?;
+        let mut out = Vec::with_capacity(n.min(ALLOC_CHUNK));
+        for _ in 0..n {
+            out.push(self.i64()?);
+        }
+        Ok(out)
     }
     fn usizes(&mut self) -> io::Result<Vec<usize>> {
-        let n = self.u64()? as usize;
-        (0..n).map(|_| self.u64().map(|v| v as usize)).collect()
+        let n = self.len_prefix(8, "index vector")?;
+        let mut out = Vec::with_capacity(n.min(ALLOC_CHUNK));
+        for _ in 0..n {
+            out.push(self.u64()? as usize);
+        }
+        Ok(out)
     }
     fn u32s(&mut self) -> io::Result<Vec<u32>> {
-        let n = self.u64()? as usize;
-        let mut out = Vec::with_capacity(n);
+        let n = self.len_prefix(4, "u32 vector")?;
+        let mut out = Vec::with_capacity(n.min(ALLOC_CHUNK));
         for _ in 0..n {
             let mut b = [0u8; 4];
-            self.r.read_exact(&mut b)?;
+            self.fill(&mut b)?;
             out.push(u32::from_le_bytes(b));
         }
         Ok(out)
@@ -159,8 +219,12 @@ impl<R: Read> Reader<R> {
         Ok(bytes.into_iter().map(|b| b as i8).collect())
     }
     fn u64s(&mut self) -> io::Result<Vec<u64>> {
-        let n = self.u64()? as usize;
-        (0..n).map(|_| self.u64()).collect()
+        let n = self.len_prefix(8, "u64 vector")?;
+        let mut out = Vec::with_capacity(n.min(ALLOC_CHUNK));
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
     }
 }
 
@@ -247,19 +311,75 @@ pub fn save<W: Write>(model: &NysHdcModel, w: W) -> io::Result<()> {
 /// Deserialize a model from a reader, rebuilding MPH lookups, KSE
 /// schedule tables and the i8 reference prototypes. Reads both the
 /// current packed-prototype format (v2) and the legacy i8 format (v1).
-pub fn load<R: Read>(r: R) -> io::Result<NysHdcModel> {
-    let mut r = Reader { r };
+///
+/// Malformed input of any kind — wrong magic, truncation, corrupt length
+/// prefixes, cross-section inconsistencies — yields a
+/// [`NysxError::ModelFormat`] with the byte offset where decoding
+/// stopped. No input can make this panic or preallocate beyond the bytes
+/// actually present.
+pub fn load<R: Read>(r: R) -> Result<NysHdcModel, NysxError> {
+    let mut r = Reader { r, offset: 0 };
+    match load_inner(&mut r) {
+        Ok(model) => Ok(model),
+        // Decode-shaped failures (malformed bytes, truncation) become
+        // ModelFormat with the stop offset; environmental read failures
+        // (disk faults, interrupted reads) stay Io so callers never
+        // mistake a flaky filesystem for a corrupt artifact.
+        Err(e) => match e.kind() {
+            io::ErrorKind::InvalidData | io::ErrorKind::UnexpectedEof => {
+                Err(NysxError::ModelFormat {
+                    offset: r.offset,
+                    detail: e.to_string(),
+                })
+            }
+            _ => Err(NysxError::Io(e)),
+        },
+    }
+}
+
+/// Cross-field consistency for a deserialized CSR operand: everything
+/// the SpMV kernels index into unchecked must be validated here.
+fn check_csr(h: &Csr, what: &str) -> io::Result<()> {
+    let want_ptrs = h
+        .rows
+        .checked_add(1)
+        .ok_or_else(|| invalid(format!("{what}: row count overflow")))?;
+    if h.row_ptr.len() != want_ptrs {
+        return Err(invalid(format!(
+            "{what}: row_ptr length {} != rows+1 = {want_ptrs}",
+            h.row_ptr.len()
+        )));
+    }
+    if h.row_ptr.first() != Some(&0) {
+        return Err(invalid(format!("{what}: row_ptr must start at 0")));
+    }
+    if h.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(invalid(format!("{what}: row_ptr not monotone")));
+    }
+    let nnz = *h.row_ptr.last().unwrap_or(&0);
+    if nnz != h.col_idx.len() || nnz != h.val.len() {
+        return Err(invalid(format!(
+            "{what}: nnz {} disagrees with col_idx/val lengths {}/{}",
+            nnz,
+            h.col_idx.len(),
+            h.val.len()
+        )));
+    }
+    if h.col_idx.iter().any(|&c| c as usize >= h.cols) {
+        return Err(invalid(format!("{what}: column index out of range")));
+    }
+    Ok(())
+}
+
+fn load_inner<R: Read>(r: &mut Reader<R>) -> io::Result<NysHdcModel> {
     let mut magic = [0u8; 8];
-    r.r.read_exact(&mut magic)?;
+    r.fill(&mut magic)?;
     let version = if &magic == MAGIC {
         2u8
     } else if &magic == MAGIC_V1 {
         1u8
     } else {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            "not a NysX model file",
-        ));
+        return Err(invalid("not a NysX model file (bad magic)"));
     };
     let hops = r.u64()? as usize;
     let hv_dim = r.u64()? as usize;
@@ -281,73 +401,145 @@ pub fn load<R: Read>(r: R) -> io::Result<NysHdcModel> {
         pes,
         seed,
     };
+    // A corrupt header must not reach the derived-structure builders
+    // (zero PEs, NaN gamma, ... all panic or loop deep inside them).
+    config
+        .validate()
+        .map_err(|e| invalid(format!("stored config rejected: {e}")))?;
     let dataset_name = r.str()?;
     let num_classes = r.u64()? as usize;
+    if num_classes == 0 || num_classes > 1 << 20 {
+        return Err(invalid(format!("implausible class count {num_classes}")));
+    }
     let feature_dim = r.u64()? as usize;
     let n_u = r.u64()? as usize;
+    if n_u != hops {
+        return Err(invalid(format!("{n_u} LSH projections for {hops} hops")));
+    }
     let mut u = Vec::with_capacity(n_u);
-    for _ in 0..n_u {
-        u.push(r.f64s()?);
+    for t in 0..n_u {
+        let ut = r.f64s()?;
+        // kernel_vector zips features against u^(t) — a silently short
+        // row would truncate projections instead of erroring.
+        if ut.len() != feature_dim {
+            return Err(invalid(format!(
+                "LSH projection u^({t}) has {} entries for feature_dim {feature_dim}",
+                ut.len()
+            )));
+        }
+        u.push(ut);
     }
     let b = r.f64s()?;
+    if b.len() != hops {
+        return Err(invalid(format!("{} LSH offsets for {hops} hops", b.len())));
+    }
     let w_width = r.f64()?;
     let lsh = LshParams { u, b, w: w_width };
     let n_cb = r.u64()? as usize;
+    if n_cb != hops {
+        return Err(invalid(format!("{n_cb} codebooks for {hops} hops")));
+    }
     let codebooks: Vec<Codebook> = (0..n_cb)
         .map(|_| r.i64s().map(Codebook::build))
         .collect::<io::Result<_>>()?;
     let n_h = r.u64()? as usize;
+    if n_h != hops {
+        return Err(invalid(format!("{n_h} histogram matrices for {hops} hops")));
+    }
     let mut landmark_hists = Vec::with_capacity(n_h);
-    for _ in 0..n_h {
+    for t in 0..n_h {
         let rows = r.u64()? as usize;
         let cols = r.u64()? as usize;
         let row_ptr = r.usizes()?;
         let col_idx = r.u32s()?;
         let val = r.f64s()?;
-        landmark_hists.push(Csr {
+        let h = Csr {
             rows,
             cols,
             row_ptr,
             col_idx,
             val,
-        });
+        };
+        check_csr(&h, &format!("H^({t})"))?;
+        if h.rows != num_landmarks {
+            return Err(invalid(format!(
+                "H^({t}) has {} rows for s = {num_landmarks} landmarks",
+                h.rows
+            )));
+        }
+        if h.cols != codebooks[t].len() {
+            return Err(invalid(format!(
+                "H^({t}) has {} cols for |B^({t})| = {}",
+                h.cols,
+                codebooks[t].len()
+            )));
+        }
+        landmark_hists.push(h);
     }
     let d = r.u64()? as usize;
     let s = r.u64()? as usize;
     let rank = r.u64()? as usize;
+    if d != hv_dim || s != num_landmarks {
+        return Err(invalid(format!(
+            "projection is {d}x{s}, model wants {hv_dim}x{num_landmarks}"
+        )));
+    }
+    if rank > s {
+        return Err(invalid(format!("projection rank {rank} exceeds s = {s}")));
+    }
     let data = r.f32s()?;
-    if data.len() != d * s {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            "projection size mismatch",
-        ));
+    if d.checked_mul(s) != Some(data.len()) {
+        return Err(invalid("projection size mismatch"));
     }
     let projection = NystromProjection { d, s, data, rank };
     let n_proto = r.u64()? as usize;
+    if n_proto != num_classes {
+        return Err(invalid(format!(
+            "{n_proto} prototypes for {num_classes} classes"
+        )));
+    }
     let mut packed_protos = Vec::with_capacity(n_proto);
     for _ in 0..n_proto {
         match version {
             1 => {
                 let hv = Hypervector { data: r.i8s()? };
+                if hv.dim() != hv_dim {
+                    return Err(invalid(format!(
+                        "prototype dim {} != model hv_dim {hv_dim}",
+                        hv.dim()
+                    )));
+                }
                 packed_protos.push(PackedHypervector::pack(&hv));
             }
             _ => {
                 let p_dim = r.u64()? as usize;
                 if p_dim != hv_dim {
-                    return Err(io::Error::new(
-                        io::ErrorKind::InvalidData,
-                        format!("prototype dim {p_dim} != model hv_dim {hv_dim}"),
-                    ));
+                    return Err(invalid(format!(
+                        "prototype dim {p_dim} != model hv_dim {hv_dim}"
+                    )));
                 }
                 let words = r.u64s()?;
-                packed_protos.push(PackedHypervector::from_words(p_dim, words).map_err(
-                    |e| io::Error::new(io::ErrorKind::InvalidData, format!("prototype: {e}")),
-                )?);
+                packed_protos.push(
+                    PackedHypervector::from_words(p_dim, words)
+                        .map_err(|e| invalid(format!("prototype: {e}")))?,
+                );
             }
         }
     }
     let counts = r.usizes()?;
+    if counts.len() != num_classes {
+        return Err(invalid(format!(
+            "{} prototype counts for {num_classes} classes",
+            counts.len()
+        )));
+    }
     let landmark_indices = r.usizes()?;
+    if landmark_indices.len() != num_landmarks {
+        return Err(invalid(format!(
+            "{} landmark indices for s = {num_landmarks}",
+            landmark_indices.len()
+        )));
+    }
 
     // Rebuild derived structures.
     let lookups: Vec<MphLookup> = codebooks
@@ -388,8 +580,9 @@ pub fn save_file(model: &NysHdcModel, path: &std::path::Path) -> io::Result<()> 
     save(model, std::io::BufWriter::new(f))
 }
 
-/// Load from a file path.
-pub fn load_file(path: &std::path::Path) -> io::Result<NysHdcModel> {
+/// Load from a file path. Open failures come back as [`NysxError::Io`],
+/// decode failures as [`NysxError::ModelFormat`] with the byte offset.
+pub fn load_file(path: &std::path::Path) -> Result<NysHdcModel, NysxError> {
     let f = std::fs::File::open(path)?;
     load(std::io::BufReader::new(f))
 }
@@ -537,7 +730,13 @@ mod tests {
     #[test]
     fn rejects_bad_magic() {
         let buf = b"NOTAMODELxxxxxxxxxxxxxxx".to_vec();
-        assert!(load(&buf[..]).is_err());
+        match load(&buf[..]) {
+            Err(NysxError::ModelFormat { offset, detail }) => {
+                assert_eq!(offset, 8, "magic is the first 8 bytes");
+                assert!(detail.contains("magic"), "{detail}");
+            }
+            other => panic!("want ModelFormat, got {other:?}"),
+        }
     }
 
     #[test]
@@ -554,6 +753,127 @@ mod tests {
         let mut buf = Vec::new();
         save(&model, &mut buf).unwrap();
         buf.truncate(buf.len() / 2);
-        assert!(load(&buf[..]).is_err());
+        match load(&buf[..]) {
+            Err(NysxError::ModelFormat { offset, .. }) => {
+                assert!(offset <= buf.len() as u64, "offset past the stream end");
+            }
+            other => panic!("want ModelFormat, got {other:?}"),
+        }
+    }
+
+    /// Tiny model serialized in both on-disk formats, for the corpus
+    /// tests below.
+    fn tiny_model_bytes() -> Vec<(&'static str, Vec<u8>)> {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(13, 0.15);
+        let cfg = ModelConfig {
+            hops: 2,
+            // Off a word boundary: the packed tail-bit validation path is
+            // live in the v2 decode.
+            hv_dim: 200,
+            num_landmarks: 5,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        let (mut v1, mut v2) = (Vec::new(), Vec::new());
+        save_v1(&model, &mut v1).unwrap();
+        save(&model, &mut v2).unwrap();
+        vec![("v1", v1), ("v2", v2)]
+    }
+
+    /// THE robustness property: truncation at any point, in either format
+    /// version, is a typed [`NysxError::ModelFormat`] — never a panic.
+    #[test]
+    fn truncation_at_every_offset_yields_model_format() {
+        for (tag, buf) in tiny_model_bytes() {
+            for cut in (0..buf.len()).step_by(7) {
+                match load(&buf[..cut]) {
+                    Err(NysxError::ModelFormat { offset, .. }) => {
+                        assert!(
+                            offset <= cut as u64,
+                            "{tag}: error offset {offset} past truncation point {cut}"
+                        );
+                    }
+                    Ok(_) => panic!("{tag}: truncated at {cut} still loaded"),
+                    Err(other) => panic!("{tag}: want ModelFormat at {cut}, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    /// Bit flips anywhere in the artifact either still decode (a flip in
+    /// value payload changes numbers, not structure) or fail with a typed
+    /// [`NysxError::ModelFormat`]. A panic or abort fails this test —
+    /// which is exactly what a corrupt length prefix used to cause via
+    /// `Vec::with_capacity` on the raw count.
+    #[test]
+    fn bit_flips_never_panic() {
+        for (tag, buf) in tiny_model_bytes() {
+            for pos in (0..buf.len()).step_by(11) {
+                for bit in [0u8, 3, 7] {
+                    let mut bad = buf.clone();
+                    bad[pos] ^= 1 << bit;
+                    match load(&bad[..]) {
+                        Ok(_) | Err(NysxError::ModelFormat { .. }) => {}
+                        Err(other) => {
+                            panic!("{tag}: flip {pos}.{bit} gave wrong error class {other:?}")
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A corrupt length prefix announcing an absurd element count must be
+    /// rejected by the plausibility cap — BEFORE any proportional
+    /// allocation — and a merely-large lie must die on EOF with memory
+    /// bounded by the actual stream length.
+    #[test]
+    fn corrupt_length_prefix_rejected_without_huge_allocation() {
+        let (_, buf) = tiny_model_bytes().pop().unwrap();
+        // The dataset-name length prefix sits right after the 8-byte
+        // magic and the 9-field (72-byte) config block.
+        let name_len_at = 8 + 72;
+        for lie in [u64::MAX, 1 << 40, 1 << 25] {
+            let mut bad = buf.clone();
+            bad[name_len_at..name_len_at + 8].copy_from_slice(&lie.to_le_bytes());
+            match load(&bad[..]) {
+                Err(NysxError::ModelFormat { offset, .. }) => {
+                    // Decoding stops inside or right after the lying
+                    // section; it must never "succeed".
+                    assert!(offset <= bad.len() as u64 + 8);
+                }
+                other => panic!("lying length {lie:#x}: want ModelFormat, got {other:?}"),
+            }
+        }
+    }
+
+    /// Cross-section inconsistencies (not just truncation) are caught:
+    /// a v2 prototype section claiming a different dimensionality.
+    #[test]
+    fn prototype_dim_mismatch_is_typed() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(14, 0.15);
+        let cfg = ModelConfig {
+            hops: 2,
+            hv_dim: 128,
+            num_landmarks: 5,
+            ..ModelConfig::default()
+        };
+        let mut model = train(&ds, &cfg);
+        // Desynchronize: claim hv_dim 256 while every stored section is
+        // still sized for 128.
+        model.config.hv_dim = 256;
+        let mut buf = Vec::new();
+        save(&model, &mut buf).unwrap();
+        match load(&buf[..]) {
+            Err(NysxError::ModelFormat { detail, .. }) => {
+                assert!(
+                    detail.contains("256") || detail.contains("128"),
+                    "detail should name the mismatching dims: {detail}"
+                );
+            }
+            other => panic!("want ModelFormat, got {other:?}"),
+        }
     }
 }

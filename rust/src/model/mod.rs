@@ -47,6 +47,64 @@ impl Default for ModelConfig {
     }
 }
 
+impl ModelConfig {
+    /// Check every field for values that would make training or
+    /// inference meaningless (or panic deep inside the pipeline).
+    /// The [`crate::api::Pipeline`] builder and the model-file loader
+    /// call this before any heavy work, turning bad user input into a
+    /// typed [`crate::api::NysxError::Config`] instead of an assert.
+    pub fn validate(&self) -> Result<(), crate::api::NysxError> {
+        use crate::api::NysxError;
+        // The upper bounds are plausibility caps, not tuning advice: the
+        // derived structures (schedule tables sized `iterations × pes`,
+        // MPH bit arrays sized `γ·n`) allocate proportionally to these
+        // fields, so a corrupt value must be rejected before it reaches
+        // the builders.
+        if self.hops == 0 || self.hops > 64 {
+            return Err(NysxError::Config(format!(
+                "hops must be in 1..=64, got {}",
+                self.hops
+            )));
+        }
+        if self.hv_dim == 0 || self.hv_dim > 1 << 26 {
+            return Err(NysxError::Config(format!(
+                "hv_dim must be in 1..=2^26, got {}",
+                self.hv_dim
+            )));
+        }
+        if self.num_landmarks == 0 || self.num_landmarks > 1 << 24 {
+            return Err(NysxError::Config(format!(
+                "num_landmarks must be in 1..=2^24, got {}",
+                self.num_landmarks
+            )));
+        }
+        if !(self.lsh_width.is_finite() && self.lsh_width > 0.0) {
+            return Err(NysxError::Config(format!(
+                "lsh_width must be finite and > 0, got {}",
+                self.lsh_width
+            )));
+        }
+        if !(self.mph_gamma.is_finite() && (1.0..=64.0).contains(&self.mph_gamma)) {
+            return Err(NysxError::Config(format!(
+                "mph_gamma must be a load factor in [1, 64], got {}",
+                self.mph_gamma
+            )));
+        }
+        if self.pes == 0 || self.pes > 1 << 16 {
+            return Err(NysxError::Config(format!(
+                "pes must be in 1..=65536, got {}",
+                self.pes
+            )));
+        }
+        if let LandmarkStrategy::HybridDpp { pool_factor } = self.strategy {
+            if pool_factor == 0 {
+                return Err(NysxError::config("HybridDpp pool_factor must be >= 1"));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// The trained model — the full parameter set of Algorithm 1.
 #[derive(Debug, Clone)]
 pub struct NysHdcModel {

@@ -172,16 +172,32 @@ pub fn encode_hv(model: &NysHdcModel, graph: &Graph) -> Hypervector {
     Hypervector::from_real(&model.projection.project(&c))
 }
 
-/// Classification accuracy of a model over a labeled split.
-pub fn evaluate(model: &NysHdcModel, split: &[(Graph, usize)]) -> f64 {
+/// Classification accuracy of a model over a labeled split, or `None`
+/// for an empty split (accuracy over nothing is undefined — the old
+/// `0.0` was indistinguishable from "every prediction wrong").
+///
+/// Delegates to [`crate::api::accuracy`] over a fresh batched packed
+/// engine: one scratch set, one blocked C×W SCE dispatch per chunk.
+/// Bit-identical to the per-graph i8 path — [`evaluate_reference`]
+/// stays as the oracle and the `evaluate_matches_i8_reference_path`
+/// test pins the two equal.
+pub fn evaluate(model: &NysHdcModel, split: &[(Graph, usize)]) -> Option<f64> {
+    // The in-process engine has no fallible transport; collapse Result.
+    crate::api::accuracy(&mut crate::infer::NysxEngine::new(model), split).unwrap_or(None)
+}
+
+/// The pre-batching evaluation path: per-graph hashmap-codebook
+/// [`encode_hv`] + i8 prototype matching. Kept as the oracle for
+/// [`evaluate`]; not for production use.
+pub fn evaluate_reference(model: &NysHdcModel, split: &[(Graph, usize)]) -> Option<f64> {
     if split.is_empty() {
-        return 0.0;
+        return None;
     }
     let correct = split
         .iter()
         .filter(|(g, y)| model.prototypes.classify(&encode_hv(model, g)) == *y)
         .count();
-    correct as f64 / split.len() as f64
+    Some(correct as f64 / split.len() as f64)
 }
 
 #[cfg(test)]
@@ -211,11 +227,38 @@ mod tests {
             assert_eq!(model.landmark_hists[t].rows, s_uni);
             assert_eq!(model.landmark_hists[t].cols, model.codebooks[t].len());
         }
-        let train_acc = evaluate(&model, &ds.train);
-        let test_acc = evaluate(&model, &ds.test);
+        let train_acc = evaluate(&model, &ds.train).expect("non-empty train split");
+        let test_acc = evaluate(&model, &ds.test).expect("non-empty test split");
         let chance = 1.0 / ds.num_classes as f64;
         assert!(train_acc > chance + 0.1, "train acc {train_acc} ~ chance");
         assert!(test_acc > chance, "test acc {test_acc} below chance");
+    }
+
+    /// Satellite equivalence pin: the batched packed [`evaluate`] must be
+    /// bit-identical in accuracy to the old per-graph i8 path (now
+    /// [`evaluate_reference`]) on every split, and both must agree that
+    /// an empty split has no accuracy.
+    #[test]
+    fn evaluate_matches_i8_reference_path() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(77, 0.5);
+        // hv_dim off a word boundary AND a train split larger than one
+        // accuracy() batch chunk (64): tail words and chunk seams live.
+        let mut cfg = small_config(10);
+        cfg.hv_dim = 1000;
+        let model = train(&ds, &cfg);
+        assert_eq!(
+            evaluate(&model, &ds.train),
+            evaluate_reference(&model, &ds.train),
+            "train-split accuracy drifted from the i8 oracle"
+        );
+        assert_eq!(
+            evaluate(&model, &ds.test),
+            evaluate_reference(&model, &ds.test),
+            "test-split accuracy drifted from the i8 oracle"
+        );
+        assert_eq!(evaluate(&model, &[]), None);
+        assert_eq!(evaluate_reference(&model, &[]), None);
     }
 
     #[test]

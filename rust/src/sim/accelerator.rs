@@ -24,7 +24,8 @@ impl CycleBreakdown {
 
     /// Fraction of total cycles spent in the NEE (the paper's ">90% of
     /// inference time" profiling claim is about wall time on *their*
-    /// datasets; we report ours in EXPERIMENTS.md).
+    /// datasets; ours lands in the Fig 8 / Table 7 renderings — see
+    /// DESIGN.md §4).
     pub fn nee_fraction(&self) -> f64 {
         self.nee as f64 / self.total().max(1) as f64
     }

@@ -2,7 +2,7 @@
 //! cycle models driven by real per-inference work traces, composed along
 //! the Fig-5 compute flow, with power/energy, resource-utilization and
 //! roofline models. This is the hardware substitute for the ZCU104 — see
-//! DESIGN.md §2.
+//! DESIGN.md §4 at the repository root.
 
 pub mod accelerator;
 pub mod config;

@@ -72,6 +72,36 @@ impl Args {
         matches!(self.get(key), Some("true" | "1" | "yes"))
     }
 
+    // Fallible getters: binaries surface malformed flag values as typed
+    // errors instead of panicking (the panicking `get_*` variants above
+    // remain for contexts where aborting is the right behavior).
+
+    fn try_get<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+        kind: &str,
+    ) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{key} must be {kind}, got {s:?}")),
+        }
+    }
+
+    pub fn try_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.try_get(key, default, "an integer")
+    }
+
+    pub fn try_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        self.try_get(key, default, "an integer")
+    }
+
+    pub fn try_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        self.try_get(key, default, "a number")
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -109,5 +139,15 @@ mod tests {
         let a = parse("--dpp --dataset DD");
         assert!(a.get_bool("dpp"));
         assert_eq!(a.get("dataset"), Some("DD"));
+    }
+
+    #[test]
+    fn try_getters_report_instead_of_panicking() {
+        let a = parse("--workers four --scale 0.5");
+        let err = a.try_usize("workers", 4).expect_err("non-numeric");
+        assert!(err.contains("workers") && err.contains("four"), "{err}");
+        assert_eq!(a.try_f64("scale", 1.0), Ok(0.5));
+        assert_eq!(a.try_usize("absent", 7), Ok(7));
+        assert_eq!(a.try_u64("absent", 9), Ok(9));
     }
 }

@@ -100,7 +100,8 @@ fn train_serve_end_to_end() {
     // The full L3 story: train, serve through the coordinator, verify
     // accuracy matches offline evaluation.
     let (ds, model) = artifact_compatible_model();
-    let offline_acc = nysx::model::train::evaluate(&model, &ds.test);
+    let offline_acc =
+        nysx::model::train::evaluate(&model, &ds.test).expect("non-empty test split");
     let model = Arc::new(model);
     let mut server = nysx::coordinator::Server::start(
         model,
@@ -120,6 +121,35 @@ fn train_serve_end_to_end() {
         .count();
     let served_acc = correct as f64 / ds.test.len() as f64;
     assert!((served_acc - offline_acc).abs() < 1e-9, "serving changed accuracy");
+}
+
+/// The `nysx::api` facade end to end: builder → train → evaluate →
+/// serve, with the coordinator-backed classifier agreeing with the owned
+/// packed engine on every round-tripped query.
+#[test]
+fn api_facade_end_to_end() {
+    use nysx::api::{Classifier, Pipeline};
+    let mut trained = Pipeline::for_dataset("MUTAG")
+        .expect("MUTAG exists")
+        .scale(0.2)
+        .hops(3)
+        .hv_dim(500)
+        .seed(3)
+        .train()
+        .expect("small training run");
+    let acc = trained.evaluate().expect("non-empty test split");
+    let chance = 1.0 / trained.dataset().num_classes as f64;
+    assert!(acc > chance, "facade accuracy {acc} at or below chance");
+    let mut served = trained.serve(Default::default()).expect("default serving config");
+    let (ds, engine) = trained.parts();
+    for (g, _) in ds.test.iter().take(6) {
+        assert_eq!(
+            served.classify(g).expect("serving transport"),
+            engine.infer(g).predicted,
+            "served prediction != owned engine"
+        );
+    }
+    served.shutdown();
 }
 
 #[cfg(feature = "xla-runtime")]
