@@ -4,6 +4,14 @@
 //! API (`nysx::api`).
 //!
 //!     cargo run --release --example quickstart
+//!
+//! Training and inference run their heavy kernels on the `nysx::exec`
+//! data-parallel pool. Size it with the `NYSX_THREADS` environment
+//! variable (the `nysx` CLI also takes `--threads N`), or pin a
+//! pipeline to its own pool with `.threads(n)` on the builder — results
+//! are bit-identical at any thread count, only wall-clock changes:
+//!
+//!     NYSX_THREADS=4 cargo run --release --example quickstart
 
 use nysx::api::{NysxError, Pipeline};
 use nysx::sim::{simulate, AcceleratorConfig, PowerModel, SimOptions};

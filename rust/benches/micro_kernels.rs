@@ -16,17 +16,19 @@
 use std::time::Duration;
 
 use nysx::bench::harness::{bench, black_box, print_results, BenchResult};
+use nysx::exec::Pool;
 use nysx::graph::tudataset::spec_by_name;
 use nysx::hdc::simd;
 use nysx::hdc::{
-    bundle, packed_bundle, Hypervector, PackedBatch, PackedHypervector, PopcountBackend,
+    bundle, packed_bundle, Hypervector, PackedAccumulator, PackedBatch, PackedHypervector,
+    PopcountBackend,
 };
 use nysx::infer::NysxEngine;
 use nysx::kernel::node_codes;
 use nysx::model::train::train;
 use nysx::model::ModelConfig;
 use nysx::mph::{code_key, Mph, MphLookup};
-use nysx::sparse::{SchedulePolicy, ScheduleTable};
+use nysx::sparse::{Csr, SchedulePolicy, ScheduleTable};
 use nysx::util::rng::Xoshiro256;
 
 fn smoke_mode() -> bool {
@@ -40,6 +42,13 @@ fn speedup(results: &[BenchResult], old: &str, new: &str) -> Option<(String, f64
     Some((format!("{old} → {new}"), o.mean_ns / n.mean_ns))
 }
 
+/// Median-time (p50) ratio — the thread-scaling table reports medians so
+/// one slow outlier sample cannot fake or hide a speedup.
+fn speedup_p50(results: &[BenchResult], old: &str, new: &str) -> Option<f64> {
+    let find = |n: &str| results.iter().find(|r| r.name == n);
+    Some(find(old)?.p50_ns / find(new)?.p50_ns)
+}
+
 fn main() {
     let smoke = smoke_mode();
     let budget = if smoke {
@@ -47,6 +56,10 @@ fn main() {
     } else {
         Duration::from_millis(300)
     };
+    // Warm the process-wide exec pool ONCE before any timing loop: the
+    // engine benches below dispatch on it, and its first run pays
+    // worker spawn/wake costs that must never pollute reported medians.
+    nysx::exec::global().warm_up();
     let mut results = Vec::new();
 
     // --- packed vs i8 hypervector kernels at the paper's d = 10^4 ---
@@ -259,6 +272,93 @@ fn main() {
         black_box(batch_preds.len());
     }));
 
+    // --- exec thread scaling: the pool-parallel kernels at 1/2/4
+    // threads on identical operands. Each pool is warmed up once before
+    // its first timed loop (satellite of the pool-spawn-cost bugfix);
+    // smoke mode runs the same code and asserts bit-equality only —
+    // shared CI runners make timing ratios meaningless there. ---
+    let scale_pools: Vec<Pool> = [1usize, 2, 4].iter().map(|&t| Pool::new(t)).collect();
+    for pool in &scale_pools {
+        pool.warm_up();
+    }
+    let be = simd::active();
+    // Blocked C×W scoring at the paper's d: a synthetic C=16 prototype
+    // set × W queries (the serving shape the acceptance bar measures).
+    let exec_classes = 16usize;
+    let exec_w = if smoke { 8 } else { 64 };
+    let mut erng = Xoshiro256::seed_from_u64(29);
+    let exec_protos = {
+        let mut acc = PackedAccumulator::new(exec_classes, model.d());
+        for i in 0..3 * exec_classes {
+            acc.add(i % exec_classes, &PackedHypervector::random(model.d(), &mut erng));
+        }
+        acc.finalize()
+    };
+    let mut exec_batch = PackedBatch::new(model.d());
+    for _ in 0..exec_w {
+        exec_batch.push(&PackedHypervector::random(model.d(), &mut erng));
+    }
+    let mut want_scores = vec![0i64; exec_classes * exec_w];
+    exec_protos.scores_batch_into_with(be, &exec_batch, &mut want_scores);
+    let mut exec_out = vec![0i64; exec_classes * exec_w];
+    for pool in &scale_pools {
+        let t = pool.threads();
+        exec_protos.scores_batch_into_pool(pool, be, &exec_batch, &mut exec_out);
+        assert_eq!(
+            exec_out, want_scores,
+            "exec C×W scores diverge at {t} threads"
+        );
+        results.push(bench(
+            &format!("exec/sce-c{exec_classes}xw{exec_w}/t{t}"),
+            budget,
+            || {
+                exec_protos.scores_batch_into_pool(pool, be, black_box(&exec_batch), &mut exec_out);
+                black_box(exec_out[0]);
+            },
+        ));
+    }
+    // Fused NEE project-bipolarize-pack across word ranges.
+    let mut want_pack = PackedHypervector::zeros(model.d());
+    model.projection.project_pack_into(&c_vec, &mut want_pack);
+    for pool in &scale_pools {
+        let t = pool.threads();
+        let mut out = PackedHypervector::zeros(model.d());
+        model.projection.project_pack_into_with_pool(pool, &c_vec, &mut out);
+        assert_eq!(out, want_pack, "exec NEE pack diverges at {t} threads");
+        results.push(bench(&format!("exec/nee-pack/t{t}"), budget, || {
+            model
+                .projection
+                .project_pack_into_with_pool(pool, black_box(&c_vec), &mut out);
+            black_box(out.dim());
+        }));
+    }
+    // Scheduled SpMV over an operand big enough to feed several lanes.
+    let spmv_n = if smoke { 192 } else { 1536 };
+    let mut srng = Xoshiro256::seed_from_u64(31);
+    let mut triplets = Vec::new();
+    for r in 0..spmv_n {
+        for c in 0..spmv_n {
+            if srng.bernoulli(0.04) {
+                triplets.push((r, c, srng.normal()));
+            }
+        }
+    }
+    let spmv_csr = Csr::from_triplets(spmv_n, spmv_n, triplets);
+    let spmv_sched = ScheduleTable::build(&spmv_csr, 16, SchedulePolicy::NnzGrouped);
+    let spmv_x: Vec<f64> = (0..spmv_n).map(|i| (i % 13) as f64).collect();
+    let mut spmv_want = vec![0.0f64; spmv_n];
+    spmv_sched.run_spmv(&spmv_csr, &spmv_x, &mut spmv_want);
+    let mut spmv_y = vec![0.0f64; spmv_n];
+    for pool in &scale_pools {
+        let t = pool.threads();
+        spmv_sched.run_spmv_with_pool(pool, &spmv_csr, &spmv_x, &mut spmv_y);
+        assert_eq!(spmv_y, spmv_want, "exec SpMV diverges at {t} threads");
+        results.push(bench(&format!("exec/spmv-lb-n{spmv_n}/t{t}"), budget, || {
+            spmv_sched.run_spmv_with_pool(pool, black_box(&spmv_csr), &spmv_x, &mut spmv_y);
+            black_box(spmv_y[0]);
+        }));
+    }
+
     // --- whole optimized inference ---
     let mut engine = NysxEngine::new(&model);
     results.push(bench("infer/optimized-e2e", budget, || {
@@ -304,6 +404,25 @@ fn main() {
                 println!("  {label:<44} {ratio:6.2}x");
             }
         }
+    }
+
+    println!(
+        "\nexec thread scaling (p50-time ratio vs 1 thread; pools pre-warmed{}):",
+        if smoke { "; smoke mode — ratios indicative only, equality asserted" } else { "" }
+    );
+    println!(
+        "{:>28} {:>8} {:>8} {:>8}",
+        "kernel", "t=1", "t=2", "t=4"
+    );
+    for kernel in [
+        format!("exec/sce-c{exec_classes}xw{exec_w}"),
+        "exec/nee-pack".to_string(),
+        format!("exec/spmv-lb-n{spmv_n}"),
+    ] {
+        let base = format!("{kernel}/t1");
+        let r2 = speedup_p50(&results, &base, &format!("{kernel}/t2")).unwrap_or(f64::NAN);
+        let r4 = speedup_p50(&results, &base, &format!("{kernel}/t4")).unwrap_or(f64::NAN);
+        println!("{kernel:>28} {:>7.2}x {r2:>7.2}x {r4:>7.2}x", 1.0);
     }
 
     // --- MPH γ ablation (paper §5.2.2 sizing trade-off) ---

@@ -9,7 +9,10 @@
 //! * [`Pipeline`] / [`TrainedPipeline`] — the builder chain
 //!   `Pipeline::for_dataset("MUTAG")?.hv_dim(10_000).seed(42).train()?`
 //!   yielding an owned handle with `infer`, `infer_batch`, `evaluate`,
-//!   `save`, and `serve` — no `'m` borrow to juggle.
+//!   `save`, and `serve` — no `'m` borrow to juggle. `.threads(n)` pins
+//!   the pipeline to a dedicated [`crate::exec`] pool (default: the
+//!   process-wide pool, sized by `--threads` / `NYSX_THREADS`); thread
+//!   count is pure throughput — results are bit-identical at any value.
 //! * [`Classifier`] — one interface over every backend: the packed
 //!   [`NysxEngine`], the verbatim i8 Algorithm-1 oracle
 //!   ([`ReferenceClassifier`]), the GraphHD / NysHD baselines, and the

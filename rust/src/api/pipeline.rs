@@ -15,7 +15,10 @@ use std::sync::Arc;
 
 use super::error::NysxError;
 use super::Classifier;
-use crate::coordinator::{MetricsSummary, Response, Server, ServerConfig, SubmitError};
+use crate::coordinator::{
+    MetricsSummary, Response, Server, ServerConfig, SubmitBatchError, SubmitError,
+};
+use crate::exec::{self, Pool};
 use crate::graph::tudataset::{spec_by_name, TuSpec, TU_SPECS};
 use crate::graph::{Graph, GraphDataset};
 use crate::infer::{InferenceResult, NysxEngine};
@@ -62,6 +65,7 @@ pub struct Pipeline {
     hops: Option<usize>,
     strategy: LandmarkStrategy,
     num_landmarks: Option<usize>,
+    threads: Option<usize>,
 }
 
 impl Pipeline {
@@ -81,6 +85,7 @@ impl Pipeline {
             hops: None,
             strategy: LandmarkStrategy::HybridDpp { pool_factor: 2 },
             num_landmarks: None,
+            threads: None,
         })
     }
 
@@ -123,6 +128,31 @@ impl Pipeline {
         self
     }
 
+    /// Exec-pool thread count for this pipeline: training, the owned
+    /// engine, and every classifier it hands out run their
+    /// data-parallel kernels on a dedicated [`exec::Pool`] of `n`
+    /// threads instead of the process-wide pool (`--threads` /
+    /// `NYSX_THREADS`). A pure throughput knob — models, predictions
+    /// and scores are bit-identical at any thread count. `n = 0` is a
+    /// typed config error at `train()`/`load()` time.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Resolve the exec pool this pipeline (and its `TrainedPipeline`)
+    /// runs on, validating an explicit thread count.
+    fn resolve_pool(&self) -> Result<Arc<Pool>, NysxError> {
+        match self.threads {
+            None => Ok(exec::global()),
+            Some(n) if n >= 1 && n <= exec::MAX_THREADS => Ok(Arc::new(Pool::new(n))),
+            Some(n) => Err(NysxError::Config(format!(
+                "threads must be in 1..={}, got {n}",
+                exec::MAX_THREADS
+            ))),
+        }
+    }
+
     /// Generate the dataset and the validated [`ModelConfig`].
     fn materialize(&self) -> Result<(GraphDataset, ModelConfig), NysxError> {
         check_scale(self.scale)?;
@@ -154,9 +184,10 @@ impl Pipeline {
 
     /// Train a model on the generated dataset.
     pub fn train(self) -> Result<TrainedPipeline, NysxError> {
+        let pool = self.resolve_pool()?;
         let (ds, cfg) = self.materialize()?;
-        let model = Arc::new(crate::model::train::train(&ds, &cfg));
-        Ok(TrainedPipeline::from_parts(model, ds))
+        let model = Arc::new(crate::model::train::train_with_pool(&ds, &cfg, &pool));
+        Ok(TrainedPipeline::from_parts(model, ds, pool))
     }
 
     /// Load a model artifact instead of training. The builder's dataset
@@ -166,11 +197,12 @@ impl Pipeline {
     /// `landmarks` settings do not apply). Loading an artifact trained on
     /// a different dataset is a typed error.
     pub fn load(self, path: &Path) -> Result<TrainedPipeline, NysxError> {
+        let pool = self.resolve_pool()?;
         check_scale(self.scale)?;
         let model = model_io::load_file(path)?;
         check_dataset_match(&model, self.spec.name, path)?;
         let (ds, _, _) = self.spec.generate_scaled(self.seed, self.scale);
-        Ok(TrainedPipeline::from_parts(Arc::new(model), ds))
+        Ok(TrainedPipeline::from_parts(Arc::new(model), ds, pool))
     }
 }
 
@@ -180,15 +212,20 @@ pub struct TrainedPipeline {
     model: Arc<NysHdcModel>,
     dataset: GraphDataset,
     engine: NysxEngine,
+    /// The exec pool every engine/classifier of this pipeline runs on
+    /// (dedicated when built with [`Pipeline::threads`], otherwise the
+    /// process-wide pool).
+    pool: Arc<Pool>,
 }
 
 impl TrainedPipeline {
-    fn from_parts(model: Arc<NysHdcModel>, dataset: GraphDataset) -> Self {
-        let engine = NysxEngine::new(model.clone());
+    fn from_parts(model: Arc<NysHdcModel>, dataset: GraphDataset, pool: Arc<Pool>) -> Self {
+        let engine = NysxEngine::with_pool(model.clone(), pool.clone());
         Self {
             model,
             dataset,
             engine,
+            pool,
         }
     }
 
@@ -237,10 +274,12 @@ impl TrainedPipeline {
         model_io::save_file(&self.model, path).map_err(NysxError::Io)
     }
 
-    /// Start the serving coordinator over this model.
+    /// Start the serving coordinator over this model. The workers'
+    /// engines run on this pipeline's exec pool, so
+    /// [`Pipeline::threads`] bounds the serving path too.
     pub fn serve(&self, cfg: ServerConfig) -> Result<ServeHandle, NysxError> {
         Ok(ServeHandle {
-            server: Server::try_start(self.model.clone(), cfg)?,
+            server: Server::try_start_with_pool(self.model.clone(), cfg, self.pool.clone())?,
             pending: HashMap::new(),
         })
     }
@@ -254,13 +293,15 @@ impl TrainedPipeline {
         Ok(TrainedPipeline::from_parts(
             Arc::new(model),
             self.dataset.clone(),
+            self.pool.clone(),
         ))
     }
 
     /// A fresh owned packed-engine classifier over this model (for
-    /// side-by-side sweeps; the pipeline keeps its own engine).
+    /// side-by-side sweeps; the pipeline keeps its own engine). Shares
+    /// this pipeline's exec pool.
     pub fn classifier(&self) -> NysxEngine {
-        NysxEngine::new(self.model.clone())
+        NysxEngine::with_pool(self.model.clone(), self.pool.clone())
     }
 
     /// The verbatim i8 Algorithm-1 oracle over this model.
@@ -321,24 +362,43 @@ impl ServeHandle {
                 Ok(id) => return Ok(id),
                 Err(SubmitError::Backpressure(g)) => {
                     graph = g;
-                    match self.server.recv() {
-                        Some(resp) => {
-                            self.pending.insert(resp.id, resp.predicted);
-                        }
-                        // Nothing outstanding to drain yet the queues are
-                        // full: retrying can never succeed, so this must
-                        // NOT be the retryable Backpressure error.
-                        None => {
-                            return Err(NysxError::config(
-                                "serving queues are full with zero responses \
-                                 outstanding — queue capacity too small to \
-                                 make progress",
-                            ))
-                        }
-                    }
+                    self.absorb_backpressure()?;
                 }
                 Err(SubmitError::Closed(_)) => return Err(NysxError::Closed),
             }
+        }
+    }
+
+    /// Submit a whole chunk as ONE batch-major unit
+    /// ([`Server::submit_batch`]), absorbing backpressure like
+    /// [`Self::submit_blocking`].
+    fn submit_batch_blocking(&mut self, mut graphs: Vec<Graph>) -> Result<Vec<u64>, NysxError> {
+        loop {
+            match self.server.submit_batch(graphs) {
+                Ok(ids) => return Ok(ids),
+                Err(SubmitBatchError::Backpressure(gs)) => {
+                    graphs = gs;
+                    self.absorb_backpressure()?;
+                }
+                Err(SubmitBatchError::Closed(_)) => return Err(NysxError::Closed),
+            }
+        }
+    }
+
+    /// Free queue space by receiving (and buffering) one response.
+    fn absorb_backpressure(&mut self) -> Result<(), NysxError> {
+        match self.server.recv() {
+            Some(resp) => {
+                self.pending.insert(resp.id, resp.predicted);
+                Ok(())
+            }
+            // Nothing outstanding to drain yet the queues are full:
+            // retrying can never succeed, so this must NOT be the
+            // retryable Backpressure error.
+            None => Err(NysxError::config(
+                "serving queues are full with zero responses outstanding — \
+                 queue capacity too small to make progress",
+            )),
         }
     }
 
@@ -368,11 +428,27 @@ impl Classifier for ServeHandle {
         self.await_response(id)
     }
 
+    /// Batch-major end to end: the queries are chunked to the server's
+    /// configured `batch_size` and each chunk is submitted as ONE
+    /// atomic group to a single worker queue ([`Server::submit_batch`]),
+    /// so the worker pops it whole and runs one blocked C×W SCE dispatch
+    /// per chunk — instead of scattering the batch one request at a
+    /// time across workers and hoping the batcher reassembles it.
     fn classify_batch(&mut self, graphs: &[&Graph]) -> Result<Vec<usize>, NysxError> {
-        let ids: Vec<u64> = graphs
-            .iter()
-            .map(|g| self.submit_blocking((*g).clone()))
-            .collect::<Result<_, _>>()?;
+        // Chunk to the dispatch width, but never beyond the queue
+        // capacity — a chunk larger than the queue could NEVER enqueue
+        // atomically, turning every batched call into a dead loop while
+        // single submits still worked.
+        let chunk = self
+            .server
+            .batch_size()
+            .max(1)
+            .min(self.server.queue_capacity().max(1));
+        let mut ids = Vec::with_capacity(graphs.len());
+        for group in graphs.chunks(chunk) {
+            let owned: Vec<Graph> = group.iter().map(|g| (*g).clone()).collect();
+            ids.extend(self.submit_batch_blocking(owned)?);
+        }
         ids.into_iter().map(|id| self.await_response(id)).collect()
     }
 }
@@ -418,6 +494,11 @@ mod tests {
                 "s > train split",
                 small_pipeline().num_landmarks(1_000_000).train(),
             ),
+            ("threads 0", small_pipeline().threads(0).train()),
+            (
+                "threads absurd",
+                small_pipeline().threads(1_000_000).train(),
+            ),
         ] {
             match result {
                 Err(NysxError::Config(_)) => {}
@@ -454,6 +535,29 @@ mod tests {
             assert_eq!(fresh.classify(g).expect("in-process"), *want);
         }
         assert_eq!(p.evaluate_split(&[]), None);
+    }
+
+    /// The facade-level exec pin: pipelines built at different thread
+    /// counts train bit-identical models and classify identically — the
+    /// `threads` knob is pure throughput.
+    #[test]
+    fn threads_knob_never_changes_results() {
+        let mut one = small_pipeline().threads(1).train().expect("train @1");
+        let mut four = small_pipeline().threads(4).train().expect("train @4");
+        assert_eq!(
+            one.model().packed_prototypes, four.model().packed_prototypes,
+            "prototypes depend on thread count"
+        );
+        assert_eq!(
+            one.model().projection.data, four.model().projection.data,
+            "P_nys depends on thread count"
+        );
+        assert_eq!(one.evaluate(), four.evaluate(), "accuracy drift");
+        let test: Vec<Graph> = four.dataset().test.iter().map(|(g, _)| g.clone()).collect();
+        let graphs: Vec<&Graph> = test.iter().collect();
+        let want: Vec<usize> = one.infer_batch(&graphs).iter().map(|r| r.predicted).collect();
+        let got: Vec<usize> = four.infer_batch(&graphs).iter().map(|r| r.predicted).collect();
+        assert_eq!(got, want, "batched predictions depend on thread count");
     }
 
     #[test]
@@ -524,6 +628,34 @@ mod tests {
         for (g, want) in graphs.iter().take(5).zip(&want) {
             assert_eq!(served.classify(g).expect("serving transport"), *want);
         }
+        served.shutdown();
+    }
+
+    /// Regression (chunking vs capacity): a dispatch width larger than
+    /// the queue capacity must not dead-loop batched classification —
+    /// chunks are clamped to the capacity so every atomic group can
+    /// enqueue, and predictions still match the in-process engine.
+    #[test]
+    fn classify_batch_survives_batch_size_beyond_capacity() {
+        let p = small_pipeline().train().expect("train");
+        let graphs: Vec<&Graph> = p.dataset.test.iter().take(6).map(|(g, _)| g).collect();
+        let mut engine = p.classifier();
+        let want = engine.classify_batch(&graphs).expect("in-process");
+        let mut served = p
+            .serve(ServerConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 64, // far beyond...
+                    capacity: 2,    // ...the queue capacity
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+                ..Default::default()
+            })
+            .expect("serve");
+        let got = served
+            .classify_batch(&graphs)
+            .expect("chunked batches must make progress");
+        assert_eq!(got, want, "capacity-clamped chunks changed predictions");
         served.shutdown();
     }
 

@@ -296,7 +296,7 @@ fn simulate_split(
     power: &PowerModel,
 ) -> SplitSim {
     let mut engine = NysxEngine::new(model);
-    let sample = ds.test.iter().take(120);
+    let sample: Vec<&crate::graph::Graph> = ds.test.iter().take(120).map(|(g, _)| g).collect();
     let mut ms = Vec::new();
     let mut mj = Vec::new();
     let mut watts = Vec::new();
@@ -304,8 +304,14 @@ fn simulate_split(
     let mut nee_frac = Vec::new();
     let mut sparse_lb = Vec::new();
     let mut sparse_nolb = Vec::new();
-    for (g, _) in sample {
-        let trace = engine.infer(g).trace;
+    // Batch-major sweep: both the NysHD and NysX rows go through the
+    // blocked C×W packed dispatch (one SCE pass per chunk) instead of
+    // 120 single-query sweeps — traces are bit-identical to infer().
+    let mut traces = Vec::with_capacity(sample.len());
+    for chunk in sample.chunks(32) {
+        traces.extend(engine.infer_batch(chunk).into_iter().map(|r| r.trace));
+    }
+    for trace in traces {
         let lb = simulate(&trace, accel, SimOptions::default());
         let nolb = simulate(
             &trace,

@@ -62,6 +62,17 @@ impl PushError {
     }
 }
 
+/// Why a whole-batch push was rejected: the entire batch is handed back
+/// (group submission is all-or-nothing — a partial enqueue would tear
+/// the batch apart across workers, defeating batch-major dispatch).
+#[derive(Debug)]
+pub struct PushManyError {
+    /// Every request of the rejected batch, in submission order.
+    pub requests: Vec<Request>,
+    /// Terminal shutdown (`true`) vs retryable backpressure (`false`).
+    pub closed: bool,
+}
+
 #[derive(Debug, Default)]
 struct QueueState {
     items: VecDeque<Request>,
@@ -102,6 +113,33 @@ impl BatchQueue {
         st.items.push_back(req);
         drop(st);
         self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue a whole batch atomically: all requests land contiguously
+    /// under one lock acquisition (so a worker's `pop_batch` can hand
+    /// them to ONE blocked C×W dispatch), or none do. Rejection hands
+    /// the whole batch back inside a [`PushManyError`].
+    pub fn push_many(&self, reqs: Vec<Request>) -> Result<(), PushManyError> {
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushManyError {
+                requests: reqs,
+                closed: true,
+            });
+        }
+        if st.items.len() + reqs.len() > self.cfg.capacity {
+            return Err(PushManyError {
+                requests: reqs,
+                closed: false,
+            });
+        }
+        st.items.extend(reqs);
+        drop(st);
+        self.cv.notify_all();
         Ok(())
     }
 
@@ -289,6 +327,42 @@ mod tests {
             end_to_end <= max_wait.max(delayed_by) + slack,
             "oldest request queued for {end_to_end:?}, budget was {max_wait:?}"
         );
+    }
+
+    /// push_many is atomic: a batch lands contiguously or not at all,
+    /// backpressure vs shutdown is distinguished, and a subsequent
+    /// pop_batch with a matching batch_size hands the group back whole.
+    #[test]
+    fn push_many_is_atomic_and_pops_as_one_group() {
+        let q = BatchQueue::new(BatcherConfig {
+            batch_size: 3,
+            max_wait: Duration::from_millis(1),
+            capacity: 4,
+        });
+        q.push_many(vec![req(0), req(1), req(2)]).expect("fits");
+        // 3 queued + 2 > capacity 4: rejected whole, nothing enqueued.
+        match q.push_many(vec![req(3), req(4)]) {
+            Err(e) => {
+                assert!(!e.closed, "capacity rejection is retryable");
+                assert_eq!(e.requests.len(), 2, "whole batch handed back");
+                assert_eq!(e.requests[0].id, 3);
+            }
+            Ok(()) => panic!("push_many beyond capacity must fail"),
+        }
+        assert_eq!(q.len(), 3, "rejected batch must not partially enqueue");
+        // The accepted group pops as one contiguous batch.
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        // Empty batch is a no-op Ok even at capacity.
+        assert!(q.push_many(Vec::new()).is_ok());
+        q.close();
+        match q.push_many(vec![req(9)]) {
+            Err(e) => assert!(e.closed, "closed queue is terminal"),
+            Ok(()) => panic!("closed queue must reject"),
+        }
     }
 
     #[test]

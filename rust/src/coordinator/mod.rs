@@ -16,10 +16,10 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
-pub use batcher::{BatchQueue, BatcherConfig, PushError};
+pub use batcher::{BatchQueue, BatcherConfig, PushError, PushManyError};
 pub use metrics::{LatencyStats, MetricsRegistry, MetricsSummary};
 pub use router::{Router, RoutingPolicy};
-pub use server::{Server, ServerConfig, SubmitError};
+pub use server::{Server, ServerConfig, SubmitBatchError, SubmitError};
 
 use crate::graph::Graph;
 

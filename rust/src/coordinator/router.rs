@@ -6,7 +6,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use super::batcher::{BatchQueue, PushError};
+use super::batcher::{BatchQueue, PushError, PushManyError};
 use super::Request;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,6 +72,27 @@ impl Router {
         let idx = self.pick(&req);
         let est = Self::estimate(&req);
         match self.queues[idx].push(req) {
+            Ok(()) => {
+                self.work[idx].fetch_add(est, Ordering::Relaxed);
+                Ok(idx)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Route a whole batch to ONE worker queue as a unit (the
+    /// batch-major submit path): the worker is picked once — by the
+    /// first request under the configured policy — and the batch
+    /// enqueues atomically so a single `pop_batch` can dispatch it as
+    /// one blocked C×W pass. Returns the chosen worker, or hands the
+    /// whole batch back.
+    pub fn route_batch(&self, reqs: Vec<Request>) -> Result<usize, PushManyError> {
+        let Some(first) = reqs.first() else {
+            return Ok(0); // empty batch: nothing enqueued, any index valid
+        };
+        let idx = self.pick(first);
+        let est: u64 = reqs.iter().map(Self::estimate).sum();
+        match self.queues[idx].push_many(reqs) {
             Ok(()) => {
                 self.work[idx].fetch_add(est, Ordering::Relaxed);
                 Ok(idx)

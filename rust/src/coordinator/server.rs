@@ -40,6 +40,30 @@ impl SubmitError {
     }
 }
 
+/// Why a whole-batch submission was rejected (see [`Server::submit_batch`]):
+/// the entire batch comes back — group submission is all-or-nothing.
+#[derive(Debug)]
+pub enum SubmitBatchError {
+    /// The chosen worker queue cannot take the batch right now — retry
+    /// after draining responses.
+    Backpressure(Vec<Graph>),
+    /// Serving stack shut down — give up.
+    Closed(Vec<Graph>),
+}
+
+impl SubmitBatchError {
+    /// Take the rejected batch back, whatever the reason.
+    pub fn into_graphs(self) -> Vec<Graph> {
+        match self {
+            SubmitBatchError::Backpressure(gs) | SubmitBatchError::Closed(gs) => gs,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, SubmitBatchError::Closed(_))
+    }
+}
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -71,6 +95,12 @@ pub struct Server {
     pub metrics: Arc<MetricsRegistry>,
     next_id: u64,
     outstanding: usize,
+    /// The batcher's dispatch width (callers chunk batch submissions to
+    /// this so each group pops as one blocked SCE dispatch).
+    batch_size: usize,
+    /// Per-worker queue capacity (the hard ceiling on one atomic
+    /// `submit_batch`).
+    queue_capacity: usize,
 }
 
 impl Server {
@@ -82,6 +112,17 @@ impl Server {
     pub fn try_start(
         model: Arc<NysHdcModel>,
         cfg: ServerConfig,
+    ) -> Result<Self, crate::api::NysxError> {
+        Self::try_start_with_pool(model, cfg, crate::exec::global())
+    }
+
+    /// [`Self::try_start`] with an explicit exec pool for the workers'
+    /// engines — how [`crate::api::TrainedPipeline::serve`] propagates
+    /// its `Pipeline::threads(n)` pool onto the serving path.
+    pub fn try_start_with_pool(
+        model: Arc<NysHdcModel>,
+        cfg: ServerConfig,
+        exec_pool: Arc<crate::exec::Pool>,
     ) -> Result<Self, crate::api::NysxError> {
         use crate::api::NysxError;
         if cfg.workers == 0 {
@@ -96,7 +137,7 @@ impl Server {
         if cfg.batcher.batch_size == 0 {
             return Err(NysxError::config("BatcherConfig.batch_size must be > 0"));
         }
-        Ok(Self::spawn(model, cfg))
+        Ok(Self::spawn(model, cfg, exec_pool))
     }
 
     /// [`Self::try_start`] for infallible configs; panics on invalid
@@ -110,7 +151,11 @@ impl Server {
     }
 
     /// Spawn the (already validated) worker pool.
-    fn spawn(model: Arc<NysHdcModel>, cfg: ServerConfig) -> Self {
+    fn spawn(
+        model: Arc<NysHdcModel>,
+        cfg: ServerConfig,
+        exec_pool: Arc<crate::exec::Pool>,
+    ) -> Self {
         let queues: Vec<Arc<BatchQueue>> = (0..cfg.workers)
             .map(|_| Arc::new(BatchQueue::new(cfg.batcher)))
             .collect();
@@ -124,9 +169,10 @@ impl Server {
                 let tx = tx.clone();
                 let accel = cfg.accel;
                 let power = cfg.power;
+                let exec_pool = exec_pool.clone();
                 std::thread::Builder::new()
                     .name(format!("nysx-worker-{i}"))
-                    .spawn(move || worker_loop(i, model, queue, accel, power, tx))
+                    .spawn(move || worker_loop(i, model, queue, accel, power, tx, exec_pool))
                     .expect("spawn worker")
             })
             .collect();
@@ -138,7 +184,20 @@ impl Server {
             metrics,
             next_id: 0,
             outstanding: 0,
+            batch_size: cfg.batcher.batch_size,
+            queue_capacity: cfg.batcher.capacity,
         }
+    }
+
+    /// The configured per-dispatch batch width (1 = edge mode).
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// The configured per-worker queue capacity — batch submitters must
+    /// chunk below this or `submit_batch` can never succeed.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
     }
 
     /// Submit a query graph; returns its request id, or a [`SubmitError`]
@@ -162,6 +221,48 @@ impl Server {
             }
             Err(PushError::Full(req)) => Err(SubmitError::Backpressure(req.graph)),
             Err(PushError::Closed(req)) => Err(SubmitError::Closed(req.graph)),
+        }
+    }
+
+    /// Submit a whole batch of query graphs as ONE unit: the router
+    /// picks a single worker and the batch enqueues atomically on its
+    /// queue, so the worker's next `pop_batch` hands the group (bounded
+    /// by the batcher's `batch_size`) to one blocked C×W dispatch —
+    /// batch-major end to end, instead of scattering the queries across
+    /// workers one `submit` at a time. Returns the request ids in
+    /// submission order, or hands the whole batch back.
+    // The Err hands every graph back by design, like submit().
+    #[allow(clippy::result_large_err)]
+    pub fn submit_batch(&mut self, graphs: Vec<Graph>) -> Result<Vec<u64>, SubmitBatchError> {
+        if graphs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let submitted = Instant::now();
+        let count = graphs.len() as u64;
+        let reqs: Vec<Request> = graphs
+            .into_iter()
+            .enumerate()
+            .map(|(i, graph)| Request {
+                id: self.next_id + i as u64,
+                graph,
+                submitted,
+            })
+            .collect();
+        match self.router.route_batch(reqs) {
+            Ok(_worker) => {
+                let ids: Vec<u64> = (self.next_id..self.next_id + count).collect();
+                self.next_id += count;
+                self.outstanding += ids.len();
+                Ok(ids)
+            }
+            Err(e) => {
+                let graphs: Vec<Graph> = e.requests.into_iter().map(|r| r.graph).collect();
+                if e.closed {
+                    Err(SubmitBatchError::Closed(graphs))
+                } else {
+                    Err(SubmitBatchError::Backpressure(graphs))
+                }
+            }
         }
     }
 
@@ -383,6 +484,87 @@ mod tests {
         Server::try_start(model, ServerConfig::default())
             .expect("default config is valid")
             .shutdown();
+    }
+
+    /// The batch-major submit path: every batched request is answered
+    /// exactly once with oracle predictions, the group actually shares
+    /// worker dispatches (batch_size > 1 observed), and backpressure /
+    /// shutdown hand the whole batch back.
+    #[test]
+    fn submit_batch_round_trips_and_batches_dispatch() {
+        let (ds, model) = small_model();
+        let mut server = Server::start(
+            model.clone(),
+            ServerConfig {
+                workers: 2,
+                batcher: BatcherConfig {
+                    batch_size: 4,
+                    max_wait: std::time::Duration::from_millis(2),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        assert_eq!(server.batch_size(), 4);
+        let graphs: Vec<_> = ds.test.iter().take(8).map(|(g, _)| g.clone()).collect();
+        let want: Vec<usize> = graphs
+            .iter()
+            .map(|g| crate::infer::infer_reference(&model, g).0)
+            .collect();
+        let ids = server
+            .submit_batch(graphs.clone())
+            .expect("batch fits default capacity");
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>(), "ids in submission order");
+        let responses = server.drain();
+        assert_eq!(responses.len(), 8);
+        let mut batched = 0usize;
+        for resp in &responses {
+            assert_eq!(
+                resp.predicted, want[resp.id as usize],
+                "batched prediction != oracle"
+            );
+            if resp.batch_size > 1 {
+                batched += 1;
+            }
+        }
+        assert!(
+            batched >= 4,
+            "a submit_batch group must share worker dispatches, saw {batched}/8 batched"
+        );
+        // Empty batch: no-op.
+        assert!(server.submit_batch(Vec::new()).unwrap().is_empty());
+        // After close: terminal, whole batch handed back.
+        server.router.close_all();
+        match server.submit_batch(graphs) {
+            Err(e @ SubmitBatchError::Closed(_)) => {
+                assert!(e.is_closed());
+                assert_eq!(e.into_graphs().len(), 8);
+            }
+            other => panic!("want Closed, got {:?}", other.map(|ids| ids.len())),
+        }
+        server.shutdown();
+
+        // Zero-capacity queues: retryable backpressure with the batch back.
+        let mut tight = Server::start(
+            model,
+            ServerConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    capacity: 0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        match tight.submit_batch(vec![ds.test[0].0.clone()]) {
+            Err(e @ SubmitBatchError::Backpressure(_)) => {
+                assert!(!e.is_closed());
+                assert_eq!(e.into_graphs().len(), 1);
+            }
+            other => panic!("want Backpressure, got {:?}", other.map(|ids| ids.len())),
+        }
+        tight.shutdown();
     }
 
     #[test]

@@ -20,12 +20,16 @@ use super::batcher::BatchQueue;
 #[cfg(test)]
 use super::Request;
 use super::Response;
+use crate::exec::Pool;
 use crate::graph::Graph;
 use crate::infer::NysxEngine;
 use crate::model::NysHdcModel;
 use crate::sim::{simulate, AcceleratorConfig, PowerModel, SimOptions};
 
-/// Per-worker loop. Runs until the queue closes and drains.
+/// Per-worker loop. Runs until the queue closes and drains. The
+/// worker's engine dispatches its data-parallel kernels on `exec_pool`
+/// — the server passes the pool its `TrainedPipeline` was built with,
+/// so `Pipeline::threads(n)` bounds the serving path too.
 pub fn worker_loop(
     worker_id: usize,
     model: Arc<NysHdcModel>,
@@ -33,10 +37,11 @@ pub fn worker_loop(
     accel: AcceleratorConfig,
     power: PowerModel,
     responses: Sender<Response>,
+    exec_pool: Arc<Pool>,
 ) {
     // The engine takes the Arc itself: worker and engine share ownership
     // of the model for the thread's lifetime.
-    let mut engine = NysxEngine::new(model);
+    let mut engine = NysxEngine::with_pool(model, exec_pool);
     let opts = SimOptions::default();
     while let Some(batch) = queue.pop_batch() {
         let batch_size = batch.len();
@@ -103,6 +108,7 @@ mod tests {
                     AcceleratorConfig::zcu104(),
                     PowerModel::default(),
                     tx,
+                    crate::exec::global(),
                 )
             })
         };
@@ -177,6 +183,7 @@ mod tests {
                     AcceleratorConfig::zcu104(),
                     PowerModel::default(),
                     tx,
+                    crate::exec::global(),
                 )
             })
         };

@@ -1,0 +1,65 @@
+//! `nysx::exec` — the dependency-free data-parallel runtime: the
+//! software analogue of the paper's PE array with §4.2 static load
+//! balancing (see `DESIGN.md` §6).
+//!
+//! The accelerator gets its throughput from arrays of identical engines
+//! fed by *statically* balanced work assignments: an offline schedule
+//! decides, before execution, which row every PE processes in every
+//! iteration. This subsystem reproduces that execution model on host
+//! threads:
+//!
+//! * [`pool`] — a scoped worker pool (std threads + channels, nothing
+//!   vendored): [`Pool::run`] shares borrowed slices without `'static`
+//!   bounds and returns only when every lane is done. The process-wide
+//!   [`global`] pool is sized by `--threads` / `NYSX_THREADS` /
+//!   available parallelism.
+//! * [`partition`] — static partitioners: even contiguous ranges for
+//!   dense work (NEE projection rows, C×W query blocks, class blocks),
+//!   [`ScheduleTable`]-derived nnz-balanced row groups for SpMV, and
+//!   triangle-balanced ranges for Gram walks. Splits are decided before
+//!   dispatch, like the paper's schedule tables — never stolen at
+//!   runtime.
+//! * [`parallel`] — deterministic helpers ([`for_each_range_mut`],
+//!   [`map_parts`], [`map_reduce`], [`ScatterMut`]) that only hand
+//!   lanes disjoint writes and fold reductions in fixed part order.
+//!
+//! # The determinism contract
+//!
+//! Every kernel threaded through this runtime is **bit-identical at any
+//! thread count** — the differential suite pins parallel == sequential
+//! == i8-oracle for each of them across thread counts and word-boundary
+//! dims. Thread count is a pure throughput knob, exactly as PE count is
+//! for the accelerator.
+//!
+//! [`ScheduleTable`]: crate::sparse::ScheduleTable
+
+pub mod parallel;
+pub mod partition;
+pub mod pool;
+
+pub use parallel::{for_each_range_mut, map_parts, map_reduce, ScatterMut};
+pub use partition::{class_blocks, even_ranges, nnz_row_groups, triangle_ranges};
+pub use pool::{configure_threads, global, Pool, MAX_THREADS};
+
+/// Minimum dense multiply-accumulate count (d×s for the NEE projection)
+/// before the plain kernel entry points dispatch to the global pool —
+/// below it, lane wake-up costs more than the work. Explicit
+/// `*_with_pool` calls always partition regardless.
+pub const PAR_MIN_MACS: usize = 1 << 16;
+
+/// Minimum popcount word count (C·W·⌈d/64⌉ for the blocked matcher)
+/// before the plain matching entry points go parallel.
+pub const PAR_MIN_WORDS: usize = 1 << 14;
+
+/// Minimum sparse nonzero count before a scheduled SpMV goes parallel.
+pub const PAR_MIN_NNZ: usize = 1 << 13;
+
+/// THE dispatch gate shared by every auto-parallel entry point: fan out
+/// on `pool` only when it has more than one lane AND the kernel carries
+/// at least `min_work` units (one of the `PAR_MIN_*` thresholds above).
+/// Centralized so the plain `hdc` entry points and the engine's batch
+/// tail can never drift apart on when they parallelize.
+#[inline]
+pub fn worth_parallelizing(pool: &Pool, work: usize, min_work: usize) -> bool {
+    pool.threads() > 1 && work >= min_work
+}

@@ -1,0 +1,244 @@
+//! Deterministic data-parallel helpers over a [`Pool`].
+//!
+//! Everything here upholds one contract: **results are bit-identical at
+//! any thread count**. The helpers only hand lanes *disjoint* mutable
+//! data (validated contiguous ranges, or scatter targets whose index
+//! sets the caller proves disjoint), and every reduction folds per-part
+//! results in fixed part order — never completion order. There are no
+//! atomics on result paths and no floating-point combination whose
+//! grouping depends on scheduling.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+
+use super::pool::Pool;
+
+/// Raw-pointer wrapper so a base address can be captured by a `Sync`
+/// closure; all aliasing discipline lives in the helpers below.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Validate that `ranges` are sorted, pairwise disjoint and inside
+/// `len` — the precondition that makes handing them out as `&mut`
+/// slices across lanes sound.
+fn validate_disjoint(ranges: &[Range<usize>], len: usize) {
+    let mut prev_end = 0usize;
+    for r in ranges {
+        assert!(
+            r.start >= prev_end && r.start <= r.end && r.end <= len,
+            "partition ranges must be sorted, disjoint and in-bounds \
+             (range {}..{} against len {len})",
+            r.start,
+            r.end
+        );
+        prev_end = r.end;
+    }
+}
+
+/// Run `f(part, &mut data[ranges[part]])` for every part, parts
+/// distributed over the pool's lanes. `ranges` must be sorted, disjoint
+/// and in-bounds (asserted), which is exactly what every partitioner in
+/// [`super::partition`] produces.
+pub fn for_each_range_mut<T, F>(pool: &Pool, data: &mut [T], ranges: &[Range<usize>], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    validate_disjoint(ranges, data.len());
+    let base = SendPtr(data.as_mut_ptr());
+    pool.run(ranges.len(), &|part| {
+        let r = &ranges[part];
+        // SAFETY: ranges are validated disjoint and in-bounds, and the
+        // pool runs each part index exactly once — so no two lanes ever
+        // hold slices over the same elements.
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.end - r.start) };
+        f(part, slice);
+    });
+}
+
+/// Map every part index to a value, returned **in part order** (not
+/// completion order) — the deterministic fan-out primitive.
+pub fn map_parts<R, F>(pool: &Pool, parts: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = Vec::new();
+    out.resize_with(parts, || None);
+    let ranges: Vec<Range<usize>> = (0..parts).map(|i| i..i + 1).collect();
+    for_each_range_mut(pool, &mut out, &ranges, |part, slot| {
+        slot[0] = Some(f(part));
+    });
+    out.into_iter()
+        .map(|r| r.expect("pool ran every part exactly once"))
+        .collect()
+}
+
+/// Map every part, then fold the results **left to right in part
+/// order** — a fixed reduction tree, so the combined value is identical
+/// at any thread count even for non-associative combines (floating
+/// point, first-wins argmax). `None` iff `parts == 0`.
+pub fn map_reduce<R, F, G>(pool: &Pool, parts: usize, map: F, reduce: G) -> Option<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+    G: FnMut(R, R) -> R,
+{
+    map_parts(pool, parts, map).into_iter().reduce(reduce)
+}
+
+/// Scattered disjoint writes into one buffer — for kernels whose
+/// per-lane output rows are a *non-contiguous* partition (the §4.2
+/// schedule's nnz-balanced row groups). Bounds are always checked; the
+/// disjointness of the index sets is the caller's obligation, which is
+/// why the write methods are `unsafe`.
+pub struct ScatterMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for ScatterMut<'_, T> {}
+unsafe impl<T: Send> Sync for ScatterMut<'_, T> {}
+
+impl<'a, T> ScatterMut<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        Self {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            _borrow: PhantomData,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Overwrite element `i`.
+    ///
+    /// # Safety
+    ///
+    /// Within one parallel region, no index may be touched by more than
+    /// one lane (bounds are checked here; disjointness is not).
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        assert!(i < self.len, "scatter write out of bounds: {i} >= {}", self.len);
+        unsafe { *self.ptr.add(i) = value };
+    }
+
+    /// Read-modify-write element `i` (e.g. `+=` accumulation into rows
+    /// this lane owns).
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`Self::write`].
+    #[inline]
+    pub unsafe fn update(&self, i: usize, f: impl FnOnce(&mut T)) {
+        assert!(i < self.len, "scatter update out of bounds: {i} >= {}", self.len);
+        f(unsafe { &mut *self.ptr.add(i) });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_filled_disjointly_and_completely() {
+        for threads in [1usize, 2, 7] {
+            let pool = Pool::new(threads);
+            let mut data = vec![0u32; 100];
+            let ranges = super::super::partition::even_ranges(100, 7);
+            for_each_range_mut(&pool, &mut data, &ranges, |part, slice| {
+                for x in slice.iter_mut() {
+                    *x = part as u32 + 1;
+                }
+            });
+            assert!(data.iter().all(|&x| x != 0), "uncovered element");
+            // Part boundaries match the partition exactly.
+            for (part, r) in ranges.iter().enumerate() {
+                assert!(data[r.clone()].iter().all(|&x| x == part as u32 + 1));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted, disjoint")]
+    fn overlapping_ranges_rejected() {
+        let pool = Pool::new(2);
+        let mut data = vec![0u8; 10];
+        for_each_range_mut(&pool, &mut data, &[0..6, 5..10], |_, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted, disjoint")]
+    fn out_of_bounds_ranges_rejected() {
+        let pool = Pool::new(2);
+        let mut data = vec![0u8; 10];
+        for_each_range_mut(&pool, &mut data, &[0..5, 5..11], |_, _| {});
+    }
+
+    #[test]
+    fn map_parts_preserves_part_order() {
+        for threads in [1usize, 2, 7] {
+            let pool = Pool::new(threads);
+            let got = map_parts(&pool, 23, |p| p * p);
+            let want: Vec<usize> = (0..23).map(|p| p * p).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert!(map_parts(&Pool::new(3), 0, |p| p).is_empty());
+    }
+
+    #[test]
+    fn map_reduce_fixed_fold_order() {
+        // A deliberately non-commutative combine: string concatenation
+        // exposes any completion-order dependence immediately.
+        for threads in [1usize, 2, 7] {
+            let pool = Pool::new(threads);
+            let got = map_reduce(&pool, 9, |p| p.to_string(), |a, b| a + &b);
+            assert_eq!(got.as_deref(), Some("012345678"), "threads={threads}");
+        }
+        assert_eq!(map_reduce(&Pool::new(2), 0, |p| p, |a, b| a + b), None);
+    }
+
+    #[test]
+    fn scatter_disjoint_interleaved_writes() {
+        for threads in [1usize, 2, 7] {
+            let pool = Pool::new(threads);
+            let mut data = vec![0u64; 64];
+            {
+                let scatter = ScatterMut::new(&mut data);
+                // Lane p owns the strided index set {p, p+4, p+8, ...}.
+                pool.run(4, &|p| {
+                    let mut i = p;
+                    while i < 64 {
+                        // SAFETY: strided sets with distinct residues are
+                        // disjoint.
+                        unsafe { scatter.write(i, (p as u64 + 1) * 1000 + i as u64) };
+                        unsafe { scatter.update(i, |v| *v += 1) };
+                        i += 4;
+                    }
+                });
+            }
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, ((i % 4) as u64 + 1) * 1000 + i as u64 + 1, "index {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn scatter_bounds_checked() {
+        let mut data = vec![0u8; 4];
+        let scatter = ScatterMut::new(&mut data);
+        unsafe { scatter.write(4, 1) };
+    }
+}

@@ -1,0 +1,248 @@
+//! Static partitioners — every split is decided before anything is
+//! dispatched, mirroring the paper's §4.2 offline schedule construction
+//! rather than runtime work stealing.
+//!
+//! Three shapes cover the pipeline's hot kernels:
+//!
+//! * [`even_ranges`] — contiguous equal-size ranges, for work that is
+//!   uniform per element: dense d×s NEE projection rows / packed words,
+//!   query blocks of the C×W batch matcher, graphs of a training split.
+//! * [`class_blocks`] — [`even_ranges`] under its SCE name: class-block
+//!   partitions of prototype matching, each block a contiguous run of
+//!   the scores vector.
+//! * [`nnz_row_groups`] — nnz-balanced sparse row groups built **from
+//!   the paper's own [`ScheduleTable`]**: PE column `j` of an
+//!   `nnz`-grouped schedule collects rows of near-mean weight per
+//!   iteration, so the column's row set is a balanced share of the
+//!   total nnz. [`triangle_ranges`] is the analogous cost-balanced
+//!   split for upper-triangular Gram walks (row `i` costs `n - i`).
+
+use std::ops::Range;
+
+use crate::sparse::{Csr, SchedulePolicy, ScheduleTable};
+
+/// Split `0..n` into at most `parts` contiguous ranges whose lengths
+/// differ by at most one, in index order. Empty iff `n == 0` or
+/// `parts == 0`; never returns an empty range.
+pub fn even_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Class-block partition of `0..classes` for prototype matching — each
+/// block is a contiguous run of the per-class scores vector, so the SCE
+/// lanes write disjoint slices.
+pub fn class_blocks(classes: usize, parts: usize) -> Vec<Range<usize>> {
+    even_ranges(classes, parts)
+}
+
+/// Cost-balanced contiguous row ranges for an upper-triangular walk
+/// where row `i` does `n - i` units of work (Gram matrices, pairwise
+/// kernels). Ranges cover `0..n` exactly; early ranges are shorter.
+pub fn triangle_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(n);
+    let total = (n as u64) * (n as u64 + 1) / 2;
+    let mut out: Vec<Range<usize>> = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    for p in 0..parts {
+        if start >= n {
+            break;
+        }
+        let target = total * (p as u64 + 1) / parts as u64;
+        let mut end = start;
+        while end < n && (acc < target || end == start) {
+            acc += (n - end) as u64;
+            end += 1;
+        }
+        out.push(start..end);
+        start = end;
+    }
+    // Numerical-target slack can leave a tail; give it to the last range.
+    if start < n {
+        out.last_mut().expect("parts >= 1").end = n;
+    }
+    out
+}
+
+/// nnz-balanced row groups for sparse kernels, built by reusing the
+/// §4.2 schedule: construct a [`ScheduleTable`] with `parts` PEs under
+/// `policy` and collect each PE column's assigned rows. Under
+/// [`SchedulePolicy::NnzGrouped`] every iteration assigns rows of
+/// similar nonzero count to all PEs, so each group's total nnz
+/// approaches `nnz / parts`; [`SchedulePolicy::RowOrder`] yields the
+/// strided no-LB baseline. The groups always form an exact partition of
+/// the rows (the schedule is a permutation), which is what makes
+/// scatter-writing `y[r]` from different lanes sound.
+///
+/// This is the *materialized* form of the partition, for offline
+/// consumers and the property suite; the hot
+/// [`ScheduleTable::run_spmv_with_pool`] realizes the **same** split
+/// allocation-free by handing each lane a contiguous block of PE
+/// columns and walking the table in place.
+pub fn nnz_row_groups(csr: &Csr, parts: usize, policy: SchedulePolicy) -> Vec<Vec<u32>> {
+    if csr.rows == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(csr.rows);
+    let sched = ScheduleTable::build(csr, parts, policy);
+    let mut groups: Vec<Vec<u32>> = vec![Vec::new(); parts];
+    for it in 0..sched.iterations {
+        for (pe, group) in groups.iter_mut().enumerate() {
+            if let Some(r) = sched.row_for(it, pe) {
+                group.push(r);
+            }
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::testing::{forall, PropConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn covers_exactly(ranges: &[Range<usize>], n: usize) {
+        let mut next = 0usize;
+        for r in ranges {
+            assert_eq!(r.start, next, "gap or overlap at {}", r.start);
+            assert!(r.end > r.start, "empty range");
+            next = r.end;
+        }
+        assert_eq!(next, n, "ranges do not cover 0..{n}");
+    }
+
+    #[test]
+    fn even_ranges_cover_and_balance() {
+        forall("even-ranges", PropConfig::default(), |rng, size| {
+            let n = rng.gen_range(8 * size.max(1) + 1);
+            let parts = 1 + rng.gen_range(9);
+            let ranges = even_ranges(n, parts);
+            if n == 0 {
+                crate::prop_assert!(ranges.is_empty(), "n=0 must yield no ranges");
+                return Ok(());
+            }
+            covers_exactly(&ranges, n);
+            crate::prop_assert!(ranges.len() == parts.min(n), "range count");
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            crate::prop_assert!(hi - lo <= 1, "uneven: {lens:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn triangle_ranges_cover_and_balance_cost() {
+        forall("triangle-ranges", PropConfig::default(), |rng, size| {
+            let n = 1 + rng.gen_range(8 * size.max(1));
+            let parts = 1 + rng.gen_range(7);
+            let ranges = triangle_ranges(n, parts);
+            covers_exactly(&ranges, n);
+            // Cost balance: no range exceeds the ideal share by more
+            // than one row's maximum cost (n units).
+            let cost = |r: &Range<usize>| -> u64 {
+                r.clone().map(|i| (n - i) as u64).sum()
+            };
+            let total: u64 = (n as u64) * (n as u64 + 1) / 2;
+            let ideal = total / ranges.len() as u64;
+            for r in &ranges {
+                crate::prop_assert!(
+                    cost(r) <= ideal + n as u64,
+                    "range {r:?} cost {} vs ideal {ideal} (n={n}, parts={parts})",
+                    cost(r)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// THE SchedulePolicy × partitioner forall: for every policy and
+    /// every part count, the schedule-derived row groups are an exact
+    /// partition of the rows, and under nnz-grouping the per-group nnz
+    /// shares are balanced to within one iteration's max row weight.
+    #[test]
+    fn row_groups_partition_rows_under_every_policy() {
+        forall("row-groups-partition", PropConfig::default(), |rng, size| {
+            let rows = 1 + rng.gen_range(10 * size.max(1));
+            let cols = 1 + rng.gen_range(40);
+            let mut m = Mat::zeros(rows, cols);
+            for i in 0..rows {
+                for j in 0..cols {
+                    if rng.bernoulli(0.25) {
+                        m[(i, j)] = rng.normal();
+                    }
+                }
+            }
+            let csr = Csr::from_dense(&m, 0.0);
+            let parts = 1 + rng.gen_range(8);
+            for policy in [SchedulePolicy::NnzGrouped, SchedulePolicy::RowOrder] {
+                let groups = nnz_row_groups(&csr, parts, policy);
+                crate::prop_assert!(
+                    groups.len() == parts.min(rows),
+                    "{policy:?}: group count"
+                );
+                let mut seen = vec![false; rows];
+                for group in &groups {
+                    for &r in group {
+                        crate::prop_assert!(
+                            !seen[r as usize],
+                            "{policy:?}: row {r} in two groups"
+                        );
+                        seen[r as usize] = true;
+                    }
+                }
+                crate::prop_assert!(
+                    seen.iter().all(|&s| s),
+                    "{policy:?}: rows missing from groups"
+                );
+                if policy == SchedulePolicy::NnzGrouped {
+                    let nnz_of = |g: &Vec<u32>| -> u64 {
+                        g.iter().map(|&r| csr.row_nnz(r as usize) as u64).sum()
+                    };
+                    let shares: Vec<u64> = groups.iter().map(nnz_of).collect();
+                    let max_row = (0..rows).map(|r| csr.row_nnz(r)).max().unwrap_or(0) as u64;
+                    let (lo, hi) = (
+                        *shares.iter().min().unwrap(),
+                        *shares.iter().max().unwrap(),
+                    );
+                    let iterations = rows.div_ceil(parts.min(rows)) as u64;
+                    crate::prop_assert!(
+                        hi - lo <= max_row * iterations.min(2) + max_row,
+                        "nnz shares skewed: {shares:?} (max row {max_row})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(even_ranges(0, 4).is_empty());
+        assert!(even_ranges(5, 0).is_empty());
+        assert_eq!(even_ranges(3, 8).len(), 3, "never more parts than items");
+        assert_eq!(class_blocks(10, 3), even_ranges(10, 3));
+        assert!(triangle_ranges(0, 4).is_empty());
+        assert_eq!(triangle_ranges(1, 4), vec![0..1]);
+        let empty = Csr::from_triplets(0, 3, vec![]);
+        assert!(nnz_row_groups(&empty, 4, SchedulePolicy::NnzGrouped).is_empty());
+    }
+}

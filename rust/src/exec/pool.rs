@@ -1,0 +1,490 @@
+//! The scoped worker pool — the software analogue of the paper's PE
+//! array.
+//!
+//! # Shape
+//!
+//! A [`Pool`] of `T` threads consists of `T - 1` parked worker threads
+//! plus the calling thread, which always executes lane 0 of every
+//! [`Pool::run`] — so `Pool::new(1)` spawns nothing and every `run` is a
+//! plain sequential loop (the oracle configuration the differential
+//! suite pins every other thread count against).
+//!
+//! # Scoped dispatch
+//!
+//! [`Pool::run`] takes `&(dyn Fn(usize) + Sync)` over *borrowed* data —
+//! no `'static` bound — and does not return until every lane has
+//! finished (a completion latch is waited on even if a lane panics), so
+//! the closure and everything it borrows provably outlives all worker
+//! use. That is the entire safety argument for the one lifetime
+//! transmute in this module.
+//!
+//! # Static assignment, not work stealing
+//!
+//! `run(parts, f)` assigns part `p` to lane `p % lanes` — decided before
+//! anything is dispatched, exactly like the paper's §4.2 iteration-wise
+//! schedule tables and unlike a work-stealing runtime. Which lane (OS
+//! thread) executes a part can never influence results anyway: callers
+//! make every part's writes disjoint and every reduction fixed-order, so
+//! outputs are bit-identical at any thread count. Load balance comes
+//! from the partitioners in [`super::partition`] sizing the parts
+//! evenly (by rows, classes, or nnz) up front.
+//!
+//! # Process-wide pool
+//!
+//! [`global`] lazily builds one shared pool sized by (in priority
+//! order) [`configure_threads`] (the `--threads` CLI flag), the
+//! `NYSX_THREADS` environment variable, or
+//! `std::thread::available_parallelism()`. Dedicated pools
+//! ([`Pool::new`]) serve tests, benches, and
+//! `Pipeline::threads(n)`-scoped runs.
+//!
+//! # Nesting
+//!
+//! A `run` issued from inside a pool lane (any pool's) executes inline
+//! and sequentially on that lane — parallel kernels can therefore call
+//! other parallel kernels without deadlock or oversubscription, and the
+//! inner kernel's results are unchanged because every kernel is
+//! bit-identical at any lane count, including one.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// True while this thread is executing a pool lane (worker threads
+    /// always; the caller thread during its inline lane 0).
+    static IN_POOL_LANE: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Completion latch for one `run`: counts outstanding worker lanes and
+/// remembers whether any of them panicked.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Self {
+        Self {
+            state: Mutex::new(LatchState {
+                remaining,
+                panicked: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lane_done(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        st.panicked |= panicked;
+        if st.remaining == 0 {
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every worker lane finished; report whether any panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.panicked
+    }
+}
+
+/// One dispatched lane of a `run`.
+struct Job {
+    /// The erased lane closure. SAFETY: points at a stack closure in the
+    /// dispatching `run`, which waits on `latch` before returning (or
+    /// unwinding), so the reference is live for the job's whole life.
+    task: &'static (dyn Fn(usize) + Sync),
+    lane: usize,
+    latch: Arc<Latch>,
+}
+
+/// Waits for the latch on drop — including during unwinding — so `run`
+/// can never leave a worker holding a reference into a dead stack frame.
+struct WaitGuard<'a> {
+    latch: &'a Latch,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.latch.wait();
+    }
+}
+
+fn worker_loop(rx: std::sync::mpsc::Receiver<Job>) {
+    IN_POOL_LANE.with(|c| c.set(true));
+    while let Ok(job) = rx.recv() {
+        let result = catch_unwind(AssertUnwindSafe(|| (job.task)(job.lane)));
+        job.latch.lane_done(result.is_err());
+    }
+}
+
+/// A fixed-size scoped worker pool (see the module docs).
+pub struct Pool {
+    threads: usize,
+    /// One channel per spawned worker (`threads - 1` of them): lane `l`
+    /// of a run goes to worker `l - 1`, a static assignment with no
+    /// shared dequeue contention.
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Pool with exactly `threads` lanes (clamped to at least 1). The
+    /// `threads - 1` workers spawn eagerly; `Pool::new(1)` spawns
+    /// nothing and runs everything inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 1..threads {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("nysx-exec-{i}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn exec worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Self {
+            threads,
+            senders,
+            handles,
+        }
+    }
+
+    /// Total lanes (spawned workers + the calling thread).
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Dispatch one trivial run so worker wake-up paths (stacks, channel
+    /// buffers, futexes) are warm before anything is timed. Benches call
+    /// this once per pool so first-run spawn/wake cost never pollutes
+    /// reported medians.
+    pub fn warm_up(&self) {
+        self.run(self.threads, &|_| {});
+    }
+
+    /// Execute `f(p)` for every `p in 0..parts`, each part exactly once,
+    /// across at most `threads` lanes: lane `l` runs parts `l, l+lanes,
+    /// l+2·lanes, …` in increasing order. Lane 0 runs on the caller.
+    /// Returns only after every part has finished.
+    ///
+    /// With one lane (single-thread pool, one part, or a nested call
+    /// from inside a pool lane) this is exactly `for p in 0..parts {
+    /// f(p) }` — the sequential oracle.
+    ///
+    /// Panics in any lane propagate to the caller after all lanes
+    /// finish (a worker-lane panic surfaces as a `"exec worker lane
+    /// panicked"` panic; a caller-lane panic resumes as itself).
+    pub fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) {
+        if parts == 0 {
+            return;
+        }
+        let lanes = parts.min(self.threads);
+        if lanes <= 1 || IN_POOL_LANE.with(|c| c.get()) {
+            for p in 0..parts {
+                f(p);
+            }
+            return;
+        }
+
+        let lane_fn = move |lane: usize| {
+            let mut p = lane;
+            while p < parts {
+                f(p);
+                p += lanes;
+            }
+        };
+        let task: &(dyn Fn(usize) + Sync) = &lane_fn;
+        // SAFETY: `WaitGuard` (dropped below, on the normal path AND on
+        // unwind) blocks until every worker counted down the latch, and
+        // workers count down only after their last use of `task` — so
+        // the borrow outlives all uses despite the erased lifetime.
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+        };
+
+        let latch = Arc::new(Latch::new(lanes - 1));
+        for lane in 1..lanes {
+            self.senders[lane - 1]
+                .send(Job {
+                    task,
+                    lane,
+                    latch: latch.clone(),
+                })
+                .expect("exec worker exited while pool alive");
+        }
+
+        let guard = WaitGuard { latch: &latch };
+        // The caller's lane counts as a pool lane too: nested plain
+        // entry points inside `f` must execute inline.
+        let was_in_lane = IN_POOL_LANE.with(|c| c.replace(true));
+        let lane0 = catch_unwind(AssertUnwindSafe(|| lane_fn(0)));
+        IN_POOL_LANE.with(|c| c.set(was_in_lane));
+        drop(guard); // blocks until all worker lanes are done
+
+        if let Err(payload) = lane0 {
+            resume_unwind(payload);
+        }
+        if latch.wait() {
+            panic!("exec worker lane panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // Closing the channels ends the worker loops; join for a clean
+        // teardown (dedicated pools die with their Pipeline/engine).
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
+}
+
+/// Thread count requested via [`configure_threads`] before the global
+/// pool first initializes (0 = unset).
+static REQUESTED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+static GLOBAL: OnceLock<Arc<Pool>> = OnceLock::new();
+
+/// Upper bound on configurable thread counts — same plausibility cap
+/// spirit as `ServerConfig.workers`.
+pub const MAX_THREADS: usize = 4096;
+
+/// Interpret an `NYSX_THREADS` value: a positive integer wins; unset,
+/// empty, zero, or garbage fall back to `default`.
+fn threads_from_env(value: Option<&str>, default: usize) -> usize {
+    value
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0 && n <= MAX_THREADS)
+        .unwrap_or(default)
+}
+
+fn default_threads() -> usize {
+    let requested = REQUESTED_THREADS.load(Ordering::Relaxed);
+    if requested > 0 {
+        return requested;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1);
+    let env = std::env::var("NYSX_THREADS").ok();
+    let resolved = threads_from_env(env.as_deref(), hw);
+    // An invalid value falling back to all cores is bit-identical by
+    // design, so nothing downstream would ever reveal the typo — warn.
+    if let Some(v) = env.as_deref() {
+        let valid = v
+            .trim()
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0 && n <= MAX_THREADS)
+            .is_some();
+        if !v.trim().is_empty() && !valid {
+            eprintln!(
+                "warning: ignoring invalid NYSX_THREADS={v:?} (want 1..={MAX_THREADS}); \
+                 using {hw} threads"
+            );
+        }
+    }
+    resolved
+}
+
+/// Pin the global pool's size (the `--threads` CLI override). Must run
+/// before anything touches [`global`]; afterwards it only succeeds if it
+/// agrees with the already-running pool.
+pub fn configure_threads(threads: usize) -> Result<(), String> {
+    if threads == 0 || threads > MAX_THREADS {
+        return Err(format!(
+            "thread count must be in 1..={MAX_THREADS}, got {threads}"
+        ));
+    }
+    if let Some(pool) = GLOBAL.get() {
+        if pool.threads() == threads {
+            return Ok(());
+        }
+        return Err(format!(
+            "exec pool already running with {} threads; --threads {} must be set before first use",
+            pool.threads(),
+            threads
+        ));
+    }
+    REQUESTED_THREADS.store(threads, Ordering::Relaxed);
+    Ok(())
+}
+
+/// The process-wide pool, built once at first use (see the module docs
+/// for the sizing rule). Plain kernel entry points dispatch here; the
+/// `*_with_pool` variants take an explicit pool for tests, benches, and
+/// `Pipeline::threads(n)`.
+pub fn global() -> Arc<Pool> {
+    GLOBAL
+        .get_or_init(|| Arc::new(Pool::new(default_threads())))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_part_runs_exactly_once_at_any_thread_count() {
+        for threads in [1usize, 2, 3, 7] {
+            let pool = Pool::new(threads);
+            for parts in [0usize, 1, 2, 7, 64, 129] {
+                let hits: Vec<AtomicUsize> =
+                    (0..parts).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(parts, &|p| {
+                    hits[p].fetch_add(1, Ordering::Relaxed);
+                });
+                for (p, h) in hits.iter().enumerate() {
+                    assert_eq!(
+                        h.load(Ordering::Relaxed),
+                        1,
+                        "part {p} ran a wrong number of times (threads={threads}, parts={parts})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn borrowed_data_is_visible_and_writes_complete_before_return() {
+        let pool = Pool::new(4);
+        let input: Vec<u64> = (0..1000).collect();
+        let sum = AtomicU64::new(0);
+        pool.run(8, &|p| {
+            let chunk: u64 = input[p * 125..(p + 1) * 125].iter().sum();
+            sum.fetch_add(chunk, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn single_thread_pool_is_strictly_sequential_in_order() {
+        let pool = Pool::new(1);
+        let order = Mutex::new(Vec::new());
+        pool.run(5, &|p| order.lock().unwrap().push(p));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nested_run_executes_inline_without_deadlock() {
+        let pool = Pool::new(3);
+        let inner_hits = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            // A nested dispatch from inside a lane must not wait on
+            // workers that may all be busy with outer lanes.
+            pool.run(4, &|_| {
+                inner_hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_hits.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn worker_lane_panic_propagates_after_completion() {
+        let pool = Pool::new(4);
+        let survivors = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|p| {
+                if p == 5 {
+                    panic!("boom");
+                }
+                survivors.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(result.is_err(), "lane panic must propagate");
+        // Every non-panicking part still ran (no lost work, no deadlock),
+        // and the pool stays usable afterwards.
+        assert_eq!(survivors.load(Ordering::Relaxed), 7);
+        let after = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            after.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(after.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn concurrent_runs_from_multiple_callers() {
+        let pool = Arc::new(Pool::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut callers = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            callers.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    pool.run(5, &|_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for c in callers {
+            c.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 5);
+    }
+
+    #[test]
+    fn env_threads_parsing() {
+        assert_eq!(threads_from_env(None, 6), 6);
+        assert_eq!(threads_from_env(Some(""), 6), 6);
+        assert_eq!(threads_from_env(Some("0"), 6), 6);
+        assert_eq!(threads_from_env(Some("lots"), 6), 6);
+        assert_eq!(threads_from_env(Some("4"), 6), 4);
+        assert_eq!(threads_from_env(Some(" 12 "), 6), 12);
+        assert_eq!(threads_from_env(Some("999999999"), 6), 6, "beyond cap");
+    }
+
+    #[test]
+    fn configure_rejects_zero_and_absurd_counts() {
+        assert!(configure_threads(0).is_err());
+        assert!(configure_threads(MAX_THREADS + 1).is_err());
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_stable() {
+        let a = global();
+        let b = global();
+        assert_eq!(a.threads(), b.threads());
+        assert!(a.threads() >= 1);
+        // Re-configuring to the running size is a no-op Ok; to a
+        // different size a descriptive error.
+        assert!(configure_threads(a.threads()).is_ok());
+        let other = if a.threads() == 1 { 2 } else { a.threads() + 1 };
+        assert!(configure_threads(other).is_err());
+    }
+
+    #[test]
+    fn warm_up_runs() {
+        let pool = Pool::new(2);
+        pool.warm_up(); // must not hang or panic
+        pool.warm_up(); // idempotent
+    }
+}

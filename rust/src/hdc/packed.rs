@@ -62,6 +62,7 @@
 
 use super::simd::{self, PopcountBackend};
 use super::Hypervector;
+use crate::exec::{self, Pool};
 
 /// Bits per storage word.
 const WORD_BITS: usize = 64;
@@ -348,6 +349,23 @@ fn shr_into(src: &[u64], s: usize, out: &mut [u64]) {
     }
 }
 
+/// First-max-wins argmax over a score row — THE tie rule of the
+/// hardware argmax unit's sequential compare. Every classify path
+/// (sequential, class-block pool, batched, batched pool) funnels
+/// through this one copy so the bit-identity contract can never drift
+/// on tied scores.
+fn argmax_first_max(row: &[i64]) -> usize {
+    let mut best = 0usize;
+    let mut best_score = i64::MIN;
+    for (i, &s) in row.iter().enumerate() {
+        if s > best_score {
+            best = i;
+            best_score = s;
+        }
+    }
+    best
+}
+
 /// Words per cache block in the batch matcher: 512 words = 4 KiB per HV
 /// slice, so a prototype slice plus a handful of query slices fit L1
 /// comfortably while still amortizing the loop overhead. The inner
@@ -432,6 +450,21 @@ impl PackedBatch {
     pub(crate) fn query_words_mut(&mut self, q: usize) -> &mut [u64] {
         assert!(q < self.len);
         &mut self.words[q * self.words_per_hv..(q + 1) * self.words_per_hv]
+    }
+
+    /// The whole word arena (`len × words_per_hv` words, query-major) —
+    /// for parallel producers that split it into per-query ranges and
+    /// fill disjoint slots across exec lanes. Writers must keep tail
+    /// bits zero.
+    #[inline]
+    pub(crate) fn all_words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Words each query slot occupies (= `words_for(dim)`).
+    #[inline]
+    pub(crate) fn words_per_hv(&self) -> usize {
+        self.words_per_hv
     }
 
     /// Copy query `q` out as a standalone hypervector.
@@ -533,6 +566,48 @@ impl PackedAccumulator {
         self.counts[class] += 1;
     }
 
+    /// Fold another accumulator's counters into this one: per class,
+    /// the bit-sliced counter planes are added with a word-parallel
+    /// ripple-carry (full adder per plane level), and the sample counts
+    /// sum. Because the counters are plain per-coordinate counts, the
+    /// merged state equals what sequential adds of both accumulators'
+    /// inputs — in any order — would have produced, which is what makes
+    /// per-thread training accumulators mergeable deterministically
+    /// (fixed part order) with bit-identical prototypes at any thread
+    /// count.
+    pub fn merge(&mut self, other: &PackedAccumulator) {
+        assert_eq!(self.num_classes, other.num_classes, "class count mismatch");
+        assert_eq!(self.dim, other.dim, "dimension mismatch");
+        let words = self.words;
+        let Self { planes, counts, carry, .. } = self;
+        for (class, (planes, op)) in planes.iter_mut().zip(&other.planes).enumerate() {
+            counts[class] += other.counts[class];
+            let other_planes = if words == 0 { 0 } else { op.len() / words };
+            carry.clear();
+            carry.resize(words, 0);
+            let mut p = 0usize;
+            loop {
+                let have_other = p < other_planes;
+                let have_carry = carry.iter().any(|&c| c != 0);
+                if !have_other && !have_carry {
+                    break;
+                }
+                if (p + 1) * words > planes.len() {
+                    planes.resize((p + 1) * words, 0);
+                }
+                let a_plane = &mut planes[p * words..(p + 1) * words];
+                for (i, (a, cin)) in a_plane.iter_mut().zip(carry.iter_mut()).enumerate() {
+                    let b = if have_other { op[p * words + i] } else { 0 };
+                    let old = *a;
+                    // Full adder: sum = a ⊕ b ⊕ cin, cout = ab | cin(a ⊕ b).
+                    *a = old ^ b ^ *cin;
+                    *cin = (old & b) | (*cin & (old ^ b));
+                }
+                p += 1;
+            }
+        }
+    }
+
     /// Per-coordinate −1 count for `class` (reassembled from the planes;
     /// test/diagnostic helper, not on the training path).
     pub fn minus_count(&self, class: usize, i: usize) -> usize {
@@ -547,6 +622,16 @@ impl PackedAccumulator {
         m
     }
 
+    /// Threshold the counters into packed prototypes, word-parallel: the
+    /// bundled sign of coordinate `i` is −1 iff `2m > n ⇔ m ≥ K` with
+    /// `K = ⌊n/2⌋ + 1`, and the `m ≥ K` comparison runs bit-sliced — a
+    /// running (greater, equal) mask pair walks the counter planes MSB
+    /// to LSB against K's bits, deciding 64 coordinates per word step
+    /// instead of reassembling each count bit by bit. This keeps the
+    /// training tail packed end to end (the last per-element loop on the
+    /// NysHD/NysX training path) and is pinned bit-identical to the
+    /// per-bit reference by [`Self::minus_count`]-based tests and the i8
+    /// differential suite.
     pub fn finalize(self) -> PackedPrototypes {
         let words = self.words;
         let prototypes = self
@@ -554,19 +639,33 @@ impl PackedAccumulator {
             .iter()
             .zip(&self.counts)
             .map(|(planes, &n)| {
-                let nplanes = if words == 0 { 0 } else { planes.len() / words };
                 let mut p = PackedHypervector::zeros(self.dim);
-                for i in 0..self.dim {
-                    let (wi, b) = (i / WORD_BITS, i % WORD_BITS);
-                    let mut m = 0usize;
-                    for pl in 0..nplanes {
-                        m |= (((planes[pl * words + wi] >> b) & 1) as usize) << pl;
-                    }
-                    // sum = n − 2m < 0  ⇔  2m > n (ties → +1).
-                    if 2 * m > n {
-                        p.words[wi] |= 1 << b;
-                    }
+                if words == 0 || n == 0 {
+                    return p; // no samples: every sum is 0 → all +1
                 }
+                let nplanes = planes.len() / words;
+                let k = n / 2 + 1; // bit set ⇔ m ≥ k ⇔ 2m > n
+                let kbits = (usize::BITS - k.leading_zeros()) as usize;
+                let top = nplanes.max(kbits);
+                for (wi, out) in p.words.iter_mut().enumerate() {
+                    let mut gt = 0u64;
+                    let mut eq = u64::MAX;
+                    for pl in (0..top).rev() {
+                        let m = if pl < nplanes { planes[pl * words + wi] } else { 0 };
+                        let kb = if pl < usize::BITS as usize && (k >> pl) & 1 == 1 {
+                            u64::MAX
+                        } else {
+                            0
+                        };
+                        gt |= eq & m & !kb;
+                        eq &= !(m ^ kb);
+                    }
+                    *out = gt | eq; // m > K or m == K
+                }
+                // Tail coordinates have m = 0 < K, so their bits are
+                // already clear; mask anyway to keep the invariant
+                // obvious.
+                p.mask_tail();
                 p
             })
             .collect();
@@ -606,6 +705,57 @@ impl PackedPrototypes {
         self.prototypes.iter().map(|p| p.dot_with(be, hv)).collect()
     }
 
+    /// [`Self::scores`] across an exec pool: the classes are split into
+    /// contiguous blocks ([`exec::class_blocks`]) and each lane fills
+    /// its own disjoint run of the scores vector — per-class dots are
+    /// computed by exactly one lane, so the result is bit-identical at
+    /// any thread count.
+    pub fn scores_pool(
+        &self,
+        pool: &Pool,
+        be: &dyn PopcountBackend,
+        hv: &PackedHypervector,
+    ) -> Vec<i64> {
+        let mut out = vec![0i64; self.num_classes()];
+        self.scores_into_pool(pool, be, hv, &mut out);
+        out
+    }
+
+    /// [`Self::scores_pool`] into a caller-owned buffer (`out.len()`
+    /// must equal the class count).
+    pub fn scores_into_pool(
+        &self,
+        pool: &Pool,
+        be: &dyn PopcountBackend,
+        hv: &PackedHypervector,
+        out: &mut [i64],
+    ) {
+        let c = self.num_classes();
+        assert_eq!(out.len(), c, "scores buffer must have one slot per class");
+        let blocks = exec::class_blocks(c, pool.threads());
+        exec::for_each_range_mut(pool, out, &blocks, |block, part| {
+            let classes = blocks[block].clone();
+            for (slot, ci) in part.iter_mut().zip(classes) {
+                *slot = self.prototypes[ci].dot_with(be, hv);
+            }
+        });
+    }
+
+    /// [`Self::classify`] across an exec pool: class-block-parallel
+    /// scores, then the same sequential first-max-wins argmax — ties
+    /// resolve identically to the single-threaded path.
+    pub fn classify_pool(
+        &self,
+        pool: &Pool,
+        be: &dyn PopcountBackend,
+        hv: &PackedHypervector,
+    ) -> usize {
+        if self.prototypes.is_empty() {
+            return 0;
+        }
+        argmax_first_max(&self.scores_pool(pool, be, hv))
+    }
+
     /// Predicted class: argmax similarity, first max wins on ties (the
     /// hardware argmax unit's sequential compare).
     pub fn classify(&self, hv: &PackedHypervector) -> usize {
@@ -637,6 +787,14 @@ impl PackedPrototypes {
     /// kernel), so G's block is read from L1 W times instead of streaming
     /// all of G once per query.
     pub fn scores_batch_into(&self, batch: &PackedBatch, out: &mut [i64]) {
+        // Above the parallelism threshold the global exec pool splits
+        // the query axis; below it (or with one lane) this is the plain
+        // blocked walk. Either way the scores are bit-identical.
+        let work = self.num_classes() * batch.len() * words_for(self.dim());
+        let pool = exec::global();
+        if exec::worth_parallelizing(&pool, work, exec::PAR_MIN_WORDS) {
+            return self.scores_batch_into_pool(&pool, simd::active(), batch, out);
+        }
         self.scores_batch_into_with(simd::active(), batch, out)
     }
 
@@ -654,8 +812,24 @@ impl PackedPrototypes {
         if c == 0 || w == 0 {
             return;
         }
+        assert_eq!(batch.dim(), self.dim(), "batch/prototype dimension mismatch");
+        self.scores_rows_into_with(be, batch, 0..w, out);
+    }
+
+    /// The blocked C×W walk restricted to queries `q_range`, writing the
+    /// `(q_range.len()) × C` score rows into `out` — the per-lane core
+    /// shared by the sequential and pool paths (callers validated
+    /// shapes).
+    fn scores_rows_into_with(
+        &self,
+        be: &dyn PopcountBackend,
+        batch: &PackedBatch,
+        q_range: std::ops::Range<usize>,
+        out: &mut [i64],
+    ) {
+        let c = self.num_classes();
         let d = self.dim();
-        assert_eq!(batch.dim(), d, "batch/prototype dimension mismatch");
+        debug_assert_eq!(out.len(), c * q_range.len());
         // Accumulate Hamming distances blockwise, then convert in place.
         out.iter_mut().for_each(|v| *v = 0);
         let nw = words_for(d);
@@ -664,9 +838,9 @@ impl PackedPrototypes {
             let w1 = (w0 + BLOCK_WORDS).min(nw);
             for (ci, proto) in self.prototypes.iter().enumerate() {
                 let pw = &proto.words()[w0..w1];
-                for qi in 0..w {
+                for qi in q_range.clone() {
                     let qw = &batch.query_words(qi)[w0..w1];
-                    out[qi * c + ci] += be.xor_popcount(pw, qw) as i64;
+                    out[(qi - q_range.start) * c + ci] += be.xor_popcount(pw, qw) as i64;
                 }
             }
             w0 = w1;
@@ -674,6 +848,34 @@ impl PackedPrototypes {
         for v in out.iter_mut() {
             *v = d as i64 - 2 * *v;
         }
+    }
+
+    /// [`Self::scores_batch_into`] across an exec pool: the query axis
+    /// is split into contiguous blocks ([`exec::even_ranges`]) so each
+    /// lane owns a disjoint run of score rows and walks its queries with
+    /// the identical blocked kernel — every (class, query) cell is
+    /// computed by exactly one lane in the same word-block order, so the
+    /// C×W matrix is bit-identical at any thread count.
+    pub fn scores_batch_into_pool(
+        &self,
+        pool: &Pool,
+        be: &dyn PopcountBackend,
+        batch: &PackedBatch,
+        out: &mut [i64],
+    ) {
+        let c = self.num_classes();
+        let w = batch.len();
+        assert_eq!(out.len(), c * w, "scores buffer must be C x W");
+        if c == 0 || w == 0 {
+            return;
+        }
+        assert_eq!(batch.dim(), self.dim(), "batch/prototype dimension mismatch");
+        let q_ranges = exec::even_ranges(w, pool.threads());
+        let row_ranges: Vec<std::ops::Range<usize>> =
+            q_ranges.iter().map(|r| r.start * c..r.end * c).collect();
+        exec::for_each_range_mut(pool, out, &row_ranges, |block, part| {
+            self.scores_rows_into_with(be, batch, q_ranges[block].clone(), part);
+        });
     }
 
     /// Allocating convenience wrapper around [`Self::scores_batch_into`].
@@ -693,7 +895,41 @@ impl PackedPrototypes {
         scores: &mut Vec<i64>,
         preds: &mut Vec<usize>,
     ) {
+        let work = self.num_classes() * batch.len() * words_for(self.dim());
+        let pool = exec::global();
+        if exec::worth_parallelizing(&pool, work, exec::PAR_MIN_WORDS) {
+            return self.classify_batch_into_pool(&pool, simd::active(), batch, scores, preds);
+        }
         self.classify_batch_into_with(simd::active(), batch, scores, preds)
+    }
+
+    /// [`Self::classify_batch_into`] across an exec pool: pool-parallel
+    /// blocked scoring, then the same sequential first-max-wins argmax
+    /// per query — bit-identical predictions at any thread count.
+    pub fn classify_batch_into_pool(
+        &self,
+        pool: &Pool,
+        be: &dyn PopcountBackend,
+        batch: &PackedBatch,
+        scores: &mut Vec<i64>,
+        preds: &mut Vec<usize>,
+    ) {
+        let c = self.num_classes();
+        let w = batch.len();
+        scores.clear();
+        scores.resize(c * w, 0);
+        preds.clear();
+        if w == 0 {
+            return;
+        }
+        if c == 0 {
+            preds.resize(w, 0);
+            return;
+        }
+        self.scores_batch_into_pool(pool, be, batch, scores);
+        for qi in 0..w {
+            preds.push(argmax_first_max(&scores[qi * c..(qi + 1) * c]));
+        }
     }
 
     /// [`Self::classify_batch_into`] on an explicit backend (differential
@@ -720,16 +956,7 @@ impl PackedPrototypes {
         }
         self.scores_batch_into_with(be, batch, scores);
         for qi in 0..w {
-            let row = &scores[qi * c..(qi + 1) * c];
-            let mut best = 0usize;
-            let mut best_score = i64::MIN;
-            for (ci, &s) in row.iter().enumerate() {
-                if s > best_score {
-                    best = ci;
-                    best_score = s;
-                }
-            }
-            preds.push(best);
+            preds.push(argmax_first_max(&scores[qi * c..(qi + 1) * c]));
         }
     }
 
@@ -1220,6 +1447,154 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The exec contract on the SCE: class-block single-query scoring
+    /// and query-block batch scoring are bit-identical to the sequential
+    /// kernels (and transitively to the i8 oracle) at thread counts
+    /// {1, 2, 7} across word-boundary dims.
+    #[test]
+    fn pool_matchers_bit_identical_across_thread_counts() {
+        let pools: Vec<crate::exec::Pool> =
+            [1usize, 2, 7].iter().map(|&t| crate::exec::Pool::new(t)).collect();
+        let be = simd::active();
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for &d in &[63usize, 64, 65, 1000] {
+            for &classes in &[1usize, 2, 5, 9] {
+                let mut acc = PackedAccumulator::new(classes, d);
+                for i in 0..3 * classes + 4 {
+                    acc.add(i % classes, &PackedHypervector::random(d, &mut rng));
+                }
+                let protos = acc.finalize();
+                let w = 7;
+                let mut batch = PackedBatch::new(d);
+                for _ in 0..w {
+                    batch.push(&PackedHypervector::random(d, &mut rng));
+                }
+                let mut want = vec![0i64; classes * w];
+                protos.scores_batch_into_with(be, &batch, &mut want);
+                let mut want_scores = Vec::new();
+                let mut want_preds = Vec::new();
+                protos.classify_batch_into_with(be, &batch, &mut want_scores, &mut want_preds);
+                for pool in &pools {
+                    let t = pool.threads();
+                    let mut got = vec![0i64; classes * w];
+                    protos.scores_batch_into_pool(pool, be, &batch, &mut got);
+                    assert_eq!(got, want, "batch scores drift d={d} C={classes} threads={t}");
+                    let mut ps = Vec::new();
+                    let mut pp = Vec::new();
+                    protos.classify_batch_into_pool(pool, be, &batch, &mut ps, &mut pp);
+                    assert_eq!(ps, want_scores, "pool scores buffer d={d} threads={t}");
+                    assert_eq!(pp, want_preds, "pool preds d={d} threads={t}");
+                    for qi in 0..w {
+                        let q = batch.get(qi);
+                        assert_eq!(
+                            protos.scores_pool(pool, be, &q),
+                            protos.scores_with(be, &q),
+                            "class-block scores drift d={d} threads={t}"
+                        );
+                        assert_eq!(
+                            protos.classify_pool(pool, be, &q),
+                            protos.classify_with(be, &q),
+                            "class-block classify drift d={d} threads={t}"
+                        );
+                    }
+                }
+                // The plain (auto-dispatch) entry points agree with the
+                // explicit sequential backend walk at every size — above
+                // or below the parallelism threshold.
+                assert_eq!(protos.scores_batch(&batch), want);
+                assert_eq!(protos.classify_batch(&batch), want_preds);
+            }
+        }
+        // Degenerate shapes through the pool paths.
+        let none = PackedAccumulator::new(0, 130).finalize();
+        let pool = &pools[2];
+        let mut batch = PackedBatch::new(130);
+        batch.push(&PackedHypervector::random(130, &mut rng));
+        let (mut s, mut p) = (Vec::new(), Vec::new());
+        none.classify_batch_into_pool(pool, be, &batch, &mut s, &mut p);
+        assert_eq!(p, vec![0]);
+        assert!(s.is_empty());
+    }
+
+    /// Per-thread training accumulators merged in fixed order must equal
+    /// one accumulator fed every sample sequentially — the property the
+    /// parallel training bundling stands on — including plane-count
+    /// mismatches (one side saw many more samples) and empty sides.
+    #[test]
+    fn accumulator_merge_matches_sequential_adds() {
+        forall("accumulator-merge", PropConfig::default(), |rng, size| {
+            let d = random_dim(rng, size.min(6));
+            let classes = 1 + rng.gen_range(3);
+            let n = rng.gen_range(2 * size.max(1) + 8);
+            let members: Vec<(usize, PackedHypervector)> = (0..n)
+                .map(|_| (rng.gen_range(classes), PackedHypervector::random(d, rng)))
+                .collect();
+            let mut seq = PackedAccumulator::new(classes, d);
+            for (class, hv) in &members {
+                seq.add(*class, hv);
+            }
+            // Split at a random point (possibly empty sides), add each
+            // half into its own accumulator, merge left-to-right.
+            let split = rng.gen_range(n + 1);
+            let mut left = PackedAccumulator::new(classes, d);
+            let mut right = PackedAccumulator::new(classes, d);
+            for (i, (class, hv)) in members.iter().enumerate() {
+                if i < split {
+                    left.add(*class, hv);
+                } else {
+                    right.add(*class, hv);
+                }
+            }
+            left.merge(&right);
+            for class in 0..classes {
+                for i in 0..d.min(150) {
+                    crate::prop_assert!(
+                        left.minus_count(class, i) == seq.minus_count(class, i),
+                        "counter drift at class {class}, coord {i} (d={d}, split={split}/{n})"
+                    );
+                }
+            }
+            crate::prop_assert!(
+                left.finalize() == seq.finalize(),
+                "merged prototypes differ at d={d}, split={split}/{n}"
+            );
+            Ok(())
+        });
+    }
+
+    /// The word-parallel bit-sliced finalize must agree with the per-bit
+    /// threshold reconstructed from `minus_count` — the old scalar rule
+    /// — at every count parity (ties → +1) and boundary dim.
+    #[test]
+    fn finalize_matches_per_bit_threshold_reference() {
+        let mut rng = Xoshiro256::seed_from_u64(505);
+        for &d in &[1usize, 63, 64, 65, 130] {
+            // n spans odd/even and the zero-sample edge.
+            for n in 0..12usize {
+                let mut acc = PackedAccumulator::new(2, d);
+                for i in 0..n {
+                    acc.add(i % 2, &PackedHypervector::random(d, &mut rng));
+                }
+                let reference: Vec<PackedHypervector> = (0..2)
+                    .map(|class| {
+                        let mut p = PackedHypervector::zeros(d);
+                        for i in 0..d {
+                            if 2 * acc.minus_count(class, i) > acc.counts[class] {
+                                p.words[i / WORD_BITS] |= 1 << (i % WORD_BITS);
+                            }
+                        }
+                        p
+                    })
+                    .collect();
+                let got = acc.finalize();
+                assert_eq!(got.prototypes, reference, "finalize drift at d={d}, n={n}");
+                for p in &got.prototypes {
+                    assert!(tail_clean(p), "finalize leaked tail bits at d={d}");
+                }
+            }
+        }
     }
 
     /// Deterministic spot-check of the same three kernels at the fixed

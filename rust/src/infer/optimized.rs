@@ -42,8 +42,10 @@
 use std::borrow::Borrow;
 use std::sync::Arc;
 
+use crate::exec::{self, Pool};
 use crate::graph::Graph;
-use crate::hdc::{PackedBatch, PackedHypervector};
+use crate::hdc::packed::words_for;
+use crate::hdc::{simd, PackedBatch, PackedHypervector};
 use crate::model::NysHdcModel;
 use crate::mph::code_key;
 use crate::sparse::{SchedulePolicy, ScheduleTable};
@@ -104,6 +106,11 @@ pub struct InferenceResult {
 /// facade callers never juggle a borrow lifetime.
 pub struct NysxEngine<M: Borrow<NysHdcModel> = Arc<NysHdcModel>> {
     model: M,
+    /// The exec pool driving the engine's data-parallel kernels (NEE
+    /// projection word ranges, blocked C×W SCE query blocks, big-graph
+    /// scheduled SpMV). Defaults to [`exec::global`]; every result is
+    /// bit-identical at any pool size.
+    pool: Arc<Pool>,
     /// No-LB schedules for the KSE ablation (built once).
     kse_nolb: Vec<ScheduleTable>,
     // --- scratch (hot path is allocation-free) ---
@@ -117,10 +124,19 @@ pub struct NysxEngine<M: Borrow<NysHdcModel> = Arc<NysHdcModel>> {
     batch: PackedBatch,
     batch_scores: Vec<i64>,
     batch_preds: Vec<usize>,
+    /// W kernel vectors staged back-to-back (s values each) so the
+    /// batched NEE can project-pack every query in parallel.
+    c_sims_flat: Vec<f64>,
 }
 
 impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
     pub fn new(model: M) -> Self {
+        Self::with_pool(model, exec::global())
+    }
+
+    /// [`Self::new`] on an explicit exec pool (the form
+    /// [`crate::api::Pipeline::threads`] hands out).
+    pub fn with_pool(model: M, pool: Arc<Pool>) -> Self {
         let (kse_nolb, c_sim, hv, hist, batch) = {
             let m: &NysHdcModel = model.borrow();
             let max_bins = m.codebooks.iter().map(|cb| cb.len()).max().unwrap_or(0);
@@ -139,6 +155,7 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
         };
         Self {
             model,
+            pool,
             kse_nolb,
             c_sim,
             hv,
@@ -149,12 +166,18 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
             batch,
             batch_scores: Vec::new(),
             batch_preds: Vec::new(),
+            c_sims_flat: Vec::new(),
         }
     }
 
     /// The trained model this engine serves.
     pub fn model(&self) -> &NysHdcModel {
         self.model.borrow()
+    }
+
+    /// The exec pool this engine dispatches on.
+    pub fn pool(&self) -> &Arc<Pool> {
+        &self.pool
     }
 
     /// Alg. 1 lines 1-12: compute the kernel-similarity vector C(x) and
@@ -164,6 +187,7 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
         // while every scratch buffer is mutated.
         let Self {
             model,
+            pool,
             kse_nolb,
             c_sim,
             proj,
@@ -211,7 +235,14 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
                 *p = acc;
             }
             for _ in 0..t {
-                a_lb.run_spmv(&graph.adj, proj, proj_scratch);
+                // Edge graphs are small; only big adjacency operands are
+                // worth the pool's lane wake-up (bit-identical either way
+                // — the schedule row groups partition y disjointly).
+                if graph.adj.nnz() >= exec::PAR_MIN_NNZ {
+                    a_lb.run_spmv_with_pool(pool, &graph.adj, proj, proj_scratch);
+                } else {
+                    a_lb.run_spmv(&graph.adj, proj, proj_scratch);
+                }
                 std::mem::swap(proj, proj_scratch);
             }
             for (c, &p) in codes.iter_mut().zip(proj.iter()) {
@@ -271,10 +302,27 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
     /// packed prototypes. Zero i8 materialization; bit-identical to the
     /// i8 reference path.
     pub fn classify_kernel_vector(&mut self, c_sim: &[f64]) -> (usize, PackedHypervector) {
-        let Self { model, hv, .. } = self;
+        let Self { model, pool, hv, .. } = self;
         let model: &NysHdcModel = (*model).borrow();
-        model.projection.project_pack_into(c_sim, hv);
-        (model.packed_prototypes.classify(hv), hv.clone())
+        // The d×s projection dominates single-query NEE+SCE time; split
+        // its packed words across the pool's lanes when the matrix is
+        // big enough to amortize the dispatch (same bits either way).
+        if exec::worth_parallelizing(pool, model.d() * model.s(), exec::PAR_MIN_MACS) {
+            model.projection.project_pack_into_with_pool(pool, c_sim, hv);
+        } else {
+            model.projection.project_pack_into(c_sim, hv);
+        }
+        // SCE: class-block parallel matching once the C×d prototype
+        // sweep itself is big enough, the streaming sequential argmax
+        // otherwise — identical scores and first-max tie rule either
+        // way.
+        let sce_work = model.packed_prototypes.num_classes() * words_for(model.d());
+        let predicted = if exec::worth_parallelizing(pool, sce_work, exec::PAR_MIN_WORDS) {
+            model.packed_prototypes.classify_pool(pool, simd::active(), hv)
+        } else {
+            model.packed_prototypes.classify(hv)
+        };
+        (predicted, hv.clone())
     }
 
     /// NEE + SCE for a whole batch of kernel vectors: each C(x) is
@@ -288,20 +336,23 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
     ) -> Vec<(usize, PackedHypervector)> {
         let Self {
             model,
+            pool,
             batch,
             batch_scores,
             batch_preds,
+            c_sims_flat,
             ..
         } = self;
         let model: &NysHdcModel = (*model).borrow();
-        batch.clear();
+        // Stage the kernel vectors flat so the shared NEE+SCE tail can
+        // fan out over contiguous per-query slices.
+        let mut c_flat = std::mem::take(c_sims_flat);
+        c_flat.clear();
         for c in c_sims {
-            let slot = batch.push_zeroed();
-            model.projection.project_pack_words(c, batch.query_words_mut(slot));
+            c_flat.extend_from_slice(c);
         }
-        model
-            .packed_prototypes
-            .classify_batch_into(batch, batch_scores, batch_preds);
+        nee_sce_batch(model, pool, &c_flat, c_sims.len(), batch, batch_scores, batch_preds);
+        *c_sims_flat = c_flat;
         (0..c_sims.len())
             .map(|qi| (batch_preds[qi], batch.get(qi)))
             .collect()
@@ -313,29 +364,31 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
     /// each graph in order, traces included.
     pub fn infer_batch(&mut self, graphs: &[&Graph]) -> Vec<InferenceResult> {
         let mut traces = Vec::with_capacity(graphs.len());
-        self.batch.clear();
+        // Stage 1 (sequential, one scratch set): the per-graph front half
+        // (LSHU/MPHE/HUE/KSE), staging each kernel vector into the flat
+        // batch buffer.
+        let mut c_flat = std::mem::take(&mut self.c_sims_flat);
+        c_flat.clear();
         for &g in graphs {
-            let (_, trace) = self.kernel_vector(g);
+            let (c, trace) = self.kernel_vector(g);
+            c_flat.extend_from_slice(c);
             traces.push(trace);
-            let Self { model, c_sim, batch, .. } = self;
-            let model: &NysHdcModel = (*model).borrow();
-            let slot = batch.push_zeroed();
-            model
-                .projection
-                .project_pack_words(c_sim, batch.query_words_mut(slot));
         }
+        // Stage 2+3: the shared NEE+SCE tail — fused project-pack into
+        // disjoint batch slots, then ONE blocked C×W SCE, both across
+        // the pool when the work clears the PAR_MIN_* thresholds.
+        // Bit-identical to per-graph infer() at any thread count.
         let Self {
             model,
+            pool,
             batch,
             batch_scores,
             batch_preds,
             ..
         } = self;
         let model: &NysHdcModel = (*model).borrow();
-        model
-            .packed_prototypes
-            .classify_batch_into(batch, batch_scores, batch_preds);
-        traces
+        nee_sce_batch(model, pool, &c_flat, graphs.len(), batch, batch_scores, batch_preds);
+        let results = traces
             .into_iter()
             .enumerate()
             .map(|(qi, trace)| InferenceResult {
@@ -343,7 +396,9 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
                 hv: batch.get(qi),
                 trace,
             })
-            .collect()
+            .collect();
+        self.c_sims_flat = c_flat;
+        results
     }
 
     /// Full Algorithm 1.
@@ -359,6 +414,62 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
             hv,
             trace,
         }
+    }
+}
+
+/// The shared batched NEE+SCE tail: project-bipolarize-pack `W`
+/// kernel vectors (stored flat, `s` values each) into disjoint
+/// [`PackedBatch`] slots, then run ONE blocked C×W SCE pass into
+/// `scores`/`preds`. Both stages fan out over the exec pool only when
+/// the work clears the matching `exec::PAR_MIN_*` threshold — the same
+/// gate rule as the plain `hdc` entry points — and are bit-identical
+/// either way. Single source of truth for `classify_kernel_vectors`
+/// and `infer_batch` so their dispatch behavior can never diverge.
+#[allow(clippy::too_many_arguments)]
+fn nee_sce_batch(
+    model: &NysHdcModel,
+    pool: &Pool,
+    c_flat: &[f64],
+    w: usize,
+    batch: &mut PackedBatch,
+    scores: &mut Vec<i64>,
+    preds: &mut Vec<usize>,
+) {
+    let s = model.s();
+    debug_assert_eq!(c_flat.len(), w * s, "flat kernel-vector buffer shape");
+    batch.clear();
+    for _ in 0..w {
+        batch.push_zeroed();
+    }
+    let wph = batch.words_per_hv();
+    if exec::worth_parallelizing(pool, w * model.d() * s, exec::PAR_MIN_MACS) {
+        let q_ranges = exec::even_ranges(w, pool.threads());
+        let word_ranges: Vec<std::ops::Range<usize>> =
+            q_ranges.iter().map(|r| r.start * wph..r.end * wph).collect();
+        exec::for_each_range_mut(pool, batch.all_words_mut(), &word_ranges, |block, part| {
+            for (local, q) in q_ranges[block].clone().enumerate() {
+                model.projection.project_pack_words(
+                    &c_flat[q * s..(q + 1) * s],
+                    &mut part[local * wph..(local + 1) * wph],
+                );
+            }
+        });
+    } else {
+        for q in 0..w {
+            model
+                .projection
+                .project_pack_words(&c_flat[q * s..(q + 1) * s], batch.query_words_mut(q));
+        }
+    }
+    let sce_work = model.packed_prototypes.num_classes() * w * wph;
+    if exec::worth_parallelizing(pool, sce_work, exec::PAR_MIN_WORDS) {
+        model
+            .packed_prototypes
+            .classify_batch_into_pool(pool, simd::active(), batch, scores, preds);
+    } else {
+        model
+            .packed_prototypes
+            .classify_batch_into_with(simd::active(), batch, scores, preds);
     }
 }
 

@@ -7,4 +7,7 @@ pub mod propagation;
 
 pub use histogram::{histogram, raw_dot, raw_histogram, Codebook};
 pub use lsh::{node_codes, node_codes_reference, schedule_op_counts, LshParams};
-pub use propagation::{gram_from_signatures, gram_matrix, normalize_gram, GraphSignature};
+pub use propagation::{
+    gram_from_signatures, gram_from_signatures_with_pool, gram_matrix, gram_matrix_with_pool,
+    normalize_gram, signatures_with_pool, GraphSignature,
+};

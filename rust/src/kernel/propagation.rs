@@ -8,6 +8,7 @@ use std::collections::HashMap;
 
 use super::histogram::{raw_dot, raw_histogram};
 use super::lsh::{node_codes, LshParams};
+use crate::exec::{self, Pool};
 use crate::graph::Graph;
 use crate::linalg::Mat;
 
@@ -39,22 +40,68 @@ impl GraphSignature {
 /// Full Gram matrix `K[i][j] = K(G_i, G_j)` over a graph set. O(n²) pairs
 /// but signatures are computed once (O(n)).
 pub fn gram_matrix(graphs: &[&Graph], lsh: &LshParams) -> Mat {
-    let sigs: Vec<GraphSignature> = graphs
-        .iter()
-        .map(|g| GraphSignature::compute(g, lsh))
-        .collect();
-    gram_from_signatures(&sigs)
+    gram_matrix_with_pool(&exec::global(), graphs, lsh)
+}
+
+/// [`gram_matrix`] across an explicit exec pool: signatures and the
+/// pairwise kernel walk both run data-parallel (bit-identical at any
+/// thread count).
+pub fn gram_matrix_with_pool(pool: &Pool, graphs: &[&Graph], lsh: &LshParams) -> Mat {
+    let sigs = signatures_with_pool(pool, graphs, lsh);
+    gram_from_signatures_with_pool(pool, &sigs)
+}
+
+/// Per-graph signatures across an exec pool, returned in graph order:
+/// each lane computes a contiguous block of graphs; no shared state.
+pub fn signatures_with_pool(
+    pool: &Pool,
+    graphs: &[&Graph],
+    lsh: &LshParams,
+) -> Vec<GraphSignature> {
+    let ranges = exec::even_ranges(graphs.len(), pool.threads());
+    exec::map_parts(pool, ranges.len(), |block| {
+        ranges[block]
+            .clone()
+            .map(|i| GraphSignature::compute(graphs[i], lsh))
+            .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Gram matrix from precomputed signatures.
 pub fn gram_from_signatures(sigs: &[GraphSignature]) -> Mat {
+    gram_from_signatures_with_pool(&exec::global(), sigs)
+}
+
+/// [`gram_from_signatures`] across an explicit exec pool. The upper
+/// triangle is split into triangle-balanced contiguous row ranges
+/// ([`exec::triangle_ranges`], row `i` costs `n - i` kernel
+/// evaluations); each lane fills its own rows, then the lower triangle
+/// is mirrored sequentially. Every `K[i][j]` is computed by exactly one
+/// lane with the same kernel sum, so the matrix is bit-identical at any
+/// thread count.
+pub fn gram_from_signatures_with_pool(pool: &Pool, sigs: &[GraphSignature]) -> Mat {
     let n = sigs.len();
     let mut k = Mat::zeros(n, n);
+    if n == 0 {
+        return k;
+    }
+    let row_ranges = exec::triangle_ranges(n, pool.threads());
+    let elem_ranges: Vec<std::ops::Range<usize>> =
+        row_ranges.iter().map(|r| r.start * n..r.end * n).collect();
+    exec::for_each_range_mut(pool, &mut k.data, &elem_ranges, |block, part| {
+        for (local, i) in row_ranges[block].clone().enumerate() {
+            let row = &mut part[local * n..(local + 1) * n];
+            for (j, slot) in row.iter_mut().enumerate().skip(i) {
+                *slot = sigs[i].kernel(&sigs[j]);
+            }
+        }
+    });
     for i in 0..n {
-        for j in i..n {
-            let v = sigs[i].kernel(&sigs[j]);
-            k[(i, j)] = v;
-            k[(j, i)] = v;
+        for j in 0..i {
+            k[(i, j)] = k[(j, i)];
         }
     }
     k
@@ -105,6 +152,45 @@ mod tests {
         for &l in &e.values {
             assert!(l > -1e-8 * k.fro_norm(), "negative eigenvalue {l}");
         }
+    }
+
+    /// The exec contract on the propagation kernel: signatures and Gram
+    /// matrices are bit-identical at thread counts {1, 2, 7}.
+    #[test]
+    fn parallel_gram_bit_identical_across_thread_counts() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let gs = graphs(17, &mut rng);
+        let refs: Vec<&Graph> = gs.iter().collect();
+        let lsh = LshParams::sample(3, 3, 1.0, &mut rng);
+        let oracle_pool = crate::exec::Pool::new(1);
+        let want_sigs = signatures_with_pool(&oracle_pool, &refs, &lsh);
+        let want = gram_from_signatures_with_pool(&oracle_pool, &want_sigs);
+        // Single-thread pool result equals the hand-rolled sequential walk.
+        let mut seq = Mat::zeros(17, 17);
+        for i in 0..17 {
+            for j in i..17 {
+                let v = want_sigs[i].kernel(&want_sigs[j]);
+                seq[(i, j)] = v;
+                seq[(j, i)] = v;
+            }
+        }
+        assert_eq!(want.data, seq.data, "pool=1 gram != sequential walk");
+        for threads in [2usize, 7] {
+            let pool = crate::exec::Pool::new(threads);
+            let sigs = signatures_with_pool(&pool, &refs, &lsh);
+            assert_eq!(sigs.len(), want_sigs.len());
+            for (a, b) in sigs.iter().zip(&want_sigs) {
+                assert_eq!(a.hists, b.hists, "signature drift at threads={threads}");
+            }
+            let k = gram_from_signatures_with_pool(&pool, &sigs);
+            assert_eq!(k.data, want.data, "gram drift at threads={threads}");
+        }
+        // Plain entry points (global pool) agree too.
+        assert_eq!(gram_matrix(&refs, &lsh).data, want.data);
+        assert_eq!(gram_from_signatures(&want_sigs).data, want.data);
+        // Degenerate empty set.
+        let empty = gram_from_signatures_with_pool(&oracle_pool, &[]);
+        assert_eq!(empty.rows, 0);
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod api;
 pub mod baselines;
 pub mod bench;
 pub mod coordinator;
+pub mod exec;
 pub mod graph;
 pub mod infer;
 pub mod model;

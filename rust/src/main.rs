@@ -10,6 +10,11 @@
 //!   eval    [--scale 1.0] [--ablation]      # all tables & figures
 //!   roofline
 //!
+//! Every subcommand accepts `--threads N` to size the `nysx::exec`
+//! data-parallel pool (default: the `NYSX_THREADS` environment variable,
+//! then the machine's available parallelism). Thread count is a pure
+//! throughput knob — results are bit-identical at any value.
+//!
 //! Positional command first, then flags (the tiny parser is greedy).
 
 use std::path::Path;
@@ -26,6 +31,19 @@ use nysx::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
+    // Size the exec pool before anything touches it: `--threads N`
+    // beats NYSX_THREADS beats available parallelism. An explicit 0 (or
+    // garbage) is a typed error like every other flag — only an absent
+    // flag falls through to the env/hardware default.
+    if args.get("threads").is_some() {
+        if let Err(e) = args
+            .try_usize("threads", 0)
+            .and_then(nysx::exec::configure_threads)
+        {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "train" => cmd_train(&args),
@@ -40,6 +58,7 @@ fn main() {
             println!(
                 "nysx — Nyström-HDC graph classification (NysX reproduction)\n\n\
                  USAGE: nysx <train|infer|serve|eval|roofline> [flags]\n\
+                 common flags: --threads N (exec pool size; default NYSX_THREADS or all cores)\n\
                  datasets: {}",
                 TU_SPECS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
             );
@@ -195,8 +214,9 @@ fn cmd_serve(args: &Args) -> Result<(), NysxError> {
     server.drain();
     let s = server.metrics();
     println!(
-        "served {} requests on {workers} workers (batch size {batch})\n  host latency  p50={:.0}µs p95={:.0}µs p99={:.0}µs\n  queue wait    p50={:.0}µs p99={:.0}µs\n  sim FPGA      mean={:.3}ms p99={:.3}ms\n  host throughput {:.0} req/s; simulated energy {:.1} mJ total\n  per-worker {:?}",
+        "served {} requests on {workers} workers (batch size {batch}, exec pool {} threads)\n  host latency  p50={:.0}µs p95={:.0}µs p99={:.0}µs\n  queue wait    p50={:.0}µs p99={:.0}µs\n  sim FPGA      mean={:.3}ms p99={:.3}ms\n  host throughput {:.0} req/s; simulated energy {:.1} mJ total\n  per-worker {:?}",
         s.requests,
+        nysx::exec::global().threads(),
         s.host_us.p50,
         s.host_us.p95,
         s.host_us.p99,

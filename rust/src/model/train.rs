@@ -9,17 +9,35 @@
 //! 6. single-pass encode all training graphs into class prototypes.
 
 use super::{ModelConfig, NysHdcModel};
+use crate::exec::{self, Pool};
 use crate::graph::{Graph, GraphDataset};
 use crate::hdc::{Hypervector, PackedAccumulator, PackedHypervector, PrototypeAccumulator};
-use crate::kernel::{node_codes, Codebook, GraphSignature, LshParams};
+use crate::kernel::{
+    gram_from_signatures_with_pool, node_codes, signatures_with_pool, Codebook, LshParams,
+};
 use crate::linalg::Mat;
 use crate::mph::{code_key, MphLookup};
-use crate::nystrom::{select_landmarks, NystromProjection};
+use crate::nystrom::{select_landmarks_with_pool, NystromProjection};
 use crate::sparse::Csr;
 use crate::util::rng::Xoshiro256;
 
-/// Train a Nyström-HDC model on a dataset.
+/// Train a Nyström-HDC model on a dataset (on the process-wide exec
+/// pool; see [`train_with_pool`]).
 pub fn train(dataset: &GraphDataset, config: &ModelConfig) -> NysHdcModel {
+    train_with_pool(dataset, config, &exec::global())
+}
+
+/// Train a Nyström-HDC model on a dataset across an explicit exec pool.
+///
+/// Parallelism never changes the model: every RNG draw happens in the
+/// same sequential order as a single-threaded run (LSH sampling,
+/// landmark pool draws, `P_rp`), the heavy stages — DPP pool kernel,
+/// landmark signatures/codes, `H_Z`, the d×s² `P_nys` multiply, and the
+/// per-graph prototype bundling — are statically partitioned with
+/// disjoint writes, and the per-lane bundle counters merge in fixed
+/// lane order ([`PackedAccumulator::merge`]). Trained models are
+/// bit-identical at any thread count, which the test suite pins.
+pub fn train_with_pool(dataset: &GraphDataset, config: &ModelConfig, pool: &Pool) -> NysHdcModel {
     let mut rng = Xoshiro256::seed_from_u64(config.seed);
     let graphs: Vec<&Graph> = dataset.train.iter().map(|(g, _)| g).collect();
     assert!(
@@ -32,16 +50,31 @@ pub fn train(dataset: &GraphDataset, config: &ModelConfig) -> NysHdcModel {
     // (1) LSH parameters (shared by training and inference).
     let lsh = LshParams::sample(config.hops, dataset.feature_dim, config.lsh_width, &mut rng);
 
-    // (2) Landmark selection.
-    let landmark_indices =
-        select_landmarks(&graphs, config.num_landmarks, config.strategy, &lsh, &mut rng);
+    // (2) Landmark selection (kernel matrix across the pool's lanes).
+    let landmark_indices = select_landmarks_with_pool(
+        pool,
+        &graphs,
+        config.num_landmarks,
+        config.strategy,
+        &lsh,
+        &mut rng,
+    );
     let s = landmark_indices.len();
 
-    // (3) Codebooks from landmark codes, hop by hop.
-    let landmark_codes: Vec<Vec<Vec<i64>>> = landmark_indices
-        .iter()
-        .map(|&i| node_codes(graphs[i], &lsh))
-        .collect();
+    // (3) Codebooks from landmark codes, hop by hop (codes per landmark
+    // graph are independent — one exec part per landmark block).
+    let landmark_codes: Vec<Vec<Vec<i64>>> = {
+        let ranges = exec::even_ranges(landmark_indices.len(), pool.threads());
+        exec::map_parts(pool, ranges.len(), |block| {
+            ranges[block]
+                .clone()
+                .map(|li| node_codes(graphs[landmark_indices[li]], &lsh))
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    };
     let codebooks: Vec<Codebook> = (0..config.hops)
         .map(|t| {
             Codebook::build(
@@ -84,20 +117,13 @@ pub fn train(dataset: &GraphDataset, config: &ModelConfig) -> NysHdcModel {
         .collect();
 
     // (5) Landmark kernel H_Z from signatures (Σ_t h_i^(t)·h_j^(t)) and the
-    // Nyström projection.
-    let landmark_sigs: Vec<GraphSignature> = landmark_indices
-        .iter()
-        .map(|&i| GraphSignature::compute(graphs[i], &lsh))
-        .collect();
-    let mut h_z = Mat::zeros(s, s);
-    for i in 0..s {
-        for j in i..s {
-            let v = landmark_sigs[i].kernel(&landmark_sigs[j]);
-            h_z[(i, j)] = v;
-            h_z[(j, i)] = v;
-        }
-    }
-    let projection = NystromProjection::build(&h_z, config.hv_dim, &mut rng);
+    // Nyström projection — signatures, the s×s kernel walk and the d×s²
+    // P_nys multiply all run across the pool's lanes.
+    let landmark_graphs: Vec<&Graph> = landmark_indices.iter().map(|&i| graphs[i]).collect();
+    let landmark_sigs = signatures_with_pool(pool, &landmark_graphs, &lsh);
+    let h_z: Mat = gram_from_signatures_with_pool(pool, &landmark_sigs);
+    debug_assert_eq!(h_z.rows, s);
+    let projection = NystromProjection::build_with_pool(pool, &h_z, config.hv_dim, &mut rng);
 
     let mut model = NysHdcModel {
         config: config.clone(),
@@ -123,13 +149,27 @@ pub fn train(dataset: &GraphDataset, config: &ModelConfig) -> NysHdcModel {
     // dispatched SIMD backend (`hdc::simd::active`), which is
     // bit-identical to scalar by construction, so trained models do not
     // depend on the host's vector ISA.
+    //
+    // The training split is partitioned into contiguous even blocks,
+    // one bundle accumulator per lane, merged afterwards in fixed lane
+    // order. Counters are pure per-coordinate counts, so the merged
+    // state — and therefore the prototypes — equals the sequential
+    // single-accumulator pass exactly, at any thread count.
+    let ranges = exec::even_ranges(dataset.train.len(), pool.threads());
+    let lane_accs: Vec<PackedAccumulator> = exec::map_parts(pool, ranges.len(), |block| {
+        let mut acc = PackedAccumulator::new(dataset.num_classes, config.hv_dim);
+        let mut c_buf = vec![0.0f64; s];
+        let mut hv_buf = PackedHypervector::zeros(config.hv_dim);
+        for (g, y) in &dataset.train[ranges[block].clone()] {
+            encode_kernel_vector(&model, g, &mut c_buf);
+            model.projection.project_pack_into(&c_buf, &mut hv_buf);
+            acc.add(*y, &hv_buf);
+        }
+        acc
+    });
     let mut acc = PackedAccumulator::new(dataset.num_classes, config.hv_dim);
-    let mut c_buf = vec![0.0f64; s];
-    let mut hv_buf = PackedHypervector::zeros(config.hv_dim);
-    for (g, y) in &dataset.train {
-        encode_kernel_vector(&model, g, &mut c_buf);
-        model.projection.project_pack_into(&c_buf, &mut hv_buf);
-        acc.add(*y, &hv_buf);
+    for lane_acc in &lane_accs {
+        acc.merge(lane_acc);
     }
     let packed = acc.finalize();
     model.prototypes = packed.to_reference();
@@ -204,6 +244,7 @@ pub fn evaluate_reference(model: &NysHdcModel, split: &[(Graph, usize)]) -> Opti
 mod tests {
     use super::*;
     use crate::graph::tudataset::spec_by_name;
+    use crate::kernel::GraphSignature;
     use crate::nystrom::LandmarkStrategy;
 
     fn small_config(s: usize) -> ModelConfig {
@@ -312,6 +353,44 @@ mod tests {
         let m2 = train(&ds, &small_config(10));
         assert_eq!(m1.landmark_indices, m2.landmark_indices);
         assert_eq!(m1.prototypes.prototypes, m2.prototypes.prototypes);
+    }
+
+    /// The exec contract on training: the whole trained model — landmark
+    /// selection, projection matrix, packed prototypes — is bit-identical
+    /// at thread counts {1, 2, 7}. This is the acceptance pin for the
+    /// per-lane-accumulator + fixed-order-merge bundling path.
+    #[test]
+    fn training_bit_identical_across_thread_counts() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(13, 0.15);
+        // DPP strategy + off-boundary hv_dim: the parallel kernel matrix,
+        // the parallel P_nys build and the tail word are all live.
+        let mut cfg = small_config(8);
+        cfg.hv_dim = 500;
+        let want = train_with_pool(&ds, &cfg, &crate::exec::Pool::new(1));
+        for threads in [2usize, 7] {
+            let got = train_with_pool(&ds, &cfg, &crate::exec::Pool::new(threads));
+            assert_eq!(
+                got.landmark_indices, want.landmark_indices,
+                "landmark drift at {threads} threads"
+            );
+            assert_eq!(
+                got.projection.data, want.projection.data,
+                "P_nys drift at {threads} threads"
+            );
+            assert_eq!(
+                got.packed_prototypes, want.packed_prototypes,
+                "prototype drift at {threads} threads"
+            );
+            assert_eq!(
+                got.prototypes.prototypes, want.prototypes.prototypes,
+                "i8 prototype drift at {threads} threads"
+            );
+        }
+        // The plain entry point (global pool, whatever its size) agrees.
+        let plain = train(&ds, &cfg);
+        assert_eq!(plain.packed_prototypes, want.packed_prototypes);
+        assert_eq!(plain.landmark_indices, want.landmark_indices);
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! greedy MAP determinantal-point-process selection, and the paper's
 //! hybrid Uniform+DPP strategy (Algorithm 2).
 
+use crate::exec::{self, Pool};
 use crate::graph::Graph;
-use crate::kernel::{gram_from_signatures, normalize_gram, GraphSignature, LshParams};
+use crate::kernel::{
+    gram_from_signatures_with_pool, normalize_gram, signatures_with_pool, LshParams,
+};
 use crate::linalg::Mat;
 use crate::util::rng::Xoshiro256;
 
@@ -31,6 +34,21 @@ pub fn select_landmarks(
     lsh: &LshParams,
     rng: &mut Xoshiro256,
 ) -> Vec<usize> {
+    select_landmarks_with_pool(&exec::global(), graphs, s, strategy, lsh, rng)
+}
+
+/// [`select_landmarks`] on an explicit exec pool. The RNG draws (pool
+/// sampling, uniform picks) stay strictly sequential on the caller;
+/// only the pool's O(|C|²) propagation-kernel matrix runs across exec
+/// lanes — selections are bit-identical at any thread count.
+pub fn select_landmarks_with_pool(
+    exec_pool: &Pool,
+    graphs: &[&Graph],
+    s: usize,
+    strategy: LandmarkStrategy,
+    lsh: &LshParams,
+    rng: &mut Xoshiro256,
+) -> Vec<usize> {
     let n = graphs.len();
     assert!(s <= n, "cannot select {s} landmarks from {n} graphs");
     match strategy {
@@ -40,22 +58,25 @@ pub fn select_landmarks(
             let pool_size = (pool_factor.max(1) * s).min(n);
             let pool = rng.choose_k(n, pool_size);
             // Steps 2-3: propagation-kernel similarity over the pool, DPP.
-            let selected = dpp_over_pool(graphs, &pool, s, lsh);
-            selected
+            dpp_over_pool(exec_pool, graphs, &pool, s, lsh)
         }
         LandmarkStrategy::FullDpp => {
             let pool: Vec<usize> = (0..n).collect();
-            dpp_over_pool(graphs, &pool, s, lsh)
+            dpp_over_pool(exec_pool, graphs, &pool, s, lsh)
         }
     }
 }
 
-fn dpp_over_pool(graphs: &[&Graph], pool: &[usize], s: usize, lsh: &LshParams) -> Vec<usize> {
-    let sigs: Vec<GraphSignature> = pool
-        .iter()
-        .map(|&i| GraphSignature::compute(graphs[i], lsh))
-        .collect();
-    let k = normalize_gram(&gram_from_signatures(&sigs));
+fn dpp_over_pool(
+    exec_pool: &Pool,
+    graphs: &[&Graph],
+    pool: &[usize],
+    s: usize,
+    lsh: &LshParams,
+) -> Vec<usize> {
+    let candidates: Vec<&Graph> = pool.iter().map(|&i| graphs[i]).collect();
+    let sigs = signatures_with_pool(exec_pool, &candidates, lsh);
+    let k = normalize_gram(&gram_from_signatures_with_pool(exec_pool, &sigs));
     let chosen = greedy_dpp_map(&k, s);
     chosen.into_iter().map(|i| pool[i]).collect()
 }
@@ -177,6 +198,7 @@ pub fn mean_pairwise_similarity(kernel: &Mat, subset: &[usize]) -> f64 {
 mod tests {
     use super::*;
     use crate::graph::generators::labeled_graph;
+    use crate::kernel::{gram_from_signatures, GraphSignature};
     use crate::linalg::sym_eigen;
 
     #[test]

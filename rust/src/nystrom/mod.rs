@@ -6,6 +6,6 @@ pub mod projection;
 
 pub use landmarks::{
     greedy_dpp_map, greedy_dpp_map_with_gains, mean_pairwise_similarity, select_landmarks,
-    LandmarkStrategy,
+    select_landmarks_with_pool, LandmarkStrategy,
 };
 pub use projection::{nystrom_gram_approx, NystromProjection};

@@ -5,6 +5,7 @@
 //! `P_nys` is stored row-major in `f32` — the precision the accelerator
 //! streams from DDR (16 FP32 values per 512-bit AXI beat, §6.1).
 
+use crate::exec::{self, Pool};
 use crate::linalg::{sym_eigen, Mat, SymEigen};
 use crate::util::rng::Xoshiro256;
 
@@ -23,6 +24,17 @@ impl NystromProjection {
     /// Build from the landmark kernel `h_z` (s×s PSD) with HV dimension
     /// `d`. `P_rp` entries are i.i.d. N(0,1) random-hyperplane directions.
     pub fn build(h_z: &Mat, d: usize, rng: &mut Xoshiro256) -> Self {
+        Self::build_with_pool(&exec::global(), h_z, d, rng)
+    }
+
+    /// [`Self::build`] on an explicit exec pool. The RNG is consumed in
+    /// exactly the sequential order (all of `P_rp`, row-major, before
+    /// any matmul work), so the built matrix is bit-identical at any
+    /// thread count; only the d×s² multiply runs across the pool's
+    /// lanes, over disjoint row ranges. With a single lane the build
+    /// streams `P_rp` row by row instead — same bits, no d×s f64
+    /// staging buffer.
+    pub fn build_with_pool(pool: &Pool, h_z: &Mat, d: usize, rng: &mut Xoshiro256) -> Self {
         let s = h_z.rows;
         assert_eq!(h_z.rows, h_z.cols);
         let eig: SymEigen = sym_eigen(h_z);
@@ -30,23 +42,39 @@ impl NystromProjection {
         let w = eig.whitening(rcond); // s×s: Λ^{-1/2} Q^T (rank-truncated)
         let lmax = eig.values.first().copied().unwrap_or(0.0).max(0.0);
         let rank = eig.values.iter().filter(|&&l| l > rcond * lmax).count();
-        // P_nys = P_rp @ W. Build row-by-row to avoid materializing P_rp.
         let mut data = vec![0.0f32; d * s];
-        let mut p_row = vec![0.0f64; s];
-        for r in 0..d {
-            for x in p_row.iter_mut() {
-                *x = rng.normal();
-            }
-            let out = &mut data[r * s..(r + 1) * s];
-            // out = p_row @ W  (W is s×s)
-            for (j, o) in out.iter_mut().enumerate() {
-                let mut acc = 0.0f64;
-                for (k, &p) in p_row.iter().enumerate() {
-                    acc += p * w[(k, j)];
+        if pool.threads() <= 1 {
+            // Single lane: build row-by-row to avoid materializing P_rp.
+            let mut p_row = vec![0.0f64; s];
+            for r in 0..d {
+                for x in p_row.iter_mut() {
+                    *x = rng.normal();
                 }
-                *o = acc as f32;
+                let out = &mut data[r * s..(r + 1) * s];
+                row_times_w(&p_row, &w, out);
             }
+            return Self { d, s, data, rank };
         }
+        // Stage 1 (sequential): draw P_rp row-major — the same RNG draw
+        // order as the row-by-row build, so models don't depend on the
+        // host's thread count.
+        let mut p_rp = vec![0.0f64; d * s];
+        for x in p_rp.iter_mut() {
+            *x = rng.normal();
+        }
+        // Stage 2 (parallel): P_nys = P_rp @ W over disjoint row ranges;
+        // each output row's dot products are computed in the same order
+        // as the sequential build — bit-identical sums.
+        let row_ranges = exec::even_ranges(d, pool.threads());
+        let elem_ranges: Vec<std::ops::Range<usize>> =
+            row_ranges.iter().map(|r| r.start * s..r.end * s).collect();
+        let w = &w;
+        let p_rp = &p_rp;
+        exec::for_each_range_mut(pool, &mut data, &elem_ranges, |block, part| {
+            for (local, r) in row_ranges[block].clone().enumerate() {
+                row_times_w(&p_rp[r * s..(r + 1) * s], w, &mut part[local * s..(local + 1) * s]);
+            }
+        });
         Self { d, s, data, rank }
     }
 
@@ -138,6 +166,49 @@ impl NystromProjection {
         self.project_pack_words(c, out.words_mut());
     }
 
+    /// [`Self::project_pack_into`] across an exec pool: the packed words
+    /// are split into contiguous even ranges ([`exec::even_ranges`]) and
+    /// each lane packs its own words — disjoint `u64` writes, each word's
+    /// 64 row dots computed exactly as in the sequential path, so the
+    /// result is bit-identical at any thread count.
+    pub fn project_pack_into_with_pool(
+        &self,
+        pool: &Pool,
+        c: &[f64],
+        out: &mut crate::hdc::PackedHypervector,
+    ) {
+        assert_eq!(out.dim(), self.d);
+        self.project_pack_words_with_pool(pool, c, out.words_mut());
+    }
+
+    /// Word-level core of [`Self::project_pack_into_with_pool`], shared
+    /// with the batch producers that pack straight into
+    /// [`crate::hdc::PackedBatch`] slots.
+    pub(crate) fn project_pack_words_with_pool(&self, pool: &Pool, c: &[f64], words: &mut [u64]) {
+        assert_eq!(words.len(), crate::hdc::packed::words_for(self.d));
+        if pool.threads() <= 1 || words.len() <= 1 {
+            return self.project_pack_words(c, words);
+        }
+        self.with_c32(c, |c32| {
+            let ranges = exec::even_ranges(words.len(), pool.threads());
+            exec::for_each_range_mut(pool, words, &ranges, |block, part| {
+                let start_word = ranges[block].start;
+                for (local, w) in part.iter_mut().enumerate() {
+                    let wi = start_word + local;
+                    let base = wi * 64;
+                    let top = (base + 64).min(self.d);
+                    let mut bits = 0u64;
+                    for r in base..top {
+                        if self.row_dot(r, c32) < 0.0 {
+                            bits |= 1 << (r - base);
+                        }
+                    }
+                    *w = bits;
+                }
+            });
+        });
+    }
+
     /// Word-level core of [`Self::project_pack_into`], shared with batch
     /// producers that pack straight into a [`crate::hdc::PackedBatch`]
     /// slot. `words` must be exactly `words_for(d)` long; tail bits are
@@ -162,6 +233,19 @@ impl NystromProjection {
     /// Bytes at the streaming precision (Table 2's dominant `ds·b_P`).
     pub fn bytes(&self) -> usize {
         self.d * self.s * 4
+    }
+}
+
+/// One output row of the projection build: `out = p_row @ W` (`W` is
+/// s×s) — the single dot-product kernel shared by the streaming and the
+/// staged parallel build, so both produce bit-identical sums.
+fn row_times_w(p_row: &[f64], w: &Mat, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (k, &p) in p_row.iter().enumerate() {
+            acc += p * w[(k, j)];
+        }
+        *o = acc as f32;
     }
 }
 
@@ -283,6 +367,52 @@ mod tests {
             p.project_pack_into(&c, &mut packed);
             let want = crate::hdc::Hypervector::from_real(&p.project(&c)).pack();
             assert_eq!(packed, want);
+        }
+    }
+
+    /// The exec contract on the NEE: the projection matrix AND the fused
+    /// project-bipolarize-pack output are bit-identical at any thread
+    /// count, including across word-boundary dims.
+    #[test]
+    fn parallel_build_and_pack_bit_identical_across_thread_counts() {
+        let pools: Vec<crate::exec::Pool> = [1usize, 2, 7]
+            .iter()
+            .map(|&t| crate::exec::Pool::new(t))
+            .collect();
+        for &d in &[63usize, 64, 65, 300] {
+            let build_at = |pool: &crate::exec::Pool| {
+                let mut rng = Xoshiro256::seed_from_u64(41);
+                let hz = random_psd(6, 5, &mut rng);
+                NystromProjection::build_with_pool(pool, &hz, d, &mut rng)
+            };
+            let want = build_at(&pools[0]); // single-thread oracle
+            for pool in &pools[1..] {
+                let got = build_at(pool);
+                assert_eq!(got.data, want.data, "build drifted at d={d}");
+                assert_eq!(got.rank, want.rank);
+            }
+            // The plain entry point (global pool) agrees too.
+            let mut rng = Xoshiro256::seed_from_u64(41);
+            let hz = random_psd(6, 5, &mut rng);
+            let plain = NystromProjection::build(&hz, d, &mut rng);
+            assert_eq!(plain.data, want.data, "global-pool build drifted at d={d}");
+
+            let mut qrng = Xoshiro256::seed_from_u64(7);
+            for _ in 0..5 {
+                let c: Vec<f64> = (0..want.s).map(|_| qrng.normal()).collect();
+                let mut seq = crate::hdc::PackedHypervector::zeros(d);
+                want.project_pack_into(&c, &mut seq);
+                for pool in &pools {
+                    let mut par = crate::hdc::PackedHypervector::zeros(d);
+                    want.project_pack_into_with_pool(pool, &c, &mut par);
+                    assert_eq!(
+                        par,
+                        seq,
+                        "project-pack drifted at d={d}, threads={}",
+                        pool.threads()
+                    );
+                }
+            }
         }
     }
 

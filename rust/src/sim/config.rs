@@ -1,5 +1,12 @@
 //! Accelerator design point: the ZCU104 configuration of §6.1 plus the
 //! knobs the ablation benches sweep (PE counts, lane counts, FIFO depth).
+//!
+//! Do not confuse these knobs with the host's [`crate::exec`] pool
+//! (`--threads` / `NYSX_THREADS` / `Pipeline::threads`): `pes` and
+//! `nee_lanes` describe the **modeled FPGA** and change simulated
+//! cycles/energy, while the exec thread count only changes host
+//! wall-clock — simulated results and classifications are bit-identical
+//! at any exec pool size (DESIGN.md §6).
 
 /// Device + design-point parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]

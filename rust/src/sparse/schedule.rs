@@ -128,6 +128,48 @@ impl ScheduleTable {
             }
         }
     }
+
+    /// [`Self::run_spmv`] across an exec pool: the PE columns are split
+    /// into contiguous blocks (the schedule already balanced nnz across
+    /// PEs per iteration, so a block of columns is a balanced share of
+    /// the matrix) and each lane walks its block through every
+    /// iteration. The schedule assigns each row to exactly one
+    /// (iteration, PE) slot, so lanes scatter-write disjoint `y[r]`
+    /// entries, each computed with the identical per-row loop —
+    /// bit-identical to the sequential walk at any thread count.
+    pub fn run_spmv_with_pool(
+        &self,
+        pool: &crate::exec::Pool,
+        csr: &Csr,
+        x: &[f64],
+        y: &mut [f64],
+    ) {
+        debug_assert_eq!(csr.cols, x.len());
+        debug_assert_eq!(csr.rows, y.len());
+        let lanes = pool.threads().min(self.pes);
+        if lanes <= 1 {
+            return self.run_spmv(csr, x, y);
+        }
+        let pe_blocks = crate::exec::even_ranges(self.pes, lanes);
+        let scatter = crate::exec::ScatterMut::new(y);
+        pool.run(pe_blocks.len(), &|block| {
+            for it in 0..self.iterations {
+                for pe in pe_blocks[block].clone() {
+                    if let Some(r) = self.row_for(it, pe) {
+                        let r = r as usize;
+                        let mut acc = 0.0;
+                        for k in csr.row_ptr[r]..csr.row_ptr[r + 1] {
+                            acc += csr.val[k] * x[csr.col_idx[k] as usize];
+                        }
+                        // SAFETY: the schedule is a permutation of rows
+                        // (each row in exactly one slot) and PE blocks
+                        // are disjoint, so no two lanes write one row.
+                        unsafe { scatter.write(r, acc) };
+                    }
+                }
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +228,39 @@ mod tests {
             let mut got = vec![0.0; rows];
             sched.run_spmv(&csr, &x, &mut got);
             assert_eq!(want, got); // bit-identical: same per-row fp order
+        }
+    }
+
+    /// Property: the pool-parallel scheduled SpMV is bit-identical to
+    /// the sequential scheduled SpMV (and so to plain CSR SpMV) for
+    /// every policy, PE count and thread count.
+    #[test]
+    fn pool_spmv_bit_identical_across_thread_counts() {
+        let pools: Vec<crate::exec::Pool> =
+            [1usize, 2, 7].iter().map(|&t| crate::exec::Pool::new(t)).collect();
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        for _ in 0..10 {
+            let rows = 1 + rng.gen_range(80);
+            let cols = 1 + rng.gen_range(50);
+            let csr = random_csr(rows, cols, rng.uniform(0.05, 0.5), &mut rng);
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            for pes in [1usize, 3, 4, 9] {
+                for policy in [SchedulePolicy::NnzGrouped, SchedulePolicy::RowOrder] {
+                    let sched = ScheduleTable::build(&csr, pes, policy);
+                    let mut want = vec![0.0; rows];
+                    sched.run_spmv(&csr, &x, &mut want);
+                    for pool in &pools {
+                        let mut got = vec![0.0; rows];
+                        sched.run_spmv_with_pool(pool, &csr, &x, &mut got);
+                        assert_eq!(
+                            got,
+                            want,
+                            "pool SpMV drift: pes={pes}, {policy:?}, threads={}",
+                            pool.threads()
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -1,0 +1,248 @@
+//! The `nysx::exec` cross-kernel differential suite: every kernel the
+//! data-parallel runtime drives — fused NEE projection, blocked C×W SCE
+//! matching, schedule-table SpMV, Gram assembly, and whole-model
+//! training with per-lane bundle accumulators — must be **bit-identical
+//! at thread counts {1, 2, 7}** to the sequential path, and
+//! (transitively, through the packed engine's own differential suite)
+//! to the i8 oracle. Dims deliberately straddle the 64-bit word
+//! boundary (63/64/65) so tail-word handling is live in every parallel
+//! split.
+//!
+//! Thread count must be a pure throughput knob: these tests are what
+//! make `NYSX_THREADS=1` vs `NYSX_THREADS=4` CI legs equivalent by
+//! construction, not by luck.
+
+use nysx::exec::{self, Pool};
+use nysx::graph::tudataset::spec_by_name;
+use nysx::graph::Graph;
+use nysx::hdc::{simd, PackedAccumulator, PackedBatch, PackedHypervector};
+use nysx::infer::{infer_reference, NysxEngine};
+use nysx::kernel::{gram_from_signatures_with_pool, signatures_with_pool, LshParams};
+use nysx::linalg::Mat;
+use nysx::model::train::train_with_pool;
+use nysx::model::ModelConfig;
+use nysx::nystrom::NystromProjection;
+use nysx::sparse::{Csr, SchedulePolicy, ScheduleTable};
+use nysx::util::rng::Xoshiro256;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 7];
+const BOUNDARY_DIMS: [usize; 3] = [63, 64, 65];
+
+fn pools() -> Vec<Pool> {
+    THREAD_COUNTS.iter().map(|&t| Pool::new(t)).collect()
+}
+
+fn random_psd(n: usize, rank: usize, rng: &mut Xoshiro256) -> Mat {
+    let a = Mat::randn(n, rank, rng);
+    a.matmul(&a.transpose())
+}
+
+fn random_csr(rows: usize, cols: usize, p: f64, rng: &mut Xoshiro256) -> Csr {
+    let mut triplets = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.bernoulli(p) {
+                triplets.push((r, c, rng.normal()));
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, triplets)
+}
+
+/// NEE: parallel projection build and fused project-bipolarize-pack are
+/// bit-identical across thread counts at word-boundary dims, and the
+/// packed bits equal the sign of the f64 projection (the i8 oracle's
+/// input).
+#[test]
+fn nee_projection_parallel_equals_sequential_and_oracle() {
+    let pools = pools();
+    for &d in &BOUNDARY_DIMS {
+        let build = |pool: &Pool| {
+            let mut rng = Xoshiro256::seed_from_u64(3);
+            let hz = random_psd(7, 5, &mut rng);
+            NystromProjection::build_with_pool(pool, &hz, d, &mut rng)
+        };
+        let want = build(&pools[0]);
+        for pool in &pools {
+            let got = build(pool);
+            assert_eq!(got.data, want.data, "P_nys drift d={d} t={}", pool.threads());
+            let mut qrng = Xoshiro256::seed_from_u64(11);
+            for _ in 0..4 {
+                let c: Vec<f64> = (0..want.s).map(|_| qrng.normal()).collect();
+                let mut packed = PackedHypervector::zeros(d);
+                got.project_pack_into_with_pool(pool, &c, &mut packed);
+                // Sequential fused path.
+                let mut seq = PackedHypervector::zeros(d);
+                want.project_pack_into(&c, &mut seq);
+                assert_eq!(packed, seq, "fused pack drift d={d} t={}", pool.threads());
+                // i8-oracle route: sign of the f64 projection, packed.
+                let oracle = nysx::hdc::Hypervector::from_real(&want.project(&c)).pack();
+                assert_eq!(packed, oracle, "pack != sign(project) d={d}");
+            }
+        }
+    }
+}
+
+/// SCE: blocked C×W batch scoring and class-block single-query scoring
+/// across thread counts equal the sequential matcher AND the i8 oracle
+/// prototypes, at boundary dims.
+#[test]
+fn sce_matching_parallel_equals_sequential_and_oracle() {
+    let pools = pools();
+    let be = simd::active();
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    for &d in &BOUNDARY_DIMS {
+        let classes = 4;
+        let mut packed_acc = PackedAccumulator::new(classes, d);
+        let mut i8_acc = nysx::hdc::PrototypeAccumulator::new(classes, d);
+        for i in 0..17 {
+            let hv = nysx::hdc::Hypervector::random(d, &mut rng);
+            packed_acc.add(i % classes, &hv.pack());
+            i8_acc.add(i % classes, &hv);
+        }
+        let protos = packed_acc.finalize();
+        let oracle = i8_acc.finalize();
+        let queries: Vec<nysx::hdc::Hypervector> = (0..9)
+            .map(|_| nysx::hdc::Hypervector::random(d, &mut rng))
+            .collect();
+        let mut batch = PackedBatch::new(d);
+        for q in &queries {
+            batch.push(&q.pack());
+        }
+        let mut want = vec![0i64; classes * queries.len()];
+        protos.scores_batch_into_with(be, &batch, &mut want);
+        for pool in &pools {
+            let t = pool.threads();
+            let mut got = vec![0i64; classes * queries.len()];
+            protos.scores_batch_into_pool(pool, be, &batch, &mut got);
+            assert_eq!(got, want, "batch scores drift d={d} t={t}");
+            for (qi, q) in queries.iter().enumerate() {
+                let qp = q.pack();
+                let row = &got[qi * classes..(qi + 1) * classes];
+                assert_eq!(row, oracle.scores(q).as_slice(), "scores != i8 oracle d={d}");
+                assert_eq!(
+                    protos.scores_pool(pool, be, &qp).as_slice(),
+                    row,
+                    "class-block scores drift d={d} t={t}"
+                );
+                assert_eq!(
+                    protos.classify_pool(pool, be, &qp),
+                    oracle.classify(q),
+                    "classify drift d={d} t={t}"
+                );
+            }
+        }
+    }
+}
+
+/// SpMV: the schedule-table row groups are a partition for every policy
+/// (the §4.2 permutation property), and the pool-parallel scheduled
+/// SpMV is bit-identical to plain CSR SpMV across thread counts, PE
+/// widths, and policies.
+#[test]
+fn scheduled_spmv_parallel_equals_plain_for_every_policy() {
+    let pools = pools();
+    let mut rng = Xoshiro256::seed_from_u64(13);
+    for trial in 0..6 {
+        let rows = 5 + 17 * trial;
+        let cols = 3 + 11 * trial;
+        let csr = random_csr(rows, cols, 0.3, &mut rng);
+        let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+        let want = csr.spmv(&x);
+        for pes in [1usize, 4, 7] {
+            for policy in [SchedulePolicy::NnzGrouped, SchedulePolicy::RowOrder] {
+                // Partitioner property: groups partition the rows.
+                let groups = exec::nnz_row_groups(&csr, pes, policy);
+                let mut seen = vec![false; rows];
+                for g in &groups {
+                    for &r in g {
+                        assert!(!seen[r as usize], "row {r} twice ({policy:?})");
+                        seen[r as usize] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "missing rows ({policy:?})");
+
+                let sched = ScheduleTable::build(&csr, pes, policy);
+                for pool in &pools {
+                    let mut got = vec![0.0f64; rows];
+                    sched.run_spmv_with_pool(pool, &csr, &x, &mut got);
+                    assert_eq!(
+                        got,
+                        want,
+                        "SpMV drift rows={rows} pes={pes} {policy:?} t={}",
+                        pool.threads()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Gram: parallel signatures + triangle-partitioned kernel walk are
+/// bit-identical across thread counts and the matrix stays symmetric.
+#[test]
+fn gram_parallel_equals_sequential() {
+    let pools = pools();
+    let mut rng = Xoshiro256::seed_from_u64(19);
+    let spec = spec_by_name("MUTAG").unwrap();
+    let (ds, _, _) = spec.generate_scaled(23, 0.15);
+    let graphs: Vec<&Graph> = ds.train.iter().take(14).map(|(g, _)| g).collect();
+    let lsh = LshParams::sample(2, ds.feature_dim, 1.0, &mut rng);
+    let want_sigs = signatures_with_pool(&pools[0], &graphs, &lsh);
+    let want = gram_from_signatures_with_pool(&pools[0], &want_sigs);
+    for pool in &pools {
+        let sigs = signatures_with_pool(pool, &graphs, &lsh);
+        let k = gram_from_signatures_with_pool(pool, &sigs);
+        assert_eq!(k.data, want.data, "gram drift t={}", pool.threads());
+        for i in 0..k.rows {
+            for j in 0..k.cols {
+                assert_eq!(k[(i, j)], k[(j, i)], "asymmetry at ({i},{j})");
+            }
+        }
+    }
+}
+
+/// Training + the batched classify path end to end: models trained at
+/// 1/2/7 threads are identical, and every engine's single AND batched
+/// predictions (and packed HVs) match each other and the i8 oracle —
+/// the acceptance pin behind the NYSX_THREADS=1 vs =4 CI legs.
+#[test]
+fn train_and_batched_classify_bit_identical_across_thread_counts() {
+    let pools = pools();
+    let spec = spec_by_name("MUTAG").unwrap();
+    let (ds, _, _) = spec.generate_scaled(29, 0.2);
+    let cfg = ModelConfig {
+        hops: 2,
+        hv_dim: 500, // off a word boundary: live tail word everywhere
+        num_landmarks: 8,
+        ..ModelConfig::default()
+    };
+    let want_model = train_with_pool(&ds, &cfg, &pools[0]);
+    let graphs: Vec<&Graph> = ds.test.iter().map(|(g, _)| g).collect();
+    let oracle: Vec<(usize, nysx::hdc::Hypervector)> = graphs
+        .iter()
+        .map(|g| infer_reference(&want_model, g))
+        .collect();
+    for pool in &pools {
+        let t = pool.threads();
+        let model = train_with_pool(&ds, &cfg, pool);
+        assert_eq!(
+            model.packed_prototypes, want_model.packed_prototypes,
+            "trained prototypes drift at t={t}"
+        );
+        assert_eq!(
+            model.landmark_indices, want_model.landmark_indices,
+            "landmark drift at t={t}"
+        );
+        let mut engine = NysxEngine::with_pool(&model, std::sync::Arc::new(Pool::new(t)));
+        let batched = engine.infer_batch(&graphs);
+        for (qi, res) in batched.iter().enumerate() {
+            let (want_pred, want_hv) = &oracle[qi];
+            assert_eq!(res.predicted, *want_pred, "batched pred != i8 oracle t={t}");
+            assert_eq!(res.hv, want_hv.pack(), "batched HV != i8 oracle t={t}");
+            let single = engine.infer(graphs[qi]);
+            assert_eq!(single.predicted, *want_pred, "single pred drift t={t}");
+            assert_eq!(single.hv, res.hv, "single vs batched HV drift t={t}");
+        }
+    }
+}
