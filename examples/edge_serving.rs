@@ -14,8 +14,10 @@
 //!     cargo run --release --example edge_serving
 //!     make artifacts && cargo run --release --features xla-runtime --example edge_serving
 
+use std::collections::HashMap;
+
 use nysx::api::{NysxError, Pipeline, TrainedPipeline};
-use nysx::coordinator::{BatcherConfig, RoutingPolicy, ServerConfig, SubmitError};
+use nysx::coordinator::{BatcherConfig, RoutingPolicy, ServerConfig, ShardedConfig, SubmitError};
 use nysx::util::cli::Args;
 use nysx::util::rng::Xoshiro256;
 
@@ -36,6 +38,10 @@ fn run() -> Result<(), NysxError> {
     // --batch N > 1 lets workers pop whole batches and run one blocked
     // C×W SCE pass per batch (1 = the paper's real-time edge mode).
     let batch = args.try_usize("batch", 1).map_err(NysxError::Config)?.max(1);
+    // --shards N > 1 replays through the sharded tier (consistent-hash
+    // router in front of N independent coordinators) instead of the
+    // single server. Predictions are bit-identical either way.
+    let shards = args.try_usize("shards", 1).map_err(NysxError::Config)?;
 
     eprintln!("[1/4] training NysX on {dataset} (hybrid DPP, scale {scale})...");
     let t0 = std::time::Instant::now();
@@ -50,6 +56,10 @@ fn run() -> Result<(), NysxError> {
         t0.elapsed().as_secs_f64(),
         acc.map_or("n/a".to_string(), |a| format!("{:.1}%", 100.0 * a))
     );
+
+    if shards > 1 {
+        return run_sharded(&mut trained, shards, workers, requests, rate_rps, batch);
+    }
 
     eprintln!("[2/4] starting coordinator: {workers} workers, size-aware routing, batch={batch}");
     let mut server = trained.serve(ServerConfig {
@@ -134,6 +144,97 @@ fn run() -> Result<(), NysxError> {
     server.shutdown();
 
     xla_cross_check(&mut trained);
+    Ok(())
+}
+
+/// The same Poisson replay against the sharded tier: a consistent-hash
+/// front router spreads requests over `shards` independent coordinators
+/// (each with its own exec pool and replicated prototypes). Shard ids
+/// are strided per shard, so truths are keyed by the returned request
+/// id instead of submission order.
+fn run_sharded(
+    trained: &mut TrainedPipeline,
+    shards: usize,
+    workers: usize,
+    requests: usize,
+    rate_rps: f64,
+    batch: usize,
+) -> Result<(), NysxError> {
+    eprintln!("[2/4] starting sharded tier: {shards} shards x {workers} workers, batch={batch}");
+    let mut tier = trained.serve_sharded(ShardedConfig {
+        shards,
+        per_shard: ServerConfig {
+            workers,
+            routing: RoutingPolicy::SizeAware,
+            batcher: BatcherConfig {
+                batch_size: batch,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    })?;
+
+    eprintln!("[3/4] replaying {requests} requests at ~{rate_rps:.0} req/s (Poisson arrivals)");
+    let ds = trained.dataset();
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let mut truth_of: HashMap<u64, usize> = HashMap::with_capacity(requests);
+    let mut responses = Vec::with_capacity(requests);
+    let t_start = std::time::Instant::now();
+    let mut next_arrival = 0.0f64;
+    for _ in 0..requests {
+        next_arrival += -rng.next_f64().max(1e-12).ln() / rate_rps;
+        let target = std::time::Duration::from_secs_f64(next_arrival);
+        while t_start.elapsed() < target {
+            std::hint::spin_loop();
+        }
+        let idx = rng.gen_range(ds.test.len());
+        let mut graph = ds.test[idx].0.clone();
+        loop {
+            match tier.submit(graph) {
+                Ok(id) => {
+                    truth_of.insert(id, ds.test[idx].1);
+                    break;
+                }
+                Err(SubmitError::Backpressure(g)) => {
+                    // Free a slot, keep the response, then retry.
+                    graph = g;
+                    responses.extend(tier.recv());
+                }
+                Err(e @ SubmitError::Closed(_)) => return Err(e.into()),
+            }
+        }
+    }
+    responses.extend(tier.drain());
+    let wall = t_start.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), requests, "lost responses");
+    let correct = responses
+        .iter()
+        .filter(|r| truth_of.get(&r.id) == Some(&r.predicted))
+        .count();
+    println!(
+        "\n=== edge serving report ({} on {} shards x {} workers) ===",
+        ds.name, shards, workers
+    );
+    println!("batch size          {batch}");
+    println!(
+        "requests            {requests} in {wall:.2}s -> {:.0} req/s",
+        requests as f64 / wall
+    );
+    println!(
+        "served accuracy     {:.1}%",
+        100.0 * correct as f64 / requests.max(1) as f64
+    );
+    for shard in 0..shards {
+        let m = tier.shard_metrics(shard);
+        println!(
+            "shard {shard}             {} reqs, host p50={:.0}µs p99={:.0}µs p999={:.0}µs, queue p99={:.0}µs",
+            m.requests, m.host_us.p50, m.host_us.p99, m.host_us.p999, m.queue_us.p99
+        );
+    }
+    tier.shutdown();
+
+    xla_cross_check(trained);
     Ok(())
 }
 

@@ -13,6 +13,10 @@
 //!   the pipeline to a dedicated [`crate::exec`] pool (default: the
 //!   process-wide pool, sized by `--threads` / `NYSX_THREADS`); thread
 //!   count is pure throughput — results are bit-identical at any value.
+//!   `.shards(n)` sets the default width for
+//!   [`TrainedPipeline::serve_sharded`], the multi-shard serving tier
+//!   behind a consistent-hash front router ([`ShardedServeHandle`]) —
+//!   like threads, shard count never changes classifications.
 //! * [`Classifier`] — one interface over every backend: the packed
 //!   [`NysxEngine`], the verbatim i8 Algorithm-1 oracle
 //!   ([`ReferenceClassifier`]), the GraphHD / NysHD baselines, and the
@@ -44,7 +48,9 @@ pub mod error;
 pub mod pipeline;
 
 pub use error::NysxError;
-pub use pipeline::{Pipeline, ServeHandle, ServedClassifier, TrainedPipeline};
+pub use pipeline::{
+    Pipeline, ServeHandle, ServedClassifier, ShardedServeHandle, TrainedPipeline,
+};
 
 use std::borrow::Borrow;
 

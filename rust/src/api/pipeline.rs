@@ -15,8 +15,10 @@ use std::sync::Arc;
 
 use super::error::NysxError;
 use super::Classifier;
+use crate::coordinator::shard::MAX_SHARDS;
 use crate::coordinator::{
-    MetricsSummary, Response, Server, ServerConfig, SubmitBatchError, SubmitError,
+    MetricsSummary, Response, Server, ServerConfig, ShardedConfig, ShardedServer,
+    SubmitBatchError, SubmitError,
 };
 use crate::exec::{self, Pool};
 use crate::graph::tudataset::{spec_by_name, TuSpec, TU_SPECS};
@@ -66,6 +68,7 @@ pub struct Pipeline {
     strategy: LandmarkStrategy,
     num_landmarks: Option<usize>,
     threads: Option<usize>,
+    shards: Option<usize>,
 }
 
 impl Pipeline {
@@ -86,6 +89,7 @@ impl Pipeline {
             strategy: LandmarkStrategy::HybridDpp { pool_factor: 2 },
             num_landmarks: None,
             threads: None,
+            shards: None,
         })
     }
 
@@ -140,6 +144,28 @@ impl Pipeline {
         self
     }
 
+    /// Default shard count for [`TrainedPipeline::serve_sharded`]: a
+    /// `ShardedConfig` whose `shards` is 0 inherits this value. Like
+    /// `threads`, a pure deployment knob — classification results are
+    /// bit-identical at any shard count, since every shard replicates
+    /// the same model. `n = 0` (or beyond the shard cap) is a typed
+    /// config error at `train()`/`load()` time.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = Some(n);
+        self
+    }
+
+    /// Validate the builder's default shard count (1 when unset).
+    fn resolve_shards(&self) -> Result<usize, NysxError> {
+        match self.shards {
+            None => Ok(1),
+            Some(n) if n >= 1 && n <= MAX_SHARDS => Ok(n),
+            Some(n) => Err(NysxError::Config(format!(
+                "shards must be in 1..={MAX_SHARDS}, got {n}"
+            ))),
+        }
+    }
+
     /// Resolve the exec pool this pipeline (and its `TrainedPipeline`)
     /// runs on, validating an explicit thread count.
     fn resolve_pool(&self) -> Result<Arc<Pool>, NysxError> {
@@ -185,9 +211,10 @@ impl Pipeline {
     /// Train a model on the generated dataset.
     pub fn train(self) -> Result<TrainedPipeline, NysxError> {
         let pool = self.resolve_pool()?;
+        let shards = self.resolve_shards()?;
         let (ds, cfg) = self.materialize()?;
         let model = Arc::new(crate::model::train::train_with_pool(&ds, &cfg, &pool));
-        Ok(TrainedPipeline::from_parts(model, ds, pool))
+        Ok(TrainedPipeline::from_parts(model, ds, pool, shards))
     }
 
     /// Load a model artifact instead of training. The builder's dataset
@@ -198,11 +225,12 @@ impl Pipeline {
     /// a different dataset is a typed error.
     pub fn load(self, path: &Path) -> Result<TrainedPipeline, NysxError> {
         let pool = self.resolve_pool()?;
+        let shards = self.resolve_shards()?;
         check_scale(self.scale)?;
         let model = model_io::load_file(path)?;
         check_dataset_match(&model, self.spec.name, path)?;
         let (ds, _, _) = self.spec.generate_scaled(self.seed, self.scale);
-        Ok(TrainedPipeline::from_parts(Arc::new(model), ds, pool))
+        Ok(TrainedPipeline::from_parts(Arc::new(model), ds, pool, shards))
     }
 }
 
@@ -216,16 +244,25 @@ pub struct TrainedPipeline {
     /// (dedicated when built with [`Pipeline::threads`], otherwise the
     /// process-wide pool).
     pool: Arc<Pool>,
+    /// Default shard count for [`Self::serve_sharded`] (from
+    /// [`Pipeline::shards`], 1 when unset).
+    default_shards: usize,
 }
 
 impl TrainedPipeline {
-    fn from_parts(model: Arc<NysHdcModel>, dataset: GraphDataset, pool: Arc<Pool>) -> Self {
+    fn from_parts(
+        model: Arc<NysHdcModel>,
+        dataset: GraphDataset,
+        pool: Arc<Pool>,
+        default_shards: usize,
+    ) -> Self {
         let engine = NysxEngine::with_pool(model.clone(), pool.clone());
         Self {
             model,
             dataset,
             engine,
             pool,
+            default_shards,
         }
     }
 
@@ -284,6 +321,32 @@ impl TrainedPipeline {
         })
     }
 
+    /// Start the SHARDED serving tier over this model: N independent
+    /// shards behind a consistent-hash front router with per-shard
+    /// admission control (see `coordinator::sharded`). A `cfg.shards` of
+    /// 0 inherits the builder's [`Pipeline::shards`] default. Each shard
+    /// gets its own exec pool sized like this pipeline's, so
+    /// [`Pipeline::threads`] bounds the per-shard parallelism.
+    pub fn serve_sharded(&self, mut cfg: ShardedConfig) -> Result<ShardedServeHandle, NysxError> {
+        if cfg.shards == 0 {
+            cfg.shards = self.default_shards;
+        }
+        if cfg.shards > MAX_SHARDS {
+            return Err(NysxError::Config(format!(
+                "shards must be in 1..={MAX_SHARDS}, got {}",
+                cfg.shards
+            )));
+        }
+        let threads = self.pool.threads();
+        let pools = (0..cfg.shards)
+            .map(|_| Arc::new(Pool::new(threads)))
+            .collect();
+        Ok(ShardedServeHandle {
+            server: ShardedServer::try_start_with_pools(self.model.clone(), cfg, pools)?,
+            pending: HashMap::new(),
+        })
+    }
+
     /// Load a saved artifact against THIS pipeline's dataset — no
     /// dataset regeneration, unlike [`Pipeline::load`]. The go-to for
     /// save/reload verification and A/B comparisons on one split.
@@ -294,6 +357,7 @@ impl TrainedPipeline {
             Arc::new(model),
             self.dataset.clone(),
             self.pool.clone(),
+            self.default_shards,
         ))
     }
 
@@ -444,6 +508,161 @@ impl Classifier for ServeHandle {
             .batch_size()
             .max(1)
             .min(self.server.queue_capacity().max(1));
+        let mut ids = Vec::with_capacity(graphs.len());
+        for group in graphs.chunks(chunk) {
+            let owned: Vec<Graph> = group.iter().map(|g| (*g).clone()).collect();
+            ids.extend(self.submit_batch_blocking(owned)?);
+        }
+        ids.into_iter().map(|id| self.await_response(id)).collect()
+    }
+}
+
+/// A running sharded serving tier ([`TrainedPipeline::serve_sharded`]).
+/// Mirrors [`ServeHandle`]'s surface — raw submit/recv for replay loops
+/// plus a blocking [`Classifier`] impl — and adds the shard-level
+/// controls: [`Self::stop_shard`] for fault injection / topology
+/// changes and per-shard metrics.
+pub struct ShardedServeHandle {
+    server: ShardedServer,
+    /// Responses received while waiting for a different request id.
+    pending: HashMap<u64, usize>,
+}
+
+impl ShardedServeHandle {
+    /// Submit a query graph through the consistent-hash front router
+    /// (non-blocking; see [`ShardedServer::submit`] for the
+    /// backpressure / reroute contract).
+    // The Err hands the graph back by design; see Server::submit.
+    #[allow(clippy::result_large_err)]
+    pub fn submit(&mut self, graph: Graph) -> Result<u64, SubmitError> {
+        self.server.submit(graph)
+    }
+
+    /// Blocking receive of one response from any shard.
+    pub fn recv(&mut self) -> Option<Response> {
+        self.server.recv()
+    }
+
+    /// Non-blocking receive (open-loop load generators poll this).
+    pub fn try_recv(&mut self) -> Option<Response> {
+        self.server.try_recv()
+    }
+
+    /// Drain all outstanding responses.
+    pub fn drain(&mut self) -> Vec<Response> {
+        self.server.drain()
+    }
+
+    /// Total shard slots (including stopped ones).
+    pub fn num_shards(&self) -> usize {
+        self.server.num_shards()
+    }
+
+    /// Shards still accepting work.
+    pub fn live_shards(&self) -> usize {
+        self.server.live_shards()
+    }
+
+    /// Tear down one shard mid-load (fault injection): queued work still
+    /// completes and subsequent submits reroute consistently.
+    pub fn stop_shard(&mut self, shard: usize) {
+        self.server.stop_shard(shard)
+    }
+
+    /// Metrics snapshot for one shard (valid even after `stop_shard`).
+    pub fn shard_metrics(&self, shard: usize) -> MetricsSummary {
+        self.server.shard_metrics(shard).summary()
+    }
+
+    /// Graceful drain-then-stop across every live shard; zero loss.
+    pub fn shutdown(self) -> Vec<Response> {
+        self.server.shutdown()
+    }
+
+    /// Submit, absorbing backpressure (admission cap or queue-full) by
+    /// receiving and buffering responses until a slot frees up.
+    fn submit_blocking(&mut self, mut graph: Graph) -> Result<u64, NysxError> {
+        loop {
+            match self.server.submit(graph) {
+                Ok(id) => return Ok(id),
+                Err(SubmitError::Backpressure(g)) => {
+                    graph = g;
+                    self.absorb_backpressure()?;
+                }
+                Err(SubmitError::Closed(_)) => return Err(NysxError::Closed),
+            }
+        }
+    }
+
+    /// Submit a whole chunk as one batch-major unit, absorbing
+    /// backpressure like [`Self::submit_blocking`].
+    fn submit_batch_blocking(&mut self, mut graphs: Vec<Graph>) -> Result<Vec<u64>, NysxError> {
+        loop {
+            match self.server.submit_batch(graphs) {
+                Ok(ids) => return Ok(ids),
+                Err(SubmitBatchError::Backpressure(gs)) => {
+                    graphs = gs;
+                    self.absorb_backpressure()?;
+                }
+                Err(SubmitBatchError::Closed(_)) => return Err(NysxError::Closed),
+            }
+        }
+    }
+
+    /// Free an admission/queue slot by receiving one response.
+    fn absorb_backpressure(&mut self) -> Result<(), NysxError> {
+        match self.server.recv() {
+            Some(resp) => {
+                self.pending.insert(resp.id, resp.predicted);
+                Ok(())
+            }
+            // Backpressure with zero responses outstanding: no retry can
+            // ever succeed — a dead configuration, not a transient.
+            None => Err(NysxError::config(
+                "sharded tier backpressured with zero responses outstanding — \
+                 admission cap or queue capacity too small to make progress",
+            )),
+        }
+    }
+
+    /// Wait for a specific request id, buffering other responses.
+    fn await_response(&mut self, id: u64) -> Result<usize, NysxError> {
+        loop {
+            if let Some(predicted) = self.pending.remove(&id) {
+                return Ok(predicted);
+            }
+            match self.server.recv() {
+                Some(resp) => {
+                    self.pending.insert(resp.id, resp.predicted);
+                }
+                None => return Err(NysxError::Closed),
+            }
+        }
+    }
+}
+
+impl Classifier for ShardedServeHandle {
+    fn name(&self) -> &'static str {
+        "nysx-sharded"
+    }
+
+    fn classify(&mut self, graph: &Graph) -> Result<usize, NysxError> {
+        let id = self.submit_blocking(graph.clone())?;
+        self.await_response(id)
+    }
+
+    /// Batch-major through the front router: chunks are clamped to the
+    /// dispatch width AND to both progress ceilings — queue capacity and
+    /// the per-shard admission cap — so every atomic group can
+    /// eventually be admitted (a chunk above either ceiling would
+    /// dead-loop, like the capacity case on [`ServeHandle`]).
+    fn classify_batch(&mut self, graphs: &[&Graph]) -> Result<Vec<usize>, NysxError> {
+        let chunk = self
+            .server
+            .batch_size()
+            .max(1)
+            .min(self.server.queue_capacity().max(1))
+            .min(self.server.max_outstanding());
         let mut ids = Vec::with_capacity(graphs.len());
         for group in graphs.chunks(chunk) {
             let owned: Vec<Graph> = group.iter().map(|g| (*g).clone()).collect();
@@ -657,6 +876,93 @@ mod tests {
             .expect("chunked batches must make progress");
         assert_eq!(got, want, "capacity-clamped chunks changed predictions");
         served.shutdown();
+    }
+
+    /// The sharded tier through the facade: `serve_sharded` inherits the
+    /// builder's shard default, classifies bit-identically to the
+    /// in-process engine through the consistent-hash front router, and
+    /// invalid shard counts are typed config errors.
+    #[test]
+    fn sharded_served_classifier_matches_in_process() {
+        let p = small_pipeline()
+            .threads(1)
+            .shards(2)
+            .train()
+            .expect("train");
+        let graphs: Vec<&Graph> = p.dataset.test.iter().map(|(g, _)| g).collect();
+        let mut engine = p.classifier();
+        let want = engine.classify_batch(&graphs).expect("in-process");
+
+        // shards: 0 inherits the builder's default (2).
+        let mut sharded = p
+            .serve_sharded(ShardedConfig {
+                shards: 0,
+                per_shard: ServerConfig {
+                    workers: 2,
+                    batcher: BatcherConfig {
+                        batch_size: 3,
+                        max_wait: std::time::Duration::from_millis(2),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .expect("serve_sharded");
+        assert_eq!(sharded.num_shards(), 2, "shards: 0 must inherit the builder default");
+        assert_eq!(sharded.live_shards(), 2);
+        let got = sharded.classify_batch(&graphs).expect("sharded transport");
+        assert_eq!(got, want, "sharded predictions diverge from the engine");
+        for (g, want) in graphs.iter().take(5).zip(&want) {
+            assert_eq!(sharded.classify(g).expect("sharded transport"), *want);
+        }
+        for shard in 0..2 {
+            assert!(
+                sharded.shard_metrics(shard).requests > 0,
+                "shard {shard} served nothing — front router not spreading"
+            );
+        }
+        sharded.shutdown();
+
+        // Builder-level validation: shards(0) is a typed config error.
+        match small_pipeline().shards(0).train() {
+            Err(NysxError::Config(_)) => {}
+            other => panic!(
+                "want Config for zero shards, got {:?}",
+                other.err().map(|e| e.to_string())
+            ),
+        }
+    }
+
+    /// A tiny per-shard admission cap must not dead-loop batched
+    /// classification through the sharded handle — chunks clamp to the
+    /// cap as well as the queue capacity.
+    #[test]
+    fn sharded_classify_batch_survives_tiny_admission_cap() {
+        let p = small_pipeline().threads(1).train().expect("train");
+        let graphs: Vec<&Graph> = p.dataset.test.iter().take(6).map(|(g, _)| g).collect();
+        let mut engine = p.classifier();
+        let want = engine.classify_batch(&graphs).expect("in-process");
+        let mut sharded = p
+            .serve_sharded(ShardedConfig {
+                shards: 2,
+                max_outstanding: 1, // far below the dispatch width
+                per_shard: ServerConfig {
+                    workers: 1,
+                    batcher: BatcherConfig {
+                        batch_size: 64,
+                        capacity: 2,
+                        max_wait: std::time::Duration::from_millis(1),
+                    },
+                    ..Default::default()
+                },
+            })
+            .expect("serve_sharded");
+        let got = sharded
+            .classify_batch(&graphs)
+            .expect("cap-clamped chunks must make progress");
+        assert_eq!(got, want, "cap-clamped chunks changed predictions");
+        sharded.shutdown();
     }
 
     /// Serving errors surface as typed `NysxError`s through the trait.

@@ -1,0 +1,565 @@
+//! Serving load harness: closed- and open-loop load generation against
+//! the sharded serving tier, sweeping offered QPS against measured
+//! p50/p99/p999 end-to-end latency per shard count, and emitting the
+//! machine-readable `BENCH_SERVING.json` artifact — the first entry in
+//! the repo's benchmark-artifact convention (every `BENCH_*.json`
+//! carries a `schema` tag and is valid input to `Json::parse`).
+//!
+//! Two load modes per shard count:
+//!
+//! * **Closed loop** — a fixed number of logical clients, each with one
+//!   request in flight; a response immediately triggers the next submit.
+//!   Measures the tier's maximum sustained throughput and the latency it
+//!   costs.
+//! * **Open loop** — arrivals on a fixed wall-clock schedule (offered
+//!   QPS), independent of completions. Requests the tier cannot admit
+//!   are shed (typed `Backpressure`) and counted as rejected. This is
+//!   the honest tail-latency probe: unlike closed loop, slow responses
+//!   do not throttle the arrival rate.
+//!
+//! Accounting invariant, asserted after every stage: **sent == answered
+//! + rejected** — no silently lost requests, under load or shedding.
+//!
+//! Smoke mode (`NYSX_BENCH_SMOKE=1`): shrink the sweep so CI can assert
+//! the artifact exists and is well-formed in seconds.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::api::{NysxError, Pipeline, ShardedServeHandle};
+use crate::coordinator::{
+    BatcherConfig, LatencyStats, ServerConfig, ShardedConfig, SubmitError,
+};
+use crate::graph::Graph;
+use crate::util::json::Json;
+
+/// Schema tag stamped into every artifact this module writes.
+pub const SCHEMA: &str = "nysx-bench-serving/v1";
+
+/// `NYSX_BENCH_SMOKE` truthiness, shared convention with the
+/// micro-kernel bench binary.
+pub fn smoke_mode() -> bool {
+    std::env::var("NYSX_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct ServingBenchConfig {
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub hv_dim: usize,
+    /// Exec threads per shard pool (None = global pool sizing).
+    pub threads: Option<usize>,
+    /// Shard counts to sweep (the paper-repro default is {1, 2, 4}).
+    pub shard_counts: Vec<usize>,
+    /// Offered-QPS points for the open-loop sweep.
+    pub qps_points: Vec<f64>,
+    /// Arrivals per open-loop sweep point.
+    pub requests_per_point: usize,
+    /// Total requests of the closed-loop stage.
+    pub closed_loop_requests: usize,
+    /// Concurrent logical clients of the closed-loop stage.
+    pub closed_loop_clients: usize,
+    pub workers_per_shard: usize,
+    pub batch_size: usize,
+    /// Per-shard admission cap (typed Backpressure beyond it).
+    pub max_outstanding: usize,
+}
+
+impl Default for ServingBenchConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "MUTAG".to_string(),
+            scale: 1.0,
+            seed: 42,
+            hv_dim: 2048,
+            threads: None,
+            shard_counts: vec![1, 2, 4],
+            qps_points: vec![100.0, 300.0, 1000.0, 3000.0],
+            requests_per_point: 2000,
+            closed_loop_requests: 2000,
+            closed_loop_clients: 16,
+            workers_per_shard: 2,
+            batch_size: 4,
+            max_outstanding: 256,
+        }
+    }
+}
+
+impl ServingBenchConfig {
+    /// The CI smoke sweep: seconds end to end, same code paths.
+    pub fn smoke() -> Self {
+        Self {
+            scale: 0.2,
+            hv_dim: 500,
+            threads: Some(1),
+            shard_counts: vec![1, 2],
+            qps_points: vec![200.0],
+            requests_per_point: 40,
+            closed_loop_requests: 40,
+            closed_loop_clients: 4,
+            workers_per_shard: 1,
+            batch_size: 2,
+            max_outstanding: 64,
+            ..Self::default()
+        }
+    }
+
+    /// `smoke()` when `NYSX_BENCH_SMOKE` is set, full sweep otherwise.
+    pub fn from_env() -> Self {
+        if smoke_mode() {
+            Self::smoke()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Measurements of one load stage (closed loop, or one open-loop point).
+#[derive(Debug, Clone)]
+pub struct StageResult {
+    pub sent: usize,
+    pub answered: usize,
+    pub rejected: usize,
+    pub wall_s: f64,
+    /// Answered requests per wall second.
+    pub achieved_qps: f64,
+    /// End-to-end latency (submit → response receipt), milliseconds.
+    pub latency_ms: LatencyStats,
+}
+
+impl StageResult {
+    fn from_samples(
+        sent: usize,
+        rejected: usize,
+        wall: Duration,
+        latencies_ms: &[f64],
+    ) -> Result<Self, NysxError> {
+        let answered = latencies_ms.len();
+        // The load generator's books must balance exactly; anything else
+        // means the tier lost or duplicated a response.
+        if sent != answered + rejected {
+            return Err(NysxError::Config(format!(
+                "serving bench accounting broken: sent {sent} != answered {answered} + rejected {rejected}"
+            )));
+        }
+        let wall_s = wall.as_secs_f64();
+        Ok(Self {
+            sent,
+            answered,
+            rejected,
+            wall_s,
+            achieved_qps: if wall_s > 0.0 {
+                answered as f64 / wall_s
+            } else {
+                0.0
+            },
+            latency_ms: LatencyStats::from_samples(latencies_ms),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sent", Json::num(self.sent as f64)),
+            ("answered", Json::num(self.answered as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("achieved_qps", Json::num(self.achieved_qps)),
+            (
+                "latency_ms",
+                Json::obj(vec![
+                    ("mean", Json::num(self.latency_ms.mean)),
+                    ("p50", Json::num(self.latency_ms.p50)),
+                    ("p99", Json::num(self.latency_ms.p99)),
+                    ("p999", Json::num(self.latency_ms.p999)),
+                    ("max", Json::num(self.latency_ms.max)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// All stages for one shard count.
+#[derive(Debug, Clone)]
+pub struct ShardRun {
+    pub shards: usize,
+    pub closed_loop: StageResult,
+    /// One entry per `qps_points` value, in sweep order.
+    pub open_loop: Vec<(f64, StageResult)>,
+}
+
+/// The whole harness run — serialize with [`ServingBenchReport::to_json`].
+#[derive(Debug, Clone)]
+pub struct ServingBenchReport {
+    pub config: ServingBenchConfig,
+    pub smoke: bool,
+    pub runs: Vec<ShardRun>,
+}
+
+impl ServingBenchReport {
+    /// The `BENCH_SERVING.json` document (schema documented in
+    /// DESIGN.md §7).
+    pub fn to_json(&self) -> Json {
+        let c = &self.config;
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("bench", Json::str("serving")),
+            ("dataset", Json::str(c.dataset.as_str())),
+            ("scale", Json::num(c.scale)),
+            ("seed", Json::num(c.seed as f64)),
+            ("smoke", Json::Bool(self.smoke)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("hv_dim", Json::num(c.hv_dim as f64)),
+                    (
+                        "shard_counts",
+                        Json::arr(c.shard_counts.iter().map(|&s| Json::num(s as f64))),
+                    ),
+                    (
+                        "qps_points",
+                        Json::arr(c.qps_points.iter().map(|&q| Json::num(q))),
+                    ),
+                    ("workers_per_shard", Json::num(c.workers_per_shard as f64)),
+                    ("batch_size", Json::num(c.batch_size as f64)),
+                    ("max_outstanding", Json::num(c.max_outstanding as f64)),
+                    (
+                        "requests_per_point",
+                        Json::num(c.requests_per_point as f64),
+                    ),
+                    (
+                        "closed_loop_requests",
+                        Json::num(c.closed_loop_requests as f64),
+                    ),
+                    (
+                        "closed_loop_clients",
+                        Json::num(c.closed_loop_clients as f64),
+                    ),
+                ]),
+            ),
+            (
+                "runs",
+                Json::arr(self.runs.iter().map(|run| {
+                    Json::obj(vec![
+                        ("shards", Json::num(run.shards as f64)),
+                        ("closed_loop", run.closed_loop.to_json()),
+                        (
+                            "open_loop",
+                            Json::arr(run.open_loop.iter().map(|(qps, stage)| {
+                                let mut obj = stage.to_json();
+                                if let Json::Obj(map) = &mut obj {
+                                    map.insert("offered_qps".to_string(), Json::num(*qps));
+                                }
+                                obj
+                            })),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Emit, round-trip-validate, and write the artifact. The parse-back
+    /// check guarantees no ill-formed artifact ever lands on disk.
+    pub fn write(&self, path: &std::path::Path) -> Result<(), NysxError> {
+        let doc = self.to_json();
+        let text = doc.to_string();
+        let back = Json::parse(&text).map_err(|e| {
+            NysxError::Config(format!("emitted BENCH_SERVING.json does not parse: {e}"))
+        })?;
+        if back != doc {
+            return Err(NysxError::config(
+                "BENCH_SERVING.json round-trip drift: parsed document != emitted document",
+            ));
+        }
+        std::fs::write(path, text + "\n").map_err(NysxError::Io)
+    }
+}
+
+/// The closed-loop stage: keep `clients` requests in flight until
+/// `total` have been answered.
+fn closed_loop(
+    tier: &mut ShardedServeHandle,
+    graphs: &[Graph],
+    clients: usize,
+    total: usize,
+) -> Result<StageResult, NysxError> {
+    let mut submitted_at: HashMap<u64, Instant> = HashMap::new();
+    let mut latencies_ms = Vec::with_capacity(total);
+    let mut sent = 0usize;
+    let mut rejected = 0usize;
+    let mut next_graph = 0usize;
+    let start = Instant::now();
+    while latencies_ms.len() + rejected < total {
+        // Top up to the client count (or the remaining budget).
+        while submitted_at.len() < clients && sent < total {
+            let g = graphs[next_graph % graphs.len()].clone();
+            next_graph += 1;
+            let now = Instant::now();
+            match tier.submit(g) {
+                Ok(id) => {
+                    submitted_at.insert(id, now);
+                    sent += 1;
+                }
+                Err(SubmitError::Backpressure(_)) => {
+                    // Closed loop sized within the admission cap should
+                    // never shed; count it if a config makes it happen.
+                    sent += 1;
+                    rejected += 1;
+                }
+                Err(SubmitError::Closed(_)) => {
+                    return Err(NysxError::Closed);
+                }
+            }
+        }
+        if submitted_at.is_empty() {
+            break; // everything shed — books still balance below
+        }
+        match tier.recv() {
+            Some(resp) => {
+                let at = submitted_at.remove(&resp.id).ok_or_else(|| {
+                    NysxError::Config(format!("response for unknown request id {}", resp.id))
+                })?;
+                latencies_ms.push(at.elapsed().as_secs_f64() * 1e3);
+            }
+            None => return Err(NysxError::Closed),
+        }
+    }
+    StageResult::from_samples(sent, rejected, start.elapsed(), &latencies_ms)
+}
+
+/// One open-loop point: `total` arrivals on a fixed `qps` schedule;
+/// arrivals the tier cannot admit are shed and counted.
+fn open_loop(
+    tier: &mut ShardedServeHandle,
+    graphs: &[Graph],
+    qps: f64,
+    total: usize,
+) -> Result<StageResult, NysxError> {
+    let period = Duration::from_secs_f64(1.0 / qps.max(1e-9));
+    let mut submitted_at: HashMap<u64, Instant> = HashMap::new();
+    let mut latencies_ms = Vec::with_capacity(total);
+    let mut rejected = 0usize;
+    let start = Instant::now();
+    for i in 0..total {
+        // The arrival clock is absolute (start + i·period): a stalled
+        // tier does not slow the offered load — that's the difference
+        // between open and closed loop.
+        let due = start + period.mul_f64(i as f64);
+        loop {
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            // Poll completions between arrivals instead of sleeping the
+            // whole gap, so response timestamps stay tight.
+            if let Some(resp) = tier.try_recv() {
+                if let Some(at) = submitted_at.remove(&resp.id) {
+                    latencies_ms.push(at.elapsed().as_secs_f64() * 1e3);
+                }
+            } else {
+                std::thread::sleep((due - now).min(Duration::from_micros(200)));
+            }
+        }
+        let g = graphs[i % graphs.len()].clone();
+        let now = Instant::now();
+        match tier.submit(g) {
+            Ok(id) => {
+                submitted_at.insert(id, now);
+            }
+            Err(SubmitError::Backpressure(_)) => rejected += 1,
+            Err(SubmitError::Closed(_)) => return Err(NysxError::Closed),
+        }
+    }
+    // Collect the stragglers.
+    for resp in tier.drain() {
+        if let Some(at) = submitted_at.remove(&resp.id) {
+            latencies_ms.push(at.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    if !submitted_at.is_empty() {
+        return Err(NysxError::Config(format!(
+            "{} accepted requests never answered",
+            submitted_at.len()
+        )));
+    }
+    StageResult::from_samples(total, rejected, start.elapsed(), &latencies_ms)
+}
+
+/// Run the whole harness: train once, then per shard count run the
+/// closed-loop stage and the open-loop QPS sweep on a fresh tier.
+pub fn run(cfg: &ServingBenchConfig) -> Result<ServingBenchReport, NysxError> {
+    let mut builder = Pipeline::for_dataset(&cfg.dataset)?
+        .scale(cfg.scale)
+        .seed(cfg.seed)
+        .hv_dim(cfg.hv_dim);
+    if let Some(n) = cfg.threads {
+        builder = builder.threads(n);
+    }
+    let pipeline = builder.train()?;
+    let graphs: Vec<Graph> = pipeline
+        .dataset()
+        .test
+        .iter()
+        .map(|(g, _)| g.clone())
+        .collect();
+    if graphs.is_empty() {
+        return Err(NysxError::config("serving bench needs a non-empty test split"));
+    }
+
+    let mut runs = Vec::with_capacity(cfg.shard_counts.len());
+    for &shards in &cfg.shard_counts {
+        let serve_cfg = || ShardedConfig {
+            shards,
+            max_outstanding: cfg.max_outstanding,
+            per_shard: ServerConfig {
+                workers: cfg.workers_per_shard,
+                batcher: BatcherConfig {
+                    batch_size: cfg.batch_size,
+                    max_wait: Duration::from_micros(200),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        };
+
+        // Fresh tier per stage so one stage's backlog never pollutes the
+        // next stage's latency samples.
+        let mut tier = pipeline.serve_sharded(serve_cfg())?;
+        let closed = closed_loop(
+            &mut tier,
+            &graphs,
+            cfg.closed_loop_clients,
+            cfg.closed_loop_requests,
+        )?;
+        tier.shutdown();
+
+        let mut points = Vec::with_capacity(cfg.qps_points.len());
+        for &qps in &cfg.qps_points {
+            let mut tier = pipeline.serve_sharded(serve_cfg())?;
+            let stage = open_loop(&mut tier, &graphs, qps, cfg.requests_per_point)?;
+            tier.shutdown();
+            points.push((qps, stage));
+        }
+
+        runs.push(ShardRun {
+            shards,
+            closed_loop: closed,
+            open_loop: points,
+        });
+    }
+
+    Ok(ServingBenchReport {
+        config: cfg.clone(),
+        smoke: smoke_mode(),
+        runs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The harness end to end at smoke scale: books balance in every
+    /// stage, latency percentiles are ordered, and the emitted artifact
+    /// round-trips through the JSON parser with the schema intact.
+    #[test]
+    fn smoke_run_balances_books_and_emits_valid_json() {
+        let cfg = ServingBenchConfig {
+            shard_counts: vec![1, 2],
+            qps_points: vec![500.0],
+            requests_per_point: 24,
+            closed_loop_requests: 24,
+            closed_loop_clients: 3,
+            ..ServingBenchConfig::smoke()
+        };
+        let report = run(&cfg).expect("smoke harness run");
+        assert_eq!(report.runs.len(), 2);
+        for run in &report.runs {
+            for (label, stage) in std::iter::once(("closed", &run.closed_loop))
+                .chain(run.open_loop.iter().map(|(_, s)| ("open", s)))
+            {
+                assert_eq!(
+                    stage.sent,
+                    stage.answered + stage.rejected,
+                    "{label} loop accounting broken at {} shards",
+                    run.shards
+                );
+                assert!(stage.answered > 0, "{label} loop answered nothing");
+                let l = &stage.latency_ms;
+                assert!(
+                    l.p50 <= l.p99 && l.p99 <= l.p999 && l.p999 <= l.max,
+                    "{label} loop percentiles out of order"
+                );
+                assert!(l.p50 > 0.0, "{label} loop zero latency is implausible");
+            }
+        }
+
+        let doc = report.to_json();
+        let text = doc.to_string();
+        let back = Json::parse(&text).expect("artifact parses");
+        assert_eq!(back, doc, "JSON round-trip drift");
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(
+            back.get("runs").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+        let first = &back.get("runs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("shards").and_then(Json::as_usize), Some(1));
+        let point = &first.get("open_loop").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            point.get("offered_qps").and_then(Json::as_f64),
+            Some(500.0)
+        );
+        for key in ["p50", "p99", "p999"] {
+            assert!(
+                point
+                    .get("latency_ms")
+                    .and_then(|l| l.get(key))
+                    .and_then(Json::as_f64)
+                    .is_some(),
+                "open-loop point missing latency_ms.{key}"
+            );
+        }
+    }
+
+    /// write() refuses nothing on a good report and lands a parseable
+    /// file on disk.
+    #[test]
+    fn write_emits_parseable_artifact() {
+        let report = ServingBenchReport {
+            config: ServingBenchConfig::smoke(),
+            smoke: true,
+            runs: vec![ShardRun {
+                shards: 1,
+                closed_loop: StageResult::from_samples(
+                    3,
+                    1,
+                    Duration::from_millis(10),
+                    &[1.0, 2.0],
+                )
+                .unwrap(),
+                open_loop: vec![(
+                    100.0,
+                    StageResult::from_samples(2, 0, Duration::from_millis(5), &[0.5, 0.7])
+                        .unwrap(),
+                )],
+            }],
+        };
+        let dir = std::env::temp_dir().join(format!("nysx-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_SERVING.json");
+        report.write(&path).expect("write");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).expect("file parses");
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Broken books are a typed error, not a silent artifact.
+        let err = StageResult::from_samples(5, 1, Duration::from_millis(1), &[1.0])
+            .err()
+            .expect("5 != 1 + 1 must be rejected");
+        assert!(matches!(err, NysxError::Config(_)), "{err}");
+    }
+}

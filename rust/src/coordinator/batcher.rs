@@ -329,6 +329,61 @@ mod tests {
         );
     }
 
+    /// Regression (satellite to the anchoring fix above): the front
+    /// anchor survives MIXED `push` / `push_many` traffic on one queue.
+    /// A single request ages alone, then a group submission joins it
+    /// behind the same popper — the deadline must stay pinned to the old
+    /// single's submit instant, not re-anchor to the younger group's.
+    /// Code that re-read the anchor from the newest arrival (or from the
+    /// batch head of the push_many group) would grant a fresh max_wait
+    /// here and trip the end-to-end bound.
+    #[test]
+    fn mixed_single_and_batch_submissions_keep_front_anchor() {
+        // Wide deadline relative to the interleave point so an overslept
+        // scheduler can't push the group submission past the anchor's
+        // deadline (which would legitimately dispatch the single alone).
+        let max_wait = Duration::from_millis(400);
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            batch_size: 8,
+            max_wait,
+            capacity: 100,
+        }));
+        let submitted = Instant::now();
+        q.push(req(0)).unwrap(); // the oldest request: the anchor
+        // A popper blocks on the partial batch while the single ages.
+        let popper = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let popped_at = Instant::now();
+                let batch = q.pop_batch().unwrap();
+                (batch, popped_at.elapsed())
+            })
+        };
+        // Part of the budget elapses, then a group submission interleaves
+        // onto the same queue (still short of batch_size).
+        std::thread::sleep(Duration::from_millis(150));
+        q.push_many(vec![req(1), req(2)]).unwrap();
+        let (batch, popper_waited) = popper.join().unwrap();
+        let end_to_end = submitted.elapsed();
+
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "the aged single and the group must dispatch as one batch"
+        );
+        let slack = Duration::from_millis(100);
+        assert!(
+            end_to_end <= max_wait + slack,
+            "front request queued {end_to_end:?} — deadline re-anchored to the \
+             push_many group instead of staying on the aged single ({max_wait:?} budget)"
+        );
+        // The popper itself must not have waited past the anchor's budget.
+        assert!(
+            popper_waited <= max_wait + slack,
+            "popper blocked {popper_waited:?}, budget was {max_wait:?}"
+        );
+    }
+
     /// push_many is atomic: a batch lands contiguously or not at all,
     /// backpressure vs shutdown is distinguished, and a subsequent
     /// pop_batch with a matching batch_size hands the group back whole.

@@ -15,6 +15,9 @@ pub struct LatencyStats {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    /// Extreme-tail percentile — the serving SLO the load harness sweeps
+    /// (BENCH_SERVING.json reports p50/p99/p999 per offered-QPS point).
+    pub p999: f64,
     pub max: f64,
 }
 
@@ -27,6 +30,7 @@ impl LatencyStats {
             p50: percentile(xs, 50.0),
             p95: percentile(xs, 95.0),
             p99: percentile(xs, 99.0),
+            p999: percentile(xs, 99.9),
             max: xs.iter().cloned().fold(0.0, f64::max),
         }
     }
@@ -132,5 +136,94 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.host_us.count, 0);
         assert_eq!(s.host_throughput_rps, 0.0);
+    }
+
+    /// Independent nearest-rank reference: sort a copy (total order) and
+    /// index at round(p/100 · (n−1)). This is the documented spec of
+    /// `util::percentile`, restated here so a regression in either the
+    /// sort or the rank arithmetic shows up as a divergence.
+    fn ref_percentile(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(f64::total_cmp);
+        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    fn assert_pinned(xs: &[f64], ctx: &str) {
+        let s = LatencyStats::from_samples(xs);
+        for (name, got, p) in [
+            ("p50", s.p50, 50.0),
+            ("p95", s.p95, 95.0),
+            ("p99", s.p99, 99.0),
+            ("p999", s.p999, 99.9),
+        ] {
+            let want = ref_percentile(xs, p);
+            assert_eq!(got, want, "{ctx}: {name} diverged from sorted-vector reference");
+        }
+        // Percentiles are monotone in p and drawn from the inputs.
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.p999, "{ctx}: not monotone");
+        if !xs.is_empty() {
+            for (name, got) in [("p50", s.p50), ("p99", s.p99), ("p999", s.p999)] {
+                assert!(
+                    xs.contains(&got),
+                    "{ctx}: {name}={got} is not an input sample (nearest-rank must not interpolate)"
+                );
+            }
+            assert!(s.p999 <= s.max, "{ctx}: p999 above max");
+        }
+    }
+
+    /// Satellite: percentile computation pinned against a sorted-vector
+    /// reference on adversarial inputs — empty, single sample,
+    /// duplicate-heavy, out-of-order arrival.
+    #[test]
+    fn percentiles_pinned_on_adversarial_inputs() {
+        // Empty: all stats are 0 by convention.
+        let empty = LatencyStats::from_samples(&[]);
+        assert_eq!((empty.count, empty.p50, empty.p999, empty.max), (0, 0.0, 0.0, 0.0));
+        assert_pinned(&[], "empty");
+
+        // Single sample: every percentile IS the sample.
+        let one = LatencyStats::from_samples(&[42.5]);
+        assert_eq!((one.p50, one.p95, one.p99, one.p999, one.max), (42.5, 42.5, 42.5, 42.5, 42.5));
+        assert_pinned(&[42.5], "single");
+
+        // Duplicate-heavy: 980 copies of 1.0 and twenty outliers of
+        // 100.0. p50/p95 sit in the duplicate mass; p99/p999 must climb
+        // into the outlier tail (ranks 989 and 998 of 0..=999) rather
+        // than being flattened by the duplicates.
+        let mut dup = vec![1.0; 980];
+        dup.extend(std::iter::repeat(100.0).take(20));
+        assert_pinned(&dup, "duplicate-heavy");
+        let s = LatencyStats::from_samples(&dup);
+        assert_eq!((s.p50, s.p95), (1.0, 1.0));
+        assert_eq!((s.p99, s.p999), (100.0, 100.0));
+
+        // Out-of-order arrival: reversed and interleaved permutations of
+        // the same multiset must produce identical stats (percentiles are
+        // order-free).
+        let sorted: Vec<f64> = (0..1000).map(|i| i as f64 / 7.0).collect();
+        let baseline = LatencyStats::from_samples(&sorted);
+        let reversed: Vec<f64> = sorted.iter().rev().cloned().collect();
+        let interleaved: Vec<f64> = (0..500)
+            .flat_map(|i| [sorted[i], sorted[999 - i]])
+            .collect();
+        for (perm, name) in [(&reversed, "reversed"), (&interleaved, "interleaved")] {
+            assert_pinned(perm, name);
+            assert_eq!(LatencyStats::from_samples(perm), baseline, "{name}: order leaked into stats");
+        }
+
+        // Tail separation: one 1-in-500 outlier. Nearest-rank p999 over
+        // 500 samples rounds to the top rank (0.999·499 ≈ 498.5 → 499)
+        // while p99 (rank 494) stays in the bulk.
+        let mut tail: Vec<f64> = vec![1.0; 499];
+        tail.push(1000.0);
+        let s = LatencyStats::from_samples(&tail);
+        assert_eq!(s.p99, 1.0, "p99 must not see a 1-in-500 outlier");
+        assert_eq!(s.p999, 1000.0, "p999 must see a 1-in-500 outlier");
+        assert_pinned(&tail, "tail-separation");
     }
 }

@@ -9,17 +9,26 @@
 //! Each response carries three timings: host wall-clock (this machine),
 //! simulated FPGA latency (cycle model) and simulated FPGA energy, so the
 //! serving examples and benches report the paper's metrics directly.
+//!
+//! For heavier traffic the tier scales out horizontally: a
+//! [`ShardedServer`] front end owns N independent [`Server`] shards and a
+//! consistent-hash front router ([`shard::ShardRing`]) with per-shard
+//! admission control — see `sharded` for the topology and DESIGN.md §7.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod shard;
+pub mod sharded;
 pub mod worker;
 
 pub use batcher::{BatchQueue, BatcherConfig, PushError, PushManyError};
 pub use metrics::{LatencyStats, MetricsRegistry, MetricsSummary};
 pub use router::{Router, RoutingPolicy};
 pub use server::{Server, ServerConfig, SubmitBatchError, SubmitError};
+pub use shard::ShardRing;
+pub use sharded::{ShardedConfig, ShardedServer};
 
 use crate::graph::Graph;
 

@@ -90,10 +90,18 @@ impl Default for ServerConfig {
 pub struct Server {
     router: Arc<Router>,
     workers: Vec<JoinHandle<()>>,
-    responses: Receiver<Response>,
+    /// `Some` when this server owns its own response fan-in (standalone
+    /// mode). `None` in shard mode — workers then send into a sink shared
+    /// across shards, and the [`super::ShardedServer`] front end drains it.
+    responses: Option<Receiver<Response>>,
     _response_tx: Sender<Response>,
     pub metrics: Arc<MetricsRegistry>,
     next_id: u64,
+    /// Request-id step between consecutive submissions. 1 standalone;
+    /// the shard count in shard mode, where shard `i` issues the strided
+    /// sequence `i, i+S, i+2S, …` — globally unique without coordination,
+    /// and the front end recovers the owning shard as `id % S`.
+    id_stride: u64,
     outstanding: usize,
     /// The batcher's dispatch width (callers chunk batch submissions to
     /// this so each group pops as one blocked SCE dispatch).
@@ -124,6 +132,35 @@ impl Server {
         cfg: ServerConfig,
         exec_pool: Arc<crate::exec::Pool>,
     ) -> Result<Self, crate::api::NysxError> {
+        Self::validate(&cfg)?;
+        let (tx, rx) = channel();
+        Ok(Self::spawn(model, cfg, exec_pool, tx, Some(rx), 0, 1))
+    }
+
+    /// Start one shard of a [`super::ShardedServer`]: workers send their
+    /// responses into the shared `sink` instead of a private channel, and
+    /// request ids come from the strided sequence `id_base, id_base +
+    /// id_stride, …` so they are globally unique across shards without
+    /// coordination. [`Server::recv`]/[`Server::drain`] return nothing in
+    /// this mode — the front end owns the fan-in.
+    pub fn try_start_shard(
+        model: Arc<NysHdcModel>,
+        cfg: ServerConfig,
+        exec_pool: Arc<crate::exec::Pool>,
+        sink: Sender<Response>,
+        id_base: u64,
+        id_stride: u64,
+    ) -> Result<Self, crate::api::NysxError> {
+        use crate::api::NysxError;
+        Self::validate(&cfg)?;
+        if id_stride == 0 {
+            return Err(NysxError::config("shard id_stride must be > 0"));
+        }
+        Ok(Self::spawn(model, cfg, exec_pool, sink, None, id_base, id_stride))
+    }
+
+    /// The shared user-input boundary for every constructor.
+    fn validate(cfg: &ServerConfig) -> Result<(), crate::api::NysxError> {
         use crate::api::NysxError;
         if cfg.workers == 0 {
             return Err(NysxError::config("ServerConfig.workers must be > 0"));
@@ -137,7 +174,7 @@ impl Server {
         if cfg.batcher.batch_size == 0 {
             return Err(NysxError::config("BatcherConfig.batch_size must be > 0"));
         }
-        Ok(Self::spawn(model, cfg, exec_pool))
+        Ok(())
     }
 
     /// [`Self::try_start`] for infallible configs; panics on invalid
@@ -150,18 +187,22 @@ impl Server {
         }
     }
 
-    /// Spawn the (already validated) worker pool.
+    /// Spawn the (already validated) worker pool, wiring responses into
+    /// `tx` (private channel standalone, shared sink in shard mode).
     fn spawn(
         model: Arc<NysHdcModel>,
         cfg: ServerConfig,
         exec_pool: Arc<crate::exec::Pool>,
+        tx: Sender<Response>,
+        rx: Option<Receiver<Response>>,
+        id_base: u64,
+        id_stride: u64,
     ) -> Self {
         let queues: Vec<Arc<BatchQueue>> = (0..cfg.workers)
             .map(|_| Arc::new(BatchQueue::new(cfg.batcher)))
             .collect();
         let router = Arc::new(Router::new(queues.clone(), cfg.routing));
         let metrics = Arc::new(MetricsRegistry::new(cfg.workers));
-        let (tx, rx) = channel();
         let workers = (0..cfg.workers)
             .map(|i| {
                 let model = model.clone();
@@ -182,7 +223,8 @@ impl Server {
             responses: rx,
             _response_tx: tx,
             metrics,
-            next_id: 0,
+            next_id: id_base,
+            id_stride,
             outstanding: 0,
             batch_size: cfg.batcher.batch_size,
             queue_capacity: cfg.batcher.capacity,
@@ -215,7 +257,7 @@ impl Server {
         };
         match self.router.route(req) {
             Ok(_worker) => {
-                self.next_id += 1;
+                self.next_id += self.id_stride;
                 self.outstanding += 1;
                 Ok(id)
             }
@@ -243,15 +285,17 @@ impl Server {
             .into_iter()
             .enumerate()
             .map(|(i, graph)| Request {
-                id: self.next_id + i as u64,
+                id: self.next_id + i as u64 * self.id_stride,
                 graph,
                 submitted,
             })
             .collect();
         match self.router.route_batch(reqs) {
             Ok(_worker) => {
-                let ids: Vec<u64> = (self.next_id..self.next_id + count).collect();
-                self.next_id += count;
+                let ids: Vec<u64> = (0..count)
+                    .map(|k| self.next_id + k * self.id_stride)
+                    .collect();
+                self.next_id += count * self.id_stride;
                 self.outstanding += ids.len();
                 Ok(ids)
             }
@@ -266,12 +310,15 @@ impl Server {
         }
     }
 
-    /// Blocking receive of one response (records metrics).
+    /// Blocking receive of one response (records metrics). Always `None`
+    /// in shard mode — the [`super::ShardedServer`] front end owns the
+    /// shared fan-in and records per-shard metrics itself.
     pub fn recv(&mut self) -> Option<Response> {
         if self.outstanding == 0 {
             return None;
         }
-        match self.responses.recv() {
+        let responses = self.responses.as_ref()?;
+        match responses.recv() {
             Ok(resp) => {
                 self.outstanding -= 1;
                 self.metrics.record(
@@ -302,11 +349,30 @@ impl Server {
     /// Close queues and join workers.
     pub fn shutdown(mut self) -> Vec<Response> {
         let rest = self.drain();
+        self.close_and_join();
+        rest
+    }
+
+    /// Close queues and join workers WITHOUT draining responses — the
+    /// shard-mode teardown, where the front end owns the response
+    /// receiver and has already drained (graceful) or will account for
+    /// the in-flight responses itself (fault injection). Closing lets
+    /// workers finish every request already queued before they exit, so
+    /// nothing in flight is lost; the finished responses are buffered in
+    /// the shared channel for the front end to collect.
+    pub fn close_and_join(&mut self) {
         self.router.close_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        rest
+    }
+
+    /// Requests submitted to this server that it has not seen answered.
+    /// In shard mode the front end does the answering, so this is the
+    /// count of ids this shard has issued (the front end keeps the real
+    /// outstanding books).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
     }
 }
 

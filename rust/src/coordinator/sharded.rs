@@ -1,0 +1,549 @@
+//! Multi-shard serving front end: N independent [`Server`] shards (each
+//! with its own worker pool, engines and `nysx::exec` pool; prototype
+//! memory replicated via the shared `Arc<NysHdcModel>`), a consistent-hash
+//! front router ([`super::shard::ShardRing`]) mapping each query graph's
+//! structural fingerprint to a shard, per-shard admission control that
+//! sheds load with typed `Backpressure`, and graceful drain/shutdown that
+//! completes every in-flight batch before workers exit.
+//!
+//! Determinism: sharding only changes WHERE a graph is classified, never
+//! the arithmetic — every shard replicates the same model, so results are
+//! bit-identical across shard counts (the differential test in
+//! `tests/sharded_serving.rs` pins {1,2,4}).
+//!
+//! Response plumbing: all shards' workers send into ONE shared mpsc sink.
+//! Shard `i` issues the strided request-id sequence `i, i+S, i+2S, …`
+//! (`S` = shard count at start), so ids are globally unique without
+//! coordination and the front end recovers the owning shard of any
+//! response as `id % S` — no per-response shard tags, no forwarder
+//! threads.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use super::metrics::MetricsRegistry;
+use super::server::{Server, ServerConfig, SubmitBatchError, SubmitError};
+use super::shard::{ShardRing, MAX_SHARDS};
+use super::Response;
+use crate::graph::Graph;
+use crate::model::NysHdcModel;
+
+/// Sharded front-end configuration.
+#[derive(Debug, Clone)]
+pub struct ShardedConfig {
+    /// Number of shards (independent `Server` instances).
+    pub shards: usize,
+    /// Per-shard cap on in-flight requests. Submissions beyond it are
+    /// shed with typed `Backpressure` BEFORE touching the shard's queues,
+    /// bounding per-shard memory and queueing delay under overload.
+    pub max_outstanding: usize,
+    /// Configuration replicated to every shard.
+    pub per_shard: ServerConfig,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            max_outstanding: 1024,
+            per_shard: ServerConfig::default(),
+        }
+    }
+}
+
+/// A running sharded serving tier. See the module docs for the topology.
+pub struct ShardedServer {
+    /// Shard slot `i` holds shard `i`; `None` once stopped.
+    slots: Vec<Option<Server>>,
+    ring: ShardRing,
+    responses: Receiver<Response>,
+    _response_tx: Sender<Response>,
+    /// Per-shard metrics registries, cloned out of the shards at start so
+    /// they outlive [`ShardedServer::stop_shard`].
+    metrics: Vec<Arc<MetricsRegistry>>,
+    /// Per-shard in-flight counts (the admission-control books).
+    outstanding: Vec<usize>,
+    total_outstanding: usize,
+    max_outstanding: usize,
+    /// Request-id stride == shard count at start; `id % stride` is the
+    /// owning shard of any response.
+    stride: u64,
+    batch_size: usize,
+    queue_capacity: usize,
+}
+
+impl ShardedServer {
+    /// Validate and start the tier; every shard gets its OWN exec pool
+    /// sized like the global one, so shards never serialize on a shared
+    /// work-stealing arena.
+    pub fn try_start(
+        model: Arc<NysHdcModel>,
+        cfg: ShardedConfig,
+    ) -> Result<Self, crate::api::NysxError> {
+        let threads = crate::exec::global().threads();
+        let pools = (0..cfg.shards)
+            .map(|_| Arc::new(crate::exec::Pool::new(threads)))
+            .collect();
+        Self::try_start_with_pools(model, cfg, pools)
+    }
+
+    /// [`Self::try_start`] with explicit per-shard exec pools (one per
+    /// shard, in shard order) — how the api facade propagates
+    /// `Pipeline::threads(n)` sizing, and how tests bound thread counts.
+    pub fn try_start_with_pools(
+        model: Arc<NysHdcModel>,
+        cfg: ShardedConfig,
+        pools: Vec<Arc<crate::exec::Pool>>,
+    ) -> Result<Self, crate::api::NysxError> {
+        use crate::api::NysxError;
+        if cfg.shards == 0 {
+            return Err(NysxError::config("ShardedConfig.shards must be > 0"));
+        }
+        if cfg.shards > MAX_SHARDS {
+            return Err(NysxError::Config(format!(
+                "ShardedConfig.shards = {} exceeds the cap of {MAX_SHARDS}",
+                cfg.shards
+            )));
+        }
+        if cfg.max_outstanding == 0 {
+            return Err(NysxError::config(
+                "ShardedConfig.max_outstanding must be > 0 (0 would reject every submit)",
+            ));
+        }
+        if pools.len() != cfg.shards {
+            return Err(NysxError::Config(format!(
+                "{} exec pools for {} shards",
+                pools.len(),
+                cfg.shards
+            )));
+        }
+        let stride = cfg.shards as u64;
+        let (tx, rx) = channel();
+        let mut slots = Vec::with_capacity(cfg.shards);
+        let mut metrics = Vec::with_capacity(cfg.shards);
+        for (i, pool) in pools.into_iter().enumerate() {
+            let shard = Server::try_start_shard(
+                model.clone(),
+                cfg.per_shard.clone(),
+                pool,
+                tx.clone(),
+                i as u64,
+                stride,
+            )?;
+            metrics.push(shard.metrics.clone());
+            slots.push(Some(shard));
+        }
+        Ok(Self {
+            slots,
+            ring: ShardRing::new(cfg.shards),
+            responses: rx,
+            _response_tx: tx,
+            metrics,
+            outstanding: vec![0; cfg.shards],
+            total_outstanding: 0,
+            max_outstanding: cfg.max_outstanding,
+            stride,
+            batch_size: cfg.per_shard.batcher.batch_size,
+            queue_capacity: cfg.per_shard.batcher.capacity,
+        })
+    }
+
+    /// Total shard slots (including stopped ones).
+    pub fn num_shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Shards still accepting work.
+    pub fn live_shards(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// The per-shard dispatch batch width (mirrors [`Server::batch_size`]).
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Per-worker queue capacity within each shard.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    /// The per-shard admission cap.
+    pub fn max_outstanding(&self) -> usize {
+        self.max_outstanding
+    }
+
+    /// Requests accepted and not yet collected via `recv`.
+    pub fn outstanding(&self) -> usize {
+        self.total_outstanding
+    }
+
+    /// Per-shard metrics registry (valid even after `stop_shard`).
+    pub fn shard_metrics(&self, shard: usize) -> &Arc<MetricsRegistry> {
+        &self.metrics[shard]
+    }
+
+    /// The shard the front router would pick for `graph` right now.
+    pub fn route_of(&self, graph: &Graph) -> Option<usize> {
+        if self.ring.is_empty() {
+            None
+        } else {
+            Some(self.ring.shard_for(graph.fingerprint()))
+        }
+    }
+
+    /// Submit one query graph. The front router hashes the graph's
+    /// structural fingerprint onto the shard ring; admission control
+    /// sheds with `Backpressure` if that shard is at its in-flight cap; a
+    /// shard found closed (stopped underneath us) is dropped from the
+    /// ring and the submit reroutes consistently. `Closed` only when no
+    /// live shard remains.
+    #[allow(clippy::result_large_err)]
+    pub fn submit(&mut self, mut graph: Graph) -> Result<u64, SubmitError> {
+        loop {
+            if self.ring.is_empty() {
+                return Err(SubmitError::Closed(graph));
+            }
+            let shard = self.ring.shard_for(graph.fingerprint());
+            if self.outstanding[shard] >= self.max_outstanding {
+                return Err(SubmitError::Backpressure(graph));
+            }
+            let server = match self.slots[shard].as_mut() {
+                Some(s) => s,
+                None => {
+                    // Defensive: a stopped shard should already be off
+                    // the ring; drop it and reroute.
+                    self.ring.remove(shard as u32);
+                    continue;
+                }
+            };
+            match server.submit(graph) {
+                Ok(id) => {
+                    self.outstanding[shard] += 1;
+                    self.total_outstanding += 1;
+                    return Ok(id);
+                }
+                Err(SubmitError::Backpressure(g)) => {
+                    return Err(SubmitError::Backpressure(g));
+                }
+                Err(SubmitError::Closed(g)) => {
+                    self.ring.remove(shard as u32);
+                    graph = g;
+                }
+            }
+        }
+    }
+
+    /// Submit a batch as one unit, routed by the FIRST graph's
+    /// fingerprint (a batch is one dispatch group; splitting it across
+    /// shards would defeat batch-major execution). All-or-nothing like
+    /// [`Server::submit_batch`]; admission control counts the whole
+    /// batch against the shard's in-flight cap.
+    #[allow(clippy::result_large_err)]
+    pub fn submit_batch(&mut self, mut graphs: Vec<Graph>) -> Result<Vec<u64>, SubmitBatchError> {
+        if graphs.is_empty() {
+            return Ok(Vec::new());
+        }
+        loop {
+            if self.ring.is_empty() {
+                return Err(SubmitBatchError::Closed(graphs));
+            }
+            let shard = self.ring.shard_for(graphs[0].fingerprint());
+            if self.outstanding[shard] + graphs.len() > self.max_outstanding {
+                return Err(SubmitBatchError::Backpressure(graphs));
+            }
+            let server = match self.slots[shard].as_mut() {
+                Some(s) => s,
+                None => {
+                    self.ring.remove(shard as u32);
+                    continue;
+                }
+            };
+            match server.submit_batch(graphs) {
+                Ok(ids) => {
+                    self.outstanding[shard] += ids.len();
+                    self.total_outstanding += ids.len();
+                    return Ok(ids);
+                }
+                Err(SubmitBatchError::Backpressure(gs)) => {
+                    return Err(SubmitBatchError::Backpressure(gs));
+                }
+                Err(SubmitBatchError::Closed(gs)) => {
+                    self.ring.remove(shard as u32);
+                    graphs = gs;
+                }
+            }
+        }
+    }
+
+    fn account(&mut self, resp: Response) -> Response {
+        let shard = (resp.id % self.stride) as usize;
+        self.outstanding[shard] -= 1;
+        self.total_outstanding -= 1;
+        self.metrics[shard].record(
+            resp.worker,
+            resp.host_us,
+            resp.queue_us,
+            resp.fpga_ms,
+            resp.fpga_mj,
+        );
+        resp
+    }
+
+    /// Blocking receive of one response from any shard (records that
+    /// shard's metrics). `None` once nothing is outstanding.
+    pub fn recv(&mut self) -> Option<Response> {
+        if self.total_outstanding == 0 {
+            return None;
+        }
+        match self.responses.recv() {
+            Ok(resp) => Some(self.account(resp)),
+            Err(_) => None,
+        }
+    }
+
+    /// Non-blocking receive — the open-loop load generator polls this
+    /// between arrivals so response collection never stalls the arrival
+    /// clock.
+    pub fn try_recv(&mut self) -> Option<Response> {
+        if self.total_outstanding == 0 {
+            return None;
+        }
+        match self.responses.try_recv() {
+            Ok(resp) => Some(self.account(resp)),
+            Err(_) => None,
+        }
+    }
+
+    /// Drain every outstanding response. Terminates even if shards were
+    /// stopped mid-load: closing a shard's queues lets its workers finish
+    /// all queued requests before exiting, so every accepted request has
+    /// a response either buffered or on its way.
+    pub fn drain(&mut self) -> Vec<Response> {
+        let mut out = Vec::with_capacity(self.total_outstanding);
+        while self.total_outstanding > 0 {
+            match self.recv() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Fault injection / planned topology change: tear down one shard
+    /// mid-load. Its queued work still completes (workers drain queues on
+    /// close) and stays collectable via `recv`; subsequent submits
+    /// consistently reroute around the lost shard (only ~1/N of keys
+    /// move). No-op if already stopped or out of range.
+    pub fn stop_shard(&mut self, shard: usize) {
+        if let Some(mut server) = self.slots.get_mut(shard).and_then(Option::take) {
+            self.ring.remove(shard as u32);
+            server.close_and_join();
+        }
+    }
+
+    /// Graceful shutdown: drain every in-flight request to completion,
+    /// THEN close queues and join workers shard by shard. Returns the
+    /// drained responses — zero loss by construction.
+    pub fn shutdown(mut self) -> Vec<Response> {
+        let rest = self.drain();
+        for slot in self.slots.iter_mut() {
+            if let Some(server) = slot.as_mut() {
+                server.close_and_join();
+            }
+        }
+        rest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::graph::tudataset::spec_by_name;
+    use crate::model::train::train;
+    use crate::model::ModelConfig;
+
+    fn small_model() -> (crate::graph::GraphDataset, Arc<NysHdcModel>) {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(81, 0.2);
+        let model = Arc::new(train(
+            &ds,
+            &ModelConfig {
+                hops: 2,
+                hv_dim: 500,
+                num_landmarks: 8,
+                ..ModelConfig::default()
+            },
+        ));
+        (ds, model)
+    }
+
+    fn tiny_pools(n: usize) -> Vec<Arc<crate::exec::Pool>> {
+        (0..n).map(|_| Arc::new(crate::exec::Pool::new(1))).collect()
+    }
+
+    #[test]
+    fn try_start_rejects_bad_configs() {
+        let (_, model) = small_model();
+        for cfg in [
+            ShardedConfig {
+                shards: 0,
+                ..Default::default()
+            },
+            ShardedConfig {
+                shards: MAX_SHARDS + 1,
+                ..Default::default()
+            },
+            ShardedConfig {
+                max_outstanding: 0,
+                ..Default::default()
+            },
+        ] {
+            let shards = cfg.shards;
+            let err = ShardedServer::try_start_with_pools(model.clone(), cfg, tiny_pools(shards))
+                .err()
+                .expect("bad config must be rejected");
+            assert!(matches!(err, crate::api::NysxError::Config(_)), "{err}");
+        }
+        // Pool-count mismatch is a config error too.
+        let err = ShardedServer::try_start_with_pools(
+            model.clone(),
+            ShardedConfig {
+                shards: 2,
+                ..Default::default()
+            },
+            tiny_pools(3),
+        )
+        .err()
+        .expect("pool mismatch must be rejected");
+        assert!(matches!(err, crate::api::NysxError::Config(_)), "{err}");
+    }
+
+    /// Admission control sheds with retryable Backpressure at the
+    /// per-shard in-flight cap, before the request touches a queue.
+    #[test]
+    fn admission_cap_sheds_with_backpressure() {
+        let (ds, model) = small_model();
+        let mut tier = ShardedServer::try_start_with_pools(
+            model,
+            ShardedConfig {
+                shards: 1,
+                max_outstanding: 2,
+                per_shard: ServerConfig {
+                    workers: 1,
+                    batcher: BatcherConfig {
+                        // In-flight bookkeeping is front-end-side (a request
+                        // counts until recv), so the cap trips regardless of
+                        // how fast the worker drains the queue.
+                        batch_size: 8,
+                        max_wait: std::time::Duration::from_millis(10),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            },
+            tiny_pools(1),
+        )
+        .unwrap();
+        let g = ds.test[0].0.clone();
+        tier.submit(g.clone()).expect("below cap");
+        tier.submit(g.clone()).expect("at cap boundary");
+        match tier.submit(g.clone()) {
+            Err(e @ SubmitError::Backpressure(_)) => assert!(!e.is_closed()),
+            other => panic!("want Backpressure at the admission cap, got {other:?}"),
+        }
+        // A batch that would cross the cap is shed whole.
+        match tier.submit_batch(vec![g.clone(), g.clone()]) {
+            Err(e @ SubmitBatchError::Backpressure(_)) => {
+                assert!(!e.is_closed());
+                assert_eq!(e.into_graphs().len(), 2);
+            }
+            other => panic!("want batch Backpressure, got {:?}", other.map(|v| v.len())),
+        }
+        // Draining frees admission slots; the retry then succeeds.
+        let freed = tier.drain();
+        assert_eq!(freed.len(), 2, "both in-flight requests must complete");
+        tier.submit(g).expect("cap freed after drain");
+        assert_eq!(tier.shutdown().len(), 1);
+    }
+
+    /// Stopping every shard makes the tier terminally Closed, with the
+    /// graph handed back intact.
+    #[test]
+    fn all_shards_stopped_is_closed() {
+        let (ds, model) = small_model();
+        let mut tier = ShardedServer::try_start_with_pools(
+            model,
+            ShardedConfig {
+                shards: 2,
+                ..Default::default()
+            },
+            tiny_pools(2),
+        )
+        .unwrap();
+        assert_eq!(tier.num_shards(), 2);
+        tier.stop_shard(0);
+        tier.stop_shard(0); // idempotent
+        assert_eq!(tier.live_shards(), 1);
+        tier.stop_shard(1);
+        assert_eq!(tier.live_shards(), 0);
+        let g = ds.test[0].0.clone();
+        match tier.submit(g.clone()) {
+            Err(e @ SubmitError::Closed(_)) => {
+                assert!(e.is_closed());
+                assert_eq!(e.into_graph().num_nodes(), g.num_nodes());
+            }
+            other => panic!("want Closed with no live shards, got {other:?}"),
+        }
+        match tier.submit_batch(vec![g]) {
+            Err(e @ SubmitBatchError::Closed(_)) => assert!(e.is_closed()),
+            other => panic!("want batch Closed, got {:?}", other.map(|v| v.len())),
+        }
+        assert!(tier.shutdown().is_empty());
+    }
+
+    /// The front router is deterministic and stable: the same graph
+    /// always routes to the same shard, and `route_of` agrees with where
+    /// `submit` actually sends it (via the response's id residue).
+    #[test]
+    fn routing_is_deterministic_and_observable() {
+        let (ds, model) = small_model();
+        let mut tier = ShardedServer::try_start_with_pools(
+            model,
+            ShardedConfig {
+                shards: 4,
+                per_shard: ServerConfig {
+                    workers: 1,
+                    batcher: BatcherConfig {
+                        max_wait: std::time::Duration::from_micros(50),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            tiny_pools(4),
+        )
+        .unwrap();
+        let mut expected = std::collections::HashMap::new();
+        for (g, _) in ds.test.iter().take(12) {
+            let want = tier.route_of(g).unwrap();
+            assert_eq!(tier.route_of(g), Some(want), "routing must be stable");
+            let id = tier.submit(g.clone()).unwrap();
+            assert_eq!(
+                (id % 4) as usize,
+                want,
+                "submit landed on a different shard than route_of"
+            );
+            expected.insert(id, want);
+        }
+        for resp in tier.shutdown() {
+            assert_eq!(
+                Some(&((resp.id % 4) as usize)),
+                expected.get(&resp.id),
+                "response id residue must identify the owning shard"
+            );
+        }
+    }
+}

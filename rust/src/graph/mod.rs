@@ -71,6 +71,39 @@ impl Graph {
         let n = self.num_nodes();
         (n * n * b_a_bits + n * self.feature_dim() * b_f_bits) / 8
     }
+
+    /// Structural fingerprint: a 64-bit FNV-1a hash over the graph's
+    /// shape, topology (CSR row pointers + column indices) and nonzero
+    /// feature entries. Equal graphs hash equal on every platform (pure
+    /// integer arithmetic; floats enter via `to_bits`), which is what the
+    /// sharded front end needs for consistent request routing — the same
+    /// graph always lands on the same shard regardless of submit order.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        #[inline]
+        fn fnv1a(h: u64, x: u64) -> u64 {
+            (h ^ x).wrapping_mul(PRIME)
+        }
+        let mut h = fnv1a(OFFSET, self.num_nodes() as u64);
+        h = fnv1a(h, self.feature_dim() as u64);
+        for &p in &self.adj.row_ptr {
+            h = fnv1a(h, p as u64);
+        }
+        for &c in &self.adj.col_idx {
+            h = fnv1a(h, c as u64);
+        }
+        // One-hot features are sparse; hash (flat index, bits) of the
+        // nonzeros so dimension padding with zeros still distinguishes
+        // via the feature_dim fold above.
+        for (i, &x) in self.features.data.iter().enumerate() {
+            if x != 0.0 {
+                h = fnv1a(h, i as u64);
+                h = fnv1a(h, x.to_bits());
+            }
+        }
+        h
+    }
 }
 
 /// A labeled train/test split for graph classification.
@@ -142,6 +175,19 @@ mod tests {
         assert_eq!(g.features[(1, 0)], 1.0);
         let row_sums: Vec<f64> = (0..3).map(|i| g.features.row(i).iter().sum()).collect();
         assert_eq!(row_sums, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_structure() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2)], &[0, 1, 1, 0], 2);
+        assert_eq!(g.fingerprint(), g.clone().fingerprint(), "clone must hash equal");
+        let extra_edge = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)], &[0, 1, 1, 0], 2);
+        assert_ne!(g.fingerprint(), extra_edge.fingerprint());
+        let relabel = Graph::from_edges(4, &[(0, 1), (1, 2)], &[1, 1, 1, 0], 2);
+        assert_ne!(g.fingerprint(), relabel.fingerprint());
+        // Same labels in a wider one-hot space is a different input.
+        let wider = Graph::from_edges(4, &[(0, 1), (1, 2)], &[0, 1, 1, 0], 3);
+        assert_ne!(g.fingerprint(), wider.fingerprint());
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! Subcommands:
 //!   train   --dataset MUTAG [--dpp] [--out model.nysx] [--scale 1.0]
 //!   infer   --model model.nysx --dataset MUTAG [--count 32]
-//!   serve   --dataset MUTAG [--workers 4] [--requests 500] [--batch 1] [--dpp]
+//!   serve   --dataset MUTAG [--workers 4] [--requests 500] [--batch 1]
+//!           [--shards N] [--dpp]            # N > 1: sharded tier
 //!   eval    [--scale 1.0] [--ablation]      # all tables & figures
+//!   bench serving [--shards 1,2,4] [--qps 100,300,1000] [--out BENCH_SERVING.json]
 //!   roofline
 //!
 //! Every subcommand accepts `--threads N` to size the `nysx::exec`
@@ -50,6 +52,7 @@ fn main() {
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
+        "bench" => cmd_bench(&args),
         "roofline" => {
             println!("{}", render_roofline());
             Ok(())
@@ -57,7 +60,7 @@ fn main() {
         _ => {
             println!(
                 "nysx — Nyström-HDC graph classification (NysX reproduction)\n\n\
-                 USAGE: nysx <train|infer|serve|eval|roofline> [flags]\n\
+                 USAGE: nysx <train|infer|serve|eval|bench|roofline> [flags]\n\
                  common flags: --threads N (exec pool size; default NYSX_THREADS or all cores)\n\
                  datasets: {}",
                 TU_SPECS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
@@ -185,18 +188,64 @@ fn cmd_serve(args: &Args) -> Result<(), NysxError> {
     // runs them as ONE blocked C×W SCE pass (1 = the paper's real-time
     // edge mode; >1 amortizes prototype traffic across the batch).
     let batch = args.try_usize("batch", 1).map_err(flag_err)?.max(1);
+    // --shards N > 1 serves through the sharded tier (consistent-hash
+    // front router + per-shard admission control); 1 is the classic
+    // single-server coordinator. Predictions are identical either way.
+    let shards = args.try_usize("shards", 1).map_err(flag_err)?;
     eprintln!("training model for serving...");
     let trained = pipeline_from_args(args)?.train()?;
-    let mut server = trained.serve(ServerConfig {
+    let server_cfg = ServerConfig {
         workers,
         batcher: BatcherConfig {
             batch_size: batch,
             ..Default::default()
         },
         ..Default::default()
-    })?;
+    };
     let ds = trained.dataset();
     let mut rng = nysx::util::rng::Xoshiro256::seed_from_u64(7);
+
+    if shards > 1 {
+        let mut tier = trained.serve_sharded(nysx::coordinator::ShardedConfig {
+            shards,
+            max_outstanding: args.try_usize("max-outstanding", 1024).map_err(flag_err)?,
+            per_shard: server_cfg,
+        })?;
+        for _ in 0..requests {
+            let (g, _) = &ds.test[rng.gen_range(ds.test.len())];
+            let mut graph = g.clone();
+            loop {
+                match tier.submit(graph) {
+                    Ok(_) => break,
+                    Err(SubmitError::Backpressure(g)) => {
+                        graph = g;
+                        tier.recv(); // free a slot, then retry
+                    }
+                    Err(e @ SubmitError::Closed(_)) => return Err(e.into()),
+                }
+            }
+        }
+        tier.drain();
+        println!(
+            "served {requests} requests across {shards} shards ({workers} workers each, batch size {batch})"
+        );
+        for shard in 0..shards {
+            let s = tier.shard_metrics(shard);
+            println!(
+                "  shard {shard}: {} reqs, host p50={:.0}µs p99={:.0}µs p999={:.0}µs, queue p99={:.0}µs, {:.0} req/s",
+                s.requests,
+                s.host_us.p50,
+                s.host_us.p99,
+                s.host_us.p999,
+                s.queue_us.p99,
+                s.host_throughput_rps,
+            );
+        }
+        tier.shutdown();
+        return Ok(());
+    }
+
+    let mut server = trained.serve(server_cfg)?;
     for _ in 0..requests {
         let (g, _) = &ds.test[rng.gen_range(ds.test.len())];
         let mut graph = g.clone();
@@ -229,6 +278,102 @@ fn cmd_serve(args: &Args) -> Result<(), NysxError> {
         s.per_worker
     );
     server.shutdown();
+    Ok(())
+}
+
+/// `bench <target>` — currently only the serving load harness.
+fn cmd_bench(args: &Args) -> Result<(), NysxError> {
+    match args.positional().get(1).map(|s| s.as_str()) {
+        Some("serving") => cmd_bench_serving(args),
+        other => Err(NysxError::Config(format!(
+            "unknown bench target {:?}; available: serving",
+            other.unwrap_or("<none>")
+        ))),
+    }
+}
+
+/// Parse a comma-separated flag value ("1,2,4") into numbers.
+fn parse_list<T: std::str::FromStr>(s: &str, flag: &str) -> Result<Vec<T>, NysxError> {
+    s.split(',')
+        .map(|item| {
+            item.trim().parse::<T>().map_err(|_| {
+                NysxError::Config(format!(
+                    "--{flag} must be a comma-separated list of numbers, got {s:?}"
+                ))
+            })
+        })
+        .collect()
+}
+
+/// The serving load harness: closed- and open-loop sweeps per shard
+/// count, artifact to `--out` (default BENCH_SERVING.json). Smoke mode
+/// (`NYSX_BENCH_SMOKE=1`) shrinks every knob's default for CI.
+fn cmd_bench_serving(args: &Args) -> Result<(), NysxError> {
+    use nysx::bench::serving::{self, ServingBenchConfig};
+    let mut cfg = ServingBenchConfig::from_env();
+    if let Some(name) = args.get("dataset") {
+        cfg.dataset = name.to_string();
+    }
+    cfg.scale = args.try_f64("scale", cfg.scale).map_err(flag_err)?;
+    cfg.seed = args.try_u64("seed", cfg.seed).map_err(flag_err)?;
+    cfg.hv_dim = args.try_usize("d", cfg.hv_dim).map_err(flag_err)?;
+    if let Some(list) = args.get("shards") {
+        cfg.shard_counts = parse_list(list, "shards")?;
+    }
+    if let Some(list) = args.get("qps") {
+        cfg.qps_points = parse_list(list, "qps")?;
+    }
+    cfg.requests_per_point = args
+        .try_usize("requests", cfg.requests_per_point)
+        .map_err(flag_err)?;
+    cfg.closed_loop_requests = args
+        .try_usize("closed-requests", cfg.closed_loop_requests)
+        .map_err(flag_err)?;
+    cfg.closed_loop_clients = args
+        .try_usize("clients", cfg.closed_loop_clients)
+        .map_err(flag_err)?;
+    cfg.workers_per_shard = args
+        .try_usize("workers", cfg.workers_per_shard)
+        .map_err(flag_err)?;
+    cfg.batch_size = args.try_usize("batch", cfg.batch_size).map_err(flag_err)?.max(1);
+    cfg.max_outstanding = args
+        .try_usize("max-outstanding", cfg.max_outstanding)
+        .map_err(flag_err)?;
+    let out = args.get_or("out", "BENCH_SERVING.json").to_string();
+
+    eprintln!(
+        "serving load harness on {}: shards {:?}, qps {:?}{}",
+        cfg.dataset,
+        cfg.shard_counts,
+        cfg.qps_points,
+        if serving::smoke_mode() { " (smoke)" } else { "" }
+    );
+    let report = serving::run(&cfg)?;
+    for run in &report.runs {
+        let c = &run.closed_loop;
+        println!(
+            "shards={}: closed loop ({} clients) {:.0} req/s, latency p50={:.2}ms p99={:.2}ms p999={:.2}ms",
+            run.shards,
+            cfg.closed_loop_clients,
+            c.achieved_qps,
+            c.latency_ms.p50,
+            c.latency_ms.p99,
+            c.latency_ms.p999,
+        );
+        for (qps, st) in &run.open_loop {
+            println!(
+                "  offered {qps:.0} qps -> achieved {:.0} ({} answered, {} shed), p50={:.2}ms p99={:.2}ms p999={:.2}ms",
+                st.achieved_qps,
+                st.answered,
+                st.rejected,
+                st.latency_ms.p50,
+                st.latency_ms.p99,
+                st.latency_ms.p999,
+            );
+        }
+    }
+    report.write(Path::new(&out))?;
+    println!("wrote {out}");
     Ok(())
 }
 

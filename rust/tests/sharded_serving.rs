@@ -1,0 +1,254 @@
+//! Integration suite for the sharded serving tier: the consistent-hash
+//! front router plus N independent coordinators must be *invisible* to
+//! correctness. Two properties anchor it:
+//!
+//! 1. **Bit-identical classification** across shard counts {1, 2, 4}
+//!    and against the in-process packed engine — shard count, like
+//!    thread count, is a pure throughput knob.
+//! 2. **Zero loss under faults**: stopping a shard mid-load reroutes
+//!    new traffic to survivors, every already-accepted request is still
+//!    answered (the drained shard finishes its queue before joining),
+//!    and the books always balance: sent == answered + rejected, with
+//!    rejections only ever surfacing as typed [`SubmitError`] variants.
+
+use std::collections::{HashMap, HashSet};
+use std::time::Duration;
+
+use nysx::api::{Classifier, NysxError, Pipeline, TrainedPipeline};
+use nysx::coordinator::{BatcherConfig, ServerConfig, ShardedConfig, SubmitError};
+use nysx::graph::Graph;
+
+/// A small-but-real pipeline: scaled-down MUTAG, word-boundary-straddling
+/// hv dim, single exec thread so the suite stays fast under `cargo test`.
+fn trained() -> TrainedPipeline {
+    Pipeline::for_dataset("MUTAG")
+        .expect("dataset spec")
+        .scale(0.25)
+        .seed(42)
+        .hv_dim(1000)
+        .threads(1)
+        .train()
+        .expect("training")
+}
+
+fn tier_config(shards: usize, max_outstanding: usize, batch_size: usize) -> ShardedConfig {
+    ShardedConfig {
+        shards,
+        max_outstanding,
+        per_shard: ServerConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                batch_size,
+                // Short deadline: tests drain often, and nothing here
+                // depends on batches actually filling.
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    }
+}
+
+/// Property 1: the served predictions at shard counts {1, 2, 4} are all
+/// bit-identical to the in-process packed engine, single AND batch path.
+#[test]
+fn classifications_bit_identical_across_shard_counts() {
+    let mut trained = trained();
+    let graphs: Vec<Graph> = trained
+        .dataset()
+        .test
+        .iter()
+        .map(|(g, _)| g.clone())
+        .collect();
+    let refs: Vec<&Graph> = graphs.iter().collect();
+    let want: Vec<usize> = trained
+        .infer_batch(&refs)
+        .into_iter()
+        .map(|r| r.predicted)
+        .collect();
+    assert!(!want.is_empty(), "empty test split would vacuously pass");
+
+    for shards in [1usize, 2, 4] {
+        let mut tier = trained
+            .serve_sharded(tier_config(shards, 256, 4))
+            .expect("tier start");
+        assert_eq!(tier.num_shards(), shards);
+        let got = tier.classify_batch(&refs).expect("served batch");
+        assert_eq!(
+            got, want,
+            "predictions diverged from in-process engine at {shards} shards"
+        );
+        // Single-request path rides the same router; spot-check a prefix.
+        for (&g, &w) in refs.iter().zip(&want).take(16) {
+            assert_eq!(tier.classify(g).expect("served single"), w);
+        }
+        // Every request answered: replicated prototypes mean any shard
+        // may serve any graph, but none may be silently dropped.
+        let served: usize = (0..shards).map(|s| tier.shard_metrics(s).requests).sum();
+        assert!(
+            served >= refs.len(),
+            "shards answered {served} < {} submitted",
+            refs.len()
+        );
+        tier.shutdown();
+    }
+}
+
+/// Property 2: stop one shard in the middle of a replay. New traffic
+/// reroutes to the survivors, everything accepted before the stop is
+/// still answered, predictions stay bit-identical, and the accounting
+/// identity sent == answered + rejected holds with rejected == 0 (no
+/// request in this replay is ever shed — the cap is generous).
+#[test]
+fn stopping_a_shard_mid_load_loses_nothing() {
+    let mut trained = trained();
+    let ds_len = trained.dataset().test.len();
+    let plan: Vec<usize> = (0..80).map(|i| i % ds_len).collect();
+    let expected: Vec<usize> = {
+        let graphs: Vec<Graph> = trained
+            .dataset()
+            .test
+            .iter()
+            .map(|(g, _)| g.clone())
+            .collect();
+        let refs: Vec<&Graph> = plan.iter().map(|&i| &graphs[i]).collect();
+        trained
+            .infer_batch(&refs)
+            .into_iter()
+            .map(|r| r.predicted)
+            .collect()
+    };
+
+    let mut tier = trained
+        .serve_sharded(tier_config(3, 256, 2))
+        .expect("tier start");
+    let mut want_of: HashMap<u64, usize> = HashMap::new();
+    let mut sent = 0usize;
+    let mut answered = Vec::new();
+    for (k, (&idx, &want)) in plan.iter().zip(&expected).enumerate() {
+        if k == plan.len() / 2 {
+            tier.stop_shard(1);
+            assert_eq!(tier.live_shards(), 2, "one shard should be gone");
+            // Idempotent: stopping again (or an already-dead slot) is a
+            // quiet no-op, not a panic or a double-join.
+            tier.stop_shard(1);
+            assert_eq!(tier.live_shards(), 2);
+        }
+        let mut graph = trained.dataset().test[idx].0.clone();
+        loop {
+            match tier.submit(graph) {
+                Ok(id) => {
+                    want_of.insert(id, want);
+                    sent += 1;
+                    break;
+                }
+                Err(SubmitError::Backpressure(g)) => {
+                    // Typed shed signal with the graph handed back; free
+                    // a slot and retry rather than dropping the request.
+                    graph = g;
+                    if let Some(r) = tier.recv() {
+                        answered.push(r);
+                    }
+                }
+                Err(SubmitError::Closed(_)) => {
+                    panic!("tier closed with {} live shards", tier.live_shards())
+                }
+            }
+        }
+    }
+    answered.extend(tier.drain());
+
+    // Books: every accepted request came back exactly once, including
+    // the ones queued on shard 1 when it was stopped.
+    assert_eq!(sent, plan.len());
+    assert_eq!(
+        answered.len(),
+        sent,
+        "lost {} responses across the shard stop",
+        sent - answered.len()
+    );
+    let mut seen = HashSet::new();
+    for r in &answered {
+        assert!(seen.insert(r.id), "duplicate response {}", r.id);
+        assert_eq!(
+            Some(&r.predicted),
+            want_of.get(&r.id),
+            "prediction diverged for request {}",
+            r.id
+        );
+    }
+
+    // Survivors carried the post-stop traffic.
+    assert!(tier.shard_metrics(0).requests + tier.shard_metrics(2).requests > 0);
+    tier.shutdown();
+}
+
+/// The typed failure surface end to end: a tiny admission cap trips
+/// `Backpressure` deterministically (outstanding only decrements on
+/// recv, so worker speed cannot race the assertion), and a fully
+/// stopped tier returns `Closed` — both hand the graph back untouched,
+/// and the books still balance when sheds are counted as rejections.
+#[test]
+fn backpressure_and_closed_are_typed_and_lossless() {
+    let mut trained = trained();
+    let graph = trained.dataset().test[0].0.clone();
+    let nodes = graph.num_nodes();
+    // batch_size > cap so admission, not the queue, is the binding
+    // constraint; a long deadline keeps the batcher out of the picture.
+    let mut tier = trained
+        .serve_sharded(ShardedConfig {
+            shards: 2,
+            max_outstanding: 2,
+            per_shard: ServerConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 8,
+                    max_wait: Duration::from_millis(10),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        })
+        .expect("tier start");
+
+    let mut sent = 0usize;
+    let mut rejected = 0usize;
+    for _ in 0..2 {
+        tier.submit(graph.clone()).expect("under the cap");
+        sent += 1;
+    }
+    match tier.submit(graph.clone()) {
+        Err(SubmitError::Backpressure(g)) => {
+            rejected += 1;
+            assert_eq!(g.num_nodes(), nodes, "backpressure must return the graph intact");
+        }
+        other => panic!("expected Backpressure at the cap, got {other:?}"),
+    }
+    let answered = tier.drain().len();
+
+    // Stop everything: the tier is now typed-Closed, and submissions
+    // keep getting their graph back (callers can fail over losslessly).
+    tier.stop_shard(0);
+    tier.stop_shard(1);
+    assert_eq!(tier.live_shards(), 0);
+    match tier.submit(graph.clone()) {
+        Err(SubmitError::Closed(g)) => {
+            rejected += 1;
+            assert_eq!(g.num_nodes(), nodes, "closed must return the graph intact");
+        }
+        other => panic!("expected Closed on an empty ring, got {other:?}"),
+    }
+    // The accounting identity: every submission either entered the tier
+    // and was answered, or was handed back as a typed rejection — none
+    // vanished.
+    assert_eq!(rejected, 2, "one Backpressure + one Closed");
+    assert_eq!(sent, answered, "every accepted request must be answered");
+
+    // NysxError conversion keeps the typed story at the api layer,
+    // distinguishing retryable sheds from terminal closure.
+    let bp: NysxError = SubmitError::Backpressure(graph.clone()).into();
+    assert!(bp.is_retryable());
+    let err: NysxError = SubmitError::Closed(graph).into();
+    assert!(matches!(err, NysxError::Closed) && !err.is_retryable());
+    tier.shutdown();
+}
