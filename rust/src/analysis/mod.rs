@@ -1,0 +1,161 @@
+//! `nysx lint` — a dependency-free invariant analyzer over the crate's
+//! own sources (DESIGN.md §8).
+//!
+//! The crate's core guarantees — bit-identical kernel outputs at any
+//! thread count, a serving tier that degrades instead of panicking,
+//! `unsafe` that always carries its proof — are invariants the type
+//! system cannot express. This module checks them mechanically: a
+//! comment/string-aware line scanner ([`scanner`]) feeds a small rule
+//! engine ([`rules`]), and the result is both a human rendering and the
+//! `LINT_REPORT.json` artifact ([`report`]). `tests/lint_gate.rs` pins
+//! the tree to zero findings, and the analyzer scans its own sources
+//! with the same rules (no self-exemption).
+//!
+//! Exceptions are per-site pragmas with a mandatory written reason:
+//!
+//! ```text
+//! // nysx-lint: allow(<rule>): <justification>
+//! ```
+//!
+//! on the offending line or the line directly above. A pragma without a
+//! justification suppresses nothing and is itself reported.
+
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+pub use report::{Finding, LintReport, PragmaSite, SCHEMA};
+
+use crate::api::NysxError;
+
+/// Recursively collect `.rs` files under `dir`, sorted by path, so the
+/// scan order (and therefore the report) is deterministic across
+/// filesystems.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), NysxError> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(NysxError::Io)?
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(NysxError::Io)?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Crate-root-relative display path with `/` separators, whatever the
+/// platform separator is.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Run every rule over `<root>/src` and `<root>/tests` and return the
+/// sorted report. `root` is the crate root (the directory holding
+/// `Cargo.toml`); a missing `tests/` directory is fine, a missing
+/// `src/` is an error.
+pub fn lint_crate(root: &Path) -> Result<LintReport, NysxError> {
+    let src = root.join("src");
+    if !src.is_dir() {
+        return Err(NysxError::Config(format!(
+            "lint root {} has no src/ directory (pass the crate root via --root)",
+            root.display()
+        )));
+    }
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files)?;
+    let tests = root.join("tests");
+    if tests.is_dir() {
+        collect_rs(&tests, &mut files)?;
+    }
+    let mut findings = Vec::new();
+    let mut pragmas = Vec::new();
+    let files_scanned = files.len();
+    for path in files {
+        let text = std::fs::read_to_string(&path).map_err(NysxError::Io)?;
+        let rel = rel_path(root, &path);
+        let (f, p) = rules::check_file(&rel, &text);
+        findings.extend(f);
+        pragmas.extend(p);
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    pragmas.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    Ok(LintReport {
+        root: root.display().to_string(),
+        files_scanned,
+        findings,
+        pragmas,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Locate the crate root from the test binary's environment.
+    fn crate_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    }
+
+    /// The analyzer scans its own crate — including this very module —
+    /// and the walk is deterministic.
+    #[test]
+    fn self_scan_is_deterministic_and_covers_analysis() {
+        let root = crate_root();
+        let a = lint_crate(&root).expect("lint runs");
+        let b = lint_crate(&root).expect("lint runs twice");
+        assert_eq!(a.findings, b.findings);
+        assert_eq!(a.pragmas, b.pragmas);
+        assert_eq!(a.files_scanned, b.files_scanned);
+        assert!(a.files_scanned > 50, "walk found {} files", a.files_scanned);
+        // The artifact pipeline works end to end on the real tree.
+        let doc = a.to_json();
+        let text = doc.to_string();
+        assert_eq!(crate::util::json::Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn missing_src_is_a_typed_error() {
+        let dir = std::env::temp_dir().join(format!("nysx-lint-nosrc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = lint_crate(&dir).err().expect("no src/ must be rejected");
+        assert!(matches!(err, NysxError::Config(_)), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lint_crate_scans_a_synthetic_tree() {
+        let dir = std::env::temp_dir().join(format!("nysx-lint-tree-{}", std::process::id()));
+        let src = dir.join("src").join("kernel");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(
+            src.join("bad.rs"),
+            "fn f() { let t = Instant::now(); drop(t); }\n",
+        )
+        .unwrap();
+        std::fs::write(src.join("good.rs"), "pub fn g() -> u32 { 7 }\n").unwrap();
+        let report = lint_crate(&dir).expect("lint runs");
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, rules::RULE_DETERMINISM);
+        assert_eq!(report.findings[0].file, "src/kernel/bad.rs");
+        assert_eq!(report.findings[0].line, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

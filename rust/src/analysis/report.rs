@@ -1,0 +1,301 @@
+//! The `LINT_REPORT.json` artifact (schema `nysx-lint/v1`) and its text
+//! rendering. Follows the repo's benchmark-artifact convention
+//! (`BENCH_*.json`): a `schema` tag, deterministic key order via the
+//! in-tree [`Json`] emitter, and a parse-back round trip **plus schema
+//! validation** before any bytes land on disk — an ill-formed or
+//! self-inconsistent report is a typed error, never an artifact.
+
+use std::collections::BTreeMap;
+
+use crate::api::NysxError;
+use crate::util::json::Json;
+
+use super::rules::RULES;
+
+/// Schema tag carried by every emitted report.
+pub const SCHEMA: &str = "nysx-lint/v1";
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: String,
+    /// Crate-root-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+/// One justified suppression pragma — the report inventories every site
+/// where an invariant is consciously waived, with its written reason.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PragmaSite {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub justification: String,
+}
+
+/// The full analyzer result over one crate root.
+#[derive(Debug)]
+pub struct LintReport {
+    /// The scanned crate root, as given (display only).
+    pub root: String,
+    pub files_scanned: usize,
+    /// Sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Sorted by (file, line, rule).
+    pub pragmas: Vec<PragmaSite>,
+}
+
+impl LintReport {
+    /// Emit the `nysx-lint/v1` document. Every known rule always appears
+    /// under `rules` (with zero counts if silent), so consumers can
+    /// index unconditionally.
+    pub fn to_json(&self) -> Json {
+        // Every known rule gets an entry (zero counts if silent) so
+        // consumers can index unconditionally; unknown rule names from
+        // pragmas are added too so the counts always sum up.
+        let mut per_rule: BTreeMap<&str, (usize, usize)> =
+            RULES.iter().map(|r| (*r, (0, 0))).collect();
+        for f in &self.findings {
+            per_rule.entry(f.rule.as_str()).or_insert((0, 0)).0 += 1;
+        }
+        for p in &self.pragmas {
+            per_rule.entry(p.rule.as_str()).or_insert((0, 0)).1 += 1;
+        }
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("root", Json::str(self.root.as_str())),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("total_findings", Json::num(self.findings.len() as f64)),
+            (
+                "rules",
+                Json::Obj(
+                    per_rule
+                        .into_iter()
+                        .map(|(rule, (nf, np))| {
+                            (
+                                rule.to_string(),
+                                Json::obj(vec![
+                                    ("findings", Json::num(nf as f64)),
+                                    ("pragmas", Json::num(np as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(|f| {
+                    Json::obj(vec![
+                        ("rule", Json::str(f.rule.as_str())),
+                        ("file", Json::str(f.file.as_str())),
+                        ("line", Json::num(f.line as f64)),
+                        ("message", Json::str(f.message.as_str())),
+                    ])
+                })),
+            ),
+            (
+                "pragmas",
+                Json::arr(self.pragmas.iter().map(|p| {
+                    Json::obj(vec![
+                        ("rule", Json::str(p.rule.as_str())),
+                        ("file", Json::str(p.file.as_str())),
+                        ("line", Json::num(p.line as f64)),
+                        ("justification", Json::str(p.justification.as_str())),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Human-readable rendering: one `file:line: [rule] message` per
+    /// finding, then the pragma inventory and a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                f.file, f.line, f.rule, f.message
+            ));
+        }
+        if !self.pragmas.is_empty() {
+            out.push_str(&format!(
+                "{} suppression pragma(s) in force:\n",
+                self.pragmas.len()
+            ));
+            for p in &self.pragmas {
+                out.push_str(&format!(
+                    "  {}:{}: allow({}) — {}\n",
+                    p.file, p.line, p.rule, p.justification
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "nysx lint: {} finding(s) over {} file(s)\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        out
+    }
+
+    /// Validate an emitted document against its own schema: tag, count
+    /// consistency (`total_findings` == findings array length == sum of
+    /// per-rule counts, and likewise for pragmas), and the presence of
+    /// every rule key. Returns the re-parsed document on success.
+    fn validate(&self, text: &str) -> Result<Json, NysxError> {
+        let doc = Json::parse(text).map_err(|e| {
+            NysxError::Config(format!("emitted LINT_REPORT.json does not parse: {e}"))
+        })?;
+        let schema_err = |what: &str| NysxError::Config(format!("LINT_REPORT.json: {what}"));
+        if doc.get("schema").and_then(Json::as_str) != Some(SCHEMA) {
+            return Err(schema_err("wrong or missing schema tag"));
+        }
+        let total = doc
+            .get("total_findings")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| schema_err("missing total_findings"))?;
+        let listed = doc
+            .get("findings")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| schema_err("missing findings array"))?
+            .len();
+        let pragmas_listed = doc
+            .get("pragmas")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| schema_err("missing pragmas array"))?
+            .len();
+        let rules_obj = match doc.get("rules") {
+            Some(Json::Obj(m)) => m,
+            _ => return Err(schema_err("missing rules object")),
+        };
+        for rule in RULES {
+            if !rules_obj.contains_key(rule) {
+                return Err(schema_err("missing per-rule entry"));
+            }
+        }
+        let mut rule_findings = 0usize;
+        let mut rule_pragmas = 0usize;
+        for entry in rules_obj.values() {
+            rule_findings += entry
+                .get("findings")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| schema_err("per-rule entry missing findings count"))?;
+            rule_pragmas += entry
+                .get("pragmas")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| schema_err("per-rule entry missing pragmas count"))?;
+        }
+        if total != listed || total != rule_findings || total != self.findings.len() {
+            return Err(schema_err("finding counts disagree"));
+        }
+        if pragmas_listed != rule_pragmas || pragmas_listed != self.pragmas.len() {
+            return Err(schema_err("pragma counts disagree"));
+        }
+        Ok(doc)
+    }
+
+    /// Emit, round-trip-validate against the schema, and write the
+    /// artifact. No ill-formed report ever lands on disk.
+    pub fn write(&self, path: &std::path::Path) -> Result<(), NysxError> {
+        let doc = self.to_json();
+        let text = doc.to_string();
+        let back = self.validate(&text)?;
+        if back != doc {
+            return Err(NysxError::config(
+                "LINT_REPORT.json round-trip drift: parsed document != emitted document",
+            ));
+        }
+        std::fs::write(path, text + "\n").map_err(NysxError::Io)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        LintReport {
+            root: "rust".to_string(),
+            files_scanned: 3,
+            findings: vec![Finding {
+                rule: "determinism".to_string(),
+                file: "src/kernel/lsh.rs".to_string(),
+                line: 12,
+                message: "`HashMap` in an output-affecting kernel module".to_string(),
+            }],
+            pragmas: vec![PragmaSite {
+                rule: "raw-spawn".to_string(),
+                file: "src/bench/serving.rs".to_string(),
+                line: 40,
+                justification: "load-harness clients".to_string(),
+            }],
+        }
+    }
+
+    #[test]
+    fn document_shape_and_counts() {
+        let report = sample();
+        let doc = report.to_json();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(doc.get("total_findings").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("files_scanned").and_then(Json::as_usize), Some(3));
+        // Every rule key is present, including silent ones.
+        for rule in RULES {
+            let entry = doc.get("rules").and_then(|r| r.get(rule));
+            assert!(entry.is_some(), "missing rules.{rule}");
+        }
+        let det = doc.get("rules").and_then(|r| r.get("determinism")).unwrap();
+        assert_eq!(det.get("findings").and_then(Json::as_usize), Some(1));
+        assert_eq!(det.get("pragmas").and_then(Json::as_usize), Some(0));
+        let spawn = doc.get("rules").and_then(|r| r.get("raw-spawn")).unwrap();
+        assert_eq!(spawn.get("pragmas").and_then(Json::as_usize), Some(1));
+        // Round trip through the parser is exact.
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        // And the self-validation accepts its own emission.
+        report.validate(&text).expect("validates");
+    }
+
+    #[test]
+    fn validation_rejects_inconsistent_documents() {
+        let report = sample();
+        let good = report.to_json().to_string();
+        // A tampered total must be caught.
+        let bad = good.replace("\"total_findings\":1", "\"total_findings\":7");
+        assert!(matches!(report.validate(&bad), Err(NysxError::Config(_))));
+        // A wrong schema tag must be caught.
+        let bad = good.replace(SCHEMA, "nysx-lint/v0");
+        assert!(matches!(report.validate(&bad), Err(NysxError::Config(_))));
+    }
+
+    #[test]
+    fn write_lands_validated_artifact() {
+        let report = sample();
+        let dir = std::env::temp_dir().join(format!("nysx-lint-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("LINT_REPORT.json");
+        report.write(&path).expect("write");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).expect("file parses");
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn text_rendering_lists_findings_and_summary() {
+        let text = sample().render_text();
+        assert!(text.contains("src/kernel/lsh.rs:12: [determinism]"), "{text}");
+        assert!(text.contains("1 suppression pragma(s) in force:"), "{text}");
+        assert!(text.contains("nysx lint: 1 finding(s) over 3 file(s)"), "{text}");
+        let clean = LintReport {
+            root: ".".to_string(),
+            files_scanned: 2,
+            findings: vec![],
+            pragmas: vec![],
+        };
+        assert!(clean.render_text().contains("0 finding(s) over 2 file(s)"));
+    }
+}

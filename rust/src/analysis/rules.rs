@@ -1,0 +1,383 @@
+//! The invariant rules (DESIGN.md §8) and the per-file check driver.
+//!
+//! Each rule is a line-level predicate over the blanked code text from
+//! [`super::scanner`], scoped to the path set whose invariant it guards.
+//! A finding is suppressed only by a *justified* pragma on the same line
+//! or the line directly above; a pragma without a justification is
+//! itself a finding (`pragma-missing-justification`) and suppresses
+//! nothing — silence always costs a written sentence.
+
+use super::report::{Finding, PragmaSite};
+use super::scanner::SourceModel;
+
+/// Rule: every `unsafe` keyword carries a SAFETY comment within 3 lines.
+pub const RULE_UNSAFE: &str = "unsafe-needs-safety";
+/// Rule: no `unwrap`/`expect`/`panic!`-family in the serving set.
+pub const RULE_NO_PANIC: &str = "no-panic-in-serving";
+/// Rule: no hash-order / wall-clock / ambient-RNG sources in kernels.
+pub const RULE_DETERMINISM: &str = "determinism";
+/// Rule: no bare `partial_cmp().unwrap()` orderings.
+pub const RULE_FLOAT_ORDERING: &str = "float-ordering";
+/// Rule: raw `std::thread` spawns only in `exec/` and `coordinator/`.
+pub const RULE_RAW_SPAWN: &str = "raw-spawn";
+/// Rule: an `allow(...)` pragma must state its justification.
+pub const RULE_PRAGMA_JUSTIFICATION: &str = "pragma-missing-justification";
+
+/// All rules, in report order.
+pub const RULES: [&str; 6] = [
+    RULE_UNSAFE,
+    RULE_NO_PANIC,
+    RULE_DETERMINISM,
+    RULE_FLOAT_ORDERING,
+    RULE_RAW_SPAWN,
+    RULE_PRAGMA_JUSTIFICATION,
+];
+
+/// The panic-free serving set: paths where a worker panic would take the
+/// serving tier down (or poison shared state) instead of degrading.
+const PANIC_SET: [&str; 4] = ["src/api/", "src/coordinator/", "src/model/io.rs", "src/main.rs"];
+
+/// The deterministic kernel set: modules whose outputs must be
+/// bit-identical across runs and thread counts.
+const KERNEL_SET: [&str; 5] = [
+    "src/hdc/",
+    "src/nystrom/",
+    "src/sparse/",
+    "src/exec/partition.rs",
+    "src/kernel/",
+];
+
+/// Paths allowed to spawn OS threads directly.
+const SPAWN_OK: [&str; 2] = ["src/exec/", "src/coordinator/"];
+
+fn in_set(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel == *p || rel.starts_with(p))
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Word-bounded token search: `tok` occurs in `code` with no identifier
+/// character hugging either end (so `spawn` never matches `respawned`,
+/// and `HashMap` never matches `NoHashMapHere`).
+fn has_word(code: &str, tok: &str) -> bool {
+    let mut from = 0;
+    while let Some(off) = code[from..].find(tok) {
+        let start = from + off;
+        let end = start + tok.len();
+        let pre_ok = code[..start].chars().next_back().is_none_or(|c| !is_word_char(c));
+        let post_ok = code[end..].chars().next().is_none_or(|c| !is_word_char(c));
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Run every rule over one file. `rel` is the crate-root-relative path
+/// with `/` separators (e.g. `src/hdc/encode.rs`, `tests/lint_gate.rs`).
+/// Returns the findings plus the file's justified-pragma inventory.
+pub fn check_file(rel: &str, text: &str) -> (Vec<Finding>, Vec<PragmaSite>) {
+    let model = SourceModel::of(text);
+    let mut findings = Vec::new();
+    let mut pragmas = Vec::new();
+
+    for (ln, p) in &model.pragmas {
+        match &p.justification {
+            Some(j) => pragmas.push(PragmaSite {
+                rule: p.rule.clone(),
+                file: rel.to_string(),
+                line: ln + 1,
+                justification: j.clone(),
+            }),
+            None => findings.push(Finding {
+                rule: RULE_PRAGMA_JUSTIFICATION.to_string(),
+                file: rel.to_string(),
+                line: ln + 1,
+                message: format!("allow({}) pragma has no justification", p.rule),
+            }),
+        }
+    }
+
+    let mut emit = |rule: &str, ln: usize, msg: String| {
+        if !model.suppressed(rule, ln) {
+            findings.push(Finding {
+                rule: rule.to_string(),
+                file: rel.to_string(),
+                line: ln + 1,
+                message: msg,
+            });
+        }
+    };
+
+    let panic_tokens = [".unwrap()", ".expect(", "panic!", "todo!", "unimplemented!"];
+    let det_tokens = ["HashMap", "HashSet", "Instant::now", "SystemTime", "thread_rng"];
+
+    for (ln, line) in model.lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if has_word(code, "unsafe") && !model.has_safety_comment(ln) {
+            emit(
+                RULE_UNSAFE,
+                ln,
+                "`unsafe` without a SAFETY comment within 3 lines above".to_string(),
+            );
+        }
+        if in_set(rel, &PANIC_SET) && !model.in_test[ln] {
+            for tok in panic_tokens {
+                // `.unwrap()`/`.expect(` match literally (the leading dot
+                // is the boundary); the macros are word-bounded.
+                let hit = if tok.starts_with('.') {
+                    code.contains(tok)
+                } else {
+                    has_word(code, tok)
+                };
+                if hit {
+                    emit(
+                        RULE_NO_PANIC,
+                        ln,
+                        format!("`{tok}` in the panic-free serving set"),
+                    );
+                    break;
+                }
+            }
+        }
+        if in_set(rel, &KERNEL_SET) && !model.in_test[ln] && !code.trim_start().starts_with("use ")
+        {
+            for tok in det_tokens {
+                if has_word(code, tok) {
+                    emit(
+                        RULE_DETERMINISM,
+                        ln,
+                        format!("`{tok}` in an output-affecting kernel module"),
+                    );
+                    break;
+                }
+            }
+        }
+        if code.contains("partial_cmp") && (code.contains(".unwrap()") || code.contains(".expect("))
+        {
+            emit(
+                RULE_FLOAT_ORDERING,
+                ln,
+                "bare partial_cmp().unwrap() ordering; use total_cmp/argmax_first_max".to_string(),
+            );
+        }
+        if !in_set(rel, &SPAWN_OK)
+            && (code.contains("thread::spawn") || code.contains("thread::Builder"))
+        {
+            emit(
+                RULE_RAW_SPAWN,
+                ln,
+                "raw std::thread spawn outside exec/ and coordinator/".to_string(),
+            );
+        }
+    }
+
+    (findings, pragmas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(rel: &str, text: &str) -> Vec<String> {
+        check_file(rel, text).0.into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("let x = unsafe { y };", "unsafe"));
+        assert!(!has_word("let unsafer = 1;", "unsafe"));
+        assert!(!has_word("let not_unsafe = 1;", "unsafe"));
+        assert!(has_word("h: HashMap<K, V>", "HashMap"));
+        assert!(!has_word("h: MyHashMapLike", "HashMap"));
+        assert!(has_word("Instant::now()", "Instant::now"));
+        assert!(!has_word("Instant::nowish()", "Instant::now"));
+    }
+
+    // ------- unsafe-needs-safety -------
+
+    #[test]
+    fn unsafe_rule_fires_without_safety_comment() {
+        let src = "pub fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n";
+        assert_eq!(rules_fired("src/exec/x.rs", src), vec![RULE_UNSAFE]);
+    }
+
+    #[test]
+    fn unsafe_rule_satisfied_by_nearby_safety_comment() {
+        let src = "pub fn f(p: *mut u8) {\n    // SAFETY: caller guarantees p is valid\n    unsafe { *p = 0 };\n}\n";
+        assert!(rules_fired("src/exec/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_rule_applies_in_tests_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { unsafe { core::hint::unreachable_unchecked() } }\n}\n";
+        assert_eq!(rules_fired("src/exec/x.rs", src), vec![RULE_UNSAFE]);
+    }
+
+    #[test]
+    fn unsafe_rule_pragma_suppression() {
+        // (A pragma naming this rule contains the word "safety" and so
+        // also satisfies the SAFETY-comment check — suppression via a
+        // trailing pragma on the unsafe line itself is the clean probe.)
+        let with_just = "unsafe { f() }; // nysx-lint: allow(unsafe-needs-safety): ffi shim documented in DESIGN.md\n";
+        assert!(rules_fired("src/exec/x.rs", with_just).is_empty());
+    }
+
+    #[test]
+    fn unjustified_pragma_reports_itself_and_suppresses_nothing() {
+        let src = "fn k() {\n    // nysx-lint: allow(determinism)\n    let t = Instant::now(); drop(t);\n}\n";
+        assert_eq!(
+            rules_fired("src/kernel/x.rs", src),
+            vec![RULE_PRAGMA_JUSTIFICATION, RULE_DETERMINISM],
+            "unjustified pragma reports itself and suppresses nothing"
+        );
+    }
+
+    // ------- no-panic-in-serving -------
+
+    #[test]
+    fn no_panic_fires_only_in_serving_set() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules_fired("src/api/mod.rs", src), vec![RULE_NO_PANIC]);
+        assert_eq!(rules_fired("src/coordinator/batcher.rs", src), vec![RULE_NO_PANIC]);
+        assert_eq!(rules_fired("src/model/io.rs", src), vec![RULE_NO_PANIC]);
+        assert_eq!(rules_fired("src/main.rs", src), vec![RULE_NO_PANIC]);
+        assert!(rules_fired("src/hdc/encode.rs", src).is_empty(), "outside the set");
+    }
+
+    #[test]
+    fn no_panic_covers_every_token() {
+        for src in [
+            "let v = m.lock().expect(\"poisoned\");\n",
+            "panic!(\"boom\");\n",
+            "todo!()\n",
+            "unimplemented!()\n",
+        ] {
+            assert_eq!(rules_fired("src/api/mod.rs", src), vec![RULE_NO_PANIC], "{src}");
+        }
+        // `expect` as an identifier is not the method token.
+        assert!(rules_fired("src/api/mod.rs", "fn expect_byte() {}\n").is_empty());
+    }
+
+    #[test]
+    fn no_panic_skips_cfg_test_regions() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n";
+        assert!(rules_fired("src/api/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn no_panic_ignores_tokens_in_strings_and_comments() {
+        let src = "// explains .unwrap() history\nlet s = \"never .unwrap() here\";\n";
+        assert!(rules_fired("src/api/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn no_panic_pragma_suppression() {
+        let src = "// nysx-lint: allow(no-panic-in-serving): documented panicking convenience wrapper\nlet v = x.unwrap();\n";
+        assert!(rules_fired("src/coordinator/server.rs", src).is_empty());
+        let trailing = "let v = x.unwrap(); // nysx-lint: allow(no-panic-in-serving): init-time only\n";
+        assert!(rules_fired("src/coordinator/server.rs", trailing).is_empty());
+    }
+
+    // ------- determinism -------
+
+    #[test]
+    fn determinism_fires_in_kernel_set_only() {
+        let src = "fn f() { let m: HashMap<u32, u32> = Default::default(); drop(m); }\n";
+        for rel in [
+            "src/hdc/encode.rs",
+            "src/nystrom/landmarks.rs",
+            "src/sparse/csr.rs",
+            "src/exec/partition.rs",
+            "src/kernel/histogram.rs",
+        ] {
+            assert_eq!(rules_fired(rel, src), vec![RULE_DETERMINISM], "{rel}");
+        }
+        assert!(rules_fired("src/coordinator/metrics.rs", src).is_empty());
+        assert!(rules_fired("src/exec/pool.rs", src).is_empty(), "only partition.rs in exec/");
+    }
+
+    #[test]
+    fn determinism_covers_clock_and_rng_tokens() {
+        for src in [
+            "let t0 = Instant::now();\n",
+            "let t = SystemTime::now();\n",
+            "let r = thread_rng();\n",
+            "let s: HashSet<u32> = Default::default();\n",
+        ] {
+            assert_eq!(rules_fired("src/kernel/lsh.rs", src), vec![RULE_DETERMINISM], "{src}");
+        }
+    }
+
+    #[test]
+    fn determinism_skips_use_lines_and_tests() {
+        let src = "use std::collections::HashMap;\nfn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let m: HashMap<u8, u8> = Default::default(); drop(m); }\n}\n";
+        assert!(rules_fired("src/kernel/histogram.rs", src).is_empty());
+    }
+
+    #[test]
+    fn determinism_pragma_suppression() {
+        let src = "struct C {\n    // nysx-lint: allow(determinism): lookup-only map, never iterated\n    index: HashMap<u64, u32>,\n}\n";
+        assert!(rules_fired("src/kernel/histogram.rs", src).is_empty());
+    }
+
+    // ------- float-ordering -------
+
+    #[test]
+    fn float_ordering_fires_anywhere_including_tests() {
+        let src = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert_eq!(rules_fired("src/util/mod.rs", src), vec![RULE_FLOAT_ORDERING]);
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { v.sort_by(|a, b| b.partial_cmp(a).expect(\"nan\")); }\n}\n";
+        assert_eq!(rules_fired("src/linalg/eigen.rs", in_test), vec![RULE_FLOAT_ORDERING]);
+    }
+
+    #[test]
+    fn float_ordering_allows_handled_partial_cmp() {
+        let src = "v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));\n";
+        assert!(rules_fired("src/util/mod.rs", src).is_empty(), "unwrap_or is not .unwrap()");
+        assert!(rules_fired("src/util/mod.rs", "v.sort_by(f64::total_cmp);\n").is_empty());
+    }
+
+    #[test]
+    fn float_ordering_pragma_suppression() {
+        let src = "// nysx-lint: allow(float-ordering): inputs proven finite two lines up\nv.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert!(rules_fired("src/util/mod.rs", src).is_empty());
+    }
+
+    // ------- raw-spawn -------
+
+    #[test]
+    fn raw_spawn_fires_outside_exec_and_coordinator() {
+        for src in [
+            "let h = std::thread::spawn(move || work());\n",
+            "let h = thread::Builder::new().spawn(move || work());\n",
+        ] {
+            assert_eq!(rules_fired("src/bench/serving.rs", src), vec![RULE_RAW_SPAWN], "{src}");
+            assert_eq!(rules_fired("tests/exec_differential.rs", src), vec![RULE_RAW_SPAWN]);
+            assert!(rules_fired("src/exec/pool.rs", src).is_empty());
+            assert!(rules_fired("src/coordinator/server.rs", src).is_empty());
+        }
+    }
+
+    #[test]
+    fn raw_spawn_pragma_suppression() {
+        let src = "// nysx-lint: allow(raw-spawn): load-harness client threads, not serving lanes\nlet h = std::thread::spawn(f);\n";
+        assert!(rules_fired("src/bench/serving.rs", src).is_empty());
+    }
+
+    // ------- pragma inventory -------
+
+    #[test]
+    fn justified_pragmas_are_inventoried_not_findings() {
+        let src = "// nysx-lint: allow(determinism): oracle map\nlet m: HashMap<u8, u8> = Default::default();\n";
+        let (findings, pragmas) = check_file("src/kernel/histogram.rs", src);
+        assert!(findings.is_empty());
+        assert_eq!(pragmas.len(), 1);
+        assert_eq!(pragmas[0].rule, RULE_DETERMINISM);
+        assert_eq!(pragmas[0].line, 1);
+        assert_eq!(pragmas[0].justification, "oracle map");
+    }
+}

@@ -1,0 +1,486 @@
+//! The source model under every lint rule: a comment/string-aware split
+//! of a Rust file into per-line *code* and *comment* parts, plus
+//! `#[cfg(test)]` region tracking and suppression-pragma extraction.
+//!
+//! The splitter is a small character-level state machine, not a parser:
+//! it understands line and (nested) block comments, ordinary and raw
+//! string literals, char literals vs lifetimes — enough that a token
+//! like `.unwrap()` inside a string literal or a doc comment never
+//! reaches a rule, while everything that *is* code does. String and
+//! char-literal *contents* are blanked from the code part (the quotes
+//! remain as placeholders), so brace counting for `#[cfg(test)]` regions
+//! cannot be derailed by a `'{'` literal.
+
+/// One source line: the code text (string/char contents blanked) and the
+/// comment text (`//`, `///`, `//!` and block-comment bodies).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+/// A suppression pragma parsed from a comment:
+/// `// nysx-lint: allow(<rule>): <justification>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pragma {
+    pub rule: String,
+    /// `None` when the mandatory justification is missing — the pragma
+    /// then suppresses nothing and is itself reported.
+    pub justification: Option<String>,
+}
+
+/// The fully analyzed model of one source file.
+#[derive(Debug)]
+pub struct SourceModel {
+    pub lines: Vec<Line>,
+    /// `in_test[i]` — line `i` sits inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+    /// Pragmas per line index (0-based), in textual order.
+    pub pragmas: Vec<(usize, Pragma)>,
+}
+
+enum State {
+    Normal,
+    LineComment,
+    /// Nested block comment depth.
+    Block(u32),
+    Str,
+    /// Raw string terminator hash count (`r##"…"##` → 2).
+    RawStr(usize),
+}
+
+/// Split a file into per-line code/comment parts.
+pub fn split_lines(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Normal;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            out.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    comment.push_str("*/");
+                    i += 2;
+                    state = if depth <= 1 {
+                        State::Normal
+                    } else {
+                        State::Block(depth - 1)
+                    };
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2; // skip the escaped char, whatever it is
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    i += 1; // blank the contents
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#')) {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    state = State::Normal;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Normal => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if let Some((consumed, hashes)) = raw_string_start(&chars, i) {
+                    code.push('r');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    code.push('"');
+                    state = State::RawStr(hashes);
+                    i += consumed;
+                } else if c == '\'' {
+                    i = consume_quote(&chars, i, &mut code);
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push(Line { code, comment });
+    }
+    out
+}
+
+/// At a `'`: distinguish a char literal (blank its contents) from a
+/// lifetime (keep scanning). Returns the next index to process.
+fn consume_quote(chars: &[char], i: usize, code: &mut String) -> usize {
+    let n = chars.len();
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: skip the escape body to the closing
+        // quote ('\n', '\'', '\u{1f600}', …).
+        let mut j = i + 2;
+        if chars.get(j) != Some(&'u') {
+            j += 1; // the escaped character itself (may be a quote)
+        }
+        while j < n && chars[j] != '\'' {
+            j += 1;
+        }
+        code.push_str("''");
+        j + 1
+    } else if chars.get(i + 2) == Some(&'\'') {
+        // Plain one-char literal 'x'.
+        code.push_str("''");
+        i + 3
+    } else {
+        // A lifetime ('a) — keep the tick as code and move on.
+        code.push('\'');
+        i + 1
+    }
+}
+
+/// Detect `r"…"` / `r#"…"#` / `br##"…"##` at position `i`; returns
+/// (chars consumed through the opening quote, hash count).
+fn raw_string_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_') {
+        return None; // mid-identifier 'r' (e.g. `for r in …` is safe anyway)
+    }
+    let mut k = i;
+    if chars.get(k) == Some(&'b') {
+        k += 1;
+    }
+    if chars.get(k) != Some(&'r') {
+        return None;
+    }
+    k += 1;
+    let mut hashes = 0usize;
+    while chars.get(k) == Some(&'#') {
+        hashes += 1;
+        k += 1;
+    }
+    if chars.get(k) == Some(&'"') {
+        Some((k + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Mark every line inside a `#[cfg(test)]` item. Brace depth is tracked
+/// over the blanked code text; the attribute arms a pending flag that the
+/// item's opening `{` converts into a region (popped when depth returns),
+/// and a bare `;` (statement items like `#[cfg(test)] use …;`) discharges.
+fn test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut depth = 0i64;
+    let mut stack: Vec<i64> = Vec::new();
+    let mut pending = false;
+    for (ln, line) in lines.iter().enumerate() {
+        if pending || !stack.is_empty() {
+            in_test[ln] = true;
+        }
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+            in_test[ln] = true;
+        }
+        for ch in line.code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        stack.push(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if stack.last() == Some(&depth) {
+                        stack.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' if pending && stack.is_empty() => {
+                    pending = false;
+                }
+                _ => {}
+            }
+        }
+    }
+    in_test
+}
+
+/// Extract every `nysx-lint: allow(<rule>)[: justification]` pragma from
+/// one comment. The rule name must be `[a-z0-9-]+` — anything else (like
+/// prose *describing* the syntax with `<rule>` placeholders) is not a
+/// pragma and is skipped.
+fn pragmas_in(comment: &str) -> Vec<Pragma> {
+    const MARKER: &str = "nysx-lint:";
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(MARKER) {
+        rest = &rest[pos + MARKER.len()..];
+        let Some(after) = rest.trim_start().strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(close) = after.find(')') else {
+            break;
+        };
+        let rule = &after[..close];
+        rest = &after[close + 1..];
+        if rule.is_empty()
+            || !rule
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+        {
+            continue;
+        }
+        let justification = rest
+            .trim_start()
+            .strip_prefix(':')
+            .map(str::trim)
+            .filter(|j| !j.is_empty())
+            .map(str::to_string);
+        out.push(Pragma {
+            rule: rule.to_string(),
+            justification,
+        });
+    }
+    out
+}
+
+impl SourceModel {
+    pub fn of(text: &str) -> Self {
+        let lines = split_lines(text);
+        let in_test = test_regions(&lines);
+        let mut pragmas = Vec::new();
+        for (ln, line) in lines.iter().enumerate() {
+            for p in pragmas_in(&line.comment) {
+                pragmas.push((ln, p));
+            }
+        }
+        Self {
+            lines,
+            in_test,
+            pragmas,
+        }
+    }
+
+    /// Is there a justified `allow(rule)` pragma on this line or the
+    /// line directly above? (The two sanctioned placements: trailing
+    /// comment, or a dedicated comment line above the finding.)
+    pub fn suppressed(&self, rule: &str, ln: usize) -> bool {
+        self.pragmas.iter().any(|(at, p)| {
+            (*at == ln || *at + 1 == ln) && p.rule == rule && p.justification.is_some()
+        })
+    }
+
+    /// Does the comment context of `ln` carry a SAFETY marker? Checks
+    /// the line's own comment, then up to 3 lines above; a pure comment
+    /// line inside that window extends the search through its whole
+    /// contiguous comment block (multi-line SAFETY arguments count via
+    /// their last line).
+    pub fn has_safety_comment(&self, ln: usize) -> bool {
+        let is_safety = |c: &str| c.to_uppercase().contains("SAFETY");
+        if is_safety(&self.lines[ln].comment) {
+            return true;
+        }
+        for k in 1..=3usize {
+            let Some(j) = ln.checked_sub(k) else { break };
+            let line = &self.lines[j];
+            if is_safety(&line.comment) {
+                return true;
+            }
+            if !line.comment.is_empty() && line.code.trim().is_empty() {
+                // Pure comment line: walk the contiguous block upward.
+                let mut j2 = j;
+                loop {
+                    let l2 = &self.lines[j2];
+                    if l2.comment.is_empty() || !l2.code.trim().is_empty() {
+                        break;
+                    }
+                    if is_safety(&l2.comment) {
+                        return true;
+                    }
+                    let Some(next) = j2.checked_sub(1) else { break };
+                    j2 = next;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_separated_from_code() {
+        let m = SourceModel::of(concat!(
+            "let x = \"unsafe .unwrap() HashMap\"; // trailing unsafe note\n",
+            "/* block .unwrap() */ let y = 1;\n",
+        ));
+        assert!(!m.lines[0].code.contains("unwrap"), "{:?}", m.lines[0]);
+        assert!(m.lines[0].comment.contains("trailing unsafe note"));
+        assert!(!m.lines[1].code.contains("unwrap"));
+        assert!(m.lines[1].code.contains("let y = 1;"));
+        assert!(m.lines[1].comment.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline_strings() {
+        let m = SourceModel::of(concat!(
+            "/* outer /* inner */ still comment */ code();\n",
+            "let s = \"line one\n",
+            "line two with } brace\";\n",
+            "after();\n",
+        ));
+        assert!(m.lines[0].code.contains("code();"));
+        assert!(m.lines[0].comment.contains("inner"));
+        // The multi-line string body is blanked, including its brace.
+        assert!(!m.lines[1].code.contains("line one"));
+        assert!(!m.lines[2].code.contains('}'));
+        assert!(m.lines[3].code.contains("after();"));
+    }
+
+    #[test]
+    fn char_literals_blanked_lifetimes_kept() {
+        let m = SourceModel::of("match c { '{' => a, '\\'' => b, _ => f::<'static>() }\n");
+        let code = &m.lines[0].code;
+        assert!(!code.contains('{') || code.matches('{').count() == 1, "{code}");
+        assert!(code.contains("'static"), "{code}");
+        // Exactly the one structural brace pair survives.
+        assert_eq!(code.matches('{').count(), 1, "{code}");
+        assert_eq!(code.matches('}').count(), 1, "{code}");
+    }
+
+    #[test]
+    fn raw_strings_blanked() {
+        let m = SourceModel::of("let p = r#\"contains .unwrap() and \"quotes\"\"#;\nnext();\n");
+        assert!(!m.lines[0].code.contains("unwrap"), "{:?}", m.lines[0]);
+        assert!(m.lines[1].code.contains("next();"));
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_mod_and_statement_forms() {
+        let src = concat!(
+            "fn live() { body(); }\n",        // 0
+            "#[cfg(test)]\n",                 // 1
+            "use super::Request;\n",          // 2: statement form ends region
+            "fn also_live() {}\n",            // 3
+            "#[cfg(test)]\n",                 // 4
+            "mod tests {\n",                  // 5
+            "    fn helper() { x(); }\n",     // 6
+            "    #[test]\n",                  // 7
+            "    fn t() { y(); }\n",          // 8
+            "}\n",                            // 9
+            "fn after() {}\n",                // 10
+        );
+        let m = SourceModel::of(src);
+        let want = [
+            false, true, true, false, true, true, true, true, true, true, false,
+        ];
+        for (ln, &w) in want.iter().enumerate() {
+            assert_eq!(m.in_test[ln], w, "line {ln}");
+        }
+    }
+
+    #[test]
+    fn pragma_parsing_rule_and_justification() {
+        let m = SourceModel::of(concat!(
+            "let a = 1; // nysx-lint: allow(determinism): lookup-only map\n",
+            "let b = 2; // nysx-lint: allow(raw-spawn)\n",
+            "let c = 3; // nysx-lint: allow(raw-spawn):   \n",
+        ));
+        assert_eq!(m.pragmas.len(), 3);
+        assert_eq!(m.pragmas[0].1.rule, "determinism");
+        assert_eq!(
+            m.pragmas[0].1.justification.as_deref(),
+            Some("lookup-only map")
+        );
+        // Missing and whitespace-only justifications are both None.
+        assert_eq!(m.pragmas[1].1.justification, None);
+        assert_eq!(m.pragmas[2].1.justification, None);
+        // Prose describing the syntax is not a pragma.
+        let doc = SourceModel::of("//! `// nysx-lint: allow(<rule>): <justification>`\n");
+        assert!(doc.pragmas.is_empty(), "{:?}", doc.pragmas);
+        assert!(m.suppressed("determinism", 0));
+        assert!(m.suppressed("determinism", 1), "pragma covers the next line");
+        assert!(!m.suppressed("determinism", 2));
+        assert!(!m.suppressed("raw-spawn", 1), "no justification, no effect");
+    }
+
+    #[test]
+    fn safety_comment_window_and_block_extension() {
+        let src = concat!(
+            "// SAFETY: a long argument that starts here\n", // 0
+            "// and continues across several lines\n",       // 1
+            "// before the block ends\n",                    // 2
+            "// with this fourth line\n",                    // 3
+            "let x = unsafe { f() };\n",                     // 4
+            "let a = 1;\n",                                  // 5
+            "let b = 2;\n",                                  // 6
+            "let c = 3;\n",                                  // 7
+            "let y = unsafe { g() };\n",                     // 8
+        );
+        let m = SourceModel::of(src);
+        // Line 4: the block's last line is 1 above; SAFETY sits 4 above
+        // but the contiguous block extension reaches it.
+        assert!(m.has_safety_comment(4));
+        // Line 8: nothing within 3 lines is a comment, so the block is
+        // out of reach.
+        assert!(!m.has_safety_comment(8));
+    }
+
+    #[test]
+    fn safety_comment_same_line_and_doc_form() {
+        let m = SourceModel::of(concat!(
+            "unsafe { h() } // SAFETY: single-threaded here\n",
+            "/// # Safety\n",
+            "/// caller upholds disjointness\n",
+            "#[inline]\n",
+            "pub unsafe fn w() {}\n",
+        ));
+        assert!(m.has_safety_comment(0));
+        assert!(m.has_safety_comment(4), "doc # Safety within window");
+    }
+}

@@ -12,7 +12,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::Request;
+use super::{lock_or_poison, Request};
 
 /// Batching policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -103,7 +103,11 @@ impl BatchQueue {
     // caller keeps ownership to retry or reroute without a clone.
     #[allow(clippy::result_large_err)]
     pub fn push(&self, req: Request) -> Result<(), PushError> {
-        let mut st = self.state.lock().unwrap();
+        // A poisoned lock means a worker panicked mid-queue-operation;
+        // the queue is unusable, which is exactly what Closed conveys.
+        let Some(mut st) = lock_or_poison(&self.state) else {
+            return Err(PushError::Closed(req));
+        };
         if st.closed {
             return Err(PushError::Closed(req));
         }
@@ -124,7 +128,12 @@ impl BatchQueue {
         if reqs.is_empty() {
             return Ok(());
         }
-        let mut st = self.state.lock().unwrap();
+        let Some(mut st) = lock_or_poison(&self.state) else {
+            return Err(PushManyError {
+                requests: reqs,
+                closed: true,
+            });
+        };
         if st.closed {
             return Err(PushManyError {
                 requests: reqs,
@@ -143,24 +152,27 @@ impl BatchQueue {
         Ok(())
     }
 
-    /// Current depth (for least-loaded routing).
+    /// Current depth (for least-loaded routing). A poisoned queue reads
+    /// as empty — routers must not panic over a dead worker's lock.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        lock_or_poison(&self.state).map_or(0, |st| st.items.len())
     }
 
     pub fn is_empty(&self) -> bool {
-        self.state.lock().unwrap().items.is_empty()
+        lock_or_poison(&self.state).is_none_or(|st| st.items.is_empty())
     }
 
-    /// Blocking pop of the next batch. Returns None after close+drain.
+    /// Blocking pop of the next batch. Returns None after close+drain —
+    /// and on a poisoned lock, which a consumer must treat the same way
+    /// (the queue state died with the thread that panicked under it).
     pub fn pop_batch(&self) -> Option<Vec<Request>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_poison(&self.state)?;
         loop {
             if st.items.is_empty() {
                 if st.closed {
                     return None;
                 }
-                st = self.cv.wait(st).unwrap();
+                st = self.cv.wait(st).ok()?;
                 continue;
             }
             // Have at least one; maybe wait for batch-mates. The deadline
@@ -179,7 +191,7 @@ impl BatchQueue {
                 if now >= deadline {
                     break;
                 }
-                st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+                st = self.cv.wait_timeout(st, deadline - now).ok()?.0;
             }
             if st.items.is_empty() {
                 continue; // drained by a rival worker; go back to wait
@@ -190,9 +202,13 @@ impl BatchQueue {
         }
     }
 
-    /// Close the queue: pushes fail, poppers drain then get None.
+    /// Close the queue: pushes fail, poppers drain then get None. On a
+    /// poisoned lock there is nothing to mark — every path already
+    /// treats poison as closed — but waiters still get woken.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        if let Some(mut st) = lock_or_poison(&self.state) {
+            st.closed = true;
+        }
         self.cv.notify_all();
     }
 }

@@ -4,6 +4,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::lock_or_poison;
 use crate::util::{mean, percentile, stddev};
 
 /// Summary statistics over a latency series.
@@ -64,7 +65,11 @@ impl MetricsRegistry {
     }
 
     pub fn record(&self, worker: usize, host_us: f64, queue_us: f64, fpga_ms: f64, fpga_mj: f64) {
-        let mut m = self.inner.lock().unwrap();
+        // Metrics degrade gracefully under poison: dropping a sample is
+        // strictly better than panicking the worker that reports it.
+        let Some(mut m) = lock_or_poison(&self.inner) else {
+            return;
+        };
         let now = Instant::now();
         m.started.get_or_insert(now);
         m.finished = Some(now);
@@ -78,7 +83,11 @@ impl MetricsRegistry {
     }
 
     pub fn summary(&self) -> MetricsSummary {
-        let m = self.inner.lock().unwrap();
+        // Poisoned registry -> empty rollup (never a panic on the
+        // observability path).
+        let empty = MetricsInner::default();
+        let guard = lock_or_poison(&self.inner);
+        let m = guard.as_deref().unwrap_or(&empty);
         let wall_s = match (m.started, m.finished) {
             (Some(a), Some(b)) => (b - a).as_secs_f64(),
             _ => 0.0,

@@ -30,7 +30,18 @@ pub use server::{Server, ServerConfig, SubmitBatchError, SubmitError};
 pub use shard::ShardRing;
 pub use sharded::{ShardedConfig, ShardedServer};
 
+use std::sync::{Mutex, MutexGuard};
+
 use crate::graph::Graph;
+
+/// Lock a mutex without ever panicking on poison: `None` means a worker
+/// panicked while holding the lock, so the protected state can no longer
+/// be trusted. Every serving-path caller maps `None` onto its closed /
+/// degraded surface (a closed queue, an empty metrics rollup) instead of
+/// cascading the panic — the no-panic-in-serving invariant (DESIGN.md §8).
+pub(crate) fn lock_or_poison<T>(m: &Mutex<T>) -> Option<MutexGuard<'_, T>> {
+    m.lock().ok()
+}
 
 /// A classification request.
 #[derive(Debug, Clone)]

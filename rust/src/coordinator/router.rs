@@ -53,12 +53,14 @@ impl Router {
             RoutingPolicy::RoundRobin => {
                 (self.rr_next.fetch_add(1, Ordering::Relaxed) as usize) % self.queues.len()
             }
+            // `new` asserts at least one queue, so min_by_key is Some;
+            // 0 is a correct (never-taken) fallback rather than a panic.
             RoutingPolicy::LeastLoaded => (0..self.queues.len())
                 .min_by_key(|&i| self.queues[i].len())
-                .unwrap(),
+                .unwrap_or(0),
             RoutingPolicy::SizeAware => (0..self.queues.len())
                 .min_by_key(|&i| self.work[i].load(Ordering::Relaxed))
-                .unwrap(),
+                .unwrap_or(0),
         }
     }
 

@@ -134,7 +134,7 @@ impl Server {
     ) -> Result<Self, crate::api::NysxError> {
         Self::validate(&cfg)?;
         let (tx, rx) = channel();
-        Ok(Self::spawn(model, cfg, exec_pool, tx, Some(rx), 0, 1))
+        Self::spawn(model, cfg, exec_pool, tx, Some(rx), 0, 1)
     }
 
     /// Start one shard of a [`super::ShardedServer`]: workers send their
@@ -156,7 +156,7 @@ impl Server {
         if id_stride == 0 {
             return Err(NysxError::config("shard id_stride must be > 0"));
         }
-        Ok(Self::spawn(model, cfg, exec_pool, sink, None, id_base, id_stride))
+        Self::spawn(model, cfg, exec_pool, sink, None, id_base, id_stride)
     }
 
     /// The shared user-input boundary for every constructor.
@@ -183,12 +183,16 @@ impl Server {
     pub fn start(model: Arc<NysHdcModel>, cfg: ServerConfig) -> Self {
         match Self::try_start(model, cfg) {
             Ok(server) => server,
+            // nysx-lint: allow(no-panic-in-serving): documented panicking convenience wrapper; fallible callers use try_start
             Err(e) => panic!("{e}"),
         }
     }
 
     /// Spawn the (already validated) worker pool, wiring responses into
-    /// `tx` (private channel standalone, shared sink in shard mode).
+    /// `tx` (private channel standalone, shared sink in shard mode). OS
+    /// thread exhaustion is a typed [`crate::api::NysxError::Io`]: the
+    /// queues close and every already-spawned worker drains and joins
+    /// before the error surfaces, so a partial pool never leaks.
     fn spawn(
         model: Arc<NysHdcModel>,
         cfg: ServerConfig,
@@ -197,27 +201,35 @@ impl Server {
         rx: Option<Receiver<Response>>,
         id_base: u64,
         id_stride: u64,
-    ) -> Self {
+    ) -> Result<Self, crate::api::NysxError> {
         let queues: Vec<Arc<BatchQueue>> = (0..cfg.workers)
             .map(|_| Arc::new(BatchQueue::new(cfg.batcher)))
             .collect();
         let router = Arc::new(Router::new(queues.clone(), cfg.routing));
         let metrics = Arc::new(MetricsRegistry::new(cfg.workers));
-        let workers = (0..cfg.workers)
-            .map(|i| {
-                let model = model.clone();
-                let queue = queues[i].clone();
-                let tx = tx.clone();
-                let accel = cfg.accel;
-                let power = cfg.power;
-                let exec_pool = exec_pool.clone();
-                std::thread::Builder::new()
-                    .name(format!("nysx-worker-{i}"))
-                    .spawn(move || worker_loop(i, model, queue, accel, power, tx, exec_pool))
-                    .expect("spawn worker")
-            })
-            .collect();
-        Self {
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for (i, queue) in queues.iter().enumerate() {
+            let model = model.clone();
+            let queue = queue.clone();
+            let tx = tx.clone();
+            let accel = cfg.accel;
+            let power = cfg.power;
+            let exec_pool = exec_pool.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("nysx-worker-{i}"))
+                .spawn(move || worker_loop(i, model, queue, accel, power, tx, exec_pool));
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    router.close_all();
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(crate::api::NysxError::Io(e));
+                }
+            }
+        }
+        Ok(Self {
             router,
             workers,
             responses: rx,
@@ -228,7 +240,7 @@ impl Server {
             outstanding: 0,
             batch_size: cfg.batcher.batch_size,
             queue_capacity: cfg.batcher.capacity,
-        }
+        })
     }
 
     /// The configured per-dispatch batch width (1 = edge mode).

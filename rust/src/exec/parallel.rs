@@ -17,7 +17,14 @@ use super::pool::Pool;
 /// closure; all aliasing discipline lives in the helpers below.
 struct SendPtr<T>(*mut T);
 
+// SAFETY: SendPtr is only ever constructed over a `&mut [T]` borrow held
+// by the caller for the whole parallel region, and the only code that
+// dereferences it (`for_each_range_mut`) hands each lane a validated
+// disjoint range — so cross-thread access never aliases and `T: Send`
+// suffices for both bounds.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: as above — shared `&SendPtr` access only reads the pointer
+// value; element access is partitioned per lane.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Validate that `ranges` are sorted, pairwise disjoint and inside
@@ -100,7 +107,14 @@ pub struct ScatterMut<'a, T> {
     _borrow: PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: ScatterMut exclusively borrows its slice for 'a (PhantomData
+// keeps the borrow alive), and its only element accessors are the
+// `unsafe fn write`/`update` below, whose contract makes lanes touch
+// disjoint index sets — so sending or sharing the handle across threads
+// is sound whenever `T: Send`.
 unsafe impl<T: Send> Send for ScatterMut<'_, T> {}
+// SAFETY: as above — the disjointness contract of `write`/`update` is
+// what shared references rely on.
 unsafe impl<T: Send> Sync for ScatterMut<'_, T> {}
 
 impl<'a, T> ScatterMut<'a, T> {
@@ -131,6 +145,8 @@ impl<'a, T> ScatterMut<'a, T> {
     #[inline]
     pub unsafe fn write(&self, i: usize, value: T) {
         assert!(i < self.len, "scatter write out of bounds: {i} >= {}", self.len);
+        // SAFETY: `i` is in bounds (asserted above); exclusivity of the
+        // slot is the caller's `# Safety` obligation.
         unsafe { *self.ptr.add(i) = value };
     }
 
@@ -143,6 +159,8 @@ impl<'a, T> ScatterMut<'a, T> {
     #[inline]
     pub unsafe fn update(&self, i: usize, f: impl FnOnce(&mut T)) {
         assert!(i < self.len, "scatter update out of bounds: {i} >= {}", self.len);
+        // SAFETY: `i` is in bounds (asserted above); exclusivity of the
+        // slot is the caller's `# Safety` obligation.
         f(unsafe { &mut *self.ptr.add(i) });
     }
 }
@@ -239,6 +257,8 @@ mod tests {
     fn scatter_bounds_checked() {
         let mut data = vec![0u8; 4];
         let scatter = ScatterMut::new(&mut data);
+        // SAFETY: single-threaded, no aliasing; the point is that the
+        // bounds assert fires before the out-of-bounds write happens.
         unsafe { scatter.write(4, 1) };
     }
 }

@@ -1,7 +1,7 @@
 //! Hop-wise code histograms and the codebooks (vocabularies) they are
 //! binned through (paper §2.1.3).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// A hop-specific codebook `B^(t)`: the set of integer codes observed in
 /// the landmark graphs at that hop, with a canonical (sorted) index per
@@ -10,6 +10,7 @@ use std::collections::HashMap;
 pub struct Codebook {
     /// Sorted distinct codes.
     pub codes: Vec<i64>,
+    // nysx-lint: allow(determinism): lookup-only oracle (the "naive dictionary" the MPHE replaces); never iterated, so hash order cannot reach an output
     index: HashMap<i64, u32>,
 }
 
@@ -68,9 +69,13 @@ pub fn histogram(codes: &[i64], codebook: &Codebook) -> Vec<u32> {
 
 /// Raw (codebook-free) histogram: code -> count. Used during training and
 /// by the propagation-kernel Gram computation, where the vocabulary is
-/// defined by the graphs themselves.
-pub fn raw_histogram(codes: &[i64]) -> HashMap<i64, u32> {
-    let mut h = HashMap::with_capacity(codes.len());
+/// defined by the graphs themselves. A `BTreeMap` on purpose: [`raw_dot`]
+/// iterates it while summing f64 terms, and only a sorted map gives the
+/// same summation order on every run (HashMap iteration order varies with
+/// the per-process hash seed, which made gram matrices differ across runs
+/// in the last few ulps).
+pub fn raw_histogram(codes: &[i64]) -> BTreeMap<i64, u32> {
+    let mut h = BTreeMap::new();
     for &c in codes {
         *h.entry(c).or_insert(0) += 1;
     }
@@ -78,9 +83,12 @@ pub fn raw_histogram(codes: &[i64]) -> HashMap<i64, u32> {
 }
 
 /// Dot product of two raw histograms (the per-hop term of the propagation
-/// kernel).
-pub fn raw_dot(a: &HashMap<i64, u32>, b: &HashMap<i64, u32>) -> f64 {
-    // Iterate the smaller map.
+/// kernel). Iteration is in sorted code order, so the floating-point sum
+/// has a fixed association — bit-identical across runs, thread counts and
+/// which-operand-is-smaller.
+pub fn raw_dot(a: &BTreeMap<i64, u32>, b: &BTreeMap<i64, u32>) -> f64 {
+    // Iterate the smaller map; sorted order makes the term order (and
+    // therefore the f64 sum) independent of which operand that is.
     let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
     small
         .iter()

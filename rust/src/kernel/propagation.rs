@@ -4,7 +4,7 @@
 //! similarity kernel for landmark selection (§4.1) and (b) as the kernel
 //! the Nyström method approximates.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::histogram::{raw_dot, raw_histogram};
 use super::lsh::{node_codes, LshParams};
@@ -13,10 +13,12 @@ use crate::graph::Graph;
 use crate::linalg::Mat;
 
 /// Per-hop raw histograms of one graph — the graph's signature under a
-/// fixed set of LSH parameters.
+/// fixed set of LSH parameters. Sorted maps so [`GraphSignature::kernel`]
+/// sums its f64 terms in code order — identical on every run (see
+/// [`raw_histogram`]).
 #[derive(Debug, Clone)]
 pub struct GraphSignature {
-    pub hists: Vec<HashMap<i64, u32>>,
+    pub hists: Vec<BTreeMap<i64, u32>>,
 }
 
 impl GraphSignature {

@@ -21,6 +21,7 @@
 //! through one interface. `DESIGN.md` at the repository root holds the
 //! system inventory and the paper-vs-measured record.
 
+pub mod analysis;
 pub mod api;
 pub mod baselines;
 pub mod bench;

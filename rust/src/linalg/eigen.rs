@@ -96,7 +96,7 @@ pub fn sym_eigen(a: &Mat) -> SymEigen {
     let mut values: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
     // Sort descending, permuting eigenvector columns accordingly.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| values[j].partial_cmp(&values[i]).unwrap());
+    order.sort_by(|&i, &j| values[j].total_cmp(&values[i]));
     let sorted_values: Vec<f64> = order.iter().map(|&i| values[i]).collect();
     let mut sorted_q = Mat::zeros(n, n);
     for (new_col, &old_col) in order.iter().enumerate() {

@@ -10,6 +10,7 @@
 //!           [--shards N] [--dpp]            # N > 1: sharded tier
 //!   eval    [--scale 1.0] [--ablation]      # all tables & figures
 //!   bench serving [--shards 1,2,4] [--qps 100,300,1000] [--out BENCH_SERVING.json]
+//!   lint    [--root DIR] [--json] [--out LINT_REPORT.json]   # exit 2 on findings
 //!   roofline
 //!
 //! Every subcommand accepts `--threads N` to size the `nysx::exec`
@@ -53,6 +54,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "bench" => cmd_bench(&args),
+        "lint" => cmd_lint(&args),
         "roofline" => {
             println!("{}", render_roofline());
             Ok(())
@@ -60,7 +62,7 @@ fn main() {
         _ => {
             println!(
                 "nysx — Nyström-HDC graph classification (NysX reproduction)\n\n\
-                 USAGE: nysx <train|infer|serve|eval|bench|roofline> [flags]\n\
+                 USAGE: nysx <train|infer|serve|eval|bench|lint|roofline> [flags]\n\
                  common flags: --threads N (exec pool size; default NYSX_THREADS or all cores)\n\
                  datasets: {}",
                 TU_SPECS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
@@ -375,6 +377,33 @@ fn cmd_bench_serving(args: &Args) -> Result<(), NysxError> {
     report.write(Path::new(&out))?;
     println!("wrote {out}");
     Ok(())
+}
+
+/// `lint` — run the invariant analyzer (DESIGN.md §8) over a crate root
+/// (default: the current directory, i.e. run it from `rust/`). Prints
+/// the text report (or the `nysx-lint/v1` JSON document with `--json`),
+/// optionally writes the validated artifact to `--out`, and exits 2 —
+/// through the standard typed-error path — iff there are findings.
+fn cmd_lint(args: &Args) -> Result<(), NysxError> {
+    let root = args.get_or("root", ".").to_string();
+    let report = nysx::analysis::lint_crate(Path::new(&root))?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if let Some(out) = args.get("out") {
+        report.write(Path::new(out))?;
+        eprintln!("wrote {out}");
+    }
+    if report.findings.is_empty() {
+        Ok(())
+    } else {
+        Err(NysxError::Config(format!(
+            "{} lint finding(s)",
+            report.findings.len()
+        )))
+    }
 }
 
 fn cmd_eval(args: &Args) -> Result<(), NysxError> {

@@ -376,7 +376,7 @@ mod tests {
                 }
             }
         }
-        all_vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        all_vals.sort_by(|a, b| b.total_cmp(a));
         assert!(
             greedy_val >= all_vals[2] - 1e-9,
             "greedy {greedy_val} below top-3 {:?}",
