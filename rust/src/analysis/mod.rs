@@ -1,5 +1,5 @@
-//! `nysx lint` — a dependency-free invariant analyzer over the crate's
-//! own sources (DESIGN.md §8).
+//! `nysx lint` / `nysx race` — dependency-free invariant analyzers over
+//! the crate's own sources (DESIGN.md §8 and §9).
 //!
 //! The crate's core guarantees — bit-identical kernel outputs at any
 //! thread count, a serving tier that degrades instead of panicking,
@@ -20,12 +20,14 @@
 //! on the offending line or the line directly above. A pragma without a
 //! justification suppresses nothing and is itself reported.
 
+pub mod race;
 pub mod report;
 pub mod rules;
 pub mod scanner;
 
 use std::path::{Path, PathBuf};
 
+pub use race::{race_crate, RaceReport, RACE_RULES};
 pub use report::{Finding, LintReport, PragmaSite, SCHEMA};
 
 use crate::api::NysxError;

@@ -1,0 +1,791 @@
+//! `nysx race` — the concurrency-safety rule tier (DESIGN.md §9) and
+//! its `CONCURRENCY_REPORT.json` artifact (schema `nysx-race/v1`).
+//!
+//! Where `nysx lint` (§8) checks surface hygiene, these rules check the
+//! *partition invariants* the exec runtime's soundness rests on: raw
+//! parallel dispatch stays confined to `exec/parallel.rs`, every raw use
+//! there sits behind `validate_disjoint`, no constant-evaluable range
+//! list overlaps, and the coordinator tier acquires its locks in one
+//! declared order. They ride the same [`super::scanner`] model and
+//! suppression-pragma mechanism as the lint rules, and the dynamic half
+//! of the story — the shadow claim table — lives in
+//! `crate::exec::check`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::api::NysxError;
+use crate::util::json::Json;
+
+use super::report::{Finding, PragmaSite};
+use super::rules::{has_word, in_set};
+use super::scanner::SourceModel;
+
+/// Rule: `SendPtr` / `from_raw_parts_mut` only inside `exec/parallel.rs`
+/// — raw-pointer parallel dispatch is confined to the one audited file.
+pub const RULE_RAW_CONFINEMENT: &str = "race-raw-confinement";
+/// Rule: inside `exec/parallel.rs`, every function using the raw tokens
+/// also calls `validate_disjoint` (the partition precondition check).
+pub const RULE_UNVALIDATED_DISPATCH: &str = "race-unvalidated-dispatch";
+/// Rule: a constant-evaluable range list (`[a..b, c..d, …]` with integer
+/// literals) must be sorted and pairwise disjoint.
+pub const RULE_CONST_OVERLAP: &str = "race-const-overlap";
+/// Rule: coordinator files acquire locks in the declared global order,
+/// and only acquire locks that appear in the declaration.
+pub const RULE_LOCK_ORDER: &str = "race-lock-order";
+
+/// All race rules, in report order.
+pub const RACE_RULES: [&str; 4] = [
+    RULE_RAW_CONFINEMENT,
+    RULE_UNVALIDATED_DISPATCH,
+    RULE_CONST_OVERLAP,
+    RULE_LOCK_ORDER,
+];
+
+/// Schema tag carried by every emitted concurrency report.
+pub const SCHEMA: &str = "nysx-race/v1";
+
+/// The one file allowed to hold raw-pointer parallel dispatch.
+const RAW_OK: &str = "src/exec/parallel.rs";
+
+/// The coordinator files under the lock-order rule.
+const LOCK_SCOPE: [&str; 5] = [
+    "src/coordinator/batcher.rs",
+    "src/coordinator/metrics.rs",
+    "src/coordinator/router.rs",
+    "src/coordinator/server.rs",
+    "src/coordinator/sharded.rs",
+];
+
+/// The declared global lock-acquisition order (DESIGN.md §9): a lock may
+/// only be acquired while holding locks of strictly *lower* rank. Every
+/// lock acquired in [`LOCK_SCOPE`] must appear here.
+const LOCK_ORDER: [(&str, &str); 2] = [
+    ("&self.state", "batcher queue state"),
+    ("&self.inner", "metrics registry"),
+];
+
+/// Tokens that mark a line as a lock acquisition in [`LOCK_SCOPE`].
+const LOCK_ACQUIRE: [&str; 2] = ["lock_or_poison(", ".lock("];
+
+/// Does this code line *use* raw dispatch power? A `SendPtr(` call that
+/// is not the tuple-struct declaration itself, or any
+/// `from_raw_parts_mut`.
+fn uses_raw(code: &str) -> bool {
+    if has_word(code, "from_raw_parts_mut") {
+        return true;
+    }
+    code.contains("SendPtr(") && !code.trim_start().starts_with("struct ")
+}
+
+/// Extract the integer-literal ranges (`12..34`, not `..=`) inside the
+/// first complete `[...]` group starting at or after `from`, as
+/// `(start, end)` pairs in textual order. Returns the scan position past
+/// the group, or `None` when no group opens.
+fn literal_ranges_in_group(code: &str, from: usize) -> Option<(Vec<(u64, u64)>, usize)> {
+    let bytes = code.as_bytes();
+    let open = bytes[from..].iter().position(|&b| b == b'[')? + from;
+    let mut depth = 0i32;
+    let mut close = open;
+    for (k, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'[' => depth += 1,
+            b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = k;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        return None; // group continues past this line — out of scope
+    }
+    let group = &code[open + 1..close];
+    let gb = group.as_bytes();
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < gb.len() {
+        // A digit glued to an identifier char or a dot (`x1..`, `1.2..`)
+        // is not the start of an integer-literal range.
+        let glued = i > 0 && {
+            let p = gb[i - 1];
+            p.is_ascii_alphanumeric() || p == b'_' || p == b'.'
+        };
+        if !gb[i].is_ascii_digit() || glued {
+            i += 1;
+            continue;
+        }
+        let ns = i;
+        while i < gb.len() && gb[i].is_ascii_digit() {
+            i += 1;
+        }
+        if !group[i..].starts_with("..") || group[i + 2..].starts_with('=') {
+            continue;
+        }
+        let es = i + 2;
+        let mut j = es;
+        while j < gb.len() && gb[j].is_ascii_digit() {
+            j += 1;
+        }
+        if j == es {
+            i = es;
+            continue; // `a..` open range or `a..name` — not constant
+        }
+        let (Ok(a), Ok(b)) = (group[ns..i].parse::<u64>(), group[es..j].parse::<u64>()) else {
+            i = j;
+            continue;
+        };
+        ranges.push((a, b));
+        i = j;
+    }
+    Some((ranges, close + 1))
+}
+
+/// Run every race rule over one file. Same contract as
+/// [`super::rules::check_file`]: `rel` is crate-root-relative, the
+/// returned pragma inventory holds only justified `allow(race-*)` sites.
+pub fn check_race_file(rel: &str, text: &str) -> (Vec<Finding>, Vec<PragmaSite>) {
+    let model = SourceModel::of(text);
+    let mut findings = Vec::new();
+    let mut pragmas = Vec::new();
+
+    for (ln, p) in &model.pragmas {
+        if !RACE_RULES.contains(&p.rule.as_str()) {
+            continue; // lint-tier pragmas belong to the lint report
+        }
+        if let Some(j) = &p.justification {
+            pragmas.push(PragmaSite {
+                rule: p.rule.clone(),
+                file: rel.to_string(),
+                line: ln + 1,
+                justification: j.clone(),
+            });
+        }
+        // An unjustified pragma is already a lint finding
+        // (pragma-missing-justification) and suppresses nothing here.
+    }
+
+    let mut emit = |rule: &str, ln: usize, msg: String| {
+        if !model.suppressed(rule, ln) {
+            findings.push(Finding {
+                rule: rule.to_string(),
+                file: rel.to_string(),
+                line: ln + 1,
+                message: msg,
+            });
+        }
+    };
+
+    let in_parallel = rel == RAW_OK;
+    let in_lock_scope = in_set(rel, &LOCK_SCOPE);
+
+    // Per-fn-segment state for the unvalidated-dispatch and lock-order
+    // rules. A "segment" runs from one line whose code holds the `fn`
+    // keyword to the next — coarse, but every fn in scope is short and
+    // the approximation only ever errs toward flagging.
+    let mut seg_raw_line: Option<usize> = None;
+    let mut seg_validated = false;
+    let mut seg_max_rank: Option<usize> = None;
+
+    let mut close_segment = |seg_raw_line: &mut Option<usize>,
+                             seg_validated: &mut bool,
+                             emit: &mut dyn FnMut(&str, usize, String)| {
+        if let (Some(raw_ln), false) = (*seg_raw_line, *seg_validated) {
+            emit(
+                RULE_UNVALIDATED_DISPATCH,
+                raw_ln,
+                "raw-pointer dispatch in a function that never calls validate_disjoint"
+                    .to_string(),
+            );
+        }
+        *seg_raw_line = None;
+        *seg_validated = false;
+    };
+
+    for (ln, line) in model.lines.iter().enumerate() {
+        let code = line.code.as_str();
+
+        if has_word(code, "fn") {
+            close_segment(&mut seg_raw_line, &mut seg_validated, &mut emit);
+            seg_max_rank = None;
+        }
+
+        if !in_parallel && (has_word(code, "SendPtr") || has_word(code, "from_raw_parts_mut")) {
+            emit(
+                RULE_RAW_CONFINEMENT,
+                ln,
+                "raw-pointer parallel dispatch outside exec/parallel.rs".to_string(),
+            );
+        }
+
+        if in_parallel {
+            if uses_raw(code) && seg_raw_line.is_none() {
+                seg_raw_line = Some(ln);
+            }
+            if code.contains("validate_disjoint(") {
+                seg_validated = true;
+            }
+        }
+
+        if !model.in_test[ln] {
+            let mut from = 0usize;
+            while let Some((ranges, next)) = literal_ranges_in_group(code, from) {
+                from = next;
+                if ranges.len() >= 2 {
+                    for w in ranges.windows(2) {
+                        let ((_, prev_end), (start, _)) = (w[0], w[1]);
+                        if start < prev_end {
+                            emit(
+                                RULE_CONST_OVERLAP,
+                                ln,
+                                format!(
+                                    "constant range list is not sorted+disjoint \
+                                     ({}..{} then {}..{})",
+                                    w[0].0, w[0].1, w[1].0, w[1].1
+                                ),
+                            );
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
+        if in_lock_scope && !model.in_test[ln] && LOCK_ACQUIRE.iter().any(|t| code.contains(t)) {
+            // Position-ordered lock tokens on this line.
+            let mut hits: Vec<(usize, usize)> = LOCK_ORDER
+                .iter()
+                .enumerate()
+                .filter_map(|(rank, (tok, _))| code.find(tok).map(|pos| (pos, rank)))
+                .collect();
+            hits.sort_unstable();
+            if hits.is_empty() {
+                emit(
+                    RULE_LOCK_ORDER,
+                    ln,
+                    "lock acquisition not in the declared lock-order table (DESIGN.md §9)"
+                        .to_string(),
+                );
+            }
+            for (_, rank) in hits {
+                if let Some(max) = seg_max_rank {
+                    if rank < max {
+                        let (tok, what) = LOCK_ORDER[rank];
+                        let (held_tok, held_what) = LOCK_ORDER[max];
+                        emit(
+                            RULE_LOCK_ORDER,
+                            ln,
+                            format!(
+                                "lock-order inversion: {tok} ({what}) acquired after \
+                                 {held_tok} ({held_what})"
+                            ),
+                        );
+                    }
+                }
+                seg_max_rank = Some(seg_max_rank.map_or(rank, |m| m.max(rank)));
+            }
+        }
+    }
+    close_segment(&mut seg_raw_line, &mut seg_validated, &mut emit);
+
+    (findings, pragmas)
+}
+
+/// The full race-analyzer result over one crate root — the same shape as
+/// `LintReport`, but over [`RACE_RULES`] and landing as
+/// `CONCURRENCY_REPORT.json`.
+#[derive(Debug)]
+pub struct RaceReport {
+    pub root: String,
+    pub files_scanned: usize,
+    /// Sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Sorted by (file, line, rule).
+    pub pragmas: Vec<PragmaSite>,
+}
+
+impl RaceReport {
+    /// Emit the `nysx-race/v1` document; every rule always appears under
+    /// `rules` (zero counts when silent).
+    pub fn to_json(&self) -> Json {
+        let mut per_rule: BTreeMap<&str, (usize, usize)> =
+            RACE_RULES.iter().map(|r| (*r, (0, 0))).collect();
+        for f in &self.findings {
+            per_rule.entry(f.rule.as_str()).or_insert((0, 0)).0 += 1;
+        }
+        for p in &self.pragmas {
+            per_rule.entry(p.rule.as_str()).or_insert((0, 0)).1 += 1;
+        }
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("root", Json::str(self.root.as_str())),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("total_findings", Json::num(self.findings.len() as f64)),
+            (
+                "rules",
+                Json::Obj(
+                    per_rule
+                        .into_iter()
+                        .map(|(rule, (nf, np))| {
+                            (
+                                rule.to_string(),
+                                Json::obj(vec![
+                                    ("findings", Json::num(nf as f64)),
+                                    ("pragmas", Json::num(np as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(|f| {
+                    Json::obj(vec![
+                        ("rule", Json::str(f.rule.as_str())),
+                        ("file", Json::str(f.file.as_str())),
+                        ("line", Json::num(f.line as f64)),
+                        ("message", Json::str(f.message.as_str())),
+                    ])
+                })),
+            ),
+            (
+                "pragmas",
+                Json::arr(self.pragmas.iter().map(|p| {
+                    Json::obj(vec![
+                        ("rule", Json::str(p.rule.as_str())),
+                        ("file", Json::str(p.file.as_str())),
+                        ("line", Json::num(p.line as f64)),
+                        ("justification", Json::str(p.justification.as_str())),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Human-readable rendering, mirroring `nysx lint`'s.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                f.file, f.line, f.rule, f.message
+            ));
+        }
+        if !self.pragmas.is_empty() {
+            out.push_str(&format!(
+                "{} suppression pragma(s) in force:\n",
+                self.pragmas.len()
+            ));
+            for p in &self.pragmas {
+                out.push_str(&format!(
+                    "  {}:{}: allow({}) — {}\n",
+                    p.file, p.line, p.rule, p.justification
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "nysx race: {} finding(s) over {} file(s)\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        out
+    }
+
+    /// Validate an emitted document against its own schema (same checks
+    /// as the lint report: tag, count consistency, rule-key presence).
+    fn validate(&self, text: &str) -> Result<Json, NysxError> {
+        let doc = Json::parse(text).map_err(|e| {
+            NysxError::Config(format!("emitted CONCURRENCY_REPORT.json does not parse: {e}"))
+        })?;
+        let schema_err = |what: &str| NysxError::Config(format!("CONCURRENCY_REPORT.json: {what}"));
+        if doc.get("schema").and_then(Json::as_str) != Some(SCHEMA) {
+            return Err(schema_err("wrong or missing schema tag"));
+        }
+        let total = doc
+            .get("total_findings")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| schema_err("missing total_findings"))?;
+        let listed = doc
+            .get("findings")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| schema_err("missing findings array"))?
+            .len();
+        let pragmas_listed = doc
+            .get("pragmas")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| schema_err("missing pragmas array"))?
+            .len();
+        let rules_obj = match doc.get("rules") {
+            Some(Json::Obj(m)) => m,
+            _ => return Err(schema_err("missing rules object")),
+        };
+        for rule in RACE_RULES {
+            if !rules_obj.contains_key(rule) {
+                return Err(schema_err("missing per-rule entry"));
+            }
+        }
+        let mut rule_findings = 0usize;
+        let mut rule_pragmas = 0usize;
+        for entry in rules_obj.values() {
+            rule_findings += entry
+                .get("findings")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| schema_err("per-rule entry missing findings count"))?;
+            rule_pragmas += entry
+                .get("pragmas")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| schema_err("per-rule entry missing pragmas count"))?;
+        }
+        if total != listed || total != rule_findings || total != self.findings.len() {
+            return Err(schema_err("finding counts disagree"));
+        }
+        if pragmas_listed != rule_pragmas || pragmas_listed != self.pragmas.len() {
+            return Err(schema_err("pragma counts disagree"));
+        }
+        Ok(doc)
+    }
+
+    /// Emit, round-trip-validate, and write `CONCURRENCY_REPORT.json` —
+    /// an ill-formed report never lands on disk.
+    pub fn write(&self, path: &Path) -> Result<(), NysxError> {
+        let doc = self.to_json();
+        let text = doc.to_string();
+        let back = self.validate(&text)?;
+        if back != doc {
+            return Err(NysxError::config(
+                "CONCURRENCY_REPORT.json round-trip drift: parsed document != emitted document",
+            ));
+        }
+        std::fs::write(path, text + "\n").map_err(NysxError::Io)
+    }
+}
+
+/// Run every race rule over `<root>/src` and `<root>/tests` and return
+/// the sorted report — the `nysx race` analogue of
+/// [`super::lint_crate`].
+pub fn race_crate(root: &Path) -> Result<RaceReport, NysxError> {
+    let src = root.join("src");
+    if !src.is_dir() {
+        return Err(NysxError::Config(format!(
+            "race-check root {} has no src/ directory (pass the crate root via --root)",
+            root.display()
+        )));
+    }
+    let mut files = Vec::new();
+    super::collect_rs(&src, &mut files)?;
+    let tests = root.join("tests");
+    if tests.is_dir() {
+        super::collect_rs(&tests, &mut files)?;
+    }
+    let mut findings = Vec::new();
+    let mut pragmas = Vec::new();
+    let files_scanned = files.len();
+    for path in files {
+        let text = std::fs::read_to_string(&path).map_err(NysxError::Io)?;
+        let rel = super::rel_path(root, &path);
+        let (f, p) = check_race_file(&rel, &text);
+        findings.extend(f);
+        pragmas.extend(p);
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    pragmas.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    Ok(RaceReport {
+        root: root.display().to_string(),
+        files_scanned,
+        findings,
+        pragmas,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(rel: &str, text: &str) -> Vec<String> {
+        check_race_file(rel, text).0.into_iter().map(|f| f.rule).collect()
+    }
+
+    // ------- race-raw-confinement -------
+
+    #[test]
+    fn raw_tokens_confined_to_parallel_rs() {
+        for src in [
+            "let base = SendPtr(data.as_mut_ptr());\n",
+            "let s = unsafe { std::slice::from_raw_parts_mut(p, n) }; // SAFETY: disjoint\n",
+        ] {
+            assert_eq!(
+                rules_fired("src/hdc/packed.rs", src),
+                vec![RULE_RAW_CONFINEMENT],
+                "{src}"
+            );
+            assert_eq!(
+                rules_fired("tests/exec_differential.rs", src),
+                vec![RULE_RAW_CONFINEMENT],
+                "tests are not exempt: {src}"
+            );
+        }
+        let validated = "fn f() { validate_disjoint(r, n); let b = SendPtr(p); }\n";
+        assert!(rules_fired("src/exec/parallel.rs", validated).is_empty());
+    }
+
+    #[test]
+    fn raw_confinement_ignores_strings_and_comments() {
+        let src = "// mentions SendPtr and from_raw_parts_mut\nlet s = \"SendPtr( from_raw_parts_mut\";\n";
+        assert!(rules_fired("src/hdc/packed.rs", src).is_empty());
+    }
+
+    // ------- race-unvalidated-dispatch -------
+
+    #[test]
+    fn unvalidated_dispatch_planted_and_clean() {
+        let planted = concat!(
+            "fn bad(p: *mut u8, n: usize) {\n",
+            "    let s = unsafe { std::slice::from_raw_parts_mut(p, n) }; // SAFETY: no\n",
+            "    drop(s);\n",
+            "}\n",
+        );
+        assert_eq!(
+            rules_fired("src/exec/parallel.rs", planted),
+            vec![RULE_UNVALIDATED_DISPATCH]
+        );
+        let clean = concat!(
+            "fn good(data: &mut [u8], ranges: &[Range<usize>]) {\n",
+            "    validate_disjoint(ranges, data.len());\n",
+            "    let base = SendPtr(data.as_mut_ptr());\n",
+            "    let s = unsafe { std::slice::from_raw_parts_mut(base.0, 1) }; // SAFETY: ok\n",
+            "}\n",
+        );
+        assert!(rules_fired("src/exec/parallel.rs", clean).is_empty());
+        // The tuple-struct declaration itself is not a "use".
+        let decl = "struct SendPtr<T>(*mut T);\n";
+        assert!(rules_fired("src/exec/parallel.rs", decl).is_empty());
+    }
+
+    #[test]
+    fn unvalidated_dispatch_is_per_function() {
+        let src = concat!(
+            "fn good(r: &[Range<usize>], n: usize, p: *mut u8) {\n",
+            "    validate_disjoint(r, n);\n",
+            "}\n",
+            "fn bad(p: *mut u8) {\n",
+            "    let b = SendPtr(p);\n",
+            "}\n",
+        );
+        let (findings, _) = check_race_file("src/exec/parallel.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, RULE_UNVALIDATED_DISPATCH);
+        assert_eq!(findings[0].line, 5, "anchored at the raw use in `bad`");
+    }
+
+    // ------- race-const-overlap -------
+
+    #[test]
+    fn const_overlap_planted_fixture_detected() {
+        let src = "for_each_range_mut(&pool, &mut data, &[0..6, 5..10], |_, _| {});\n";
+        assert_eq!(rules_fired("src/sparse/schedule.rs", src), vec![RULE_CONST_OVERLAP]);
+        // Unsorted lists break validate_disjoint the same way.
+        let unsorted = "let r = [5..10, 0..5];\n";
+        assert_eq!(rules_fired("src/sparse/schedule.rs", unsorted), vec![RULE_CONST_OVERLAP]);
+    }
+
+    #[test]
+    fn const_overlap_allows_sorted_disjoint_and_non_constant() {
+        for src in [
+            "let r = [0..5, 5..10, 12..20];\n",
+            "let r = [0..n, n..len];\n",     // not constant-evaluable
+            "let one = v[3..10].to_vec();\n", // single range
+            "let r = [0..=5, 5..=10];\n",     // inclusive — out of scope
+            "let pair = (0..6, 5..10);\n",    // no bracket group
+        ] {
+            assert!(rules_fired("src/sparse/schedule.rs", src).is_empty(), "{src}");
+        }
+    }
+
+    #[test]
+    fn const_overlap_exempts_test_regions_and_respects_pragmas() {
+        let in_test = concat!(
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { probe(&[0..6, 5..10]); }\n",
+            "}\n",
+        );
+        assert!(rules_fired("src/exec/parallel.rs", in_test).is_empty());
+        let pragma =
+            "// nysx-race note below\n// nysx-lint: allow(race-const-overlap): doc example of a rejected input\nlet r = [0..6, 5..10];\n";
+        assert!(rules_fired("src/sparse/schedule.rs", pragma).is_empty());
+    }
+
+    #[test]
+    fn literal_range_parsing() {
+        let (r, _) = literal_ranges_in_group("&[0..6, 5..10]", 0).unwrap();
+        assert_eq!(r, vec![(0, 6), (5, 10)]);
+        let (r, _) = literal_ranges_in_group("[10..20]", 0).unwrap();
+        assert_eq!(r, vec![(10, 20)]);
+        let (r, _) = literal_ranges_in_group("[a..4, 4..b, 1..=3]", 0).unwrap();
+        assert!(r.is_empty(), "{r:?}");
+        assert!(literal_ranges_in_group("no group here", 0).is_none());
+        // Version-like dotted numbers are not ranges.
+        let (r, _) = literal_ranges_in_group("[1.2..3.4]", 0).unwrap();
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    // ------- race-lock-order -------
+
+    #[test]
+    fn lock_order_inversion_detected() {
+        let src = concat!(
+            "fn snapshot(&self) {\n",
+            "    let inner = lock_or_poison(&self.inner);\n",
+            "    let state = lock_or_poison(&self.state);\n",
+            "    drop((inner, state));\n",
+            "}\n",
+        );
+        assert_eq!(rules_fired("src/coordinator/metrics.rs", src), vec![RULE_LOCK_ORDER]);
+    }
+
+    #[test]
+    fn lock_order_declared_order_is_clean() {
+        let src = concat!(
+            "fn flush(&self) {\n",
+            "    let state = lock_or_poison(&self.state);\n",
+            "    let inner = lock_or_poison(&self.inner);\n",
+            "    drop((state, inner));\n",
+            "}\n",
+            "fn other(&self) {\n",
+            "    let inner = lock_or_poison(&self.inner);\n",
+            "    drop(inner);\n",
+            "}\n",
+        );
+        assert!(rules_fired("src/coordinator/batcher.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_order_resets_per_function() {
+        // inner in one fn, state in the next — no inversion across fns.
+        let src = concat!(
+            "fn a(&self) { let g = lock_or_poison(&self.inner); drop(g); }\n",
+            "fn b(&self) { let g = lock_or_poison(&self.state); drop(g); }\n",
+        );
+        assert!(rules_fired("src/coordinator/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn undeclared_lock_is_flagged_in_scope_only() {
+        let src = "fn f(&self) { let g = self.queue.lock(); drop(g); }\n";
+        assert_eq!(rules_fired("src/coordinator/router.rs", src), vec![RULE_LOCK_ORDER]);
+        assert!(
+            rules_fired("src/exec/pool.rs", src).is_empty(),
+            "exec latches are out of the coordinator lock-order scope"
+        );
+    }
+
+    #[test]
+    fn lock_order_pragma_suppression_and_inventory() {
+        let src = "// nysx-lint: allow(race-lock-order): startup-only path, no other lock held\nfn f(&self) { let g = self.boot.lock(); drop(g); }\n";
+        let (findings, pragmas) = check_race_file("src/coordinator/server.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(pragmas.len(), 1);
+        assert_eq!(pragmas[0].rule, RULE_LOCK_ORDER);
+        // Lint-tier pragmas never leak into the race inventory.
+        let lint_pragma = "// nysx-lint: allow(determinism): oracle map\nlet x = 1;\n";
+        let (_, p) = check_race_file("src/kernel/h.rs", lint_pragma);
+        assert!(p.is_empty());
+    }
+
+    // ------- report -------
+
+    fn sample() -> RaceReport {
+        RaceReport {
+            root: "rust".to_string(),
+            files_scanned: 4,
+            findings: vec![Finding {
+                rule: RULE_CONST_OVERLAP.to_string(),
+                file: "src/sparse/schedule.rs".to_string(),
+                line: 9,
+                message: "constant range list is not sorted+disjoint".to_string(),
+            }],
+            pragmas: vec![PragmaSite {
+                rule: RULE_LOCK_ORDER.to_string(),
+                file: "src/coordinator/server.rs".to_string(),
+                line: 3,
+                justification: "startup-only".to_string(),
+            }],
+        }
+    }
+
+    #[test]
+    fn report_shape_counts_and_roundtrip() {
+        let report = sample();
+        let doc = report.to_json();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(doc.get("total_findings").and_then(Json::as_usize), Some(1));
+        for rule in RACE_RULES {
+            assert!(doc.get("rules").and_then(|r| r.get(rule)).is_some(), "rules.{rule}");
+        }
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        report.validate(&text).expect("validates");
+        let rendered = report.render_text();
+        assert!(rendered.contains("nysx race: 1 finding(s) over 4 file(s)"), "{rendered}");
+    }
+
+    #[test]
+    fn report_validation_rejects_tampering() {
+        let report = sample();
+        let good = report.to_json().to_string();
+        let bad = good.replace("\"total_findings\":1", "\"total_findings\":3");
+        assert!(matches!(report.validate(&bad), Err(NysxError::Config(_))));
+        let bad = good.replace(SCHEMA, "nysx-race/v0");
+        assert!(matches!(report.validate(&bad), Err(NysxError::Config(_))));
+    }
+
+    #[test]
+    fn report_write_lands_validated_artifact() {
+        let report = sample();
+        let dir = std::env::temp_dir().join(format!("nysx-race-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("CONCURRENCY_REPORT.json");
+        report.write(&path).expect("write");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            Json::parse(&text).unwrap().get("schema").and_then(Json::as_str),
+            Some(SCHEMA)
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn race_crate_scans_a_synthetic_tree() {
+        let dir = std::env::temp_dir().join(format!("nysx-race-tree-{}", std::process::id()));
+        let src = dir.join("src").join("coordinator");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(
+            src.join("router.rs"),
+            concat!(
+                "fn f(&self) {\n",
+                "    let inner = lock_or_poison(&self.inner);\n",
+                "    let state = lock_or_poison(&self.state);\n",
+                "    drop((inner, state));\n",
+                "}\n",
+            ),
+        )
+        .unwrap();
+        std::fs::write(dir.join("src").join("lib.rs"), "pub fn ok() {}\n").unwrap();
+        let report = race_crate(&dir).expect("race runs");
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, RULE_LOCK_ORDER);
+        assert_eq!(report.findings[0].file, "src/coordinator/router.rs");
+        assert_eq!(report.findings[0].line, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -20,16 +20,20 @@ pub const RULE_DETERMINISM: &str = "determinism";
 pub const RULE_FLOAT_ORDERING: &str = "float-ordering";
 /// Rule: raw `std::thread` spawns only in `exec/` and `coordinator/`.
 pub const RULE_RAW_SPAWN: &str = "raw-spawn";
+/// Rule: no panicking channel endpoints (`.send(..)`/`.recv(..)` chained
+/// into `.unwrap()`/`.expect(..)`) in the exec + coordinator tier.
+pub const RULE_CHANNEL_PANIC: &str = "channel-panic";
 /// Rule: an `allow(...)` pragma must state its justification.
 pub const RULE_PRAGMA_JUSTIFICATION: &str = "pragma-missing-justification";
 
 /// All rules, in report order.
-pub const RULES: [&str; 6] = [
+pub const RULES: [&str; 7] = [
     RULE_UNSAFE,
     RULE_NO_PANIC,
     RULE_DETERMINISM,
     RULE_FLOAT_ORDERING,
     RULE_RAW_SPAWN,
+    RULE_CHANNEL_PANIC,
     RULE_PRAGMA_JUSTIFICATION,
 ];
 
@@ -50,7 +54,11 @@ const KERNEL_SET: [&str; 5] = [
 /// Paths allowed to spawn OS threads directly.
 const SPAWN_OK: [&str; 2] = ["src/exec/", "src/coordinator/"];
 
-fn in_set(rel: &str, prefixes: &[&str]) -> bool {
+/// Paths where a panicking channel endpoint takes a worker or serving
+/// lane down instead of degrading: the exec runtime and the coordinator.
+const CHANNEL_SET: [&str; 2] = ["src/coordinator/", "src/exec/"];
+
+pub(super) fn in_set(rel: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| rel == *p || rel.starts_with(p))
 }
 
@@ -61,7 +69,7 @@ fn is_word_char(c: char) -> bool {
 /// Word-bounded token search: `tok` occurs in `code` with no identifier
 /// character hugging either end (so `spawn` never matches `respawned`,
 /// and `HashMap` never matches `NoHashMapHere`).
-fn has_word(code: &str, tok: &str) -> bool {
+pub(super) fn has_word(code: &str, tok: &str) -> bool {
     let mut from = 0;
     while let Some(off) = code[from..].find(tok) {
         let start = from + off;
@@ -74,6 +82,59 @@ fn has_word(code: &str, tok: &str) -> bool {
         from = end;
     }
     false
+}
+
+/// Find `channel-panic` sites: a `.send(` / `.recv(` / `.recv_timeout(`
+/// call whose matching `)` is followed — possibly across lines — by
+/// `.unwrap()` or `.expect(`. The per-line code parts are concatenated
+/// first so a multi-line builder chain (`.send(Job { … })⏎.expect(…)`)
+/// is seen whole. Returns 0-based line indices of the panicking
+/// continuation (where a suppression pragma must sit).
+fn channel_panic_sites(model: &SourceModel) -> Vec<usize> {
+    let mut flat = String::new();
+    let mut line_of: Vec<usize> = Vec::new(); // flat byte index -> line
+    for (ln, line) in model.lines.iter().enumerate() {
+        for c in line.code.chars() {
+            flat.push(c);
+            for _ in 0..c.len_utf8() {
+                line_of.push(ln);
+            }
+        }
+        flat.push('\n');
+        line_of.push(ln);
+    }
+    let bytes = flat.as_bytes();
+    let mut sites = Vec::new();
+    for tok in [".send(", ".recv(", ".recv_timeout("] {
+        let mut from = 0usize;
+        while let Some(off) = flat[from..].find(tok) {
+            let open = from + off + tok.len() - 1; // index of the '('
+            from = open + 1;
+            let mut depth = 1i32;
+            let mut j = open + 1;
+            while j < bytes.len() && depth > 0 {
+                match bytes[j] {
+                    b'(' => depth += 1,
+                    b')' => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if depth != 0 {
+                continue; // unbalanced (truncated file) — nothing to chain onto
+            }
+            let mut k = j;
+            while k < bytes.len() && bytes[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            if flat[k..].starts_with(".unwrap()") || flat[k..].starts_with(".expect(") {
+                sites.push(line_of[k]);
+            }
+        }
+    }
+    sites.sort_unstable();
+    sites.dedup();
+    sites
 }
 
 /// Run every rule over one file. `rel` is the crate-root-relative path
@@ -171,6 +232,21 @@ pub fn check_file(rel: &str, text: &str) -> (Vec<Finding>, Vec<PragmaSite>) {
                 RULE_RAW_SPAWN,
                 ln,
                 "raw std::thread spawn outside exec/ and coordinator/".to_string(),
+            );
+        }
+    }
+
+    if in_set(rel, &CHANNEL_SET) {
+        for ln in channel_panic_sites(&model) {
+            if model.in_test[ln] {
+                continue;
+            }
+            emit(
+                RULE_CHANNEL_PANIC,
+                ln,
+                "panicking channel endpoint (send/recv chained into unwrap/expect); \
+                 handle the Err"
+                    .to_string(),
             );
         }
     }
@@ -366,6 +442,69 @@ mod tests {
     fn raw_spawn_pragma_suppression() {
         let src = "// nysx-lint: allow(raw-spawn): load-harness client threads, not serving lanes\nlet h = std::thread::spawn(f);\n";
         assert!(rules_fired("src/bench/serving.rs", src).is_empty());
+    }
+
+    // ------- channel-panic -------
+
+    #[test]
+    fn channel_panic_fires_in_exec_and_coordinator_only() {
+        let src = "fn f(tx: &Sender<u32>) { tx.send(1).unwrap(); }\n";
+        assert_eq!(rules_fired("src/exec/pool.rs", src), vec![RULE_CHANNEL_PANIC]);
+        // coordinator/ is also in the panic-free serving set, so the
+        // same line trips both rules there.
+        let fired = rules_fired("src/coordinator/worker.rs", src);
+        assert!(fired.contains(&RULE_CHANNEL_PANIC.to_string()), "{fired:?}");
+        assert!(rules_fired("src/bench/serving.rs", src).is_empty(), "outside the set");
+    }
+
+    #[test]
+    fn channel_panic_recv_variants_fire() {
+        for src in [
+            "fn f(rx: &Receiver<u32>) -> u32 { rx.recv().unwrap() }\n",
+            "fn f(rx: &Receiver<u32>) -> u32 { rx.recv().expect(\"closed\") }\n",
+            "fn f(rx: &Receiver<u32>) -> u32 { rx.recv_timeout(d).unwrap() }\n",
+        ] {
+            assert_eq!(rules_fired("src/exec/mod.rs", src), vec![RULE_CHANNEL_PANIC], "{src}");
+        }
+    }
+
+    #[test]
+    fn channel_panic_sees_multiline_chains() {
+        let src = concat!(
+            "fn f(tx: &Sender<Job>) {\n",
+            "    tx.send(Job {\n",
+            "        lane,\n",
+            "        latch: latch.clone(),\n",
+            "    })\n",
+            "    .expect(\"worker gone\");\n",
+            "}\n",
+        );
+        let (findings, _) = check_file("src/exec/pool.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, RULE_CHANNEL_PANIC);
+        assert_eq!(findings[0].line, 6, "anchored at the panicking continuation");
+    }
+
+    #[test]
+    fn channel_panic_allows_handled_endpoints() {
+        let src = concat!(
+            "fn f(tx: &Sender<u32>) {\n",
+            "    if tx.send(1).is_err() { return; }\n",
+            "    while let Ok(v) = rx.recv() { drop(v); }\n",
+            "    match rx.recv_timeout(d) { Ok(v) => use_it(v), Err(_) => {} }\n",
+            "    let _ = tx.send(2);\n",
+            "}\n",
+        );
+        assert!(rules_fired("src/exec/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn channel_panic_skips_tests_and_respects_pragmas() {
+        let in_test =
+            "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { tx.send(1).unwrap(); }\n}\n";
+        assert!(rules_fired("src/exec/pool.rs", in_test).is_empty());
+        let pragma = "// nysx-lint: allow(channel-panic): init-time only, receiver proven alive\ntx.send(1).unwrap();\n";
+        assert!(rules_fired("src/exec/pool.rs", pragma).is_empty());
     }
 
     // ------- pragma inventory -------

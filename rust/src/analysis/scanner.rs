@@ -96,7 +96,15 @@ pub fn split_lines(text: &str) -> Vec<Line> {
             }
             State::Str => {
                 if c == '\\' {
-                    i += 2; // skip the escaped char, whatever it is
+                    // Skip the escaped char — except an escaped newline
+                    // (the line-continuation form), whose '\n' must
+                    // still reach the line splitter above or every
+                    // later line of the file shifts by one.
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
                 } else if c == '"' {
                     code.push('"');
                     state = State::Normal;
@@ -398,6 +406,61 @@ mod tests {
         let m = SourceModel::of("let p = r#\"contains .unwrap() and \"quotes\"\"#;\nnext();\n");
         assert!(!m.lines[0].code.contains("unwrap"), "{:?}", m.lines[0]);
         assert!(m.lines[1].code.contains("next();"));
+    }
+
+    #[test]
+    fn hash_guarded_raw_strings_hide_comment_markers_and_unsafe() {
+        let m = SourceModel::of(concat!(
+            "let q = r#\"// not a comment, unsafe not code\"#; live();\n",
+            "let r2 = r##\"has \"# inside\"##; tail();\n",
+        ));
+        assert!(!m.lines[0].code.contains("unsafe"), "{:?}", m.lines[0]);
+        assert!(
+            m.lines[0].comment.is_empty(),
+            "// inside a raw string is not a comment: {:?}",
+            m.lines[0]
+        );
+        assert!(m.lines[0].code.contains("live();"));
+        // A lone `"#` inside an `r##` string does not terminate it.
+        assert!(!m.lines[1].code.contains("inside"), "{:?}", m.lines[1]);
+        assert!(m.lines[1].code.contains("tail();"));
+    }
+
+    #[test]
+    fn multiline_raw_string_keeps_line_alignment() {
+        let m = SourceModel::of(concat!(
+            "let s = r#\"first // line\n",
+            "unsafe second\n",
+            "\"#; after();\n",
+        ));
+        assert_eq!(m.lines.len(), 3, "{:?}", m.lines);
+        assert!(!m.lines[1].code.contains("unsafe"), "{:?}", m.lines[1]);
+        assert!(m.lines[2].code.contains("after();"));
+    }
+
+    #[test]
+    fn block_comments_nested_three_deep() {
+        let m = SourceModel::of(concat!(
+            "/* 1 /* 2 /* 3 unsafe */ still2 */ still1 */ code();\n",
+            "/* a /* b /* c */\n",
+            "*/ */ tail();\n",
+        ));
+        assert_eq!(m.lines[0].code.trim(), "code();", "{:?}", m.lines[0]);
+        assert!(m.lines[0].comment.contains("unsafe"));
+        assert!(m.lines[1].code.trim().is_empty(), "{:?}", m.lines[1]);
+        assert!(m.lines[2].code.contains("tail();"), "{:?}", m.lines[2]);
+    }
+
+    #[test]
+    fn escaped_newline_in_string_does_not_lose_a_line() {
+        let m = SourceModel::of(concat!(
+            "let s = \"one \\\n",
+            "two\"; done();\n",
+            "after();\n",
+        ));
+        assert_eq!(m.lines.len(), 3, "{:?}", m.lines);
+        assert!(m.lines[1].code.contains("done();"), "{:?}", m.lines[1]);
+        assert!(m.lines[2].code.contains("after();"), "{:?}", m.lines[2]);
     }
 
     #[test]

@@ -1,0 +1,493 @@
+//! The exec shadow checker — dynamic validation of the partition
+//! invariants that `exec/parallel.rs` otherwise takes on proof
+//! (DESIGN.md §9).
+//!
+//! Every unsafe dispatch in the runtime rests on one claim: within a
+//! parallel region, no element is written by more than one part. The
+//! static side (`validate_disjoint`, the partitioner property tests,
+//! `nysx race`) proves it for contiguous ranges; [`ScatterMut`] writes
+//! are only a `# Safety` contract. Under `NYSX_EXEC_CHECK=1` this module
+//! turns that contract into a checked one: every parallel region opens
+//! an **epoch** in a process-wide claim table, every part's write
+//! interval (or scattered index) is recorded as a claim against that
+//! epoch, and two claims that touch the same element abort with a typed
+//! [`ClaimViolation`] report *before* the aliasing write happens. A
+//! claim arriving after its region retired is a [`cross-epoch
+//! leak`](ClaimViolation::CrossEpochLeak) — a write outlives the borrow
+//! that justified it.
+//!
+//! Claims are keyed by **part**, not by thread: two parts writing one
+//! element are flagged even when a small pool happens to run them
+//! sequentially on one lane, because that overlap makes the output
+//! depend on the schedule — the exact bug class the bit-identical
+//! contract bans. This is why the checker catches schedule-dependent
+//! races at *any* thread count, including 1.
+//!
+//! # Schedule perturbation
+//!
+//! The same env gate carries a seeded schedule-perturbation harness:
+//! with `NYSX_EXEC_SEED=<nonzero>` (or [`force_perturb_seed`] in tests),
+//! [`Pool::run`] executes each lane's parts in a seeded permutation of
+//! their static order instead of ascending. Results must not move — the
+//! differential suites assert bit-identity across seeds, which
+//! empirically pins the claim that part execution order is immaterial.
+//!
+//! # Cost when off
+//!
+//! Everything is behind [`enabled`] / [`perturb_seed`], each one cached
+//! env read plus a thread-local test override — a branch per region (not
+//! per element) on the hot paths.
+//!
+//! [`ScatterMut`]: super::ScatterMut
+//! [`Pool::run`]: super::Pool::run
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+
+/// Env var enabling the shadow checker (`1` = on).
+pub const ENV_CHECK: &str = "NYSX_EXEC_CHECK";
+/// Env var carrying the schedule-perturbation seed (nonzero = on).
+pub const ENV_SEED: &str = "NYSX_EXEC_SEED";
+
+thread_local! {
+    /// Per-thread test override for [`enabled`]: `None` defers to the
+    /// environment. Thread-local so concurrently running tests cannot
+    /// perturb each other through a process global.
+    static FORCED_CHECK: Cell<Option<bool>> = const { Cell::new(None) };
+    /// Per-thread test override for [`perturb_seed`] (`Some(0)` forces
+    /// perturbation *off* even when `NYSX_EXEC_SEED` is set).
+    static FORCED_SEED: Cell<Option<u64>> = const { Cell::new(None) };
+    /// The part index currently executing on this thread (claims from
+    /// [`ScatterMut`](super::ScatterMut) writes are attributed to it);
+    /// [`CALLER_PART`] outside any pool part.
+    static CURRENT_PART: Cell<usize> = const { Cell::new(CALLER_PART) };
+}
+
+/// Claim owner for writes issued outside any pool part (single-threaded
+/// setup code touching a buffer before/after a region).
+pub const CALLER_PART: usize = usize::MAX;
+
+fn env_enabled() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| std::env::var(ENV_CHECK).as_deref() == Ok("1"))
+}
+
+fn env_seed() -> u64 {
+    static CACHE: OnceLock<u64> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var(ENV_SEED)
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Is shadow checking live on this thread? (`NYSX_EXEC_CHECK=1`, or a
+/// [`force_enabled`] guard in scope.)
+#[inline]
+pub fn enabled() -> bool {
+    FORCED_CHECK.with(|c| c.get()).unwrap_or_else(env_enabled)
+}
+
+/// The active schedule-perturbation seed (0 = off): a [`force_perturb_seed`]
+/// guard on this thread wins, then `NYSX_EXEC_SEED`.
+#[inline]
+pub fn perturb_seed() -> u64 {
+    FORCED_SEED.with(|c| c.get()).unwrap_or_else(env_seed)
+}
+
+/// RAII override of [`enabled`] for the current thread; restores the
+/// previous override on drop (including during unwinding, which is what
+/// `#[should_panic]` probes rely on).
+pub struct CheckGuard {
+    prev: Option<bool>,
+}
+
+impl Drop for CheckGuard {
+    fn drop(&mut self) {
+        FORCED_CHECK.with(|c| c.set(self.prev));
+    }
+}
+
+/// Force [`enabled`] on or off for this thread until the guard drops.
+#[must_use]
+pub fn force_enabled(on: bool) -> CheckGuard {
+    let prev = FORCED_CHECK.with(|c| c.replace(Some(on)));
+    CheckGuard { prev }
+}
+
+/// RAII override of [`perturb_seed`] for the current thread.
+pub struct PerturbGuard {
+    prev: Option<u64>,
+}
+
+impl Drop for PerturbGuard {
+    fn drop(&mut self) {
+        FORCED_SEED.with(|c| c.set(self.prev));
+    }
+}
+
+/// Force the perturbation seed for this thread until the guard drops
+/// (0 forces perturbation off, shadowing `NYSX_EXEC_SEED`).
+#[must_use]
+pub fn force_perturb_seed(seed: u64) -> PerturbGuard {
+    let prev = FORCED_SEED.with(|c| c.replace(Some(seed)));
+    PerturbGuard { prev }
+}
+
+/// Attribute claims on this thread to part `p` until the guard drops
+/// (the pool wraps every part invocation in one when checking is on).
+#[must_use]
+pub fn enter_part(p: usize) -> PartGuard {
+    let prev = CURRENT_PART.with(|c| c.replace(p));
+    PartGuard { prev }
+}
+
+/// The part claims on this thread are currently attributed to.
+#[inline]
+pub fn current_part() -> usize {
+    CURRENT_PART.with(|c| c.get())
+}
+
+/// Restores the previous part attribution on drop (panic-safe, so a
+/// panicking part cannot misattribute later claims on a pooled thread).
+pub struct PartGuard {
+    prev: usize,
+}
+
+impl Drop for PartGuard {
+    fn drop(&mut self) {
+        CURRENT_PART.with(|c| c.set(self.prev));
+    }
+}
+
+/// A detected violation of the write-disjointness contract — the typed
+/// report the checker aborts with.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClaimViolation {
+    /// Two parts claimed intersecting write intervals inside one epoch.
+    OverlappingClaim {
+        epoch: u64,
+        /// The earlier claim: (part, start, end).
+        held: (usize, usize, usize),
+        /// The incoming claim: (part, start, end).
+        incoming: (usize, usize, usize),
+    },
+    /// A claim arrived for an epoch that already retired — a write
+    /// outliving the parallel region that justified it.
+    CrossEpochLeak { epoch: u64, part: usize, index: usize },
+}
+
+impl fmt::Display for ClaimViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let part_name = |p: usize| {
+            if p == CALLER_PART {
+                "caller".to_string()
+            } else {
+                format!("part {p}")
+            }
+        };
+        match self {
+            ClaimViolation::OverlappingClaim { epoch, held, incoming } => write!(
+                f,
+                "overlapping write claim in epoch {epoch}: {} claims {}..{} but {} already \
+                 claims {}..{} — parts must write disjoint elements",
+                part_name(incoming.0),
+                incoming.1,
+                incoming.2,
+                part_name(held.0),
+                held.1,
+                held.2,
+            ),
+            ClaimViolation::CrossEpochLeak { epoch, part, index } => write!(
+                f,
+                "cross-epoch claim leak: {} wrote index {index} against retired epoch {epoch} \
+                 — the write outlived its parallel region",
+                part_name(*part),
+            ),
+        }
+    }
+}
+
+/// Claims held by one live region: the contiguous intervals recorded up
+/// front by `for_each_range_mut`, plus scattered per-index claims from
+/// `ScatterMut` writes.
+#[derive(Debug, Default)]
+struct RegionClaims {
+    /// (start, end, part), in claim order.
+    ranges: Vec<(usize, usize, usize)>,
+    /// index → owning part.
+    indices: BTreeMap<usize, usize>,
+}
+
+#[derive(Debug)]
+struct TableState {
+    next_epoch: u64,
+    live: BTreeMap<u64, RegionClaims>,
+}
+
+static TABLE: Mutex<TableState> = Mutex::new(TableState {
+    next_epoch: 1,
+    live: BTreeMap::new(),
+});
+
+fn table() -> std::sync::MutexGuard<'static, TableState> {
+    // A panic while holding the lock is impossible (no user code runs
+    // under it), but stay poison-proof like the coordinator locks.
+    TABLE.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// A live parallel region in the claim table; claims are validated
+/// against its epoch, and dropping it retires the epoch (claims against
+/// it afterwards are cross-epoch leaks).
+#[derive(Debug)]
+pub struct Region {
+    epoch: u64,
+}
+
+impl Region {
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+impl Drop for Region {
+    fn drop(&mut self) {
+        table().live.remove(&self.epoch);
+    }
+}
+
+/// Open a new epoch for one parallel region over one buffer.
+pub fn begin_region() -> Region {
+    let mut t = table();
+    let epoch = t.next_epoch;
+    t.next_epoch += 1;
+    t.live.insert(epoch, RegionClaims::default());
+    Region { epoch }
+}
+
+/// Record `part`'s claim to the write interval `start..end` in `epoch`.
+/// Empty intervals claim nothing. Errors on intersection with any other
+/// claim in the epoch, or if the epoch already retired.
+pub fn claim_range(
+    epoch: u64,
+    part: usize,
+    start: usize,
+    end: usize,
+) -> Result<(), ClaimViolation> {
+    if start >= end {
+        return Ok(());
+    }
+    let mut t = table();
+    let Some(region) = t.live.get_mut(&epoch) else {
+        return Err(ClaimViolation::CrossEpochLeak { epoch, part, index: start });
+    };
+    for &(s, e, p) in &region.ranges {
+        if start < e && s < end {
+            return Err(ClaimViolation::OverlappingClaim {
+                epoch,
+                held: (p, s, e),
+                incoming: (part, start, end),
+            });
+        }
+    }
+    if let Some((&i, &p)) = region.indices.range(start..end).next() {
+        return Err(ClaimViolation::OverlappingClaim {
+            epoch,
+            held: (p, i, i + 1),
+            incoming: (part, start, end),
+        });
+    }
+    region.ranges.push((start, end, part));
+    Ok(())
+}
+
+/// Record `part`'s claim to the single element `index` in `epoch` (a
+/// `ScatterMut` write). Re-claiming an element the *same* part already
+/// owns is fine (write-then-update patterns); a different owner is an
+/// overlap, and a retired epoch is a leak.
+pub fn claim_index(epoch: u64, part: usize, index: usize) -> Result<(), ClaimViolation> {
+    let mut t = table();
+    let Some(region) = t.live.get_mut(&epoch) else {
+        return Err(ClaimViolation::CrossEpochLeak { epoch, part, index });
+    };
+    for &(s, e, p) in &region.ranges {
+        if s <= index && index < e && p != part {
+            return Err(ClaimViolation::OverlappingClaim {
+                epoch,
+                held: (p, s, e),
+                incoming: (part, index, index + 1),
+            });
+        }
+    }
+    match region.indices.get(&index) {
+        Some(&p) if p != part => Err(ClaimViolation::OverlappingClaim {
+            epoch,
+            held: (p, index, index + 1),
+            incoming: (part, index, index + 1),
+        }),
+        Some(_) => Ok(()),
+        None => {
+            region.indices.insert(index, part);
+            Ok(())
+        }
+    }
+}
+
+/// Abort with the typed report — the checker's failure mode. A data race
+/// about to happen is not a degradable condition; the panic carries the
+/// full [`ClaimViolation`] rendering for the test/CI log.
+#[cold]
+pub fn abort(v: ClaimViolation) -> ! {
+    panic!("exec check: {v}")
+}
+
+/// Seeded Fisher–Yates permutation of one lane's part list (xorshift64,
+/// fully deterministic across platforms): the schedule-perturbation
+/// harness. Seeds differ per lane so lanes do not share an order.
+pub fn permute_parts(seed: u64, lane: usize, parts: &mut [usize]) {
+    let mut s = seed ^ (lane as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    if s == 0 {
+        s = 0x2545_F491_4F6C_DD1D;
+    }
+    for i in (1..parts.len()).rev() {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        let j = (s % (i as u64 + 1)) as usize;
+        parts.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlapping_range_claims_are_typed_errors() {
+        let region = begin_region();
+        claim_range(region.epoch(), 0, 0, 6).expect("first claim");
+        let err = claim_range(region.epoch(), 1, 5, 10).expect_err("overlap");
+        assert_eq!(
+            err,
+            ClaimViolation::OverlappingClaim {
+                epoch: region.epoch(),
+                held: (0, 0, 6),
+                incoming: (1, 5, 10),
+            }
+        );
+        assert!(err.to_string().contains("overlapping write claim"), "{err}");
+        // Disjoint claims are fine, in any order.
+        claim_range(region.epoch(), 2, 6, 9).expect("disjoint");
+        claim_range(region.epoch(), 3, 20, 25).expect("disjoint");
+        claim_range(region.epoch(), 4, 10, 20).expect("disjoint, out of order");
+    }
+
+    #[test]
+    fn empty_range_claims_nothing() {
+        let region = begin_region();
+        claim_range(region.epoch(), 0, 5, 5).expect("empty");
+        claim_range(region.epoch(), 1, 0, 10).expect("whole buffer still free");
+    }
+
+    #[test]
+    fn index_claims_conflict_only_across_parts() {
+        let region = begin_region();
+        claim_index(region.epoch(), 3, 7).expect("first write");
+        claim_index(region.epoch(), 3, 7).expect("same part re-writes (write+update)");
+        let err = claim_index(region.epoch(), 4, 7).expect_err("cross-part overlap");
+        assert!(matches!(err, ClaimViolation::OverlappingClaim { .. }), "{err:?}");
+        // Index claims also collide with range claims of other parts.
+        claim_range(region.epoch(), 0, 100, 110).expect("range");
+        let err = claim_index(region.epoch(), 1, 105).expect_err("index inside range");
+        assert!(matches!(err, ClaimViolation::OverlappingClaim { .. }), "{err:?}");
+        claim_index(region.epoch(), 0, 105).expect("owning part may scatter into its range");
+        let err = claim_range(region.epoch(), 5, 6, 9).expect_err("range over index 7");
+        assert!(matches!(err, ClaimViolation::OverlappingClaim { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn retired_epoch_is_a_cross_epoch_leak() {
+        let region = begin_region();
+        let epoch = region.epoch();
+        claim_index(epoch, 0, 3).expect("live");
+        drop(region);
+        let err = claim_index(epoch, 0, 4).expect_err("epoch retired");
+        assert_eq!(err, ClaimViolation::CrossEpochLeak { epoch, part: 0, index: 4 });
+        assert!(err.to_string().contains("cross-epoch claim leak"), "{err}");
+        let err = claim_range(epoch, 1, 0, 2).expect_err("range against retired epoch");
+        assert!(matches!(err, ClaimViolation::CrossEpochLeak { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn regions_are_independent_epochs() {
+        let a = begin_region();
+        let b = begin_region();
+        assert_ne!(a.epoch(), b.epoch());
+        // The same interval may be claimed once per region.
+        claim_range(a.epoch(), 0, 0, 10).expect("region a");
+        claim_range(b.epoch(), 0, 0, 10).expect("region b");
+    }
+
+    #[test]
+    fn guards_are_nestable_and_restore() {
+        assert_eq!(current_part(), CALLER_PART);
+        {
+            let _outer = enter_part(2);
+            assert_eq!(current_part(), 2);
+            {
+                let _inner = enter_part(5);
+                assert_eq!(current_part(), 5);
+            }
+            assert_eq!(current_part(), 2);
+        }
+        assert_eq!(current_part(), CALLER_PART);
+
+        let ambient = enabled();
+        {
+            let _on = force_enabled(true);
+            assert!(enabled());
+            {
+                let _off = force_enabled(false);
+                assert!(!enabled());
+            }
+            assert!(enabled());
+        }
+        assert_eq!(enabled(), ambient);
+
+        let ambient = perturb_seed();
+        {
+            let _g = force_perturb_seed(9);
+            assert_eq!(perturb_seed(), 9);
+        }
+        assert_eq!(perturb_seed(), ambient);
+    }
+
+    #[test]
+    fn permute_parts_is_a_deterministic_permutation() {
+        let base: Vec<usize> = (0..23).map(|p| p * 2).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        permute_parts(7, 1, &mut a);
+        permute_parts(7, 1, &mut b);
+        assert_eq!(a, b, "same seed+lane → same order");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, base, "still a permutation");
+        let mut c = base.clone();
+        permute_parts(8, 1, &mut c);
+        assert_ne!(a, c, "different seed → different order (23! ≫ collisions)");
+        let mut d = base.clone();
+        permute_parts(7, 2, &mut d);
+        assert_ne!(a, d, "different lane → different order");
+        // Degenerate sizes survive.
+        let mut empty: [usize; 0] = [];
+        permute_parts(7, 0, &mut empty);
+        let mut one = [4usize];
+        permute_parts(7, 0, &mut one);
+        assert_eq!(one, [4]);
+    }
+}

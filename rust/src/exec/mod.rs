@@ -22,6 +22,11 @@
 //! * [`parallel`] — deterministic helpers ([`for_each_range_mut`],
 //!   [`map_parts`], [`map_reduce`], [`ScatterMut`]) that only hand
 //!   lanes disjoint writes and fold reductions in fixed part order.
+//! * [`check`] — the shadow-state overlap checker (`NYSX_EXEC_CHECK=1`)
+//!   and seeded schedule-perturbation harness (`NYSX_EXEC_SEED`):
+//!   per-part write claims in an epoch-tagged claim table, typed abort
+//!   on overlap or cross-epoch leak, zero cost when off (see
+//!   `DESIGN.md` §9).
 //!
 //! # The determinism contract
 //!
@@ -33,6 +38,7 @@
 //!
 //! [`ScheduleTable`]: crate::sparse::ScheduleTable
 
+pub mod check;
 pub mod parallel;
 pub mod partition;
 pub mod pool;

@@ -11,6 +11,7 @@
 use std::marker::PhantomData;
 use std::ops::Range;
 
+use super::check;
 use super::pool::Pool;
 
 /// Raw-pointer wrapper so a base address can be captured by a `Sync`
@@ -53,6 +54,22 @@ where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
+    // Shadow-claim pass (NYSX_EXEC_CHECK=1, DESIGN.md §9): every part's
+    // write interval is recorded in the epoch-tagged claim table up
+    // front, so an overlap aborts with the typed report before any
+    // aliasing write can happen — checked independently of (and ahead
+    // of) the static assertion below.
+    let _region = if check::enabled() {
+        let region = check::begin_region();
+        for (part, r) in ranges.iter().enumerate() {
+            if let Err(v) = check::claim_range(region.epoch(), part, r.start, r.end) {
+                check::abort(v);
+            }
+        }
+        Some(region)
+    } else {
+        None
+    };
     validate_disjoint(ranges, data.len());
     let base = SendPtr(data.as_mut_ptr());
     pool.run(ranges.len(), &|part| {
@@ -104,6 +121,11 @@ where
 pub struct ScatterMut<'a, T> {
     ptr: *mut T,
     len: usize,
+    /// Live claim-table region while shadow checking (`None` when off):
+    /// every `write`/`update` records an index claim attributed to the
+    /// executing part, and dropping the handle retires the epoch — a
+    /// write after that is a cross-epoch leak (DESIGN.md §9).
+    check: Option<check::Region>,
     _borrow: PhantomData<&'a mut [T]>,
 }
 
@@ -122,7 +144,19 @@ impl<'a, T> ScatterMut<'a, T> {
         Self {
             ptr: data.as_mut_ptr(),
             len: data.len(),
+            check: check::enabled().then(check::begin_region),
             _borrow: PhantomData,
+        }
+    }
+
+    /// Record the shadow claim for element `i` (no-op when checking is
+    /// off); aborts with the typed report on a cross-part overlap.
+    #[inline]
+    fn claim(&self, i: usize) {
+        if let Some(region) = &self.check {
+            if let Err(v) = check::claim_index(region.epoch(), check::current_part(), i) {
+                check::abort(v);
+            }
         }
     }
 
@@ -145,6 +179,7 @@ impl<'a, T> ScatterMut<'a, T> {
     #[inline]
     pub unsafe fn write(&self, i: usize, value: T) {
         assert!(i < self.len, "scatter write out of bounds: {i} >= {}", self.len);
+        self.claim(i);
         // SAFETY: `i` is in bounds (asserted above); exclusivity of the
         // slot is the caller's `# Safety` obligation.
         unsafe { *self.ptr.add(i) = value };
@@ -159,6 +194,7 @@ impl<'a, T> ScatterMut<'a, T> {
     #[inline]
     pub unsafe fn update(&self, i: usize, f: impl FnOnce(&mut T)) {
         assert!(i < self.len, "scatter update out of bounds: {i} >= {}", self.len);
+        self.claim(i);
         // SAFETY: `i` is in bounds (asserted above); exclusivity of the
         // slot is the caller's `# Safety` obligation.
         f(unsafe { &mut *self.ptr.add(i) });
@@ -189,11 +225,85 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "sorted, disjoint")]
     fn overlapping_ranges_rejected() {
+        // With shadow checking off, the static `validate_disjoint`
+        // assertion fires; under NYSX_EXEC_CHECK=1 the claim table gets
+        // there first with its typed report. Either way the call must
+        // abort before any write.
+        let pool = Pool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut data = vec![0u8; 10];
+            for_each_range_mut(&pool, &mut data, &[0..6, 5..10], |_, _| {});
+        }));
+        let payload = result.expect_err("overlap must abort");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("sorted, disjoint") || msg.contains("overlapping write claim"),
+            "unexpected panic message: {msg}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping write claim")]
+    fn exec_check_catches_overlapping_for_each_range_mut() {
+        // The shadow checker (forced on for this thread) sees the
+        // deliberately overlapping partition at claim time and aborts
+        // with the typed report — ahead of the static assertion.
+        let _check = check::force_enabled(true);
         let pool = Pool::new(2);
         let mut data = vec![0u8; 10];
         for_each_range_mut(&pool, &mut data, &[0..6, 5..10], |_, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping write claim")]
+    fn exec_check_catches_cross_part_scatter_overlap() {
+        // Two parts scatter-write the same element. A 1-thread pool runs
+        // them sequentially on this thread (no UB is ever executed), yet
+        // the claim table still flags the overlap, because claims are
+        // keyed by part — the output would depend on part order, which
+        // the bit-identity contract bans.
+        let _check = check::force_enabled(true);
+        let pool = Pool::new(1);
+        let mut data = vec![0u64; 8];
+        let scatter = ScatterMut::new(&mut data);
+        pool.run(2, &|p| {
+            // SAFETY: parts write disjoint elements only for p == 0; the
+            // deliberate p == 1 collision on index 0 is what the shadow
+            // checker must catch before the write happens (and the pool
+            // is single-threaded, so no concurrent aliasing occurs).
+            unsafe { scatter.write(0, p as u64) };
+        });
+    }
+
+    #[test]
+    fn exec_check_passes_disjoint_work_and_retires_epochs() {
+        let _check = check::force_enabled(true);
+        let pool = Pool::new(1);
+        for _ in 0..3 {
+            let mut data = vec![0u32; 40];
+            let ranges = super::super::partition::even_ranges(40, 7);
+            for_each_range_mut(&pool, &mut data, &ranges, |part, slice| {
+                for x in slice.iter_mut() {
+                    *x = part as u32 + 1;
+                }
+            });
+            assert!(data.iter().all(|&x| x != 0));
+            let scatter = ScatterMut::new(&mut data);
+            pool.run(4, &|p| {
+                let mut i = p;
+                while i < 40 {
+                    // SAFETY: strided sets with distinct residues are
+                    // disjoint.
+                    unsafe { scatter.write(i, p as u32) };
+                    i += 4;
+                }
+            });
+        }
     }
 
     #[test]

@@ -53,6 +53,8 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
+use super::check;
+
 thread_local! {
     /// True while this thread is executing a pool lane (worker threads
     /// always; the caller thread during its inline lane 0).
@@ -121,6 +123,41 @@ struct WaitGuard<'a> {
 impl Drop for WaitGuard<'_> {
     fn drop(&mut self) {
         self.latch.wait();
+    }
+}
+
+/// Invoke one part, attributing shadow-checker claims to it while it
+/// runs (a guard, so a panicking part cannot misattribute later claims
+/// on a pooled thread). When checking is off this is a plain call.
+#[inline]
+fn call_part(f: &(dyn Fn(usize) + Sync), p: usize) {
+    if check::enabled() {
+        let _part = check::enter_part(p);
+        f(p);
+    } else {
+        f(p);
+    }
+}
+
+/// Run one lane's share of a `parts`-sized job: parts `lane, lane +
+/// lanes, …` in ascending order — or, under an active schedule
+/// perturbation seed (`NYSX_EXEC_SEED` / a test guard), in a seeded
+/// permutation of that list. Results may not depend on the order:
+/// every caller makes part writes disjoint and reductions fixed-order,
+/// and the differential suites pin bit-identity across seeds.
+fn run_lane(f: &(dyn Fn(usize) + Sync), lane: usize, lanes: usize, parts: usize, perturb: u64) {
+    if perturb == 0 {
+        let mut p = lane;
+        while p < parts {
+            call_part(f, p);
+            p += lanes;
+        }
+    } else {
+        let mut order: Vec<usize> = (lane..parts).step_by(lanes).collect();
+        check::permute_parts(perturb, lane, &mut order);
+        for p in order {
+            call_part(f, p);
+        }
     }
 }
 
@@ -196,21 +233,17 @@ impl Pool {
         if parts == 0 {
             return;
         }
+        // Read the perturbation seed once, on the caller, so every lane
+        // of this run (worker threads included) permutes against the
+        // same seed even when it came from a caller-thread test guard.
+        let perturb = check::perturb_seed();
         let lanes = parts.min(self.threads);
         if lanes <= 1 || IN_POOL_LANE.with(|c| c.get()) {
-            for p in 0..parts {
-                f(p);
-            }
+            run_lane(f, 0, 1, parts, perturb);
             return;
         }
 
-        let lane_fn = move |lane: usize| {
-            let mut p = lane;
-            while p < parts {
-                f(p);
-                p += lanes;
-            }
-        };
+        let lane_fn = move |lane: usize| run_lane(f, lane, lanes, parts, perturb);
         let task: &(dyn Fn(usize) + Sync) = &lane_fn;
         // SAFETY: `WaitGuard` (dropped below, on the normal path AND on
         // unwind) blocks until every worker counted down the latch, and
@@ -221,21 +254,34 @@ impl Pool {
         };
 
         let latch = Arc::new(Latch::new(lanes - 1));
+        // A worker's channel can only be closed if its thread died (it
+        // never exits while the pool holds the sender). Losing a lane
+        // must not lose its parts or hang the latch: count the lane
+        // done and run its share inline on the caller after lane 0, so
+        // the exactly-once contract survives even that degraded state.
+        let mut orphaned: Vec<usize> = Vec::new();
         for lane in 1..lanes {
-            self.senders[lane - 1]
-                .send(Job {
-                    task,
-                    lane,
-                    latch: latch.clone(),
-                })
-                .expect("exec worker exited while pool alive");
+            let job = Job {
+                task,
+                lane,
+                latch: latch.clone(),
+            };
+            if self.senders[lane - 1].send(job).is_err() {
+                latch.lane_done(false);
+                orphaned.push(lane);
+            }
         }
 
         let guard = WaitGuard { latch: &latch };
         // The caller's lane counts as a pool lane too: nested plain
         // entry points inside `f` must execute inline.
         let was_in_lane = IN_POOL_LANE.with(|c| c.replace(true));
-        let lane0 = catch_unwind(AssertUnwindSafe(|| lane_fn(0)));
+        let lane0 = catch_unwind(AssertUnwindSafe(|| {
+            lane_fn(0);
+            for &lane in &orphaned {
+                lane_fn(lane);
+            }
+        }));
         IN_POOL_LANE.with(|c| c.set(was_in_lane));
         drop(guard); // blocks until all worker lanes are done
 
@@ -386,10 +432,48 @@ mod tests {
 
     #[test]
     fn single_thread_pool_is_strictly_sequential_in_order() {
+        // Pin the perturbation off: this test asserts the *schedule*,
+        // which an ambient NYSX_EXEC_SEED would legitimately permute.
+        let _seed = check::force_perturb_seed(0);
         let pool = Pool::new(1);
         let order = Mutex::new(Vec::new());
         pool.run(5, &|p| order.lock().unwrap().push(p));
         assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn perturbed_schedules_still_run_every_part_exactly_once() {
+        for seed in [1u64, 0xDEAD_BEEF_u64] {
+            let _seed = check::force_perturb_seed(seed);
+            for threads in [1usize, 3] {
+                let pool = Pool::new(threads);
+                let hits: Vec<AtomicUsize> =
+                    (0..13).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(13, &|p| {
+                    hits[p].fetch_add(1, Ordering::Relaxed);
+                });
+                for (p, h) in hits.iter().enumerate() {
+                    assert_eq!(
+                        h.load(Ordering::Relaxed),
+                        1,
+                        "part {p} (seed={seed}, threads={threads})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn perturbed_single_lane_schedule_is_a_permutation_not_identity() {
+        let _seed = check::force_perturb_seed(0x5EED);
+        let pool = Pool::new(1);
+        let order = Mutex::new(Vec::new());
+        pool.run(16, &|p| order.lock().unwrap().push(p));
+        let got = order.lock().unwrap().clone();
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<_>>(), "must cover all parts");
+        assert_ne!(got, sorted, "seeded schedule should actually permute");
     }
 
     #[test]

@@ -633,46 +633,68 @@ impl PackedAccumulator {
     /// per-bit reference by [`Self::minus_count`]-based tests and the i8
     /// differential suite.
     pub fn finalize(self) -> PackedPrototypes {
-        let words = self.words;
+        let (dim, words) = (self.dim, self.words);
         let prototypes = self
             .planes
             .iter()
             .zip(&self.counts)
-            .map(|(planes, &n)| {
-                let mut p = PackedHypervector::zeros(self.dim);
-                if words == 0 || n == 0 {
-                    return p; // no samples: every sum is 0 → all +1
-                }
-                let nplanes = planes.len() / words;
-                let k = n / 2 + 1; // bit set ⇔ m ≥ k ⇔ 2m > n
-                let kbits = (usize::BITS - k.leading_zeros()) as usize;
-                let top = nplanes.max(kbits);
-                for (wi, out) in p.words.iter_mut().enumerate() {
-                    let mut gt = 0u64;
-                    let mut eq = u64::MAX;
-                    for pl in (0..top).rev() {
-                        let m = if pl < nplanes { planes[pl * words + wi] } else { 0 };
-                        let kb = if pl < usize::BITS as usize && (k >> pl) & 1 == 1 {
-                            u64::MAX
-                        } else {
-                            0
-                        };
-                        gt |= eq & m & !kb;
-                        eq &= !(m ^ kb);
-                    }
-                    *out = gt | eq; // m > K or m == K
-                }
-                // Tail coordinates have m = 0 < K, so their bits are
-                // already clear; mask anyway to keep the invariant
-                // obvious.
-                p.mask_tail();
-                p
-            })
+            .map(|(planes, &n)| Self::finalize_class(planes, n, dim, words))
             .collect();
         PackedPrototypes {
             prototypes,
             counts: self.counts,
         }
+    }
+
+    /// [`Self::finalize`] across an exec pool: one part per class (the
+    /// per-class threshold walks are fully independent), results
+    /// collected in class order — bit-identical to the sequential
+    /// finalize at any thread count. Like every `*_with_pool` entry
+    /// point, an explicit pool always partitions (very large C is
+    /// exactly when callers reach for this).
+    pub fn finalize_with_pool(self, pool: &Pool) -> PackedPrototypes {
+        let (dim, words) = (self.dim, self.words);
+        let prototypes = exec::map_parts(pool, self.num_classes, |class| {
+            Self::finalize_class(&self.planes[class], self.counts[class], dim, words)
+        });
+        PackedPrototypes {
+            prototypes,
+            counts: self.counts,
+        }
+    }
+
+    /// Threshold one class's counter planes into its packed prototype —
+    /// the (gt, eq) MSB→LSB bit-sliced walk shared by [`Self::finalize`]
+    /// and [`Self::finalize_with_pool`].
+    fn finalize_class(planes: &[u64], n: usize, dim: usize, words: usize) -> PackedHypervector {
+        let mut p = PackedHypervector::zeros(dim);
+        if words == 0 || n == 0 {
+            return p; // no samples: every sum is 0 → all +1
+        }
+        let nplanes = planes.len() / words;
+        let k = n / 2 + 1; // bit set ⇔ m ≥ k ⇔ 2m > n
+        let kbits = (usize::BITS - k.leading_zeros()) as usize;
+        let top = nplanes.max(kbits);
+        for (wi, out) in p.words.iter_mut().enumerate() {
+            let mut gt = 0u64;
+            let mut eq = u64::MAX;
+            for pl in (0..top).rev() {
+                let m = if pl < nplanes { planes[pl * words + wi] } else { 0 };
+                let kb = if pl < usize::BITS as usize && (k >> pl) & 1 == 1 {
+                    u64::MAX
+                } else {
+                    0
+                };
+                gt |= eq & m & !kb;
+                eq &= !(m ^ kb);
+            }
+            *out = gt | eq; // m > K or m == K
+        }
+        // Tail coordinates have m = 0 < K, so their bits are
+        // already clear; mask anyway to keep the invariant
+        // obvious.
+        p.mask_tail();
+        p
     }
 }
 

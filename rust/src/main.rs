@@ -11,6 +11,7 @@
 //!   eval    [--scale 1.0] [--ablation]      # all tables & figures
 //!   bench serving [--shards 1,2,4] [--qps 100,300,1000] [--out BENCH_SERVING.json]
 //!   lint    [--root DIR] [--json] [--out LINT_REPORT.json]   # exit 2 on findings
+//!   race    [--root DIR] [--json] [--out CONCURRENCY_REPORT.json]  # exit 2 on findings
 //!   roofline
 //!
 //! Every subcommand accepts `--threads N` to size the `nysx::exec`
@@ -55,6 +56,7 @@ fn main() {
         "eval" => cmd_eval(&args),
         "bench" => cmd_bench(&args),
         "lint" => cmd_lint(&args),
+        "race" => cmd_race(&args),
         "roofline" => {
             println!("{}", render_roofline());
             Ok(())
@@ -62,7 +64,7 @@ fn main() {
         _ => {
             println!(
                 "nysx — Nyström-HDC graph classification (NysX reproduction)\n\n\
-                 USAGE: nysx <train|infer|serve|eval|bench|lint|roofline> [flags]\n\
+                 USAGE: nysx <train|infer|serve|eval|bench|lint|race|roofline> [flags]\n\
                  common flags: --threads N (exec pool size; default NYSX_THREADS or all cores)\n\
                  datasets: {}",
                 TU_SPECS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
@@ -401,6 +403,28 @@ fn cmd_lint(args: &Args) -> Result<(), NysxError> {
     } else {
         Err(NysxError::Config(format!(
             "{} lint finding(s)",
+            report.findings.len()
+        )))
+    }
+}
+
+fn cmd_race(args: &Args) -> Result<(), NysxError> {
+    let root = args.get_or("root", ".").to_string();
+    let report = nysx::analysis::race_crate(Path::new(&root))?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if let Some(out) = args.get("out") {
+        report.write(Path::new(out))?;
+        eprintln!("wrote {out}");
+    }
+    if report.findings.is_empty() {
+        Ok(())
+    } else {
+        Err(NysxError::Config(format!(
+            "{} race finding(s)",
             report.findings.len()
         )))
     }

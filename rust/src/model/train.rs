@@ -171,7 +171,7 @@ pub fn train_with_pool(dataset: &GraphDataset, config: &ModelConfig, pool: &Pool
     for lane_acc in &lane_accs {
         acc.merge(lane_acc);
     }
-    let packed = acc.finalize();
+    let packed = acc.finalize_with_pool(pool);
     model.prototypes = packed.to_reference();
     model.packed_prototypes = packed;
     model

@@ -202,6 +202,78 @@ fn gram_parallel_equals_sequential() {
     }
 }
 
+/// Finalize: the class-parallel threshold walk (`finalize_with_pool`)
+/// is bit-identical to the sequential finalize across thread counts and
+/// boundary dims — including classes that received zero samples.
+#[test]
+fn finalize_parallel_equals_sequential() {
+    let pools = pools();
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    for &d in &BOUNDARY_DIMS {
+        let classes = 7;
+        let mut acc = PackedAccumulator::new(classes, d);
+        for i in 0..33 {
+            let hv = nysx::hdc::Hypervector::random(d, &mut rng);
+            // Classes 4..7 stay empty: the n == 0 all-(+1) path is live.
+            acc.add(i % 4, &hv.pack());
+        }
+        let want = acc.clone().finalize();
+        for pool in &pools {
+            let got = acc.clone().finalize_with_pool(pool);
+            assert_eq!(got, want, "finalize drift d={d} t={}", pool.threads());
+        }
+    }
+}
+
+/// One representative output per parallel-dispatch shape: contiguous
+/// ranges (NEE projection), scatter writes (scheduled SpMV), and
+/// class-parallel map (finalize).
+fn kernel_outputs(pool: &Pool) -> (Vec<f32>, Vec<f64>, nysx::hdc::PackedPrototypes) {
+    let mut rng = Xoshiro256::seed_from_u64(31);
+    let hz = random_psd(7, 5, &mut rng);
+    let proj = NystromProjection::build_with_pool(pool, &hz, 65, &mut rng);
+    let csr = random_csr(40, 30, 0.3, &mut rng);
+    let x: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+    let sched = ScheduleTable::build(&csr, 4, SchedulePolicy::NnzGrouped);
+    let mut y = vec![0.0f64; 40];
+    sched.run_spmv_with_pool(pool, &csr, &x, &mut y);
+    let mut acc = PackedAccumulator::new(5, 65);
+    for i in 0..21 {
+        let hv = nysx::hdc::Hypervector::random(65, &mut rng);
+        acc.add(i % 5, &hv.pack());
+    }
+    (proj.data, y, acc.finalize_with_pool(pool))
+}
+
+/// The shadow checker plus seeded schedule perturbation
+/// (`NYSX_EXEC_CHECK=1` semantics, forced on for this thread) must not
+/// change a single bit: part execution *order* is permuted per lane and
+/// per seed, every write claim is recorded and checked, and the outputs
+/// still equal the unperturbed, unchecked baseline at every thread
+/// count — the dynamic half of the §9 acceptance pin.
+#[test]
+fn perturbed_schedules_with_shadow_check_stay_bit_identical() {
+    use nysx::exec::check;
+    let pools = pools();
+    let baseline = {
+        let _seed = check::force_perturb_seed(0);
+        kernel_outputs(&pools[0])
+    };
+    for seed in [1u64, 2, 3] {
+        let _check = check::force_enabled(true);
+        let _seed = check::force_perturb_seed(seed);
+        for pool in &pools {
+            let got = kernel_outputs(pool);
+            assert_eq!(
+                got,
+                baseline,
+                "kernel drift under perturbation seed={seed} t={}",
+                pool.threads()
+            );
+        }
+    }
+}
+
 /// Training + the batched classify path end to end: models trained at
 /// 1/2/7 threads are identical, and every engine's single AND batched
 /// predictions (and packed HVs) match each other and the i8 oracle —

@@ -46,7 +46,8 @@ fn pragma_inventory_is_justified_and_bounded() {
             p.rule
         );
         assert!(
-            rules::RULES.contains(&p.rule.as_str()),
+            rules::RULES.contains(&p.rule.as_str())
+                || nysx::analysis::RACE_RULES.contains(&p.rule.as_str()),
             "{}:{} allows unknown rule {:?}",
             p.file,
             p.line,

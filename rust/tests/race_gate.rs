@@ -1,0 +1,141 @@
+//! The race gate: `nysx race` over this crate's own `src/` and `tests/`
+//! must report **zero findings** (DESIGN.md §9). The concurrency
+//! invariants the analyzer pins — raw-pointer dispatch confined to
+//! `exec/parallel.rs` and always paired with `validate_disjoint`,
+//! constant range lists sorted+disjoint, coordinator locks taken in the
+//! declared order — are thereby frozen at their current state: a
+//! regression fails this test (and the CI race leg) with the exact
+//! file:line, and the only way past is a justified per-site pragma.
+
+use std::path::PathBuf;
+
+use nysx::analysis::race::{self, RULE_CONST_OVERLAP, RULE_LOCK_ORDER, RULE_RAW_CONFINEMENT};
+use nysx::analysis::{race_crate, RACE_RULES};
+use nysx::util::json::Json;
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// A scratch crate root under the system temp dir, torn down on drop.
+fn scratch_tree(tag: &str, rel: &str, text: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nysx-race-{tag}-{}", std::process::id()));
+    let path = dir.join(rel);
+    std::fs::create_dir_all(path.parent().expect("rel has a parent")).expect("temp tree");
+    std::fs::write(&path, text).expect("write fixture");
+    dir
+}
+
+/// The tree is clean: zero race findings over the whole crate.
+#[test]
+fn tree_has_zero_race_findings() {
+    let report = race_crate(&crate_root()).expect("race check runs");
+    assert!(
+        report.findings.is_empty(),
+        "race findings in the tree:\n{}",
+        report.render_text()
+    );
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously small scan ({} files) — did the walk break?",
+        report.files_scanned
+    );
+}
+
+/// The artifact pipeline end to end on the real tree: write validates
+/// (schema tag, count consistency) and lands a parseable
+/// `CONCURRENCY_REPORT.json` whose per-rule keys cover every race rule.
+#[test]
+fn artifact_round_trips_on_the_real_tree() {
+    let report = race_crate(&crate_root()).expect("race check runs");
+    let dir = std::env::temp_dir().join(format!("nysx-race-gate-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("CONCURRENCY_REPORT.json");
+    report.write(&path).expect("artifact validates and writes");
+    let text = std::fs::read_to_string(&path).expect("artifact readable");
+    let doc = Json::parse(&text).expect("artifact parses");
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some(race::SCHEMA));
+    assert_eq!(
+        doc.get("total_findings").and_then(Json::as_usize),
+        Some(report.findings.len())
+    );
+    assert_eq!(
+        doc.get("files_scanned").and_then(Json::as_usize),
+        Some(report.files_scanned)
+    );
+    for rule in RACE_RULES {
+        assert!(
+            doc.get("rules").and_then(|r| r.get(rule)).is_some(),
+            "artifact missing rules.{rule}"
+        );
+    }
+    assert_eq!(
+        doc.get("pragmas").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(report.pragmas.len())
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The gate bites on data races by construction: a constant range list
+/// with overlapping intervals is found at the right file and line, and
+/// the same tree passes once the site carries a justified pragma.
+#[test]
+fn gate_detects_planted_overlap_and_pragma_clears_it() {
+    let bad = "pub fn f(data: &mut [u8]) { dispatch(data, &[0..6, 5..10]); }\n";
+    let dir = scratch_tree("overlap", "src/kernel/sched.rs", bad);
+    let report = race_crate(&dir).expect("race check runs");
+    assert_eq!(report.findings.len(), 1, "{}", report.render_text());
+    assert_eq!(report.findings[0].rule, RULE_CONST_OVERLAP);
+    assert_eq!(report.findings[0].file, "src/kernel/sched.rs");
+    assert_eq!(report.findings[0].line, 1);
+
+    let fixed = format!(
+        "// nysx-lint: allow(race-const-overlap): scratch fixture, ranges are read-only\n{bad}"
+    );
+    std::fs::write(dir.join("src/kernel/sched.rs"), fixed).expect("write");
+    let report = race_crate(&dir).expect("race check runs");
+    assert!(report.findings.is_empty(), "{}", report.render_text());
+    assert_eq!(report.pragmas.len(), 1);
+    assert_eq!(report.pragmas[0].rule, RULE_CONST_OVERLAP);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The gate bites on deadlocks by construction: acquiring the metrics
+/// registry lock and then the batcher queue lock inverts the declared
+/// order and is flagged at the second acquisition.
+#[test]
+fn gate_detects_planted_lock_order_inversion() {
+    let bad = concat!(
+        "fn drain(&self) {\n",
+        "    let m = lock_or_poison(&self.inner);\n",
+        "    let q = lock_or_poison(&self.state);\n",
+        "    drop((m, q));\n",
+        "}\n",
+    );
+    let dir = scratch_tree("lockord", "src/coordinator/batcher.rs", bad);
+    let report = race_crate(&dir).expect("race check runs");
+    assert_eq!(report.findings.len(), 1, "{}", report.render_text());
+    assert_eq!(report.findings[0].rule, RULE_LOCK_ORDER);
+    assert_eq!(report.findings[0].file, "src/coordinator/batcher.rs");
+    assert_eq!(report.findings[0].line, 3);
+    assert!(
+        report.findings[0].message.contains("inversion"),
+        "{}",
+        report.findings[0].message
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Raw-pointer dispatch anywhere but `exec/parallel.rs` is confined out
+/// of existence: a planted `SendPtr` in a kernel file is flagged.
+#[test]
+fn gate_confines_raw_dispatch_to_parallel_rs() {
+    let bad = "pub fn push(base: *mut u8) { let p = SendPtr(base); drop(p); }\n";
+    let dir = scratch_tree("rawconf", "src/kernel/fast.rs", bad);
+    let report = race_crate(&dir).expect("race check runs");
+    assert_eq!(report.findings.len(), 1, "{}", report.render_text());
+    assert_eq!(report.findings[0].rule, RULE_RAW_CONFINEMENT);
+    assert_eq!(report.findings[0].file, "src/kernel/fast.rs");
+    assert_eq!(report.findings[0].line, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
