@@ -289,7 +289,7 @@ fn xla_cross_check(trained: &mut TrainedPipeline) {
                         .map(|&v| if v < 0.0 { -1i8 } else { 1 })
                         .collect(),
                 };
-                let xla_pred = model.prototypes.classify(&hv);
+                let xla_pred = model.reference_prototypes().classify(&hv);
                 let (native_pred, _) = engine.classify_kernel_vector(&c);
                 if xla_pred == native_pred {
                     agree += 1;

@@ -212,8 +212,9 @@ fn main() {
 
     // --- SCE: prototype matching, i8 vs packed ---
     let q8 = packed_hv.unpack();
+    let i8_protos = model.reference_prototypes();
     results.push(bench("sce/classify-i8", budget, || {
-        black_box(model.prototypes.classify(black_box(&q8)));
+        black_box(i8_protos.classify(black_box(&q8)));
     }));
     results.push(bench("sce/classify-packed", budget, || {
         black_box(model.packed_prototypes.classify(black_box(&packed_hv)));

@@ -43,12 +43,13 @@ const PANIC_SET: [&str; 4] = ["src/api/", "src/coordinator/", "src/model/io.rs",
 
 /// The deterministic kernel set: modules whose outputs must be
 /// bit-identical across runs and thread counts.
-const KERNEL_SET: [&str; 5] = [
+const KERNEL_SET: [&str; 6] = [
     "src/hdc/",
     "src/nystrom/",
     "src/sparse/",
     "src/exec/partition.rs",
     "src/kernel/",
+    "src/succinct/",
 ];
 
 /// Paths allowed to spawn OS threads directly.
@@ -369,6 +370,7 @@ mod tests {
             "src/sparse/csr.rs",
             "src/exec/partition.rs",
             "src/kernel/histogram.rs",
+            "src/succinct/phast.rs",
         ] {
             assert_eq!(rules_fired(rel, src), vec![RULE_DETERMINISM], "{rel}");
         }

@@ -306,9 +306,18 @@ impl TrainedPipeline {
         super::accuracy(&mut self.engine, split).unwrap_or(None)
     }
 
-    /// Persist the model artifact (current v2 format).
+    /// Persist the model artifact (current v3 format: Elias–Fano
+    /// codebook and row-offset sections, DESIGN.md §10). [`Pipeline::load`]
+    /// reads v1, v2 and v3 artifacts alike.
     pub fn save(&self, path: &Path) -> Result<(), NysxError> {
         model_io::save_file(&self.model, path).map_err(NysxError::Io)
+    }
+
+    /// The model's resident-memory accounting (paper Table 2 terms:
+    /// codebooks, histograms dense and CSR, projection, prototypes) —
+    /// the per-model view behind `bench memory`'s measured artifact.
+    pub fn memory_report(&self) -> crate::model::MemoryReport {
+        self.model.memory_report()
     }
 
     /// Start the serving coordinator over this model. The workers'

@@ -64,7 +64,7 @@ pub fn pagerank(graph: &Graph, iters: usize) -> Vec<f64> {
                 continue;
             }
             let share = d * pr[v] / degrees[v];
-            for k in graph.adj.row_ptr[v]..graph.adj.row_ptr[v + 1] {
+            for k in graph.adj.row_range(v) {
                 next[graph.adj.col_idx[k] as usize] += share;
             }
         }
@@ -103,7 +103,7 @@ impl GraphHdModel {
         let mut edge_hv = PackedHypervector::zeros(self.dim);
         let mut any_edge = false;
         for u in 0..n {
-            for k in graph.adj.row_ptr[u]..graph.adj.row_ptr[u + 1] {
+            for k in graph.adj.row_range(u) {
                 let v = graph.adj.col_idx[k] as usize;
                 if v <= u {
                     continue; // undirected: each edge once
@@ -131,7 +131,7 @@ impl GraphHdModel {
         let mut acc = vec![0i64; self.dim];
         let mut any_edge = false;
         for u in 0..n {
-            for k in graph.adj.row_ptr[u]..graph.adj.row_ptr[u + 1] {
+            for k in graph.adj.row_range(u) {
                 let v = graph.adj.col_idx[k] as usize;
                 if v <= u {
                     continue; // undirected: each edge once

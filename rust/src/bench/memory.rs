@@ -1,0 +1,515 @@
+//! Memory-footprint benchmark: the measured side of the succinct layer
+//! (DESIGN.md §10). For each TUDataset config it trains a model and
+//! reports, head to head,
+//!
+//! * **MPH bits/key** — the bucketed phast engine vs the legacy BBHash
+//!   cascade, built over the *same* codebook key sets (both engines
+//!   count payload bytes through [`MphEngine::bits_per_key`], so the
+//!   comparison is apples to apples);
+//! * **model artifact bytes** — the v3 writer (Elias–Fano codebook and
+//!   row-offset sections) vs the retained v2 writer, on the same
+//!   trained model;
+//! * **CSR row-offset bytes** — plain `(rows+1) × 8` vs the Elias–Fano
+//!   encoding, summed over the model's landmark histograms.
+//!
+//! One large synthetic graph (preferential attachment, so the degree
+//! distribution is adversarially skewed rather than uniform) probes the
+//! same structures at a scale no TUDataset config reaches, and its
+//! sequential key set anchors the pooled **headline bits/key**: total
+//! MPH payload bits across every key set divided by total keys — the
+//! honest version of the per-structure average, since tiny codebooks
+//! carry fixed overhead that a per-set mean would hide.
+//!
+//! Emits `BENCH_MEMORY.json` (schema [`SCHEMA`]), round-trip-validated
+//! before it lands on disk, exactly like `BENCH_SERVING.json`.
+//! Smoke mode (`NYSX_BENCH_SMOKE=1`): two datasets and a 20k-node
+//! synthetic graph, seconds end to end, same code paths.
+
+use crate::api::NysxError;
+use crate::bench::serving::smoke_mode;
+use crate::graph::generators::preferential_attachment;
+use crate::graph::tudataset::spec_by_name;
+use crate::model::train::train;
+use crate::model::{io as model_io, ModelConfig};
+use crate::mph::{code_key, Mph, MphEngine};
+use crate::sparse::Csr;
+use crate::succinct::{EliasFano, PhastMph};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// Schema tag stamped into every artifact this module writes.
+pub const SCHEMA: &str = "nysx-bench-memory/v1";
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct MemoryBenchConfig {
+    /// TUDataset configs to measure (each trains one model).
+    pub datasets: Vec<String>,
+    pub scale: f64,
+    pub seed: u64,
+    pub hv_dim: usize,
+    pub hops: usize,
+    /// Node count of the synthetic preferential-attachment graph.
+    pub synthetic_nodes: usize,
+    /// Edges attached per new node (≈ half the average degree).
+    pub synthetic_attach: usize,
+}
+
+impl Default for MemoryBenchConfig {
+    fn default() -> Self {
+        Self {
+            datasets: crate::graph::tudataset::TU_SPECS
+                .iter()
+                .map(|s| s.name.to_string())
+                .collect(),
+            scale: 0.5,
+            seed: 42,
+            hv_dim: 2048,
+            hops: 3,
+            synthetic_nodes: 200_000,
+            synthetic_attach: 4,
+        }
+    }
+}
+
+impl MemoryBenchConfig {
+    /// The CI smoke sweep: two datasets at test scale, same code paths.
+    pub fn smoke() -> Self {
+        Self {
+            datasets: vec!["MUTAG".to_string(), "BZR".to_string()],
+            scale: 0.15,
+            hv_dim: 500,
+            synthetic_nodes: 20_000,
+            ..Self::default()
+        }
+    }
+
+    /// `smoke()` when `NYSX_BENCH_SMOKE` is set, full sweep otherwise.
+    pub fn from_env() -> Self {
+        if smoke_mode() {
+            Self::smoke()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Running totals for the pooled headline: payload bits over keys,
+/// accumulated across every key set both engines were built on.
+#[derive(Debug, Clone, Copy, Default)]
+struct Pooled {
+    phast_bits: u64,
+    legacy_bits: u64,
+    keys: u64,
+}
+
+impl Pooled {
+    /// Build both engines over one key set and fold its payload in.
+    fn add_key_set(&mut self, keys: &[u64], gamma: f64) {
+        let phast = MphEngine::Phast(PhastMph::build(keys));
+        let legacy = MphEngine::Legacy(Mph::build(keys, gamma));
+        self.phast_bits += phast.bytes() as u64 * 8;
+        self.legacy_bits += legacy.bytes() as u64 * 8;
+        self.keys += keys.len() as u64;
+    }
+
+    fn fold(&mut self, other: Pooled) {
+        self.phast_bits += other.phast_bits;
+        self.legacy_bits += other.legacy_bits;
+        self.keys += other.keys;
+    }
+
+    fn phast_bits_per_key(&self) -> f64 {
+        if self.keys == 0 {
+            0.0
+        } else {
+            self.phast_bits as f64 / self.keys as f64
+        }
+    }
+
+    fn legacy_bits_per_key(&self) -> f64 {
+        if self.keys == 0 {
+            0.0
+        } else {
+            self.legacy_bits as f64 / self.keys as f64
+        }
+    }
+}
+
+/// Measurements for one trained TUDataset config.
+#[derive(Debug, Clone)]
+pub struct DatasetMemory {
+    pub dataset: String,
+    /// Total codebook keys across hops (the MPH denominators).
+    pub num_keys: usize,
+    /// Pooled over this model's per-hop codebook key sets.
+    pub phast_bits_per_key: f64,
+    pub legacy_bits_per_key: f64,
+    /// Serialized artifact bytes: retained v2 writer vs the v3 default.
+    pub model_bytes_v2: usize,
+    pub model_bytes_v3: usize,
+    /// Landmark-histogram row offsets: plain usize array vs Elias–Fano.
+    pub csr_offsets_plain_bytes: usize,
+    pub csr_offsets_ef_bytes: usize,
+}
+
+impl DatasetMemory {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.as_str())),
+            ("num_keys", Json::num(self.num_keys as f64)),
+            ("phast_bits_per_key", Json::num(self.phast_bits_per_key)),
+            ("legacy_bits_per_key", Json::num(self.legacy_bits_per_key)),
+            ("model_bytes_v2", Json::num(self.model_bytes_v2 as f64)),
+            ("model_bytes_v3", Json::num(self.model_bytes_v3 as f64)),
+            (
+                "csr_offsets_plain_bytes",
+                Json::num(self.csr_offsets_plain_bytes as f64),
+            ),
+            (
+                "csr_offsets_ef_bytes",
+                Json::num(self.csr_offsets_ef_bytes as f64),
+            ),
+        ])
+    }
+}
+
+/// Measurements on the large synthetic graph.
+#[derive(Debug, Clone)]
+pub struct SyntheticMemory {
+    pub nodes: usize,
+    pub edges: usize,
+    /// Sequential LSH-shaped key set of `nodes` keys.
+    pub num_keys: usize,
+    pub phast_bits_per_key: f64,
+    pub legacy_bits_per_key: f64,
+    pub csr_offsets_plain_bytes: usize,
+    pub csr_offsets_ef_bytes: usize,
+}
+
+impl SyntheticMemory {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::num(self.nodes as f64)),
+            ("edges", Json::num(self.edges as f64)),
+            ("num_keys", Json::num(self.num_keys as f64)),
+            ("phast_bits_per_key", Json::num(self.phast_bits_per_key)),
+            ("legacy_bits_per_key", Json::num(self.legacy_bits_per_key)),
+            (
+                "csr_offsets_plain_bytes",
+                Json::num(self.csr_offsets_plain_bytes as f64),
+            ),
+            (
+                "csr_offsets_ef_bytes",
+                Json::num(self.csr_offsets_ef_bytes as f64),
+            ),
+        ])
+    }
+}
+
+/// The whole harness run — serialize with [`MemoryBenchReport::to_json`].
+#[derive(Debug, Clone)]
+pub struct MemoryBenchReport {
+    pub config: MemoryBenchConfig,
+    pub smoke: bool,
+    pub datasets: Vec<DatasetMemory>,
+    pub synthetic: SyntheticMemory,
+    /// Pooled across every key set measured (datasets + synthetic).
+    pub phast_bits_per_key: f64,
+    pub legacy_bits_per_key: f64,
+}
+
+impl MemoryBenchReport {
+    /// The `BENCH_MEMORY.json` document (schema documented in
+    /// DESIGN.md §10).
+    pub fn to_json(&self) -> Json {
+        let c = &self.config;
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("bench", Json::str("memory")),
+            ("smoke", Json::Bool(self.smoke)),
+            (
+                "config",
+                Json::obj(vec![
+                    (
+                        "datasets",
+                        Json::arr(c.datasets.iter().map(|d| Json::str(d.as_str()))),
+                    ),
+                    ("scale", Json::num(c.scale)),
+                    ("seed", Json::num(c.seed as f64)),
+                    ("hv_dim", Json::num(c.hv_dim as f64)),
+                    ("hops", Json::num(c.hops as f64)),
+                    ("synthetic_nodes", Json::num(c.synthetic_nodes as f64)),
+                    ("synthetic_attach", Json::num(c.synthetic_attach as f64)),
+                ]),
+            ),
+            (
+                "headline",
+                Json::obj(vec![
+                    ("phast_bits_per_key", Json::num(self.phast_bits_per_key)),
+                    ("legacy_bits_per_key", Json::num(self.legacy_bits_per_key)),
+                ]),
+            ),
+            (
+                "datasets",
+                Json::arr(self.datasets.iter().map(DatasetMemory::to_json)),
+            ),
+            ("synthetic", self.synthetic.to_json()),
+        ])
+    }
+
+    /// Emit, round-trip-validate, and write the artifact. The parse-back
+    /// check guarantees no ill-formed artifact ever lands on disk.
+    pub fn write(&self, path: &std::path::Path) -> Result<(), NysxError> {
+        let doc = self.to_json();
+        let text = doc.to_string();
+        let back = Json::parse(&text).map_err(|e| {
+            NysxError::Config(format!("emitted BENCH_MEMORY.json does not parse: {e}"))
+        })?;
+        if back != doc {
+            return Err(NysxError::config(
+                "BENCH_MEMORY.json round-trip drift: parsed document != emitted document",
+            ));
+        }
+        std::fs::write(path, text + "\n").map_err(NysxError::Io)
+    }
+}
+
+/// Plain row-offset footprint: the in-memory `usize` array the
+/// Elias–Fano representation replaces.
+fn plain_offset_bytes(rows: usize) -> usize {
+    (rows + 1) * std::mem::size_of::<usize>()
+}
+
+/// Serialize through a writer into a counted buffer.
+fn serialized_bytes(
+    write: impl FnOnce(&mut Vec<u8>) -> std::io::Result<()>,
+    what: &str,
+) -> Result<usize, NysxError> {
+    let mut buf = Vec::new();
+    write(&mut buf).map_err(|e| NysxError::Config(format!("serializing {what} failed: {e}")))?;
+    Ok(buf.len())
+}
+
+fn measure_dataset(
+    name: &str,
+    cfg: &MemoryBenchConfig,
+    pooled: &mut Pooled,
+) -> Result<DatasetMemory, NysxError> {
+    let spec = spec_by_name(name)
+        .ok_or_else(|| NysxError::Config(format!("unknown dataset {name:?}")))?;
+    let (ds, _, s_dpp) = spec.generate_scaled(cfg.seed, cfg.scale);
+    let model_cfg = ModelConfig {
+        hops: cfg.hops,
+        hv_dim: cfg.hv_dim,
+        num_landmarks: s_dpp.min(ds.train.len()).max(4),
+        seed: cfg.seed,
+        ..ModelConfig::default()
+    };
+    let model = train(&ds, &model_cfg);
+
+    // Both MPH engines over every per-hop codebook key set.
+    let mut keys_total = 0usize;
+    let mut local = Pooled::default();
+    for cb in &model.codebooks {
+        let keys: Vec<u64> = cb.codes.iter().map(|&c| code_key(c)).collect();
+        keys_total += keys.len();
+        local.add_key_set(&keys, model.config.mph_gamma);
+    }
+    pooled.fold(local);
+
+    // Both artifact writers on the same trained model.
+    let v2 = serialized_bytes(|buf| model_io::save_v2(&model, buf), "v2 model")?;
+    let v3 = serialized_bytes(|buf| model_io::save(&model, buf), "v3 model")?;
+
+    // Row-offset footprint across the landmark histograms.
+    let mut plain = 0usize;
+    let mut ef = 0usize;
+    for h in &model.landmark_hists {
+        plain += plain_offset_bytes(h.rows);
+        let offsets: Vec<u64> = h.offsets().iter().map(|p| p as u64).collect();
+        ef += EliasFano::from_sorted(&offsets).bytes();
+    }
+
+    Ok(DatasetMemory {
+        dataset: name.to_string(),
+        num_keys: keys_total,
+        phast_bits_per_key: local.phast_bits_per_key(),
+        legacy_bits_per_key: local.legacy_bits_per_key(),
+        model_bytes_v2: v2,
+        model_bytes_v3: v3,
+        csr_offsets_plain_bytes: plain,
+        csr_offsets_ef_bytes: ef,
+    })
+}
+
+fn measure_synthetic(
+    cfg: &MemoryBenchConfig,
+    pooled: &mut Pooled,
+) -> Result<SyntheticMemory, NysxError> {
+    let n = cfg.synthetic_nodes.max(2);
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ 0x53594E54); // "SYNT"
+    let edges = preferential_attachment(n, cfg.synthetic_attach.max(1), &mut rng);
+    let mut triplets = Vec::with_capacity(edges.len() * 2);
+    for &(u, v) in &edges {
+        triplets.push((u, v, 1.0));
+        triplets.push((v, u, 1.0));
+    }
+    let adj = Csr::from_triplets(n, n, triplets);
+
+    let plain = plain_offset_bytes(adj.rows);
+    let offsets: Vec<u64> = adj.offsets().iter().map(|p| p as u64).collect();
+    let ef = EliasFano::from_sorted(&offsets).bytes();
+
+    // Sequential LSH-shaped keys at a scale no TUDataset codebook
+    // reaches — where the phast fixed overhead has fully amortized.
+    let keys: Vec<u64> = (0..n as i64).map(code_key).collect();
+    let mut local = Pooled::default();
+    local.add_key_set(&keys, ModelConfig::default().mph_gamma);
+    pooled.fold(local);
+
+    Ok(SyntheticMemory {
+        nodes: n,
+        edges: edges.len(),
+        num_keys: keys.len(),
+        phast_bits_per_key: local.phast_bits_per_key(),
+        legacy_bits_per_key: local.legacy_bits_per_key(),
+        csr_offsets_plain_bytes: plain,
+        csr_offsets_ef_bytes: ef,
+    })
+}
+
+/// Run the whole harness: one trained model per dataset config, then
+/// the synthetic graph, then the pooled headline.
+pub fn run(cfg: &MemoryBenchConfig) -> Result<MemoryBenchReport, NysxError> {
+    if cfg.datasets.is_empty() {
+        return Err(NysxError::config("memory bench needs at least one dataset"));
+    }
+    let mut pooled = Pooled::default();
+    let mut datasets = Vec::with_capacity(cfg.datasets.len());
+    for name in &cfg.datasets {
+        datasets.push(measure_dataset(name, cfg, &mut pooled)?);
+    }
+    let synthetic = measure_synthetic(cfg, &mut pooled)?;
+    Ok(MemoryBenchReport {
+        config: cfg.clone(),
+        smoke: smoke_mode(),
+        datasets,
+        synthetic,
+        phast_bits_per_key: pooled.phast_bits_per_key(),
+        legacy_bits_per_key: pooled.legacy_bits_per_key(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The harness end to end at smoke scale: every dataset's v3
+    /// artifact beats v2, the succinct MPH beats the cascade pooled and
+    /// per structure at amortized scale, Elias–Fano beats the plain
+    /// offsets on the big graph, and the artifact round-trips with the
+    /// schema intact.
+    #[test]
+    fn smoke_run_measures_and_emits_valid_json() {
+        let cfg = MemoryBenchConfig {
+            datasets: vec!["MUTAG".to_string()],
+            synthetic_nodes: 20_000,
+            ..MemoryBenchConfig::smoke()
+        };
+        let report = run(&cfg).expect("smoke harness run");
+        assert_eq!(report.datasets.len(), 1);
+        for d in &report.datasets {
+            assert!(d.num_keys > 0, "{} trained with empty codebooks", d.dataset);
+            assert!(
+                d.model_bytes_v3 < d.model_bytes_v2,
+                "{}: v3 {} >= v2 {}",
+                d.dataset,
+                d.model_bytes_v3,
+                d.model_bytes_v2
+            );
+            assert!(d.phast_bits_per_key > 0.0 && d.legacy_bits_per_key > 0.0);
+        }
+        let s = &report.synthetic;
+        assert_eq!(s.nodes, 20_000);
+        assert!(s.edges > s.nodes, "preferential attachment too sparse");
+        assert!(
+            s.csr_offsets_ef_bytes < s.csr_offsets_plain_bytes,
+            "EF offsets {} >= plain {}",
+            s.csr_offsets_ef_bytes,
+            s.csr_offsets_plain_bytes
+        );
+        assert!(
+            s.phast_bits_per_key < 3.0,
+            "synthetic phast {} bits/key",
+            s.phast_bits_per_key
+        );
+        // The headline the CI leg gates on.
+        assert!(
+            report.phast_bits_per_key < report.legacy_bits_per_key,
+            "pooled phast {} >= legacy {}",
+            report.phast_bits_per_key,
+            report.legacy_bits_per_key
+        );
+        assert!(
+            report.phast_bits_per_key < 3.0,
+            "pooled headline {} bits/key",
+            report.phast_bits_per_key
+        );
+
+        let doc = report.to_json();
+        let text = doc.to_string();
+        let back = Json::parse(&text).expect("artifact parses");
+        assert_eq!(back, doc, "JSON round-trip drift");
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        let headline = back.get("headline").expect("headline object");
+        let phast = headline
+            .get("phast_bits_per_key")
+            .and_then(Json::as_f64)
+            .expect("headline.phast_bits_per_key");
+        let legacy = headline
+            .get("legacy_bits_per_key")
+            .and_then(Json::as_f64)
+            .expect("headline.legacy_bits_per_key");
+        assert!(phast < legacy);
+        let first = &back.get("datasets").unwrap().as_arr().unwrap()[0];
+        for key in [
+            "model_bytes_v2",
+            "model_bytes_v3",
+            "csr_offsets_plain_bytes",
+            "csr_offsets_ef_bytes",
+        ] {
+            assert!(
+                first.get(key).and_then(Json::as_usize).is_some(),
+                "dataset entry missing {key}"
+            );
+        }
+    }
+
+    /// write() lands a parseable file on disk and unknown datasets are a
+    /// typed error, not a panic.
+    #[test]
+    fn write_emits_parseable_artifact_and_bad_dataset_is_typed() {
+        let cfg = MemoryBenchConfig {
+            datasets: vec!["MUTAG".to_string()],
+            synthetic_nodes: 2_000,
+            ..MemoryBenchConfig::smoke()
+        };
+        let report = run(&cfg).expect("smoke run");
+        let dir = std::env::temp_dir().join(format!("nysx-bench-mem-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_MEMORY.json");
+        report.write(&path).expect("write");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).expect("file parses");
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        std::fs::remove_dir_all(&dir).ok();
+
+        let bad = MemoryBenchConfig {
+            datasets: vec!["NOT_A_DATASET".to_string()],
+            ..MemoryBenchConfig::smoke()
+        };
+        let err = run(&bad).err().expect("unknown dataset must be rejected");
+        assert!(matches!(err, NysxError::Config(_)), "{err}");
+    }
+}

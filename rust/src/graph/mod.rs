@@ -87,7 +87,10 @@ impl Graph {
         }
         let mut h = fnv1a(OFFSET, self.num_nodes() as u64);
         h = fnv1a(h, self.feature_dim() as u64);
-        for &p in &self.adj.row_ptr {
+        // Offset *values* feed the hash, so the representation behind
+        // RowOffsets (plain vs Elias-Fano) can never move a graph to a
+        // different shard.
+        for p in self.adj.offsets().iter() {
             h = fnv1a(h, p as u64);
         }
         for &c in &self.adj.col_idx {

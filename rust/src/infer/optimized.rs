@@ -274,7 +274,7 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
                     if let Some(r) = sched.row_for(it, pe) {
                         let r = r as usize;
                         let mut acc = 0.0;
-                        for k in h.row_ptr[r]..h.row_ptr[r + 1] {
+                        for k in h.row_range(r) {
                             acc += h.val[k] * hist[h.col_idx[k] as usize];
                         }
                         c_sim[r] += acc;

@@ -33,7 +33,7 @@ pub fn infer_reference(model: &NysHdcModel, graph: &Graph) -> (usize, Hypervecto
         let h = &model.landmark_hists[t];
         for r in 0..h.rows {
             let mut acc = 0.0;
-            for k in h.row_ptr[r]..h.row_ptr[r + 1] {
+            for k in h.row_range(r) {
                 acc += h.val[k] * hist[h.col_idx[k] as usize];
             }
             // line 10: C ← C + v^(t)
@@ -48,8 +48,9 @@ pub fn infer_reference(model: &NysHdcModel, graph: &Graph) -> (usize, Hypervecto
     // line 13: y = P_nys C; h = sign(y)
     let y = model.projection.project(&c_sim);
     let hv = Hypervector::from_real(&y);
-    // line 14: argmax over class prototypes
-    let predicted = model.prototypes.classify(&hv);
+    // line 14: argmax over class prototypes (i8 oracle view, unpacked
+    // on demand — the model stores only the packed representation)
+    let predicted = model.reference_prototypes().classify(&hv);
     (predicted, hv)
 }
 

@@ -37,6 +37,7 @@ pub mod mph;
 pub mod nystrom;
 pub mod runtime;
 pub mod sim;
+pub mod succinct;
 pub mod testing;
 pub mod sparse;
 pub mod util;

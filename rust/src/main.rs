@@ -10,6 +10,7 @@
 //!           [--shards N] [--dpp]            # N > 1: sharded tier
 //!   eval    [--scale 1.0] [--ablation]      # all tables & figures
 //!   bench serving [--shards 1,2,4] [--qps 100,300,1000] [--out BENCH_SERVING.json]
+//!   bench memory  [--datasets MUTAG,BZR] [--out BENCH_MEMORY.json]
 //!   lint    [--root DIR] [--json] [--out LINT_REPORT.json]   # exit 2 on findings
 //!   race    [--root DIR] [--json] [--out CONCURRENCY_REPORT.json]  # exit 2 on findings
 //!   roofline
@@ -289,8 +290,9 @@ fn cmd_serve(args: &Args) -> Result<(), NysxError> {
 fn cmd_bench(args: &Args) -> Result<(), NysxError> {
     match args.positional().get(1).map(|s| s.as_str()) {
         Some("serving") => cmd_bench_serving(args),
+        Some("memory") => cmd_bench_memory(args),
         other => Err(NysxError::Config(format!(
-            "unknown bench target {:?}; available: serving",
+            "unknown bench target {:?}; available: serving, memory",
             other.unwrap_or("<none>")
         ))),
     }
@@ -376,6 +378,67 @@ fn cmd_bench_serving(args: &Args) -> Result<(), NysxError> {
             );
         }
     }
+    report.write(Path::new(&out))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// The memory-footprint harness (DESIGN.md §10): per TUDataset config,
+/// phast-vs-legacy MPH bits/key, v3-vs-v2 artifact bytes, and
+/// Elias–Fano-vs-plain CSR offsets, plus one large synthetic graph;
+/// artifact to `--out` (default BENCH_MEMORY.json). Smoke mode
+/// (`NYSX_BENCH_SMOKE=1`) shrinks the sweep for CI.
+fn cmd_bench_memory(args: &Args) -> Result<(), NysxError> {
+    use nysx::bench::memory::{self, MemoryBenchConfig};
+    use nysx::bench::serving::smoke_mode;
+    let mut cfg = MemoryBenchConfig::from_env();
+    if let Some(list) = args.get("datasets") {
+        cfg.datasets = list.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    cfg.scale = args.try_f64("scale", cfg.scale).map_err(flag_err)?;
+    cfg.seed = args.try_u64("seed", cfg.seed).map_err(flag_err)?;
+    cfg.hv_dim = args.try_usize("d", cfg.hv_dim).map_err(flag_err)?;
+    cfg.hops = args.try_usize("hops", cfg.hops).map_err(flag_err)?;
+    cfg.synthetic_nodes = args
+        .try_usize("synthetic-nodes", cfg.synthetic_nodes)
+        .map_err(flag_err)?;
+    let out = args.get_or("out", "BENCH_MEMORY.json").to_string();
+
+    eprintln!(
+        "memory footprint harness: {:?} + {}-node synthetic{}",
+        cfg.datasets,
+        cfg.synthetic_nodes,
+        if smoke_mode() { " (smoke)" } else { "" }
+    );
+    let report = memory::run(&cfg)?;
+    for d in &report.datasets {
+        println!(
+            "{}: mph {:.2} vs {:.2} bits/key (phast vs legacy), model {} vs {} bytes (v3 vs v2), offsets {} vs {} bytes (EF vs plain)",
+            d.dataset,
+            d.phast_bits_per_key,
+            d.legacy_bits_per_key,
+            d.model_bytes_v3,
+            d.model_bytes_v2,
+            d.csr_offsets_ef_bytes,
+            d.csr_offsets_plain_bytes,
+        );
+    }
+    let s = &report.synthetic;
+    println!(
+        "synthetic ({} nodes, {} edges): mph {:.2} vs {:.2} bits/key, offsets {} vs {} bytes (EF vs plain)",
+        s.nodes,
+        s.edges,
+        s.phast_bits_per_key,
+        s.legacy_bits_per_key,
+        s.csr_offsets_ef_bytes,
+        s.csr_offsets_plain_bytes,
+    );
+    println!(
+        "headline: phast {:.2} bits/key vs legacy {:.2} bits/key over {} keys total",
+        report.phast_bits_per_key,
+        report.legacy_bits_per_key,
+        report.datasets.iter().map(|d| d.num_keys).sum::<usize>() + s.num_keys,
+    );
     report.write(Path::new(&out))?;
     println!("wrote {out}");
     Ok(())

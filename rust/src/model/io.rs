@@ -1,43 +1,52 @@
 //! Binary model serialization (no `serde` available — a small
 //! length-prefixed little-endian format with magic/version header).
 //!
-//! Derived structures (MPH lookups, KSE schedule tables, the i8
-//! reference prototypes) are *rebuilt* on load: they are deterministic
-//! functions of the stored codebooks / histogram matrices / packed
-//! prototypes, which keeps the artifact compact and guarantees the
-//! offline tables always match the deployed parameters.
+//! Derived structures (MPH lookups, KSE schedule tables) are *rebuilt*
+//! on load: they are deterministic functions of the stored codebooks /
+//! histogram matrices / packed prototypes, which keeps the artifact
+//! compact and guarantees the offline tables always match the deployed
+//! parameters.
 //!
 //! ## Format versions
 //!
 //! * v1 (`NYSXMDL\x01`): prototypes stored as i8 bytes (d bytes each).
 //!   Still read transparently.
-//! * v2 (`NYSXMDL\x02`, current): prototypes stored bit-packed (one sign
-//!   bit per element, `⌈d/64⌉` u64 words each — 8× smaller), with
-//!   tail-bit validation on load.
+//! * v2 (`NYSXMDL\x02`): prototypes stored bit-packed (one sign bit per
+//!   element, `⌈d/64⌉` u64 words each — 8× smaller), with tail-bit
+//!   validation on load. Still read transparently.
+//! * v3 (`NYSXMDL\x03`, current): the monotone integer sections —
+//!   codebook codes (strictly increasing, mapped through the
+//!   order-preserving [`code_key`] image) and CSR row offsets — are
+//!   stored Elias–Fano-coded (`n, universe, low words, high words`;
+//!   see `succinct::EliasFano`), cutting them from 8 bytes per entry to
+//!   roughly `2 + log2(universe/n)` bits per entry.
 //!
 //! ## Robustness contract
 //!
 //! [`load`] never panics on malformed bytes and never allocates
 //! proportionally to a corrupt length prefix: every failure — wrong
 //! magic, truncation, an implausible section length, an internal
-//! inconsistency between sections — comes back as a typed
-//! [`NysxError::ModelFormat`] carrying the byte offset at which decoding
-//! stopped. Vector reads grow incrementally (bounded by bytes actually
-//! present in the stream), so a bit-flipped length prefix produces an
-//! error, not an OOM-sized preallocation.
+//! inconsistency between sections (including Elias–Fano sections whose
+//! declared `n`/`universe` disagree with their bit content) — comes back
+//! as a typed [`NysxError::ModelFormat`] carrying the byte offset at
+//! which decoding stopped. Vector reads grow incrementally (bounded by
+//! bytes actually present in the stream), so a bit-flipped length prefix
+//! produces an error, not an OOM-sized preallocation.
 
 use std::io::{self, Read, Write};
 
 use super::{ModelConfig, NysHdcModel};
 use crate::api::NysxError;
-use crate::hdc::{ClassPrototypes, Hypervector, PackedHypervector, PackedPrototypes};
+use crate::hdc::{Hypervector, PackedHypervector, PackedPrototypes};
 use crate::kernel::{Codebook, LshParams};
-use crate::mph::{code_key, MphLookup};
+use crate::mph::{code_from_key, code_key, MphLookup};
 use crate::nystrom::{LandmarkStrategy, NystromProjection};
 use crate::sparse::Csr;
+use crate::succinct::EliasFano;
 
 const MAGIC_V1: &[u8; 8] = b"NYSXMDL\x01";
-const MAGIC: &[u8; 8] = b"NYSXMDL\x02";
+const MAGIC_V2: &[u8; 8] = b"NYSXMDL\x02";
+const MAGIC: &[u8; 8] = b"NYSXMDL\x03";
 
 struct Writer<W: Write> {
     w: W,
@@ -101,6 +110,15 @@ impl<W: Write> Writer<W> {
             self.u64(x)?;
         }
         Ok(())
+    }
+    /// An Elias–Fano section: `n, universe, low words, high words`. The
+    /// word vectors carry their own length prefixes so the reader can
+    /// bound allocation before trusting `n`.
+    fn elias_fano(&mut self, ef: &EliasFano) -> io::Result<()> {
+        self.u64(ef.len() as u64)?;
+        self.u64(ef.universe())?;
+        self.u64s(ef.low_words())?;
+        self.u64s(ef.high_words())
     }
 }
 
@@ -226,6 +244,19 @@ impl<R: Read> Reader<R> {
         }
         Ok(out)
     }
+    /// Decode an Elias–Fano section. `EliasFano::from_parts` cross-checks
+    /// every length against `(n, universe)` and re-counts the high ones,
+    /// so a lying `n` or a corrupt word vector is a typed error; the word
+    /// vectors themselves go through the capped incremental readers, so
+    /// allocation stays bounded by bytes actually present.
+    fn elias_fano(&mut self, what: &str) -> io::Result<EliasFano> {
+        let n = self.len_prefix(8, &format!("{what} element count"))?;
+        let universe = self.u64()?;
+        let low_words = self.u64s()?;
+        let high_words = self.u64s()?;
+        EliasFano::from_parts(n, universe, low_words, high_words)
+            .map_err(|e| invalid(format!("{what}: {e}")))
+    }
 }
 
 fn strategy_tag(s: LandmarkStrategy) -> (u64, u64) {
@@ -250,7 +281,7 @@ fn strategy_from_tag(tag: u64, arg: u64) -> io::Result<LandmarkStrategy> {
     }
 }
 
-/// Serialize a model to a writer.
+/// Serialize a model to a writer (current format, v3).
 pub fn save<W: Write>(model: &NysHdcModel, w: W) -> io::Result<()> {
     let mut w = Writer { w };
     w.w.write_all(MAGIC)?;
@@ -277,17 +308,20 @@ pub fn save<W: Write>(model: &NysHdcModel, w: W) -> io::Result<()> {
     }
     w.f64s(&model.lsh.b)?;
     w.f64(model.lsh.w)?;
-    // Codebooks
+    // Codebooks (v3: Elias–Fano over the order-preserving u64 key image —
+    // the code list is strictly increasing by construction).
     w.u64(model.codebooks.len() as u64)?;
     for cb in &model.codebooks {
-        w.i64s(&cb.codes)?;
+        let keys: Vec<u64> = cb.codes.iter().map(|&c| code_key(c)).collect();
+        w.elias_fano(&EliasFano::from_sorted(&keys))?;
     }
-    // Landmark hists (CSR)
+    // Landmark hists (CSR; v3: Elias–Fano row offsets)
     w.u64(model.landmark_hists.len() as u64)?;
     for h in &model.landmark_hists {
         w.u64(h.rows as u64)?;
         w.u64(h.cols as u64)?;
-        w.usizes(&h.row_ptr)?;
+        let offs: Vec<u64> = h.offsets().iter().map(|p| p as u64).collect();
+        w.elias_fano(&EliasFano::from_sorted(&offs))?;
         w.u32s(&h.col_idx)?;
         w.f64s(&h.val)?;
     }
@@ -296,7 +330,7 @@ pub fn save<W: Write>(model: &NysHdcModel, w: W) -> io::Result<()> {
     w.u64(model.projection.s as u64)?;
     w.u64(model.projection.rank as u64)?;
     w.f32s(&model.projection.data)?;
-    // Prototypes (v2: bit-packed, one sign bit per element)
+    // Prototypes (bit-packed, one sign bit per element; unchanged from v2)
     w.u64(model.packed_prototypes.prototypes.len() as u64)?;
     for p in &model.packed_prototypes.prototypes {
         w.u64(p.dim() as u64)?;
@@ -308,9 +342,9 @@ pub fn save<W: Write>(model: &NysHdcModel, w: W) -> io::Result<()> {
     Ok(())
 }
 
-/// Deserialize a model from a reader, rebuilding MPH lookups, KSE
-/// schedule tables and the i8 reference prototypes. Reads both the
-/// current packed-prototype format (v2) and the legacy i8 format (v1).
+/// Deserialize a model from a reader, rebuilding MPH lookups and KSE
+/// schedule tables. Reads the current Elias–Fano-sectioned format (v3)
+/// plus the legacy packed (v2) and i8 (v1) formats.
 ///
 /// Malformed input of any kind — wrong magic, truncation, corrupt length
 /// prefixes, cross-section inconsistencies — yields a
@@ -337,35 +371,42 @@ pub fn load<R: Read>(r: R) -> Result<NysHdcModel, NysxError> {
     }
 }
 
-/// Cross-field consistency for a deserialized CSR operand: everything
-/// the SpMV kernels index into unchecked must be validated here.
-fn check_csr(h: &Csr, what: &str) -> io::Result<()> {
-    let want_ptrs = h
-        .rows
+/// Cross-field consistency for a deserialized CSR operand, validated on
+/// the raw arrays *before* [`Csr::from_parts`] assembles them: everything
+/// the SpMV kernels index into unchecked must be proven here.
+fn check_csr_parts(
+    rows: usize,
+    cols: usize,
+    row_ptr: &[usize],
+    col_idx: &[u32],
+    val: &[f64],
+    what: &str,
+) -> io::Result<()> {
+    let want_ptrs = rows
         .checked_add(1)
         .ok_or_else(|| invalid(format!("{what}: row count overflow")))?;
-    if h.row_ptr.len() != want_ptrs {
+    if row_ptr.len() != want_ptrs {
         return Err(invalid(format!(
             "{what}: row_ptr length {} != rows+1 = {want_ptrs}",
-            h.row_ptr.len()
+            row_ptr.len()
         )));
     }
-    if h.row_ptr.first() != Some(&0) {
+    if row_ptr.first() != Some(&0) {
         return Err(invalid(format!("{what}: row_ptr must start at 0")));
     }
-    if h.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+    if row_ptr.windows(2).any(|w| w[0] > w[1]) {
         return Err(invalid(format!("{what}: row_ptr not monotone")));
     }
-    let nnz = *h.row_ptr.last().unwrap_or(&0);
-    if nnz != h.col_idx.len() || nnz != h.val.len() {
+    let nnz = *row_ptr.last().unwrap_or(&0);
+    if nnz != col_idx.len() || nnz != val.len() {
         return Err(invalid(format!(
             "{what}: nnz {} disagrees with col_idx/val lengths {}/{}",
             nnz,
-            h.col_idx.len(),
-            h.val.len()
+            col_idx.len(),
+            val.len()
         )));
     }
-    if h.col_idx.iter().any(|&c| c as usize >= h.cols) {
+    if col_idx.iter().any(|&c| c as usize >= cols) {
         return Err(invalid(format!("{what}: column index out of range")));
     }
     Ok(())
@@ -375,6 +416,8 @@ fn load_inner<R: Read>(r: &mut Reader<R>) -> io::Result<NysHdcModel> {
     let mut magic = [0u8; 8];
     r.fill(&mut magic)?;
     let version = if &magic == MAGIC {
+        3u8
+    } else if &magic == MAGIC_V2 {
         2u8
     } else if &magic == MAGIC_V1 {
         1u8
@@ -440,7 +483,28 @@ fn load_inner<R: Read>(r: &mut Reader<R>) -> io::Result<NysHdcModel> {
         return Err(invalid(format!("{n_cb} codebooks for {hops} hops")));
     }
     let codebooks: Vec<Codebook> = (0..n_cb)
-        .map(|_| r.i64s().map(Codebook::build))
+        .map(|t| -> io::Result<Codebook> {
+            if version >= 3 {
+                let ef = r.elias_fano(&format!("B^({t}) codes"))?;
+                // The Elias–Fano contract is non-decreasing; codebook
+                // codes must be *strictly* increasing (they index the
+                // histogram columns one-to-one).
+                let mut codes = Vec::with_capacity(ef.len().min(ALLOC_CHUNK));
+                let mut prev: Option<u64> = None;
+                for k in ef.iter() {
+                    if prev.is_some_and(|p| p >= k) {
+                        return Err(invalid(format!(
+                            "B^({t}) codes not strictly increasing"
+                        )));
+                    }
+                    prev = Some(k);
+                    codes.push(code_from_key(k));
+                }
+                Ok(Codebook::build(codes))
+            } else {
+                r.i64s().map(Codebook::build)
+            }
+        })
         .collect::<io::Result<_>>()?;
     let n_h = r.u64()? as usize;
     if n_h != hops {
@@ -450,31 +514,29 @@ fn load_inner<R: Read>(r: &mut Reader<R>) -> io::Result<NysHdcModel> {
     for t in 0..n_h {
         let rows = r.u64()? as usize;
         let cols = r.u64()? as usize;
-        let row_ptr = r.usizes()?;
+        let row_ptr: Vec<usize> = if version >= 3 {
+            let ef = r.elias_fano(&format!("H^({t}) row offsets"))?;
+            ef.iter().map(|p| p as usize).collect()
+        } else {
+            r.usizes()?
+        };
         let col_idx = r.u32s()?;
         let val = r.f64s()?;
-        let h = Csr {
-            rows,
-            cols,
-            row_ptr,
-            col_idx,
-            val,
-        };
-        check_csr(&h, &format!("H^({t})"))?;
-        if h.rows != num_landmarks {
+        check_csr_parts(rows, cols, &row_ptr, &col_idx, &val, &format!("H^({t})"))?;
+        if rows != num_landmarks {
             return Err(invalid(format!(
-                "H^({t}) has {} rows for s = {num_landmarks} landmarks",
-                h.rows
+                "H^({t}) has {rows} rows for s = {num_landmarks} landmarks"
             )));
         }
-        if h.cols != codebooks[t].len() {
+        if cols != codebooks[t].len() {
             return Err(invalid(format!(
-                "H^({t}) has {} cols for |B^({t})| = {}",
-                h.cols,
+                "H^({t}) has {cols} cols for |B^({t})| = {}",
                 codebooks[t].len()
             )));
         }
-        landmark_hists.push(h);
+        // from_parts re-chooses the offset representation, so every
+        // format version lands on the same canonical in-memory Csr.
+        landmark_hists.push(Csr::from_parts(rows, cols, row_ptr, col_idx, val));
     }
     let d = r.u64()? as usize;
     let s = r.u64()? as usize;
@@ -555,7 +617,6 @@ fn load_inner<R: Read>(r: &mut Reader<R>) -> io::Result<NysHdcModel> {
         prototypes: packed_protos,
         counts,
     };
-    let prototypes: ClassPrototypes = packed_prototypes.to_reference();
 
     Ok(NysHdcModel {
         config,
@@ -568,10 +629,62 @@ fn load_inner<R: Read>(r: &mut Reader<R>) -> io::Result<NysHdcModel> {
         landmark_hists,
         kse_schedules,
         projection,
-        prototypes,
         packed_prototypes,
         landmark_indices,
     })
+}
+
+/// The legacy v2 writer (packed prototypes, plain integer sections).
+/// Not the default save path: kept for the reader's backwards-compat
+/// tests and for the memory benchmark, which measures the v3 Elias–Fano
+/// savings against real v2 artifacts rather than estimating them.
+pub(crate) fn save_v2<W: Write>(model: &NysHdcModel, w: W) -> io::Result<()> {
+    let mut w = Writer { w };
+    w.w.write_all(MAGIC_V2)?;
+    let c = &model.config;
+    w.u64(c.hops as u64)?;
+    w.u64(c.hv_dim as u64)?;
+    w.f64(c.lsh_width)?;
+    w.u64(c.num_landmarks as u64)?;
+    let (tag, arg) = strategy_tag(c.strategy);
+    w.u64(tag)?;
+    w.u64(arg)?;
+    w.f64(c.mph_gamma)?;
+    w.u64(c.pes as u64)?;
+    w.u64(c.seed)?;
+    w.str(&model.dataset_name)?;
+    w.u64(model.num_classes as u64)?;
+    w.u64(model.feature_dim as u64)?;
+    w.u64(model.lsh.u.len() as u64)?;
+    for u in &model.lsh.u {
+        w.f64s(u)?;
+    }
+    w.f64s(&model.lsh.b)?;
+    w.f64(model.lsh.w)?;
+    w.u64(model.codebooks.len() as u64)?;
+    for cb in &model.codebooks {
+        w.i64s(&cb.codes)?;
+    }
+    w.u64(model.landmark_hists.len() as u64)?;
+    for h in &model.landmark_hists {
+        w.u64(h.rows as u64)?;
+        w.u64(h.cols as u64)?;
+        w.usizes(&h.offsets().to_vec())?;
+        w.u32s(&h.col_idx)?;
+        w.f64s(&h.val)?;
+    }
+    w.u64(model.projection.d as u64)?;
+    w.u64(model.projection.s as u64)?;
+    w.u64(model.projection.rank as u64)?;
+    w.f32s(&model.projection.data)?;
+    w.u64(model.packed_prototypes.prototypes.len() as u64)?;
+    for p in &model.packed_prototypes.prototypes {
+        w.u64(p.dim() as u64)?;
+        w.u64s(p.words())?;
+    }
+    w.usizes(&model.packed_prototypes.counts)?;
+    w.usizes(&model.landmark_indices)?;
+    Ok(())
 }
 
 /// Save to a file path.
@@ -627,7 +740,7 @@ mod tests {
         for h in &model.landmark_hists {
             w.u64(h.rows as u64)?;
             w.u64(h.cols as u64)?;
-            w.usizes(&h.row_ptr)?;
+            w.usizes(&h.offsets().to_vec())?;
             w.u32s(&h.col_idx)?;
             w.f64s(&h.val)?;
         }
@@ -635,12 +748,13 @@ mod tests {
         w.u64(model.projection.s as u64)?;
         w.u64(model.projection.rank as u64)?;
         w.f32s(&model.projection.data)?;
-        w.u64(model.prototypes.prototypes.len() as u64)?;
-        for p in &model.prototypes.prototypes {
+        let protos = model.reference_prototypes();
+        w.u64(protos.prototypes.len() as u64)?;
+        for p in &protos.prototypes {
             let bytes: Vec<u8> = p.data.iter().map(|&x| x as u8).collect();
             w.bytes(&bytes)?;
         }
-        w.usizes(&model.prototypes.counts)?;
+        w.usizes(&protos.counts)?;
         w.usizes(&model.landmark_indices)?;
         Ok(())
     }
@@ -662,8 +776,11 @@ mod tests {
         assert_eq!(back.dataset_name, model.dataset_name);
         assert_eq!(back.landmark_indices, model.landmark_indices);
         assert_eq!(back.projection.data, model.projection.data);
-        assert_eq!(back.prototypes.prototypes, model.prototypes.prototypes);
         assert_eq!(back.packed_prototypes, model.packed_prototypes);
+        assert_eq!(back.landmark_hists, model.landmark_hists);
+        for t in 0..2 {
+            assert_eq!(back.codebooks[t].codes, model.codebooks[t].codes);
+        }
         // Behavioural equality: same HV for the same query.
         for (g, _) in ds.test.iter().take(5) {
             assert_eq!(encode_hv(&model, g), encode_hv(&back, g));
@@ -695,8 +812,28 @@ mod tests {
         let mut v1 = Vec::new();
         save_v1(&model, &mut v1).unwrap();
         let back = load(&v1[..]).unwrap();
-        assert_eq!(back.prototypes.prototypes, model.prototypes.prototypes);
         assert_eq!(back.packed_prototypes, model.packed_prototypes);
+        for (g, _) in ds.test.iter().take(3) {
+            assert_eq!(encode_hv(&model, g), encode_hv(&back, g));
+        }
+    }
+
+    #[test]
+    fn v2_files_still_load() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(9, 0.2);
+        let cfg = ModelConfig {
+            hops: 2,
+            hv_dim: 500,
+            num_landmarks: 8,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        let mut v2 = Vec::new();
+        save_v2(&model, &mut v2).unwrap();
+        let back = load(&v2[..]).unwrap();
+        assert_eq!(back.packed_prototypes, model.packed_prototypes);
+        assert_eq!(back.landmark_hists, model.landmark_hists);
         for (g, _) in ds.test.iter().take(3) {
             assert_eq!(encode_hv(&model, g), encode_hv(&back, g));
         }
@@ -715,7 +852,7 @@ mod tests {
         let model = train(&ds, &cfg);
         let (mut v1, mut v2) = (Vec::new(), Vec::new());
         save_v1(&model, &mut v1).unwrap();
-        save(&model, &mut v2).unwrap();
+        save_v2(&model, &mut v2).unwrap();
         // i8 protos: C*d bytes; packed: C*d/8 (+ small headers).
         let c = model.num_classes;
         let d = model.d();
@@ -725,6 +862,73 @@ mod tests {
             saved >= expect - 64 && v2.len() < v1.len(),
             "saved {saved} bytes, expected ≈{expect}"
         );
+    }
+
+    /// The v3 acceptance pin: Elias–Fano sections must shrink the
+    /// artifact relative to v2 on TUDataset-shaped models, not just on
+    /// synthetic extremes.
+    #[test]
+    fn v3_smaller_than_v2_on_tudataset_configs() {
+        for name in ["MUTAG", "BZR", "PROTEINS"] {
+            let spec = spec_by_name(name).unwrap();
+            let (ds, _, s_dpp) = spec.generate_scaled(15, 0.15);
+            let cfg = ModelConfig {
+                hops: 3,
+                hv_dim: 1024,
+                num_landmarks: s_dpp.min(ds.train.len()),
+                ..ModelConfig::default()
+            };
+            let model = train(&ds, &cfg);
+            let (mut v2, mut v3) = (Vec::new(), Vec::new());
+            save_v2(&model, &mut v2).unwrap();
+            save(&model, &mut v3).unwrap();
+            assert!(
+                v3.len() < v2.len(),
+                "{name}: v3 {} bytes not smaller than v2 {}",
+                v3.len(),
+                v2.len()
+            );
+        }
+    }
+
+    /// Differential pin for the format migration: a model loaded from v2
+    /// bytes and one loaded from v3 bytes are the same model — same
+    /// parameters, and bit-identical inference at thread counts {1,2,7}.
+    #[test]
+    fn v3_and_v2_loads_infer_identically_across_pools() {
+        use crate::exec::Pool;
+        use crate::infer::NysxEngine;
+        use std::sync::Arc;
+
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(16, 0.2);
+        let cfg = ModelConfig {
+            hops: 3,
+            hv_dim: 1000,
+            num_landmarks: 10,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        let (mut v2, mut v3) = (Vec::new(), Vec::new());
+        save_v2(&model, &mut v2).unwrap();
+        save(&model, &mut v3).unwrap();
+        let m2 = load(&v2[..]).unwrap();
+        let m3 = load(&v3[..]).unwrap();
+        assert_eq!(m2.packed_prototypes, m3.packed_prototypes);
+        assert_eq!(m2.projection.data, m3.projection.data);
+        assert_eq!(m2.landmark_hists, m3.landmark_hists);
+        for t in 0..3 {
+            assert_eq!(m2.codebooks[t].codes, m3.codebooks[t].codes);
+        }
+        for threads in [1usize, 2, 7] {
+            let mut e2 = NysxEngine::with_pool(&m2, Arc::new(Pool::new(threads)));
+            let mut e3 = NysxEngine::with_pool(&m3, Arc::new(Pool::new(threads)));
+            for (g, _) in ds.test.iter().take(5) {
+                let (r2, r3) = (e2.infer(g), e3.infer(g));
+                assert_eq!(r2.predicted, r3.predicted, "at {threads} threads");
+                assert_eq!(r2.hv, r3.hv, "HV drift at {threads} threads");
+            }
+        }
     }
 
     #[test]
@@ -761,7 +965,7 @@ mod tests {
         }
     }
 
-    /// Tiny model serialized in both on-disk formats, for the corpus
+    /// Tiny model serialized in all three on-disk formats, for the corpus
     /// tests below.
     fn tiny_model_bytes() -> Vec<(&'static str, Vec<u8>)> {
         let spec = spec_by_name("MUTAG").unwrap();
@@ -769,19 +973,20 @@ mod tests {
         let cfg = ModelConfig {
             hops: 2,
             // Off a word boundary: the packed tail-bit validation path is
-            // live in the v2 decode.
+            // live in the v2/v3 decode.
             hv_dim: 200,
             num_landmarks: 5,
             ..ModelConfig::default()
         };
         let model = train(&ds, &cfg);
-        let (mut v1, mut v2) = (Vec::new(), Vec::new());
+        let (mut v1, mut v2, mut v3) = (Vec::new(), Vec::new(), Vec::new());
         save_v1(&model, &mut v1).unwrap();
-        save(&model, &mut v2).unwrap();
-        vec![("v1", v1), ("v2", v2)]
+        save_v2(&model, &mut v2).unwrap();
+        save(&model, &mut v3).unwrap();
+        vec![("v1", v1), ("v2", v2), ("v3", v3)]
     }
 
-    /// THE robustness property: truncation at any point, in either format
+    /// THE robustness property: truncation at any point, in any format
     /// version, is a typed [`NysxError::ModelFormat`] — never a panic.
     #[test]
     fn truncation_at_every_offset_yields_model_format() {
@@ -848,8 +1053,73 @@ mod tests {
         }
     }
 
+    /// Byte offset of the first codebook's Elias–Fano section in a v3
+    /// artifact — a mirror of the writer's layout, verified in the test
+    /// against the actual bytes before it is trusted.
+    fn first_codebook_section_offset(model: &NysHdcModel) -> usize {
+        let mut off = 8 + 72; // magic + 9-field config
+        off += 8 + model.dataset_name.len(); // dataset name
+        off += 16; // num_classes, feature_dim
+        off += 8; // LSH u count
+        for u in &model.lsh.u {
+            off += 8 + u.len() * 8;
+        }
+        off += 8 + model.lsh.b.len() * 8; // LSH b
+        off += 8; // LSH w
+        off += 8; // codebook count
+        off
+    }
+
+    /// Satellite pin: corrupt Elias–Fano section headers — a lying `n`,
+    /// a lying word-vector length — are typed [`NysxError::ModelFormat`],
+    /// never a panic or an allocation proportional to the lie.
+    #[test]
+    fn corrupt_elias_fano_section_lengths_are_typed() {
+        let spec = spec_by_name("MUTAG").unwrap();
+        let (ds, _, _) = spec.generate_scaled(13, 0.15);
+        let cfg = ModelConfig {
+            hops: 2,
+            hv_dim: 200,
+            num_landmarks: 5,
+            ..ModelConfig::default()
+        };
+        let model = train(&ds, &cfg);
+        let mut buf = Vec::new();
+        save(&model, &mut buf).unwrap();
+        let at = first_codebook_section_offset(&model);
+        // Guard the offset mirror against layout drift: the u64 here must
+        // be the first codebook's element count.
+        let n0 = u64::from_le_bytes(buf[at..at + 8].try_into().unwrap());
+        assert_eq!(
+            n0 as usize,
+            model.codebooks[0].codes.len(),
+            "layout mirror drifted — update first_codebook_section_offset"
+        );
+        // Lie about n: absurd (caught by the plausibility cap), large
+        // (dies on cross-checked word lengths), and off-by-one in either
+        // direction (dies on the ones-count / last-value checks).
+        for lie in [u64::MAX, 1 << 40, n0 + 1, n0.saturating_sub(1)] {
+            let mut bad = buf.clone();
+            bad[at..at + 8].copy_from_slice(&lie.to_le_bytes());
+            match load(&bad[..]) {
+                Err(NysxError::ModelFormat { .. }) => {}
+                other => panic!("EF n lie {lie:#x}: want ModelFormat, got {other:?}"),
+            }
+        }
+        // Lie about the low-words vector length (n and universe intact).
+        let low_len_at = at + 16;
+        for lie in [u64::MAX, 1 << 40, 3u64] {
+            let mut bad = buf.clone();
+            bad[low_len_at..low_len_at + 8].copy_from_slice(&lie.to_le_bytes());
+            match load(&bad[..]) {
+                Err(NysxError::ModelFormat { .. }) => {}
+                other => panic!("EF low-words lie {lie:#x}: want ModelFormat, got {other:?}"),
+            }
+        }
+    }
+
     /// Cross-section inconsistencies (not just truncation) are caught:
-    /// a v2 prototype section claiming a different dimensionality.
+    /// a prototype section claiming a different dimensionality.
     #[test]
     fn prototype_dim_mismatch_is_typed() {
         let spec = spec_by_name("MUTAG").unwrap();

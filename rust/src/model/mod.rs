@@ -125,13 +125,10 @@ pub struct NysHdcModel {
     pub kse_schedules: Vec<ScheduleTable>,
     /// Nyström projection P_nys ∈ R^{d×s} (f32 streaming layout).
     pub projection: NystromProjection,
-    /// Class prototypes G ∈ {-1,+1}^{C×d} (i8 reference representation —
-    /// the oracle for the packed hot path).
-    pub prototypes: ClassPrototypes,
-    /// The same prototypes at one sign bit per element — the operand the
-    /// SCE hot path actually matches against. Invariant:
-    /// `packed_prototypes == PackedPrototypes::from_reference(&prototypes)`,
-    /// maintained by training and (de)serialization.
+    /// Class prototypes G ∈ {-1,+1}^{C×d} at one sign bit per element —
+    /// the operand the SCE hot path matches against, and the only stored
+    /// representation. Side computations that need the i8 oracle view
+    /// unpack it on demand via [`Self::reference_prototypes`].
     pub packed_prototypes: PackedPrototypes,
     /// Indices of the selected landmark graphs in the training set.
     pub landmark_indices: Vec<usize>,
@@ -148,6 +145,14 @@ impl NysHdcModel {
 
     pub fn hops(&self) -> usize {
         self.config.hops
+    }
+
+    /// The i8 oracle view of the prototypes, unpacked on demand. The
+    /// model stores only the packed representation; the reference
+    /// inference path and differential tests rebuild this view (lossless
+    /// — packing is sign-exact on ±1 data).
+    pub fn reference_prototypes(&self) -> ClassPrototypes {
+        self.packed_prototypes.to_reference()
     }
 
     /// Rebuild the KSE schedule tables (used after deserialization).
@@ -170,7 +175,9 @@ impl NysHdcModel {
             .sum();
         let hists_csr: usize = self.landmark_hists.iter().map(|h| h.csr_bytes(32)).sum();
         let p_nys = self.projection.bytes();
-        let prototypes = self.prototypes.bytes(8);
+        // Table 2 accounts G at b_G = 8 bits per element (the i8 oracle
+        // width), derived from the packed dims without materializing it.
+        let prototypes = self.packed_prototypes.num_classes() * self.packed_prototypes.dim();
         let mph: usize = self.lookups.iter().map(|l| l.bytes()).sum();
         let schedules: usize = self.kse_schedules.iter().map(|s| s.table_bytes()).sum();
         MemoryReport {

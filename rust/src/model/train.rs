@@ -11,7 +11,7 @@
 use super::{ModelConfig, NysHdcModel};
 use crate::exec::{self, Pool};
 use crate::graph::{Graph, GraphDataset};
-use crate::hdc::{Hypervector, PackedAccumulator, PackedHypervector, PrototypeAccumulator};
+use crate::hdc::{Hypervector, PackedAccumulator, PackedHypervector};
 use crate::kernel::{
     gram_from_signatures_with_pool, node_codes, signatures_with_pool, Codebook, LshParams,
 };
@@ -112,7 +112,7 @@ pub fn train_with_pool(dataset: &GraphDataset, config: &ModelConfig, pool: &Pool
         .map(|cb| {
             let keys: Vec<u64> = cb.codes.iter().map(|&c| code_key(c)).collect();
             let values: Vec<u32> = (0..cb.len() as u32).collect();
-            MphLookup::build(&keys, &values, config.mph_gamma)
+            MphLookup::build_with_pool(&keys, &values, pool)
         })
         .collect();
 
@@ -136,7 +136,6 @@ pub fn train_with_pool(dataset: &GraphDataset, config: &ModelConfig, pool: &Pool
         landmark_hists,
         kse_schedules,
         projection,
-        prototypes: PrototypeAccumulator::new(dataset.num_classes, config.hv_dim).finalize(),
         packed_prototypes: PackedAccumulator::new(dataset.num_classes, config.hv_dim).finalize(),
         landmark_indices,
     };
@@ -171,9 +170,7 @@ pub fn train_with_pool(dataset: &GraphDataset, config: &ModelConfig, pool: &Pool
     for lane_acc in &lane_accs {
         acc.merge(lane_acc);
     }
-    let packed = acc.finalize_with_pool(pool);
-    model.prototypes = packed.to_reference();
-    model.packed_prototypes = packed;
+    model.packed_prototypes = acc.finalize_with_pool(pool);
     model
 }
 
@@ -197,7 +194,7 @@ pub fn encode_kernel_vector(model: &NysHdcModel, graph: &Graph, c_out: &mut [f64
         let h = &model.landmark_hists[t];
         for r in 0..h.rows {
             let mut acc = 0.0;
-            for k in h.row_ptr[r]..h.row_ptr[r + 1] {
+            for k in h.row_range(r) {
                 acc += h.val[k] * hist[h.col_idx[k] as usize];
             }
             c_out[r] += acc;
@@ -233,9 +230,10 @@ pub fn evaluate_reference(model: &NysHdcModel, split: &[(Graph, usize)]) -> Opti
     if split.is_empty() {
         return None;
     }
+    let protos = model.reference_prototypes();
     let correct = split
         .iter()
-        .filter(|(g, y)| model.prototypes.classify(&encode_hv(model, g)) == *y)
+        .filter(|(g, y)| protos.classify(&encode_hv(model, g)) == *y)
         .count();
     Some(correct as f64 / split.len() as f64)
 }
@@ -338,11 +336,15 @@ mod tests {
         let mut cfg = small_config(8);
         cfg.hv_dim = 1000;
         let model = train(&ds, &cfg);
+        // The unpack→repack roundtrip is lossless on ±1 data, so the
+        // on-demand i8 view is a faithful oracle for the stored packing.
+        let reference = model.reference_prototypes();
+        assert_eq!(reference.num_classes(), ds.num_classes);
+        assert_eq!(reference.dim(), 1000);
         assert_eq!(
             model.packed_prototypes,
-            crate::hdc::PackedPrototypes::from_reference(&model.prototypes)
+            crate::hdc::PackedPrototypes::from_reference(&reference)
         );
-        assert_eq!(model.packed_prototypes.to_reference(), model.prototypes);
     }
 
     #[test]
@@ -352,7 +354,7 @@ mod tests {
         let m1 = train(&ds, &small_config(10));
         let m2 = train(&ds, &small_config(10));
         assert_eq!(m1.landmark_indices, m2.landmark_indices);
-        assert_eq!(m1.prototypes.prototypes, m2.prototypes.prototypes);
+        assert_eq!(m1.packed_prototypes, m2.packed_prototypes);
     }
 
     /// The exec contract on training: the whole trained model — landmark
@@ -381,10 +383,6 @@ mod tests {
             assert_eq!(
                 got.packed_prototypes, want.packed_prototypes,
                 "prototype drift at {threads} threads"
-            );
-            assert_eq!(
-                got.prototypes.prototypes, want.prototypes.prototypes,
-                "i8 prototype drift at {threads} threads"
             );
         }
         // The plain entry point (global pool, whatever its size) agrees.

@@ -16,6 +16,16 @@
 //! original key set either falls through every level (no 1 hit) or lands
 //! on some 1 bit — which the **codebook verification** step (paper step 4)
 //! catches by comparing the stored code at the returned index.
+//!
+//! Since the succinct layer landed, this cascade is no longer the
+//! default engine: [`MphLookup::build`] routes through the bucketed
+//! [`PhastMph`] (≈2.7 bits/key, DESIGN.md §10) behind the [`MphEngine`]
+//! enum, and the cascade stays on as the *differential oracle* — the
+//! property suite pins both engines to the same bijection contract on
+//! every key set, and [`MphLookup::build_capped`] still constructs it
+//! directly for the fallback-path tests and sizing ablations.
+
+use crate::succinct::PhastMph;
 
 /// Thomas Wang's 64-bit mix — the paper's seeded integer hash function.
 #[inline]
@@ -267,28 +277,110 @@ impl Mph {
     }
 }
 
+/// The pluggable MPH engine behind [`MphLookup`]: the succinct bucketed
+/// hash is the production default; the BBHash cascade remains available
+/// as the differential oracle and for fallback-path coverage.
+#[derive(Debug, Clone)]
+pub enum MphEngine {
+    /// Bucketed seeded MPH ([`crate::succinct::phast`], ≈2.7 bits/key).
+    Phast(PhastMph),
+    /// The original level cascade (≈4+ bits/key, kept as oracle).
+    Legacy(Mph),
+}
+
+impl MphEngine {
+    /// O(1) lookup; both engines share the contract that an absent key
+    /// resolves to `None` or an in-range index the store rejects.
+    #[inline]
+    pub fn index(&self, key: u64) -> Option<u32> {
+        match self {
+            MphEngine::Phast(p) => p.index(key),
+            MphEngine::Legacy(m) => m.index(key),
+        }
+    }
+
+    /// Lookup with probe count (MPHE cycle-model hook). The bucketed
+    /// engine always probes exactly one slot; the cascade reports its
+    /// level walk.
+    #[inline]
+    pub fn index_with_probes(&self, key: u64) -> (Option<u32>, u32) {
+        match self {
+            MphEngine::Phast(p) => (p.index(key), 1),
+            MphEngine::Legacy(m) => m.index_with_probes(key),
+        }
+    }
+
+    pub fn num_keys(&self) -> usize {
+        match self {
+            MphEngine::Phast(p) => p.num_keys(),
+            MphEngine::Legacy(m) => m.num_keys(),
+        }
+    }
+
+    /// Structure bytes (both engines count payload only).
+    pub fn bytes(&self) -> usize {
+        match self {
+            MphEngine::Phast(p) => p.bytes(),
+            MphEngine::Legacy(m) => m.bytes(),
+        }
+    }
+
+    pub fn bits_per_key(&self) -> f64 {
+        if self.num_keys() == 0 {
+            0.0
+        } else {
+            self.bytes() as f64 * 8.0 / self.num_keys() as f64
+        }
+    }
+
+    /// The cascade, when this engine is one (fallback/sizing tests).
+    pub fn legacy(&self) -> Option<&Mph> {
+        match self {
+            MphEngine::Legacy(m) => Some(m),
+            MphEngine::Phast(_) => None,
+        }
+    }
+}
+
 /// The full MPHE lookup structure: MPH + the compact codebook store of
 /// `(code, hist_idx)` pairs addressed by MPH index (paper step 4).
 #[derive(Debug, Clone)]
 pub struct MphLookup {
-    pub mph: Mph,
+    pub mph: MphEngine,
     /// store[mph_index] = (code, hist_idx)
     store: Vec<(u64, u32)>,
 }
 
 impl MphLookup {
     /// Build from parallel arrays: key i maps to value `values[i]`.
+    /// Routes to the succinct bucketed engine (`gamma` only shapes the
+    /// legacy cascade and is ignored here; kept so callers configure one
+    /// build surface). Uses the process-wide pool for the seed search.
     pub fn build(keys: &[u64], values: &[u32], gamma: f64) -> Self {
-        Self::build_capped(keys, values, gamma, DEFAULT_MAX_LEVELS)
+        let _ = gamma;
+        Self::build_with_pool(keys, values, &crate::exec::global())
     }
 
-    /// [`Self::build`] with an explicit cascade-depth cap (see
+    /// [`Self::build`] on an explicit pool (thread count never changes
+    /// the structure).
+    pub fn build_with_pool(keys: &[u64], values: &[u32], pool: &crate::exec::Pool) -> Self {
+        assert_eq!(keys.len(), values.len());
+        let engine = MphEngine::Phast(PhastMph::build_with_pool(keys, pool));
+        Self::with_store(engine, keys, values)
+    }
+
+    /// Build on the *legacy cascade* with an explicit depth cap (see
     /// [`Mph::build_capped`]): small caps force keys into the fallback
     /// store, exercising the verification path the deep cascade almost
-    /// never reaches.
+    /// never reaches. Also the constructor the differential suite uses
+    /// to pit the oracle engine against the default one.
     pub fn build_capped(keys: &[u64], values: &[u32], gamma: f64, max_levels: usize) -> Self {
         assert_eq!(keys.len(), values.len());
-        let mph = Mph::build_capped(keys, gamma, max_levels);
+        let engine = MphEngine::Legacy(Mph::build_capped(keys, gamma, max_levels));
+        Self::with_store(engine, keys, values)
+    }
+
+    fn with_store(mph: MphEngine, keys: &[u64], values: &[u32]) -> Self {
         let mut store = vec![(0u64, 0u32); keys.len()];
         for (i, &k) in keys.iter().enumerate() {
             let idx = mph.index(k).expect("constructed key must resolve") as usize;
@@ -333,6 +425,13 @@ impl MphLookup {
 #[inline]
 pub fn code_key(code: i64) -> u64 {
     (code as u64) ^ (1u64 << 63)
+}
+
+/// Inverse of [`code_key`]: recover the i64 LSH code from its key image
+/// (the model loader decodes Elias–Fano'd key sections through this).
+#[inline]
+pub fn code_from_key(key: u64) -> i64 {
+    (key ^ (1u64 << 63)) as i64
 }
 
 #[cfg(test)]
@@ -461,6 +560,61 @@ mod tests {
         });
     }
 
+    /// Differential property across *both engines*: on the same key
+    /// set, the bucketed default and the legacy cascade are each
+    /// bijections onto [0, n), and through the verified lookup an
+    /// absent key never aliases a present one's value on either.
+    #[test]
+    fn engines_agree_on_the_bijection_contract() {
+        use crate::testing::{forall, PropConfig};
+        forall("mph-engine-differential", PropConfig::default(), |rng, size| {
+            let n = 1 + rng.gen_range(120 * size.max(1));
+            let keys = if rng.bernoulli(0.5) {
+                // Sequential LSH-style codes (the production shape).
+                let base = rng.gen_range(1000) as i64 - 500;
+                (base..base + n as i64).map(code_key).collect::<Vec<u64>>()
+            } else {
+                random_keys(n, rng)
+            };
+            let values: Vec<u32> = (0..n as u32).collect();
+            let phast = MphLookup::build(&keys, &values, 1.5);
+            let legacy = MphLookup::build_capped(&keys, &values, 1.5, 48);
+            for engine in [&phast, &legacy] {
+                let mut seen = vec![false; n];
+                for &k in &keys {
+                    let idx = engine.mph.index(k);
+                    let idx = match idx {
+                        Some(i) if (i as usize) < n => i as usize,
+                        other => {
+                            return Err(format!("present key {k} resolved to {other:?} (n={n})"))
+                        }
+                    };
+                    crate::prop_assert!(!seen[idx], "index {idx} hit twice (n={n})");
+                    seen[idx] = true;
+                }
+                crate::prop_assert!(seen.iter().all(|&s| s), "not minimal (n={n})");
+            }
+            // Verified lookups agree everywhere: identical values on
+            // present keys, identical rejections on absent ones.
+            for (i, &k) in keys.iter().enumerate() {
+                crate::prop_assert!(phast.get(k) == Some(values[i]), "phast lost key {k}");
+                crate::prop_assert!(legacy.get(k) == Some(values[i]), "legacy lost key {k}");
+            }
+            let key_set: std::collections::HashSet<u64> = keys.iter().copied().collect();
+            let mut checked = 0;
+            while checked < 64 {
+                let k = rng.next_u64();
+                if key_set.contains(&k) {
+                    continue;
+                }
+                crate::prop_assert!(phast.get(k).is_none(), "phast aliased absent {k}");
+                crate::prop_assert!(legacy.get(k).is_none(), "legacy aliased absent {k}");
+                checked += 1;
+            }
+            Ok(())
+        });
+    }
+
     /// A capped cascade deterministically lands keys in `fallback`; the
     /// lookup must stay perfect for them and still reject absent keys.
     #[test]
@@ -468,7 +622,11 @@ mod tests {
         let keys: Vec<u64> = (0..512i64).map(code_key).collect();
         let values: Vec<u32> = (0..512u32).collect();
         let lookup = MphLookup::build_capped(&keys, &values, 1.0, 1);
-        let st = lookup.mph.stats(&keys);
+        let st = lookup
+            .mph
+            .legacy()
+            .expect("capped build uses the cascade")
+            .stats(&keys);
         assert!(
             st.fallback_keys > 0,
             "a 1-level cascade at gamma=1 must overflow into fallback"

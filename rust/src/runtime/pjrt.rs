@@ -166,7 +166,7 @@ impl XlaEncoder {
         let mut hists = vec![0.0f32; hops * s_art * bmax];
         for (t, h) in model.landmark_hists.iter().enumerate() {
             for r in 0..h.rows {
-                for k in h.row_ptr[r]..h.row_ptr[r + 1] {
+                for k in h.row_range(r) {
                     let cidx = h.col_idx[k] as usize;
                     hists[t * s_art * bmax + r * bmax + cidx] = h.val[k] as f32;
                 }
@@ -187,7 +187,8 @@ impl XlaEncoder {
         // higher; we guard by taking argmax over real classes on the rust
         // side anyway.
         let mut g = vec![0.0f32; classes_art * d];
-        for (ci, proto) in model.prototypes.prototypes.iter().enumerate() {
+        let protos = model.reference_prototypes();
+        for (ci, proto) in protos.prototypes.iter().enumerate() {
             for (j, &v) in proto.data.iter().enumerate() {
                 g[ci * d + j] = v as f32;
             }
@@ -229,7 +230,7 @@ impl XlaEncoder {
         // A padded dense.
         let mut adj = vec![0.0f32; n * n];
         for r in 0..real {
-            for k in graph.adj.row_ptr[r]..graph.adj.row_ptr[r + 1] {
+            for k in graph.adj.row_range(r) {
                 adj[r * n + graph.adj.col_idx[k] as usize] = 1.0;
             }
         }

@@ -1,18 +1,124 @@
 //! CSR sparse matrices — the storage format the accelerator uses for the
 //! adjacency matrix `A` and the landmark histogram matrices `H^(t)`
 //! (paper §5.2.1, §5.2.4).
+//!
+//! Row offsets live behind [`RowOffsets`]: plain `Vec<usize>` for small
+//! matrices (free indexing on the hot SpMV paths), Elias–Fano
+//! (DESIGN.md §10) once the offset array is large enough that its
+//! ≈2-bits-per-entry encoding beats 64-bit words by an order of
+//! magnitude. The representation is chosen deterministically from the
+//! shape at construction and is *never observable*: `PartialEq`, SpMV,
+//! fingerprints and serialization all compare/use logical offset values.
+
+use std::ops::Range;
 
 use crate::linalg::dense::Mat;
+use crate::succinct::EliasFano;
+
+/// Offset arrays below this many entries always stay plain: the whole
+/// array is smaller than the codec's fixed directory overhead, and
+/// small-graph SpMV is the latency path.
+const EF_MIN_OFFSETS: usize = 1024;
+
+/// The row-offset array of a CSR matrix (`len == rows + 1`, monotone,
+/// starts at 0): uncompressed or Elias–Fano coded.
+#[derive(Debug, Clone)]
+pub enum RowOffsets {
+    Plain(Vec<usize>),
+    EliasFano(EliasFano),
+}
+
+impl RowOffsets {
+    /// Deterministic representation choice: Elias–Fano when the array is
+    /// large enough to clear `EF_MIN_OFFSETS` *and* the encoding
+    /// actually wins (it always should; the byte check keeps the rule
+    /// honest for adversarial shapes). Density is what decides the
+    /// margin — low nnz/row means ≈2 bits/offset vs a full word.
+    pub fn auto(row_ptr: Vec<usize>) -> Self {
+        if row_ptr.len() >= EF_MIN_OFFSETS {
+            let ef = EliasFano::from_sorted(&row_ptr.iter().map(|&p| p as u64).collect::<Vec<u64>>());
+            if ef.bytes() < row_ptr.len() * std::mem::size_of::<usize>() {
+                return RowOffsets::EliasFano(ef);
+            }
+        }
+        RowOffsets::Plain(row_ptr)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            RowOffsets::Plain(p) => p.len(),
+            RowOffsets::EliasFano(ef) => ef.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The i-th offset (O(1) in both representations).
+    #[inline]
+    pub fn get(&self, i: usize) -> usize {
+        match self {
+            RowOffsets::Plain(p) => p[i],
+            RowOffsets::EliasFano(ef) => ef.get(i) as usize,
+        }
+    }
+
+    /// Logical values in order (sequential decode, not per-index gets).
+    pub fn iter(&self) -> Box<dyn Iterator<Item = usize> + '_> {
+        match self {
+            RowOffsets::Plain(p) => Box::new(p.iter().copied()),
+            RowOffsets::EliasFano(ef) => Box::new(ef.iter().map(|v| v as usize)),
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+
+    /// Heap bytes of the chosen representation.
+    pub fn bytes(&self) -> usize {
+        match self {
+            RowOffsets::Plain(p) => p.len() * std::mem::size_of::<usize>(),
+            RowOffsets::EliasFano(ef) => ef.bytes(),
+        }
+    }
+
+    pub fn is_compressed(&self) -> bool {
+        matches!(self, RowOffsets::EliasFano(_))
+    }
+}
+
+/// Equality is logical — the same offsets in different representations
+/// compare equal, so a compressed matrix round-trips through any format
+/// version without disturbing model/graph comparisons.
+impl PartialEq for RowOffsets {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len() && self.iter().eq(other.iter())
+    }
+}
 
 /// Compressed sparse row matrix over `f64` values.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Csr {
     pub rows: usize,
     pub cols: usize,
-    /// len rows+1
-    pub row_ptr: Vec<usize>,
+    /// len rows+1, representation-polymorphic (see [`RowOffsets`]).
+    offsets: RowOffsets,
     pub col_idx: Vec<u32>,
     pub val: Vec<f64>,
+}
+
+impl PartialEq for Csr {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.offsets == other.offsets
+            && self.col_idx == other.col_idx
+            && self.val == other.val
+    }
 }
 
 impl Csr {
@@ -29,14 +135,6 @@ impl Csr {
         let mut val: Vec<f64> = Vec::with_capacity(triplets.len());
         for (r, c, v) in triplets {
             assert!(r < rows && c < cols, "triplet out of range");
-            if !col_idx.is_empty()
-                && row_ptr[r + 1] > 0
-                && *col_idx.last().unwrap() == c as u32
-                && row_ptr[rows] == 0
-            {
-                // handled below via merge pass; keep simple: push all then merge
-            }
-            let _ = v;
             col_idx.push(c as u32);
             val.push(v);
             row_ptr[r + 1] += 1;
@@ -67,12 +165,28 @@ impl Csr {
             }
             m_row_ptr[r + 1] = m_col.len();
         }
+        Self::from_parts(rows, cols, m_row_ptr, m_col, m_val)
+    }
+
+    /// Assemble from already-validated CSR arrays (the model/artifact
+    /// load path — shape checks live with the caller's format errors).
+    /// The offset representation is re-chosen here, so every load lands
+    /// on the same canonical form regardless of source format version.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        val: Vec<f64>,
+    ) -> Self {
+        debug_assert_eq!(row_ptr.len(), rows + 1);
+        debug_assert_eq!(col_idx.len(), val.len());
         Self {
             rows,
             cols,
-            row_ptr: m_row_ptr,
-            col_idx: m_col,
-            val: m_val,
+            offsets: RowOffsets::auto(row_ptr),
+            col_idx,
+            val,
         }
     }
 
@@ -90,10 +204,43 @@ impl Csr {
         Self::from_triplets(m.rows, m.cols, triplets)
     }
 
+    /// The row-offset array (for memory accounting and serialization).
+    #[inline]
+    pub fn offsets(&self) -> &RowOffsets {
+        &self.offsets
+    }
+
+    /// Start of row `r`'s entries in `col_idx`/`val`.
+    #[inline]
+    pub fn row_start(&self, r: usize) -> usize {
+        self.offsets.get(r)
+    }
+
+    /// `col_idx`/`val` index range of row `r`.
+    #[inline]
+    pub fn row_range(&self, r: usize) -> Range<usize> {
+        self.offsets.get(r)..self.offsets.get(r + 1)
+    }
+
+    /// The same matrix with Elias–Fano offsets regardless of size
+    /// (differential tests and memory benches; `auto` stays the
+    /// production rule).
+    pub fn with_compressed_offsets(mut self) -> Self {
+        let ptr: Vec<u64> = self.offsets.iter().map(|p| p as u64).collect();
+        self.offsets = RowOffsets::EliasFano(EliasFano::from_sorted(&ptr));
+        self
+    }
+
+    /// The same matrix with plain `Vec<usize>` offsets.
+    pub fn with_plain_offsets(mut self) -> Self {
+        self.offsets = RowOffsets::Plain(self.offsets.to_vec());
+        self
+    }
+
     pub fn to_dense(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);
         for r in 0..self.rows {
-            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+            for k in self.row_range(r) {
                 m[(r, self.col_idx[k] as usize)] = self.val[k];
             }
         }
@@ -107,7 +254,8 @@ impl Csr {
 
     #[inline]
     pub fn row_nnz(&self, r: usize) -> usize {
-        self.row_ptr[r + 1] - self.row_ptr[r]
+        let range = self.row_range(r);
+        range.end - range.start
     }
 
     /// Average per-row density φ (paper Tables 1-2 use this).
@@ -127,19 +275,37 @@ impl Csr {
     }
 
     /// y = A x into a caller-provided buffer (hot-path, allocation-free).
+    /// Specialized per offset representation: plain offsets index
+    /// directly; Elias–Fano offsets decode sequentially (one pass, no
+    /// per-row selects). Accumulation order is identical either way, so
+    /// results are bit-identical across representations.
     #[inline]
     pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
         debug_assert_eq!(self.cols, x.len());
         debug_assert_eq!(self.rows, y.len());
-        for r in 0..self.rows {
-            let mut acc = 0.0;
-            let start = self.row_ptr[r];
-            let end = self.row_ptr[r + 1];
-            for k in start..end {
-                // SAFETY-free fast path: indices are validated at build.
-                acc += self.val[k] * x[self.col_idx[k] as usize];
+        match &self.offsets {
+            RowOffsets::Plain(ptr) => {
+                for r in 0..self.rows {
+                    let mut acc = 0.0;
+                    for k in ptr[r]..ptr[r + 1] {
+                        acc += self.val[k] * x[self.col_idx[k] as usize];
+                    }
+                    y[r] = acc;
+                }
             }
-            y[r] = acc;
+            RowOffsets::EliasFano(ef) => {
+                let mut bounds = ef.iter();
+                let mut start = bounds.next().unwrap_or(0) as usize;
+                for r in 0..self.rows {
+                    let end = bounds.next().map_or(start, |e| e as usize);
+                    let mut acc = 0.0;
+                    for k in start..end {
+                        acc += self.val[k] * x[self.col_idx[k] as usize];
+                    }
+                    y[r] = acc;
+                    start = end;
+                }
+            }
         }
     }
 
@@ -148,7 +314,7 @@ impl Csr {
         assert_eq!(self.cols, b.rows, "spmm shape mismatch");
         let mut out = Mat::zeros(self.rows, b.cols);
         for r in 0..self.rows {
-            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+            for k in self.row_range(r) {
                 let c = self.col_idx[k] as usize;
                 let v = self.val[k];
                 let b_row = b.row(c);
@@ -191,6 +357,13 @@ impl Csr {
     /// (row_ptr as u32, col_idx as u32) — used by the memory accounting.
     pub fn csr_bytes(&self, value_bits: usize) -> usize {
         4 * (self.rows + 1) + 4 * self.nnz() + (value_bits / 8) * self.nnz()
+    }
+
+    /// Actual in-memory bytes of the offset+index+value arrays under the
+    /// *current* offset representation (the memory bench's ground truth,
+    /// vs the idealized u32 accounting of [`Self::csr_bytes`]).
+    pub fn heap_bytes(&self) -> usize {
+        self.offsets.bytes() + self.col_idx.len() * 4 + self.val.len() * 8
     }
 }
 
@@ -287,5 +460,68 @@ mod tests {
         assert!((s.mean - 1.0).abs() < 1e-12);
         assert_eq!(csr.csr_bytes(32), 4 * 4 + 4 * 3 + 4 * 3);
         assert!((csr.avg_row_density() - 3.0 / 9.0).abs() < 1e-12);
+    }
+
+    fn random_triplets(
+        rows: usize,
+        cols: usize,
+        per_row: usize,
+        rng: &mut Xoshiro256,
+    ) -> Vec<(usize, usize, f64)> {
+        let mut t = Vec::new();
+        for r in 0..rows {
+            for _ in 0..rng.gen_range(per_row + 1) {
+                t.push((r, rng.gen_range(cols), rng.normal()));
+            }
+        }
+        t
+    }
+
+    /// Large sparse matrices auto-select Elias–Fano offsets; small ones
+    /// stay plain; the choice never leaks into logical equality.
+    #[test]
+    fn offset_representation_auto_selection() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let small = Csr::from_triplets(20, 20, random_triplets(20, 20, 3, &mut rng));
+        assert!(!small.offsets().is_compressed(), "small matrix must stay plain");
+
+        let rows = 4000;
+        let big = Csr::from_triplets(rows, 64, random_triplets(rows, 64, 4, &mut rng));
+        assert!(big.offsets().is_compressed(), "large matrix must compress");
+        assert!(
+            big.offsets().bytes() * 4 < (rows + 1) * 8,
+            "EF offsets {} bytes not winning over plain {}",
+            big.offsets().bytes(),
+            (rows + 1) * 8
+        );
+
+        let plain = big.clone().with_plain_offsets();
+        assert_eq!(plain, big, "representation must not affect equality");
+        assert_eq!(plain.offsets().to_vec(), big.offsets().to_vec());
+    }
+
+    /// Differential: SpMV and every row accessor agree bit-for-bit
+    /// between plain and Elias–Fano offsets on the same matrix.
+    #[test]
+    fn ef_vs_plain_spmv_bit_identical() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        for trial in 0..10 {
+            let rows = 1 + rng.gen_range(300);
+            let cols = 1 + rng.gen_range(80);
+            let base = Csr::from_triplets(rows, cols, random_triplets(rows, cols, 5, &mut rng));
+            let ef = base.clone().with_compressed_offsets();
+            let plain = base.clone().with_plain_offsets();
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let ye = ef.spmv(&x);
+            let yp = plain.spmv(&x);
+            assert!(
+                ye.iter().zip(&yp).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "spmv differs between representations (trial {trial})"
+            );
+            for r in 0..rows {
+                assert_eq!(ef.row_range(r), plain.row_range(r), "trial {trial} row {r}");
+            }
+            assert_eq!(ef.to_dense(), plain.to_dense());
+        }
     }
 }

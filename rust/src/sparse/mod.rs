@@ -4,5 +4,5 @@
 pub mod csr;
 pub mod schedule;
 
-pub use csr::{Csr, RowNnzStats};
+pub use csr::{Csr, RowNnzStats, RowOffsets};
 pub use schedule::{SchedulePolicy, ScheduleTable, NO_ROW};

@@ -120,7 +120,7 @@ impl ScheduleTable {
                 if let Some(r) = self.row_for(it, pe) {
                     let r = r as usize;
                     let mut acc = 0.0;
-                    for k in csr.row_ptr[r]..csr.row_ptr[r + 1] {
+                    for k in csr.row_range(r) {
                         acc += csr.val[k] * x[csr.col_idx[k] as usize];
                     }
                     y[r] = acc;
@@ -158,7 +158,7 @@ impl ScheduleTable {
                     if let Some(r) = self.row_for(it, pe) {
                         let r = r as usize;
                         let mut acc = 0.0;
-                        for k in csr.row_ptr[r]..csr.row_ptr[r + 1] {
+                        for k in csr.row_range(r) {
                             acc += csr.val[k] * x[csr.col_idx[k] as usize];
                         }
                         // SAFETY: the schedule is a permutation of rows

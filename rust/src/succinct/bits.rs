@@ -1,0 +1,589 @@
+//! Bit-level foundation of the succinct layer (DESIGN.md §10): an
+//! append-only bit buffer ([`BitBuf`], the raw storage every codec in
+//! this module writes into) and an immutable bit vector with O(1)
+//! `rank1`/`select1` ([`BitVec`]).
+//!
+//! The rank directory is the interleaved superblock/block layout
+//! (poppy-style): one u64 per 2048-bit block holding a 32-bit absolute
+//! count (ones before the block) and three 10-bit counts for the first
+//! three 512-bit sub-blocks — 3.1% space overhead, and a rank touches
+//! exactly one directory word plus at most eight payload words.
+//! `select1` narrows to a block via sampled hints + binary search on the
+//! absolute counts, walks the sub-block counts, then finishes with a
+//! branch-free broadword select-in-word (SWAR byte prefix sums + a
+//! 2048-entry select-in-byte table).
+
+/// Append-only bit buffer: fixed-width little-endian-in-word bit codes.
+///
+/// The write side of every succinct structure: Elias–Fano low bits and
+/// Rice remainders are `push_bits` calls, unary codes are built a bit at
+/// a time. Reads are random-access (`get_bits` crosses word boundaries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Default for BitBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BitBuf {
+    pub fn new() -> Self {
+        Self {
+            words: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        Self {
+            words: Vec::with_capacity(bits.div_ceil(64)),
+            len: 0,
+        }
+    }
+
+    /// Reconstruct from raw words (artifact load path). Bits at and past
+    /// `len` must be zero so serialization round-trips bit-identically;
+    /// returns `None` when the shape or the tail padding is wrong.
+    pub fn from_words(words: Vec<u64>, len: usize) -> Option<Self> {
+        if words.len() != len.div_ceil(64) {
+            return None;
+        }
+        if let Some(&last) = words.last() {
+            let tail = len % 64;
+            if tail != 0 && (last >> tail) != 0 {
+                return None;
+            }
+        }
+        Some(Self { words, len })
+    }
+
+    /// Number of bits written.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Append the low `width` bits of `value` (width <= 64).
+    #[inline]
+    pub fn push_bits(&mut self, value: u64, width: u32) {
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || value >> width == 0, "value wider than width");
+        if width == 0 {
+            return;
+        }
+        let bit = self.len % 64;
+        if bit == 0 {
+            self.words.push(value);
+        } else {
+            let last = self.words.len() - 1;
+            self.words[last] |= value << bit;
+            if bit + width as usize > 64 {
+                self.words.push(value >> (64 - bit));
+            }
+        }
+        self.len += width as usize;
+        // Clear any garbage above len in the last word (value << bit can
+        // only have set bits below bit+width, so nothing to do — the
+        // invariant holds by construction).
+    }
+
+    /// Append a single bit.
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        self.push_bits(u64::from(bit), 1);
+    }
+
+    /// Append `count` zero bits.
+    pub fn push_zeros(&mut self, count: usize) {
+        let new_len = self.len + count;
+        self.words.resize(new_len.div_ceil(64), 0);
+        self.len = new_len;
+    }
+
+    /// Read `width` bits starting at bit `pos` (width <= 64).
+    #[inline]
+    pub fn get_bits(&self, pos: usize, width: u32) -> u64 {
+        debug_assert!(width <= 64);
+        debug_assert!(pos + width as usize <= self.len, "bit read out of range");
+        if width == 0 {
+            return 0;
+        }
+        let word = pos / 64;
+        let bit = pos % 64;
+        let lo = self.words[word] >> bit;
+        let got = 64 - bit as u32;
+        let v = if got >= width {
+            lo
+        } else {
+            lo | (self.words[word + 1] << got)
+        };
+        if width == 64 {
+            v
+        } else {
+            v & ((1u64 << width) - 1)
+        }
+    }
+
+    /// Heap payload bytes.
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+// --- broadword select-in-word -------------------------------------------
+
+const ONES_STEP_4: u64 = 0x1111_1111_1111_1111;
+const ONES_STEP_8: u64 = 0x0101_0101_0101_0101;
+const MSBS_STEP_8: u64 = 0x8080_8080_8080_8080;
+
+/// Per-byte x <= y comparison for byte values < 128: MSB of byte i of
+/// the result is set iff byte i of `x` is <= byte i of `y`. Borrow-free
+/// because each byte of `(y | 0x80) - x` stays non-negative when both
+/// operand bytes are below 128 — true here (cumulative popcounts <= 64,
+/// ranks <= 63).
+#[inline]
+fn leq_bytes_lt128(x: u64, y: u64) -> u64 {
+    ((y | MSBS_STEP_8) - x) & MSBS_STEP_8
+}
+
+/// Position of the r-th (0-based) set bit within one byte, for all 256
+/// byte values × 8 ranks. Built at compile time; 2 KiB.
+const SELECT_IN_BYTE: [u8; 2048] = {
+    let mut table = [0u8; 2048];
+    let mut rank = 0usize;
+    while rank < 8 {
+        let mut byte = 0usize;
+        while byte < 256 {
+            let mut seen = 0usize;
+            let mut bit = 0usize;
+            let mut found = 8u8; // out-of-range marker for infeasible ranks
+            while bit < 8 {
+                if byte & (1 << bit) != 0 {
+                    if seen == rank {
+                        found = bit as u8;
+                        break;
+                    }
+                    seen += 1;
+                }
+                bit += 1;
+            }
+            table[(rank << 8) | byte] = found;
+            byte += 1;
+        }
+        rank += 1;
+    }
+    table
+};
+
+/// Position of the r-th (0-based) set bit of `x`. Branch-free broadword:
+/// SWAR popcount folded into cumulative byte sums, a parallel byte
+/// comparison locating the byte, then the select-in-byte table.
+/// `r < x.count_ones()` is the caller's contract.
+#[inline]
+pub fn select_in_word(x: u64, r: u32) -> u32 {
+    debug_assert!(r < x.count_ones(), "select_in_word rank out of range");
+    // Cumulative popcounts: byte i of byte_sums = ones in bytes 0..=i.
+    let mut byte_sums = x - ((x & (0xA * ONES_STEP_4)) >> 1);
+    byte_sums = (byte_sums & (0x3 * ONES_STEP_4)) + ((byte_sums >> 2) & (0x3 * ONES_STEP_4));
+    byte_sums = (byte_sums + (byte_sums >> 4)) & (0xF * ONES_STEP_8);
+    byte_sums = byte_sums.wrapping_mul(ONES_STEP_8);
+    // Count the bytes whose cumulative sum is <= r: that count × 8 is the
+    // bit offset of the byte holding the r-th one.
+    let k_step_8 = (r as u64) * ONES_STEP_8;
+    let leq = leq_bytes_lt128(byte_sums, k_step_8);
+    let place = (((leq >> 7).wrapping_mul(ONES_STEP_8) >> 56) * 8) as u32;
+    let byte_rank = (r as u64) - (((byte_sums << 8) >> place) & 0xFF);
+    place + SELECT_IN_BYTE[(((x >> place) & 0xFF) as usize) | ((byte_rank as usize) << 8)] as u32
+}
+
+// --- BitVec with O(1) rank/select ----------------------------------------
+
+/// Payload words per directory block (2048 bits).
+const BLOCK_WORDS: usize = 32;
+/// Payload words per sub-block (512 bits).
+const SUB_WORDS: usize = 8;
+/// One select hint (block index) per this many ones.
+const SELECT_SAMPLE: usize = 4096;
+
+/// Immutable bit vector with O(1) `rank1` and `select1`.
+///
+/// Space: payload + 64 bits per 2048 (the interleaved directory) + a u32
+/// hint per 4096 ones — ~3.2% overhead over the raw bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+    ones: usize,
+    /// One u64 per 2048-bit block: bits [0,32) = ones before the block;
+    /// bits [32+10j, 42+10j) for j in 0..3 = ones in the block's j-th
+    /// 512-bit sub-block (the fourth count is implied).
+    dir: Vec<u64>,
+    /// Block index of every `SELECT_SAMPLE`-th one.
+    hints: Vec<u32>,
+}
+
+impl BitVec {
+    /// Build from raw words; bits at and past `len` must be zero (the
+    /// constructor asserts it — rank over the tail depends on it).
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        assert_eq!(words.len(), len.div_ceil(64), "word count / len mismatch");
+        assert!(len <= u32::MAX as usize, "BitVec capped at 2^32 bits");
+        if let Some(&last) = words.last() {
+            let tail = len % 64;
+            assert!(
+                tail == 0 || last >> tail == 0,
+                "bits past len must be zero"
+            );
+        }
+        let num_blocks = len.div_ceil(BLOCK_WORDS * 64).max(1);
+        let mut dir = Vec::with_capacity(num_blocks);
+        let mut hints = Vec::new();
+        let mut abs = 0usize;
+        for b in 0..num_blocks {
+            let mut entry = abs as u64;
+            let mut block_ones = 0usize;
+            for sub in 0..4 {
+                let start = b * BLOCK_WORDS + sub * SUB_WORDS;
+                let end = (start + SUB_WORDS).min(words.len());
+                let sub_ones: u32 = words
+                    .get(start.min(words.len())..end)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|w| w.count_ones())
+                    .sum();
+                if sub < 3 {
+                    entry |= (sub_ones as u64) << (32 + 10 * sub);
+                }
+                block_ones += sub_ones as usize;
+            }
+            // Sampled select hints: record the block of every
+            // SELECT_SAMPLE-th one as the counts pass it.
+            while hints.len() * SELECT_SAMPLE < abs + block_ones
+                && hints.len() * SELECT_SAMPLE >= abs
+            {
+                hints.push(b as u32);
+            }
+            dir.push(entry);
+            abs += block_ones;
+        }
+        Self {
+            words,
+            len,
+            ones: abs,
+            dir,
+            hints,
+        }
+    }
+
+    /// Build from an iterator of bools.
+    pub fn from_bools(bits: impl IntoIterator<Item = bool>) -> Self {
+        let mut buf = BitBuf::new();
+        for b in bits {
+            buf.push_bit(b);
+        }
+        Self::from_buf(&buf)
+    }
+
+    /// Build from a finished [`BitBuf`].
+    pub fn from_buf(buf: &BitBuf) -> Self {
+        Self::from_words(buf.words().to_vec(), buf.len())
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total number of set bits.
+    #[inline]
+    pub fn ones(&self) -> usize {
+        self.ones
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len, "bit index out of range");
+        self.words[i / 64] >> (i % 64) & 1 != 0
+    }
+
+    /// Ones in `[0, i)`; `i` may equal `len`.
+    #[inline]
+    pub fn rank1(&self, i: usize) -> usize {
+        debug_assert!(i <= self.len, "rank index out of range");
+        if i == 0 {
+            return 0;
+        }
+        if i == self.len {
+            // Also keeps block/word indexing in range when len is an
+            // exact block or word multiple.
+            return self.ones;
+        }
+        let block = i / (BLOCK_WORDS * 64);
+        let entry = self.dir[block];
+        let mut r = (entry & 0xFFFF_FFFF) as usize;
+        let sub = (i / (SUB_WORDS * 64)) % 4;
+        for j in 0..sub {
+            r += ((entry >> (32 + 10 * j)) & 0x3FF) as usize;
+        }
+        let word = i / 64;
+        for w in (block * BLOCK_WORDS + sub * SUB_WORDS)..word {
+            r += self.words[w].count_ones() as usize;
+        }
+        let bit = i % 64;
+        if bit != 0 {
+            r += (self.words[word] & ((1u64 << bit) - 1)).count_ones() as usize;
+        }
+        r
+    }
+
+    /// Position of the k-th (0-based) set bit. `k < ones()` is the
+    /// caller's contract (asserted).
+    pub fn select1(&self, k: usize) -> usize {
+        assert!(k < self.ones, "select1 rank {k} >= ones {}", self.ones);
+        // Hint window: the k/SAMPLE-th sampled one lives in hints[k/S],
+        // the next sample bounds the search from above.
+        let sample = k / SELECT_SAMPLE;
+        let mut lo = self.hints[sample] as usize;
+        let mut hi = self
+            .hints
+            .get(sample + 1)
+            .map_or(self.dir.len(), |&b| b as usize + 1);
+        // Binary search the last block whose absolute count is <= k.
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if (self.dir[mid] & 0xFFFF_FFFF) as usize <= k {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let entry = self.dir[lo];
+        let mut rem = k - (entry & 0xFFFF_FFFF) as usize;
+        // Walk the three explicit sub-block counts.
+        let mut sub = 0usize;
+        while sub < 3 {
+            let c = ((entry >> (32 + 10 * sub)) & 0x3FF) as usize;
+            if rem < c {
+                break;
+            }
+            rem -= c;
+            sub += 1;
+        }
+        // At most eight payload words, then broadword select-in-word.
+        let mut word = lo * BLOCK_WORDS + sub * SUB_WORDS;
+        loop {
+            let ones = self.words[word].count_ones() as usize;
+            if rem < ones {
+                return word * 64 + select_in_word(self.words[word], rem as u32) as usize;
+            }
+            rem -= ones;
+            word += 1;
+        }
+    }
+
+    /// Heap payload bytes (words + directory + hints).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8 + self.dir.len() * 8 + self.hints.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, PropConfig};
+    use crate::util::rng::Xoshiro256;
+
+    /// Naive oracle over a plain bool vector.
+    struct Naive(Vec<bool>);
+
+    impl Naive {
+        fn rank1(&self, i: usize) -> usize {
+            self.0[..i].iter().filter(|&&b| b).count()
+        }
+        fn select1(&self, k: usize) -> usize {
+            self.0
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b)
+                .nth(k)
+                .map(|(i, _)| i)
+                .expect("select oracle rank in range")
+        }
+    }
+
+    fn check_all(bits: &[bool]) {
+        let bv = BitVec::from_bools(bits.iter().copied());
+        let oracle = Naive(bits.to_vec());
+        assert_eq!(bv.len(), bits.len());
+        let total = oracle.rank1(bits.len());
+        assert_eq!(bv.ones(), total);
+        for i in 0..=bits.len() {
+            assert_eq!(bv.rank1(i), oracle.rank1(i), "rank1({i}) on len {}", bits.len());
+        }
+        for k in 0..total {
+            assert_eq!(bv.select1(k), oracle.select1(k), "select1({k})");
+        }
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(bv.get(i), b);
+        }
+    }
+
+    #[test]
+    fn select_in_word_matches_naive_all_ranks() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let mut words: Vec<u64> = vec![
+            1,
+            u64::MAX,
+            0x8000_0000_0000_0000,
+            0x5555_5555_5555_5555,
+            0xAAAA_AAAA_AAAA_AAAA,
+            0x0100_0000_0000_0080,
+        ];
+        for _ in 0..200 {
+            words.push(rng.next_u64());
+        }
+        for &w in &words {
+            let mut seen = 0u32;
+            for bit in 0..64 {
+                if w >> bit & 1 != 0 {
+                    assert_eq!(select_in_word(w, seen), bit, "word {w:#x} rank {seen}");
+                    seen += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        check_all(&[]);
+        check_all(&[false]);
+        check_all(&[true]);
+        let bv = BitVec::from_bools(std::iter::empty());
+        assert_eq!(bv.ones(), 0);
+        assert_eq!(bv.rank1(0), 0);
+    }
+
+    #[test]
+    fn boundary_dims_63_64_65() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for len in [63usize, 64, 65, 127, 128, 129, 511, 512, 513, 2047, 2048, 2049] {
+            // Random, all-ones and all-zeros at every boundary length.
+            let random: Vec<bool> = (0..len).map(|_| rng.bernoulli(0.4)).collect();
+            check_all(&random);
+            check_all(&vec![true; len]);
+            check_all(&vec![false; len]);
+        }
+    }
+
+    #[test]
+    fn dense_vs_sparse_property() {
+        forall("bitvec-vs-naive", PropConfig::default(), |rng, size| {
+            let len = size * 67 + rng.gen_range(64);
+            // Alternate sparse and dense fills across cases.
+            let p = if size % 2 == 0 { 0.02 } else { 0.85 };
+            let bits: Vec<bool> = (0..len).map(|_| rng.bernoulli(p)).collect();
+            let bv = BitVec::from_bools(bits.iter().copied());
+            let oracle = Naive(bits.clone());
+            // Spot-check a deterministic sample of positions + all selects.
+            for step in 1..4 {
+                let i = (len * step) / 4;
+                crate::prop_assert!(
+                    bv.rank1(i) == oracle.rank1(i),
+                    "rank1({i}) mismatch at len {len}"
+                );
+            }
+            for k in 0..bv.ones() {
+                crate::prop_assert!(
+                    bv.select1(k) == oracle.select1(k),
+                    "select1({k}) mismatch at len {len}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rank_select_inverse() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let bits: Vec<bool> = (0..10_000).map(|_| rng.bernoulli(0.3)).collect();
+        let bv = BitVec::from_bools(bits.iter().copied());
+        for k in 0..bv.ones() {
+            let pos = bv.select1(k);
+            assert!(bv.get(pos));
+            assert_eq!(bv.rank1(pos), k);
+            assert_eq!(bv.rank1(pos + 1), k + 1);
+        }
+    }
+
+    #[test]
+    fn bitbuf_roundtrip_mixed_widths() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut buf = BitBuf::new();
+        let mut expect: Vec<(usize, u64, u32)> = Vec::new();
+        let mut pos = 0usize;
+        for _ in 0..500 {
+            let width = 1 + rng.gen_range(64) as u32;
+            let value = if width == 64 {
+                rng.next_u64()
+            } else {
+                rng.next_u64() & ((1u64 << width) - 1)
+            };
+            buf.push_bits(value, width);
+            expect.push((pos, value, width));
+            pos += width as usize;
+        }
+        assert_eq!(buf.len(), pos);
+        for (p, v, w) in expect {
+            assert_eq!(buf.get_bits(p, w), v, "at bit {p} width {w}");
+        }
+        // Word-level round trip preserves everything.
+        let again = BitBuf::from_words(buf.words().to_vec(), buf.len()).expect("valid words");
+        assert_eq!(again, buf);
+    }
+
+    #[test]
+    fn bitbuf_from_words_rejects_bad_shapes() {
+        assert!(BitBuf::from_words(vec![0, 0], 65).is_some());
+        assert!(BitBuf::from_words(vec![0], 65).is_none(), "too few words");
+        assert!(BitBuf::from_words(vec![0, 0, 0], 65).is_none(), "too many");
+        // Garbage above len in the tail word breaks round-tripping.
+        assert!(BitBuf::from_words(vec![0, 0b10], 65).is_none());
+        assert!(BitBuf::from_words(vec![0, 0b1], 65).is_some());
+    }
+
+    #[test]
+    fn bytes_overhead_is_small() {
+        let bits = vec![true; 1 << 20];
+        let bv = BitVec::from_bools(bits);
+        let payload = (1usize << 20) / 8;
+        assert!(
+            bv.bytes() < payload + payload / 16,
+            "rank/select overhead too large: {} over {payload}",
+            bv.bytes()
+        );
+    }
+}

@@ -1,0 +1,420 @@
+//! Elias–Fano encoding of monotone (non-decreasing) u64 sequences
+//! (DESIGN.md §10): n values over universe `[0, u]` in
+//! `n·(2 + ⌈log₂(u/n)⌉)` bits plus the rank/select directory, with O(1)
+//! random access through [`BitVec::select1`] on the unary upper half.
+//!
+//! Each value splits into `low_width` low bits (packed fixed-width) and
+//! a high part stored in unary: value `i` contributes a one at position
+//! `high(i) + i` of the high bit vector. `get(i)` is then
+//! `((select1(i) − i) << low_width) | low(i)`.
+//!
+//! Used for CSR row offsets ([`crate::sparse::csr::RowOffsets`]) and the
+//! model-v3 artifact sections (`model/io.rs`): both are sorted integer
+//! sequences whose plain encodings burn 4–8 bytes per entry.
+
+use super::bits::{BitBuf, BitVec};
+
+/// An Elias–Fano-coded monotone sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EliasFano {
+    n: usize,
+    /// The largest encoded value (0 for the empty sequence).
+    universe: u64,
+    low_width: u32,
+    low: BitBuf,
+    high: BitVec,
+}
+
+/// The canonical split: `⌊log₂(u/n)⌋` low bits for n values over
+/// universe size u (= max value + 1), zero when the sequence is dense.
+fn split_width(n: usize, universe: u64) -> u32 {
+    if n == 0 {
+        return 0;
+    }
+    // u128 dodges the +1 overflow at universe == u64::MAX.
+    let ratio = (universe as u128 + 1) / n as u128;
+    if ratio >= 2 {
+        ratio.ilog2()
+    } else {
+        0
+    }
+}
+
+impl EliasFano {
+    /// Encode a non-decreasing sequence. Panics on decreasing input —
+    /// monotonicity is the codec's precondition, not a runtime case.
+    pub fn from_sorted(values: &[u64]) -> Self {
+        let n = values.len();
+        let universe = values.last().copied().unwrap_or(0);
+        let low_width = split_width(n, universe);
+        let mut low = BitBuf::with_capacity(n * low_width as usize);
+        let high_len = n + (universe >> low_width) as usize + 1;
+        let mut high_buf = BitBuf::with_capacity(high_len);
+        high_buf.push_zeros(high_len);
+        let mut high_words = high_buf.words().to_vec();
+        let mut prev = 0u64;
+        for (i, &v) in values.iter().enumerate() {
+            assert!(v >= prev, "EliasFano input must be non-decreasing");
+            prev = v;
+            if low_width > 0 {
+                low.push_bits(v & ((1u64 << low_width) - 1), low_width);
+            }
+            let pos = (v >> low_width) as usize + i;
+            high_words[pos / 64] |= 1u64 << (pos % 64);
+        }
+        let high = BitVec::from_words(high_words, high_len);
+        Self {
+            n,
+            universe,
+            low_width,
+            low,
+            high,
+        }
+    }
+
+    /// Reconstruct from serialized parts (artifact load path). The low
+    /// width is derived from `(n, universe)`, every length is
+    /// cross-checked, and the ones count and last value must be
+    /// consistent — a corrupt section comes back as `Err`, never a panic
+    /// or an oversized allocation beyond the provided words.
+    pub fn from_parts(
+        n: usize,
+        universe: u64,
+        low_words: Vec<u64>,
+        high_words: Vec<u64>,
+    ) -> Result<Self, String> {
+        if n == 0 {
+            if universe != 0 || !low_words.is_empty() {
+                return Err("empty Elias-Fano section with nonzero universe/low".into());
+            }
+            let high_len = 1;
+            if high_words.len() != 1 || high_words[0] != 0 {
+                return Err("empty Elias-Fano section with malformed high bits".into());
+            }
+            let high = BitVec::from_words(high_words, high_len);
+            return Ok(Self {
+                n,
+                universe,
+                low_width: 0,
+                low: BitBuf::new(),
+                high,
+            });
+        }
+        let low_width = split_width(n, universe);
+        let low_len = n * low_width as usize;
+        let low = BitBuf::from_words(low_words, low_len)
+            .ok_or_else(|| "Elias-Fano low-bits length mismatch".to_string())?;
+        let high_len = n + (universe >> low_width) as usize + 1;
+        if high_words.len() != high_len.div_ceil(64) {
+            return Err("Elias-Fano high-bits length mismatch".into());
+        }
+        if let Some(&last) = high_words.last() {
+            let tail = high_len % 64;
+            if tail != 0 && last >> tail != 0 {
+                return Err("Elias-Fano high-bits tail padding nonzero".into());
+            }
+        }
+        let high = BitVec::from_words(high_words, high_len);
+        if high.ones() != n {
+            return Err(format!(
+                "Elias-Fano ones count {} != n {n}",
+                high.ones()
+            ));
+        }
+        let ef = Self {
+            n,
+            universe,
+            low_width,
+            low,
+            high,
+        };
+        if ef.get(n - 1) != universe {
+            return Err("Elias-Fano last value != universe".into());
+        }
+        Ok(ef)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The largest encoded value (0 for the empty sequence).
+    #[inline]
+    pub fn universe(&self) -> u64 {
+        self.universe
+    }
+
+    /// O(1) random access to the i-th value.
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        debug_assert!(i < self.n, "EliasFano index out of range");
+        let high = (self.high.select1(i) - i) as u64;
+        if self.low_width == 0 {
+            high
+        } else {
+            (high << self.low_width) | self.low.get_bits(i * self.low_width as usize, self.low_width)
+        }
+    }
+
+    /// First `(index, value)` with `value >= x` (binary search over the
+    /// O(1) `get`, so O(log n)); `None` when every value is below `x`.
+    pub fn successor(&self, x: u64) -> Option<(usize, u64)> {
+        if self.n == 0 || self.universe < x {
+            return None;
+        }
+        let (mut lo, mut hi) = (0usize, self.n - 1);
+        // Invariant: get(hi) >= x (checked above via universe).
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.get(mid) >= x {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        Some((lo, self.get(lo)))
+    }
+
+    /// Sequential decode (faster than n `get` calls: one pass over the
+    /// high words, no selects).
+    pub fn iter(&self) -> EliasFanoIter<'_> {
+        EliasFanoIter {
+            ef: self,
+            i: 0,
+            high_pos: 0,
+        }
+    }
+
+    /// Heap payload bytes (both halves including rank/select directory).
+    pub fn bytes(&self) -> usize {
+        self.low.bytes() + self.high.bytes()
+    }
+
+    /// Serialization accessors (the v3 artifact writes these verbatim).
+    pub fn low_words(&self) -> &[u64] {
+        self.low.words()
+    }
+
+    pub fn high_words(&self) -> &[u64] {
+        self.high.words()
+    }
+}
+
+/// Sequential decoder returned by [`EliasFano::iter`].
+pub struct EliasFanoIter<'a> {
+    ef: &'a EliasFano,
+    i: usize,
+    high_pos: usize,
+}
+
+impl Iterator for EliasFanoIter<'_> {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.i >= self.ef.n {
+            return None;
+        }
+        // Scan the unary half for the next one; amortized O(1) per item.
+        while !self.ef.high.get(self.high_pos) {
+            self.high_pos += 1;
+        }
+        let high = (self.high_pos - self.i) as u64;
+        let w = self.ef.low_width;
+        let v = if w == 0 {
+            high
+        } else {
+            (high << w) | self.ef.low.get_bits(self.i * w as usize, w)
+        };
+        self.high_pos += 1;
+        self.i += 1;
+        Some(v)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rest = self.ef.n - self.i;
+        (rest, Some(rest))
+    }
+}
+
+impl ExactSizeIterator for EliasFanoIter<'_> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, PropConfig};
+    use crate::util::rng::Xoshiro256;
+
+    /// The naive sorted-vector oracle every property pins against.
+    fn check_against_oracle(values: &[u64]) {
+        let ef = EliasFano::from_sorted(values);
+        assert_eq!(ef.len(), values.len());
+        for (i, &v) in values.iter().enumerate() {
+            assert_eq!(ef.get(i), v, "get({i}) of {} values", values.len());
+        }
+        let decoded: Vec<u64> = ef.iter().collect();
+        assert_eq!(decoded, values, "iter mismatch");
+        // Successor against a linear-scan oracle, probed at every value,
+        // every value±1, and past the end.
+        let mut probes: Vec<u64> = vec![0, u64::MAX];
+        for &v in values {
+            probes.push(v);
+            probes.push(v.saturating_sub(1));
+            probes.push(v.saturating_add(1));
+        }
+        for x in probes {
+            let want = values
+                .iter()
+                .enumerate()
+                .find(|&(_, &v)| v >= x)
+                .map(|(i, &v)| (i, v));
+            assert_eq!(ef.successor(x), want, "successor({x})");
+        }
+    }
+
+    #[test]
+    fn empty_single_and_constant() {
+        check_against_oracle(&[]);
+        check_against_oracle(&[0]);
+        check_against_oracle(&[7]);
+        check_against_oracle(&[u64::MAX]);
+        check_against_oracle(&vec![0; 100]);
+        check_against_oracle(&vec![42; 257]);
+    }
+
+    #[test]
+    fn dense_vs_sparse() {
+        // Dense: consecutive integers (low_width 0).
+        check_against_oracle(&(0..300).collect::<Vec<u64>>());
+        // All-ones gaps (strictly increasing by 1 from an offset).
+        check_against_oracle(&(1000..1300).collect::<Vec<u64>>());
+        // Sparse: huge gaps.
+        let sparse: Vec<u64> = (0..50).map(|i| i * 1_000_000_007).collect();
+        check_against_oracle(&sparse);
+    }
+
+    #[test]
+    fn boundary_dims_63_64_65() {
+        for n in [63usize, 64, 65] {
+            let vals: Vec<u64> = (0..n as u64).map(|i| i * 13 + 5).collect();
+            check_against_oracle(&vals);
+        }
+        // Values at word-boundary magnitudes.
+        check_against_oracle(&[(1 << 63) - 1, 1 << 63, (1 << 63) + 1]);
+    }
+
+    #[test]
+    fn u32_overflow_adjacent_universes() {
+        let base = u32::MAX as u64;
+        let vals = vec![base - 2, base - 1, base, base + 1, base + 2, base + 700];
+        check_against_oracle(&vals);
+        // A whole sequence straddling 2^32 with mixed gaps.
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let mut v = base - 5000;
+        let mut vals = Vec::new();
+        for _ in 0..2000 {
+            v += rng.gen_range(17) as u64;
+            vals.push(v);
+        }
+        check_against_oracle(&vals);
+    }
+
+    #[test]
+    fn successor_on_gaps() {
+        let vals = vec![10, 10, 20, 50, 51, 1000];
+        let ef = EliasFano::from_sorted(&vals);
+        assert_eq!(ef.successor(0), Some((0, 10)));
+        assert_eq!(ef.successor(10), Some((0, 10)), "hits first duplicate");
+        assert_eq!(ef.successor(11), Some((2, 20)));
+        assert_eq!(ef.successor(21), Some((3, 50)));
+        assert_eq!(ef.successor(52), Some((5, 1000)));
+        assert_eq!(ef.successor(1000), Some((5, 1000)));
+        assert_eq!(ef.successor(1001), None);
+    }
+
+    #[test]
+    fn random_monotone_property() {
+        forall("elias-fano-vs-oracle", PropConfig::default(), |rng, size| {
+            let n = size * 9 + 1;
+            // Geometric-ish universes so both dense and sparse splits run.
+            let max_gap = 1u64 << (rng.gen_range(24) + 1);
+            let mut v = 0u64;
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                v += rng.next_u64() % max_gap;
+                vals.push(v);
+            }
+            let ef = EliasFano::from_sorted(&vals);
+            for (i, &want) in vals.iter().enumerate() {
+                crate::prop_assert!(ef.get(i) == want, "get({i}) at n={n} gap={max_gap}");
+            }
+            let probe = rng.next_u64() % vals.last().map_or(1, |&l| l.max(1));
+            let want = vals
+                .iter()
+                .enumerate()
+                .find(|&(_, &x)| x >= probe)
+                .map(|(i, &x)| (i, x));
+            crate::prop_assert!(ef.successor(probe) == want, "successor({probe})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parts_roundtrip_and_validation() {
+        let vals: Vec<u64> = (0..500u64).map(|i| i * 37 + (i % 3)).collect();
+        let ef = EliasFano::from_sorted(&vals);
+        let again = EliasFano::from_parts(
+            ef.len(),
+            ef.universe(),
+            ef.low_words().to_vec(),
+            ef.high_words().to_vec(),
+        )
+        .expect("round trip");
+        assert_eq!(again, ef);
+
+        // Wrong lengths and corrupt padding are typed errors.
+        assert!(EliasFano::from_parts(ef.len() + 1, ef.universe(), ef.low_words().to_vec(), ef.high_words().to_vec()).is_err());
+        assert!(EliasFano::from_parts(ef.len(), ef.universe() + 64, ef.low_words().to_vec(), ef.high_words().to_vec()).is_err());
+        let mut short_low = ef.low_words().to_vec();
+        short_low.pop();
+        assert!(EliasFano::from_parts(ef.len(), ef.universe(), short_low, ef.high_words().to_vec()).is_err());
+        let mut bad_high = ef.high_words().to_vec();
+        if let Some(last) = bad_high.last_mut() {
+            *last |= 1 << 63; // tail padding must stay zero
+        }
+        assert!(EliasFano::from_parts(ef.len(), ef.universe(), ef.low_words().to_vec(), bad_high).is_err());
+
+        // Empty-sequence parts.
+        let empty = EliasFano::from_sorted(&[]);
+        let again = EliasFano::from_parts(0, 0, Vec::new(), empty.high_words().to_vec())
+            .expect("empty round trip");
+        assert_eq!(again, empty);
+        assert!(EliasFano::from_parts(0, 9, Vec::new(), vec![0]).is_err());
+    }
+
+    #[test]
+    fn compresses_row_ptr_style_sequences() {
+        // A CSR offset array: 100k rows, ~6 nnz per row. Plain usize
+        // storage is 8 bytes/entry; EF should land well under 2.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut offs = vec![0u64];
+        for _ in 0..100_000 {
+            offs.push(offs.last().unwrap() + rng.gen_range(12) as u64);
+        }
+        let ef = EliasFano::from_sorted(&offs);
+        let plain = offs.len() * 8;
+        assert!(
+            ef.bytes() * 4 < plain,
+            "EF {} bytes vs plain {plain} — expected >4x win",
+            ef.bytes()
+        );
+        for i in (0..offs.len()).step_by(997) {
+            assert_eq!(ef.get(i), offs[i]);
+        }
+    }
+}

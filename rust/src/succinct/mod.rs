@@ -1,0 +1,26 @@
+//! `nysx::succinct` — dependency-free succinct data structures
+//! (DESIGN.md §10): the memory layer under the paper's on-chip budget
+//! claims, built in three tiers:
+//!
+//! * [`bits`] — [`BitBuf`] (append/extract bit packing) and [`BitVec`]
+//!   with O(1) `rank1`/`select1` over an interleaved poppy-style
+//!   directory (~3.2% overhead) plus broadword select-in-word.
+//! * [`elias_fano`] — [`EliasFano`], the monotone-sequence codec behind
+//!   compressed CSR row offsets ([`crate::sparse::RowOffsets`]) and the
+//!   model-v3 artifact sections.
+//! * [`phast`] — [`PhastMph`], the bucketed seeded MPH (≈2.7 bits/key
+//!   at codebook scale) serving as the default engine behind
+//!   [`crate::mph::MphLookup`], with the BBHash cascade retained as its
+//!   differential oracle.
+//!
+//! Everything here is in the deterministic kernel set: no hash-order
+//! containers, no clocks, no ambient RNG — structures are pure
+//! functions of their inputs at any thread count.
+
+pub mod bits;
+pub mod elias_fano;
+pub mod phast;
+
+pub use bits::{select_in_word, BitBuf, BitVec};
+pub use elias_fano::EliasFano;
+pub use phast::PhastMph;

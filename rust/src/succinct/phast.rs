@@ -1,0 +1,399 @@
+//! PHast/CHD-style bucketed minimal perfect hashing (DESIGN.md §10) —
+//! the compact replacement for the BBHash cascade in [`crate::mph`].
+//!
+//! Keys hash into `⌈n/λ⌉` buckets; each bucket searches for the smallest
+//! seed that lands its keys on distinct, unoccupied slots of a
+//! `⌈β·n⌉`-slot table. The structure then stores only (a) one
+//! Rice-coded seed per bucket and (b) an `assigned` bit per slot whose
+//! [`BitVec::rank1`] compresses the slot space back onto `[0, n)` —
+//! landing at ≈2.7 bits/key on large key sets (vs ≈4+ for the cascade).
+//!
+//! Construction is two-phase so the parallel fan-out can never leak into
+//! the result:
+//!
+//! 1. **Parallel lower bounds** (`exec::map_parts` over `even_ranges`):
+//!    each bucket's minimal *self*-collision-free seed — a pure function
+//!    of the bucket, so lane count and completion order are irrelevant.
+//! 2. **Sequential placement**: buckets in (size desc, id asc) order
+//!    continue their seed search against the global occupancy table,
+//!    starting from the phase-1 bound. No parallel state mutates here.
+//!
+//! The result is bit-identical at any thread count — the same contract
+//! every `nysx::exec` kernel carries.
+
+use super::bits::{BitBuf, BitVec};
+use crate::exec::{self, even_ranges, map_parts, Pool};
+use crate::mph::wang_hash64;
+
+/// Expected keys per bucket (λ). Larger buckets amortize the per-bucket
+/// seed better but search exponentially harder; 5 is the sweet spot the
+/// sizing sweep settled on.
+const LAMBDA: usize = 5;
+/// Slot-table load numerator/denominator: m = ⌈n·β⌉ with β = 1.2.
+/// Looser tables shrink seeds faster than the extra `assigned` bits
+/// cost (the sweep's minimum across codebook-scale n).
+const BETA_NUM: usize = 6;
+const BETA_DEN: usize = 5;
+/// Per-bucket seed search cap; a bucket that exhausts it aborts the
+/// attempt and the whole build retries under a new global seed.
+const MAX_SEED: u64 = 1 << 20;
+/// Global rebuild attempts before declaring the key set unbuildable
+/// (never observed past attempt 0 at these λ/β).
+const MAX_RETRIES: u64 = 8;
+
+/// Multiply-shift range reduction: uniform `h` to `[0, n)` without `%`.
+#[inline]
+fn mult_shift(h: u64, n: usize) -> usize {
+    ((h as u128 * n as u128) >> 64) as usize
+}
+
+/// Slot of a key (pre-hashed to `h`) under bucket seed `s` and global
+/// retry seed `g`.
+#[inline]
+fn slot(h: u64, s: u64, g: u64, m: usize) -> usize {
+    mult_shift(wang_hash64(h ^ s.wrapping_mul(0x9E3779B97F4A7C15) ^ g), m)
+}
+
+/// The bucketed MPH: seeds + assigned-slot bitmap, both succinct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhastMph {
+    num_keys: usize,
+    num_buckets: usize,
+    num_slots: usize,
+    /// Nonzero only when an earlier attempt hit `MAX_SEED`.
+    global_seed: u64,
+    /// Rice remainder width for the per-bucket seeds.
+    rice_k: u32,
+    /// Unary seed quotients: bucket b's quotient is the run of zeros
+    /// before the b-th one, recovered with two selects.
+    quotients: BitVec,
+    /// Fixed-width seed remainders, `rice_k` bits per bucket.
+    remainders: BitBuf,
+    /// One bit per slot; `rank1` over it is the slot→index compression.
+    assigned: BitVec,
+}
+
+/// `true` iff the bucket's keys land on pairwise-distinct slots that are
+/// also all free in `occupied` (pass the all-zeros table for phase 1).
+/// Buckets are O(λ) so the quadratic distinctness check is cheap.
+fn placeable(hashes: &[u64], s: u64, g: u64, m: usize, occupied: &[u64]) -> bool {
+    for (i, &h) in hashes.iter().enumerate() {
+        let p = slot(h, s, g, m);
+        if occupied[p / 64] >> (p % 64) & 1 == 1 {
+            return false;
+        }
+        for &earlier in &hashes[..i] {
+            if slot(earlier, s, g, m) == p {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+impl PhastMph {
+    /// Build over a distinct key set on the process-wide pool. Panics on
+    /// duplicate keys (same contract as the legacy cascade).
+    pub fn build(keys: &[u64]) -> Self {
+        Self::build_with_pool(keys, &exec::global())
+    }
+
+    /// [`Self::build`] on an explicit pool. Thread count never changes
+    /// the structure (see the module docs for why).
+    pub fn build_with_pool(keys: &[u64], pool: &Pool) -> Self {
+        let n = keys.len();
+        {
+            // Duplicate rejection without hash sets (determinism lint
+            // covers this module): sort a copy, scan adjacent.
+            let mut sorted = keys.to_vec();
+            sorted.sort_unstable();
+            for w in sorted.windows(2) {
+                assert!(w[0] != w[1], "duplicate key {} in MPH key set", w[0]);
+            }
+        }
+        if n == 0 {
+            return Self {
+                num_keys: 0,
+                num_buckets: 0,
+                num_slots: 0,
+                global_seed: 0,
+                rice_k: 0,
+                quotients: BitVec::from_words(Vec::new(), 0),
+                remainders: BitBuf::new(),
+                assigned: BitVec::from_words(Vec::new(), 0),
+            };
+        }
+        let m = (n * BETA_NUM).div_ceil(BETA_DEN).max(n);
+        let nb = n.div_ceil(LAMBDA);
+
+        // Group key hashes by bucket with a counting sort — stable,
+        // allocation-flat, and independent of input order beyond the
+        // (deterministic) key order itself. wang_hash64 is a bijection,
+        // so distinct keys keep distinct hashes.
+        let hashes: Vec<u64> = keys.iter().map(|&k| wang_hash64(k)).collect();
+        let mut counts = vec![0usize; nb + 1];
+        for &h in &hashes {
+            counts[mult_shift(h, nb) + 1] += 1;
+        }
+        for b in 0..nb {
+            counts[b + 1] += counts[b];
+        }
+        let mut grouped = vec![0u64; n];
+        let mut cursor = counts.clone();
+        for &h in &hashes {
+            let b = mult_shift(h, nb);
+            grouped[cursor[b]] = h;
+            cursor[b] += 1;
+        }
+        let bucket = |b: usize| &grouped[counts[b]..counts[b + 1]];
+
+        let mut retry = 0u64;
+        loop {
+            let g = if retry == 0 { 0 } else { wang_hash64(retry) };
+
+            // Phase 1 — parallel: per-bucket minimal self-collision-free
+            // seed, a pure lower bound on the final seed.
+            let ranges = even_ranges(nb, pool.threads());
+            let no_occupancy = vec![0u64; m.div_ceil(64)];
+            let starts: Vec<u64> = map_parts(pool, ranges.len(), |part| {
+                let mut out = Vec::with_capacity(ranges[part].len());
+                for b in ranges[part].clone() {
+                    let keys = bucket(b);
+                    let mut s = 0u64;
+                    while !placeable(keys, s, g, m, &no_occupancy) {
+                        s += 1;
+                    }
+                    out.push(s);
+                }
+                out
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+
+            // Phase 2 — sequential: place buckets largest-first against
+            // the shared table, resuming each search at its bound.
+            let mut order: Vec<usize> = (0..nb).collect();
+            order.sort_by_key(|&b| (usize::MAX - bucket(b).len(), b));
+            let mut occupied = vec![0u64; m.div_ceil(64)];
+            let mut seeds = vec![0u64; nb];
+            let mut failed = false;
+            'place: for &b in &order {
+                let keys = bucket(b);
+                let mut s = starts[b];
+                while !placeable(keys, s, g, m, &occupied) {
+                    s += 1;
+                    if s >= MAX_SEED {
+                        failed = true;
+                        break 'place;
+                    }
+                }
+                for &h in keys {
+                    let p = slot(h, s, g, m);
+                    occupied[p / 64] |= 1 << (p % 64);
+                }
+                seeds[b] = s;
+            }
+            if failed {
+                retry += 1;
+                assert!(retry < MAX_RETRIES, "MPH build exhausted global retries");
+                continue;
+            }
+
+            // Rice-code the seeds: scan the remainder width minimizing
+            // total bits (unary quotients + terminators + remainders).
+            let rice_k = (0..=16u32)
+                .min_by_key(|&k| {
+                    nb as u64
+                        + seeds.iter().map(|&s| s >> k).sum::<u64>()
+                        + nb as u64 * k as u64
+                })
+                .unwrap_or(0);
+            let mut quotients = BitBuf::new();
+            let mut remainders = BitBuf::with_capacity(nb * rice_k as usize);
+            for &s in &seeds {
+                quotients.push_zeros((s >> rice_k) as usize);
+                quotients.push_bit(true);
+                if rice_k > 0 {
+                    remainders.push_bits(s & ((1u64 << rice_k) - 1), rice_k);
+                }
+            }
+            return Self {
+                num_keys: n,
+                num_buckets: nb,
+                num_slots: m,
+                global_seed: g,
+                rice_k,
+                quotients: BitVec::from_buf(&quotients),
+                remainders,
+                assigned: BitVec::from_words(occupied, m),
+            };
+        }
+    }
+
+    /// Decode bucket `b`'s seed: quotient from two selects on the unary
+    /// stream, remainder from the fixed-width buffer.
+    #[inline]
+    fn seed(&self, b: usize) -> u64 {
+        let end = self.quotients.select1(b);
+        let start = if b == 0 { 0 } else { self.quotients.select1(b - 1) + 1 };
+        let q = (end - start) as u64;
+        if self.rice_k == 0 {
+            q
+        } else {
+            (q << self.rice_k)
+                | self.remainders.get_bits(b * self.rice_k as usize, self.rice_k)
+        }
+    }
+
+    /// O(1) lookup: the MPH index in `[0, num_keys)` for keys in the
+    /// build set. A key *outside* the set either hits an unassigned slot
+    /// (`None`) or aliases an assigned one — returning an in-range index
+    /// the caller's verification store rejects, exactly like the legacy
+    /// cascade's contract.
+    #[inline]
+    pub fn index(&self, key: u64) -> Option<u32> {
+        if self.num_keys == 0 {
+            return None;
+        }
+        let h = wang_hash64(key);
+        let s = self.seed(mult_shift(h, self.num_buckets));
+        let pos = slot(h, s, self.global_seed, self.num_slots);
+        if self.assigned.get(pos) {
+            Some(self.assigned.rank1(pos) as u32)
+        } else {
+            None
+        }
+    }
+
+    pub fn num_keys(&self) -> usize {
+        self.num_keys
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.num_buckets
+    }
+
+    /// Structure bytes: seed streams + assigned bitmap (the same
+    /// payload-only convention as the legacy `Mph::bytes`).
+    pub fn bytes(&self) -> usize {
+        self.quotients.bytes() + self.remainders.bytes() + self.assigned.bytes()
+    }
+
+    pub fn bits_per_key(&self) -> f64 {
+        if self.num_keys == 0 {
+            0.0
+        } else {
+            self.bytes() as f64 * 8.0 / self.num_keys as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mph::code_key;
+    use crate::testing::{forall, PropConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn random_keys(n: usize, rng: &mut Xoshiro256) -> Vec<u64> {
+        let mut set = std::collections::HashSet::new();
+        while set.len() < n {
+            set.insert(rng.next_u64());
+        }
+        let mut keys: Vec<u64> = set.into_iter().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    #[test]
+    fn perfect_minimal_bijection() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for &n in &[1usize, 2, 5, 64, 100, 1000, 5000] {
+            let keys = random_keys(n, &mut rng);
+            let mph = PhastMph::build(&keys);
+            let mut seen = vec![false; n];
+            for &k in &keys {
+                let idx = mph.index(k).expect("present key must resolve") as usize;
+                assert!(idx < n, "index {idx} out of range for n={n}");
+                assert!(!seen[idx], "collision at index {idx} (n={n})");
+                seen[idx] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "not minimal for n={n}");
+        }
+    }
+
+    #[test]
+    fn sequential_code_keys_stay_perfect() {
+        // The production key distribution: dense sequential LSH codes.
+        let keys: Vec<u64> = (-1500i64..1500).map(code_key).collect();
+        let mph = PhastMph::build(&keys);
+        let mut seen = std::collections::HashSet::new();
+        for &k in &keys {
+            assert!(seen.insert(mph.index(k).unwrap()));
+        }
+    }
+
+    #[test]
+    fn absent_keys_in_range_or_none() {
+        forall("phast-absent-keys", PropConfig::default(), |rng, size| {
+            let n = 1 + rng.gen_range(96 * size.max(1));
+            let keys = random_keys(n, rng);
+            let mph = PhastMph::build(&keys);
+            let key_set: std::collections::HashSet<u64> = keys.iter().copied().collect();
+            let mut checked = 0;
+            while checked < 64 {
+                let k = rng.next_u64();
+                if key_set.contains(&k) {
+                    continue;
+                }
+                if let Some(idx) = mph.index(k) {
+                    crate::prop_assert!(
+                        (idx as usize) < n,
+                        "absent key {k} indexed out of range ({idx} >= {n})"
+                    );
+                }
+                checked += 1;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_structure() {
+        let keys: Vec<u64> = (0..4000i64).map(code_key).collect();
+        let baseline = PhastMph::build_with_pool(&keys, &Pool::new(1));
+        for threads in [2usize, 7] {
+            let pool = Pool::new(threads);
+            assert_eq!(
+                PhastMph::build_with_pool(&keys, &pool),
+                baseline,
+                "structure differs at {threads} threads"
+            );
+        }
+        assert_eq!(baseline.global_seed, 0, "retries should not trigger");
+    }
+
+    #[test]
+    fn under_three_bits_per_key_at_scale() {
+        let keys: Vec<u64> = (0..20_000i64).map(code_key).collect();
+        let mph = PhastMph::build(&keys);
+        let bpk = mph.bits_per_key();
+        assert!(bpk < 3.0, "bits/key too high: {bpk:.3}");
+        assert!(bpk > 1.44, "below the information-theoretic floor: {bpk:.3}");
+    }
+
+    #[test]
+    fn empty_key_set() {
+        let mph = PhastMph::build(&[]);
+        assert_eq!(mph.index(123), None);
+        assert_eq!(mph.num_keys(), 0);
+        assert_eq!(mph.bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate key")]
+    fn rejects_duplicates() {
+        PhastMph::build(&[7, 8, 7]);
+    }
+}

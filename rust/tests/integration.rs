@@ -72,7 +72,7 @@ fn packed_engine_matches_i8_reference_end_to_end() {
         // full score vector, not just the argmax.
         assert_eq!(
             model.packed_prototypes.scores(&packed.hv),
-            model.prototypes.scores(&want_hv),
+            model.reference_prototypes().scores(&want_hv),
             "score vector mismatch"
         );
     }

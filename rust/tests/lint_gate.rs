@@ -119,3 +119,26 @@ fn gate_detects_and_pragma_clears_a_planted_violation() {
     assert_eq!(report.pragmas.len(), 1);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// The determinism rule covers the succinct codecs: a planted `HashMap`
+/// in a scratch `src/succinct/` file is a finding (the rank/select,
+/// Elias–Fano and MPH structures must be bit-reproducible — hash-order
+/// iteration anywhere in their build paths would break the cross-format
+/// and cross-thread differential pins), while the same code in a
+/// non-kernel path is not.
+#[test]
+fn gate_covers_succinct_determinism() {
+    let dir = std::env::temp_dir().join(format!("nysx-lint-succinct-{}", std::process::id()));
+    let succinct = dir.join("src").join("succinct");
+    let bench = dir.join("src").join("bench");
+    std::fs::create_dir_all(&succinct).expect("temp tree");
+    std::fs::create_dir_all(&bench).expect("temp tree");
+    let bad = "pub fn f() { let m: std::collections::HashMap<u64, u32> = Default::default(); drop(m); }\n";
+    std::fs::write(succinct.join("phast.rs"), bad).expect("write");
+    std::fs::write(bench.join("mod.rs"), bad).expect("write");
+    let report = lint_crate(&dir).expect("lint runs");
+    assert_eq!(report.findings.len(), 1, "{}", report.render_text());
+    assert_eq!(report.findings[0].rule, rules::RULE_DETERMINISM);
+    assert_eq!(report.findings[0].file, "src/succinct/phast.rs");
+    std::fs::remove_dir_all(&dir).ok();
+}
