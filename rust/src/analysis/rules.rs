@@ -25,9 +25,14 @@ pub const RULE_RAW_SPAWN: &str = "raw-spawn";
 pub const RULE_CHANNEL_PANIC: &str = "channel-panic";
 /// Rule: an `allow(...)` pragma must state its justification.
 pub const RULE_PRAGMA_JUSTIFICATION: &str = "pragma-missing-justification";
+/// Rule: raw wall-clock reads (`Instant::now` / `SystemTime`) only in
+/// the timing-confined set (`obs/`, `coordinator/`, `bench/`) —
+/// everything else times through the `obs::clock` seam, so the
+/// determinism story has ONE clock to audit.
+pub const RULE_TIMING: &str = "timing-confinement";
 
 /// All rules, in report order.
-pub const RULES: [&str; 7] = [
+pub const RULES: [&str; 8] = [
     RULE_UNSAFE,
     RULE_NO_PANIC,
     RULE_DETERMINISM,
@@ -35,6 +40,7 @@ pub const RULES: [&str; 7] = [
     RULE_RAW_SPAWN,
     RULE_CHANNEL_PANIC,
     RULE_PRAGMA_JUSTIFICATION,
+    RULE_TIMING,
 ];
 
 /// The panic-free serving set: paths where a worker panic would take the
@@ -58,6 +64,12 @@ const SPAWN_OK: [&str; 2] = ["src/exec/", "src/coordinator/"];
 /// Paths where a panicking channel endpoint takes a worker or serving
 /// lane down instead of degrading: the exec runtime and the coordinator.
 const CHANNEL_SET: [&str; 2] = ["src/coordinator/", "src/exec/"];
+
+/// Paths allowed to read the wall clock directly: the obs layer (the
+/// clock seam itself), the coordinator (per-request latency bookkeeping)
+/// and the bench harnesses. Everywhere else, raw `Instant::now` /
+/// `SystemTime` reads must route through `obs::clock` instead.
+const TIMING_OK: [&str; 3] = ["src/obs/", "src/coordinator/", "src/bench/"];
 
 pub(super) fn in_set(rel: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| rel == *p || rel.starts_with(p))
@@ -235,6 +247,30 @@ pub fn check_file(rel: &str, text: &str) -> (Vec<Finding>, Vec<PragmaSite>) {
                 "raw std::thread spawn outside exec/ and coordinator/".to_string(),
             );
         }
+        // Timing confinement: tests (both #[cfg(test)] regions and the
+        // tests/ tree) may time freely, and `use` lines only name the
+        // type. A kernel-set violation also trips `determinism` — the
+        // two rules guard different invariants (one clock seam vs
+        // bit-identical outputs), so both fire.
+        if !in_set(rel, &TIMING_OK)
+            && !rel.starts_with("tests/")
+            && !model.in_test[ln]
+            && !code.trim_start().starts_with("use ")
+        {
+            for tok in ["Instant::now", "SystemTime"] {
+                if has_word(code, tok) {
+                    emit(
+                        RULE_TIMING,
+                        ln,
+                        format!(
+                            "`{tok}` outside the timing-confined set (obs/, coordinator/, \
+                             bench/); route through obs::clock"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
     }
 
     if in_set(rel, &CHANNEL_SET) {
@@ -308,7 +344,7 @@ mod tests {
         let src = "fn k() {\n    // nysx-lint: allow(determinism)\n    let t = Instant::now(); drop(t);\n}\n";
         assert_eq!(
             rules_fired("src/kernel/x.rs", src),
-            vec![RULE_PRAGMA_JUSTIFICATION, RULE_DETERMINISM],
+            vec![RULE_PRAGMA_JUSTIFICATION, RULE_DETERMINISM, RULE_TIMING],
             "unjustified pragma reports itself and suppresses nothing"
         );
     }
@@ -380,9 +416,19 @@ mod tests {
 
     #[test]
     fn determinism_covers_clock_and_rng_tokens() {
+        // The clock tokens also violate timing-confinement (kernel
+        // modules are outside the timing-confined set), so both fire.
         for src in [
             "let t0 = Instant::now();\n",
             "let t = SystemTime::now();\n",
+        ] {
+            assert_eq!(
+                rules_fired("src/kernel/lsh.rs", src),
+                vec![RULE_DETERMINISM, RULE_TIMING],
+                "{src}"
+            );
+        }
+        for src in [
             "let r = thread_rng();\n",
             "let s: HashSet<u32> = Default::default();\n",
         ] {
@@ -507,6 +553,47 @@ mod tests {
         assert!(rules_fired("src/exec/pool.rs", in_test).is_empty());
         let pragma = "// nysx-lint: allow(channel-panic): init-time only, receiver proven alive\ntx.send(1).unwrap();\n";
         assert!(rules_fired("src/exec/pool.rs", pragma).is_empty());
+    }
+
+    // ------- timing-confinement -------
+
+    #[test]
+    fn timing_fires_outside_the_confined_set() {
+        for src in [
+            "let t0 = std::time::Instant::now();\n",
+            "let stamp = SystemTime::now();\n",
+        ] {
+            assert_eq!(rules_fired("src/infer/optimized.rs", src), vec![RULE_TIMING], "{src}");
+            assert_eq!(rules_fired("src/main.rs", src), vec![RULE_TIMING], "{src}");
+        }
+    }
+
+    #[test]
+    fn timing_allowed_inside_the_confined_set() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        for rel in [
+            "src/obs/clock.rs",
+            "src/coordinator/worker.rs",
+            "src/bench/harness.rs",
+        ] {
+            assert!(rules_fired(rel, src).is_empty(), "{rel}");
+        }
+    }
+
+    #[test]
+    fn timing_skips_use_lines_tests_and_tests_dir() {
+        let use_line = "use std::time::{Instant, SystemTime};\n";
+        assert!(rules_fired("src/infer/optimized.rs", use_line).is_empty());
+        let in_test = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let t0 = Instant::now(); drop(t0); }\n}\n";
+        assert!(rules_fired("src/infer/optimized.rs", in_test).is_empty());
+        let live = "let t0 = Instant::now();\n";
+        assert!(rules_fired("tests/serving_integration.rs", live).is_empty());
+    }
+
+    #[test]
+    fn timing_pragma_suppression() {
+        let src = "// nysx-lint: allow(timing-confinement): one-shot startup stamp, never in outputs\nlet t0 = Instant::now();\n";
+        assert!(rules_fired("src/infer/optimized.rs", src).is_empty());
     }
 
     // ------- pragma inventory -------

@@ -144,6 +144,17 @@ impl Classifier for GraphHdModel {
     }
 }
 
+/// Prometheus text-exposition rendering of the process-wide
+/// observability registry (`nysx::obs`): every counter, gauge, stage
+/// histogram, and exec-lane site, in one deterministic snapshot. The
+/// facade entry point for scrape endpoints and the `nysx profile
+/// --prom-out` writer. Meaningful numbers require obs to be on
+/// (`nysx::obs::set_enabled(true)` or `NYSX_OBS` for the CLI) — with it
+/// off the catalog renders with zero values.
+pub fn snapshot_prometheus() -> String {
+    crate::obs::Snapshot::capture().prometheus()
+}
+
 /// Accuracy of any [`Classifier`] over a labeled split, batched through
 /// [`Classifier::classify_batch`]. `Ok(None)` on an empty split;
 /// transport errors (serving backends) propagate.
@@ -238,5 +249,21 @@ mod tests {
         );
 
         assert_eq!(accuracy(&mut engine, &[]).unwrap(), None);
+    }
+
+    /// The facade's Prometheus snapshot renders the full obs catalog —
+    /// every pipeline stage histogram appears under its sanitized name
+    /// regardless of whether obs is enabled.
+    #[test]
+    fn prometheus_facade_renders_the_catalog() {
+        let text = snapshot_prometheus();
+        for stage in crate::obs::STAGES {
+            let metric = format!("nysx_stage_{stage}");
+            assert!(
+                text.contains(&metric),
+                "prometheus text missing {metric}"
+            );
+        }
+        assert!(text.contains("nysx_infer_requests"));
     }
 }

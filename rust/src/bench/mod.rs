@@ -4,10 +4,12 @@
 
 pub mod harness;
 pub mod memory;
+pub mod profile;
 pub mod serving;
 pub mod tables;
 
 pub use harness::{bench, black_box, print_results, BenchResult};
 pub use memory::{MemoryBenchConfig, MemoryBenchReport};
+pub use profile::{profile_infer, profile_serving, ProfileConfig, ProfileReport};
 pub use serving::{ServingBenchConfig, ServingBenchReport};
 pub use tables::{evaluate_all, evaluate_dataset, evaluate_dataset_cached, DatasetEval, EvalConfig};

@@ -1,0 +1,531 @@
+//! Observability profiling harness behind `nysx profile`: run the
+//! training + inference pipeline (or the sharded serving tier) with
+//! `nysx::obs` enabled, then emit the merged metric snapshot as the
+//! machine-readable `PROFILE.json` artifact (schema [`SCHEMA`]),
+//! optionally alongside a Prometheus text exposition.
+//!
+//! Two profile kinds:
+//!
+//! * **infer** — trains a pipeline (the `train_finalize` stage span),
+//!   sweeps the test split through both the single-query and batched
+//!   engine paths (the `featurize` / `spmv` / `mph_lookup` /
+//!   `nee_project` / `sce_match` stage spans), then runs the §4.2
+//!   load-balance comparison: the SAME synthetic skewed operand through
+//!   the nnz-grouped scheduled SpMV (`spmv.nnz_row_groups` lane site)
+//!   and a naive even-rows partition (`spmv.even_ranges`). The two
+//!   arms' per-lane busy times land side by side in the artifact, so
+//!   the imbalance ratio the paper's static LB removes is measurable
+//!   from `PROFILE.json` alone.
+//! * **serving** — drives a closed-window load through the sharded
+//!   tier (queue/batch/shard-route spans, admission-shed counter) and
+//!   attaches the per-shard [`MetricsSummary`] rollups.
+//!
+//! Smoke mode (`NYSX_BENCH_SMOKE=1`) shrinks both to CI scale, same
+//! code paths. Like every `BENCH_*.json`, the artifact is parse-back
+//! validated before it touches disk.
+
+use crate::api::{NysxError, Pipeline, TrainedPipeline};
+use crate::coordinator::{
+    BatcherConfig, MetricsSummary, ServerConfig, ShardedConfig, SubmitError,
+};
+use crate::graph::Graph;
+use crate::obs;
+use crate::sparse::{Csr, SchedulePolicy, ScheduleTable};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+use super::serving::smoke_mode;
+
+/// Schema tag stamped into every `PROFILE.json`.
+pub const SCHEMA: &str = "nysx-obs/v1";
+
+/// Profiling harness configuration (shared by both kinds; each reads
+/// the fields it needs).
+#[derive(Debug, Clone)]
+pub struct ProfileConfig {
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub hv_dim: usize,
+    /// Exec threads (None = global pool sizing). The SpMV comparison
+    /// always uses at least 2 lanes — imbalance needs company.
+    pub threads: Option<usize>,
+    /// Inference passes over the test split (profile infer).
+    pub repeats: usize,
+    /// Rows of the synthetic skewed operand for the SpMV comparison.
+    pub spmv_rows: usize,
+    /// Heavy-row nonzero count of the synthetic operand (light rows get
+    /// a handful) — the skew the §4.2 schedule flattens.
+    pub spmv_heavy_nnz: usize,
+    /// SpMV passes per comparison arm.
+    pub spmv_passes: usize,
+    /// Shards of the serving profile.
+    pub shards: usize,
+    /// Total requests the serving profile answers.
+    pub requests: usize,
+    pub workers_per_shard: usize,
+    pub batch_size: usize,
+    /// Per-shard admission cap.
+    pub max_outstanding: usize,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "MUTAG".to_string(),
+            scale: 1.0,
+            seed: 42,
+            hv_dim: 2048,
+            threads: None,
+            repeats: 3,
+            spmv_rows: 4096,
+            spmv_heavy_nnz: 256,
+            spmv_passes: 8,
+            shards: 2,
+            requests: 400,
+            workers_per_shard: 2,
+            batch_size: 4,
+            max_outstanding: 256,
+        }
+    }
+}
+
+impl ProfileConfig {
+    /// The CI smoke profile: seconds end to end, same code paths.
+    pub fn smoke() -> Self {
+        Self {
+            scale: 0.2,
+            hv_dim: 500,
+            threads: Some(2),
+            repeats: 1,
+            spmv_rows: 512,
+            spmv_heavy_nnz: 96,
+            spmv_passes: 2,
+            shards: 2,
+            requests: 40,
+            workers_per_shard: 1,
+            batch_size: 2,
+            max_outstanding: 64,
+            ..Self::default()
+        }
+    }
+
+    /// `smoke()` when `NYSX_BENCH_SMOKE` is set, full profile otherwise.
+    pub fn from_env() -> Self {
+        if smoke_mode() {
+            Self::smoke()
+        } else {
+            Self::default()
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.as_str())),
+            ("scale", Json::num(self.scale)),
+            ("seed", Json::num(self.seed as f64)),
+            ("hv_dim", Json::num(self.hv_dim as f64)),
+            (
+                "threads",
+                match self.threads {
+                    Some(n) => Json::num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("repeats", Json::num(self.repeats as f64)),
+            ("spmv_rows", Json::num(self.spmv_rows as f64)),
+            ("spmv_heavy_nnz", Json::num(self.spmv_heavy_nnz as f64)),
+            ("spmv_passes", Json::num(self.spmv_passes as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            (
+                "workers_per_shard",
+                Json::num(self.workers_per_shard as f64),
+            ),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("max_outstanding", Json::num(self.max_outstanding as f64)),
+        ])
+    }
+}
+
+/// A finished profile run: the merged obs snapshot plus (for serving)
+/// the per-shard coordinator rollups. Serialize with
+/// [`ProfileReport::to_json`]; persist with [`ProfileReport::write`].
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// "infer" or "serving".
+    pub kind: &'static str,
+    pub smoke: bool,
+    pub config: ProfileConfig,
+    pub snapshot: obs::Snapshot,
+    /// Per-shard [`MetricsSummary`] rollups, shard order (serving only).
+    pub shard_rollups: Vec<MetricsSummary>,
+}
+
+impl ProfileReport {
+    /// The `PROFILE.json` document (schema documented in DESIGN.md §11).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("kind", Json::str(self.kind)),
+            ("smoke", Json::Bool(self.smoke)),
+            ("config", self.config.to_json()),
+            ("stages", self.stages_json()),
+            ("snapshot", self.snapshot.to_json()),
+            (
+                "shards",
+                Json::arr(self.shard_rollups.iter().map(shard_rollup_json)),
+            ),
+        ])
+    }
+
+    /// Convenience view: the six pipeline stages in catalog order with
+    /// their headline numbers, so consumers don't have to dig through
+    /// the full snapshot for the common question.
+    fn stages_json(&self) -> Json {
+        Json::arr(obs::STAGES.iter().map(|stage| {
+            let name = format!("stage.{stage}");
+            let hist = self
+                .snapshot
+                .histograms
+                .iter()
+                .find(|h| h.name == name)
+                .expect("every pipeline stage is in the catalog");
+            Json::obj(vec![
+                ("name", Json::str(*stage)),
+                ("count", Json::num(hist.count as f64)),
+                ("sum_ns", Json::num(hist.sum_ns as f64)),
+                ("mean_ns", Json::num(hist.mean_ns())),
+                ("p50_ns", Json::num(hist.percentile_ns(50.0) as f64)),
+                ("p99_ns", Json::num(hist.percentile_ns(99.0) as f64)),
+            ])
+        }))
+    }
+
+    /// Emit, round-trip-validate, and write the artifact. The parse-back
+    /// check guarantees no ill-formed artifact ever lands on disk.
+    pub fn write(&self, path: &std::path::Path) -> Result<(), NysxError> {
+        let doc = self.to_json();
+        let text = doc.to_string();
+        let back = Json::parse(&text).map_err(|e| {
+            NysxError::Config(format!("emitted PROFILE.json does not parse: {e}"))
+        })?;
+        if back != doc {
+            return Err(NysxError::config(
+                "PROFILE.json round-trip drift: parsed document != emitted document",
+            ));
+        }
+        std::fs::write(path, text + "\n").map_err(NysxError::Io)
+    }
+}
+
+fn shard_rollup_json(s: &MetricsSummary) -> Json {
+    Json::obj(vec![
+        ("requests", Json::num(s.requests as f64)),
+        ("misattributed", Json::num(s.misattributed as f64)),
+        (
+            "per_worker",
+            Json::arr(s.per_worker.iter().map(|&n| Json::num(n as f64))),
+        ),
+        ("host_throughput_rps", Json::num(s.host_throughput_rps)),
+        (
+            "host_us",
+            Json::obj(vec![
+                ("mean", Json::num(s.host_us.mean)),
+                ("p50", Json::num(s.host_us.p50)),
+                ("p99", Json::num(s.host_us.p99)),
+                ("min", Json::num(s.host_us.min)),
+                ("max", Json::num(s.host_us.max)),
+            ]),
+        ),
+        (
+            "queue_us",
+            Json::obj(vec![
+                ("mean", Json::num(s.queue_us.mean)),
+                ("p50", Json::num(s.queue_us.p50)),
+                ("p99", Json::num(s.queue_us.p99)),
+                ("min", Json::num(s.queue_us.min)),
+                ("max", Json::num(s.queue_us.max)),
+            ]),
+        ),
+    ])
+}
+
+fn trained_pipeline(cfg: &ProfileConfig) -> Result<TrainedPipeline, NysxError> {
+    let mut builder = Pipeline::for_dataset(&cfg.dataset)?
+        .scale(cfg.scale)
+        .seed(cfg.seed)
+        .hv_dim(cfg.hv_dim);
+    if let Some(n) = cfg.threads {
+        builder = builder.threads(n);
+    }
+    builder.train()
+}
+
+/// The inference profile: training + full test-split sweeps (single and
+/// batched) + the scheduled-vs-even SpMV lane comparison, all under a
+/// freshly reset obs registry.
+pub fn profile_infer(cfg: &ProfileConfig) -> Result<ProfileReport, NysxError> {
+    obs::set_enabled(true);
+    obs::registry().reset_all();
+    obs::metrics::EXEC_THREADS.set(
+        cfg.threads
+            .unwrap_or_else(|| crate::exec::global().threads()) as u64,
+    );
+    let mut pipeline = trained_pipeline(cfg)?;
+    let graphs: Vec<Graph> = pipeline
+        .dataset()
+        .test
+        .iter()
+        .map(|(g, _)| g.clone())
+        .collect();
+    if graphs.is_empty() {
+        return Err(NysxError::config("profile needs a non-empty test split"));
+    }
+    for _ in 0..cfg.repeats.max(1) {
+        for g in &graphs {
+            let _ = pipeline.infer(g);
+        }
+        let refs: Vec<&Graph> = graphs.iter().collect();
+        let _ = pipeline.infer_batch(&refs);
+    }
+    spmv_lane_comparison(cfg);
+    Ok(ProfileReport {
+        kind: "infer",
+        smoke: smoke_mode(),
+        config: cfg.clone(),
+        snapshot: obs::Snapshot::capture(),
+        shard_rollups: Vec::new(),
+    })
+}
+
+/// The serving profile: a closed admission window over the sharded tier
+/// until `cfg.requests` responses have been collected.
+pub fn profile_serving(cfg: &ProfileConfig) -> Result<ProfileReport, NysxError> {
+    obs::set_enabled(true);
+    obs::registry().reset_all();
+    obs::metrics::EXEC_THREADS.set(
+        cfg.threads
+            .unwrap_or_else(|| crate::exec::global().threads()) as u64,
+    );
+    let pipeline = trained_pipeline(cfg)?;
+    let graphs: Vec<Graph> = pipeline
+        .dataset()
+        .test
+        .iter()
+        .map(|(g, _)| g.clone())
+        .collect();
+    if graphs.is_empty() {
+        return Err(NysxError::config("profile needs a non-empty test split"));
+    }
+    let mut tier = pipeline.serve_sharded(ShardedConfig {
+        shards: cfg.shards,
+        max_outstanding: cfg.max_outstanding,
+        per_shard: ServerConfig {
+            workers: cfg.workers_per_shard,
+            batcher: BatcherConfig {
+                batch_size: cfg.batch_size,
+                max_wait: std::time::Duration::from_micros(200),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    })?;
+    // Keep a bounded window in flight: enough outstanding work to form
+    // real batches, never more than the tier's admission cap.
+    let window = (cfg.batch_size * cfg.shards * 4)
+        .clamp(1, cfg.max_outstanding);
+    let total = cfg.requests.max(1);
+    let (mut submitted, mut answered, mut next) = (0usize, 0usize, 0usize);
+    while answered < total {
+        while submitted < total && submitted - answered < window {
+            let g = graphs[next % graphs.len()].clone();
+            next += 1;
+            match tier.submit(g) {
+                Ok(_) => submitted += 1,
+                Err(SubmitError::Backpressure(_)) => break,
+                Err(SubmitError::Closed(_)) => {
+                    return Err(NysxError::Closed);
+                }
+            }
+        }
+        if tier.recv().is_some() {
+            answered += 1;
+        }
+    }
+    let shard_rollups: Vec<MetricsSummary> =
+        (0..cfg.shards).map(|s| tier.shard_metrics(s)).collect();
+    tier.shutdown();
+    Ok(ProfileReport {
+        kind: "serving",
+        smoke: smoke_mode(),
+        config: cfg.clone(),
+        snapshot: obs::Snapshot::capture(),
+        shard_rollups,
+    })
+}
+
+/// The §4.2 comparison the lane sites exist for: run the SAME skewed
+/// operand through the nnz-grouped scheduled SpMV and through a naive
+/// even-rows partition, so `spmv.nnz_row_groups` vs `spmv.even_ranges`
+/// per-lane busy times (and their imbalance ratios) land side by side
+/// in the snapshot. The two arms must produce bit-identical results —
+/// scheduling only permutes work.
+fn spmv_lane_comparison(cfg: &ProfileConfig) {
+    let csr = skewed_csr(cfg.spmv_rows.max(8), cfg.spmv_heavy_nnz.max(2), cfg.seed);
+    let threads = cfg
+        .threads
+        .unwrap_or_else(|| crate::exec::global().threads())
+        .max(2);
+    let pool = crate::exec::Pool::new(threads);
+    let x: Vec<f64> = (0..csr.cols).map(|j| 1.0 + (j % 7) as f64).collect();
+    let passes = cfg.spmv_passes.max(1);
+
+    // Arm 1: the paper's static LB schedule (lane site is inside
+    // `run_spmv_with_pool`).
+    let table = ScheduleTable::build(&csr, threads * 8, SchedulePolicy::NnzGrouped);
+    let mut y_scheduled = vec![0.0; csr.rows];
+    for _ in 0..passes {
+        table.run_spmv_with_pool(&pool, &csr, &x, &mut y_scheduled);
+    }
+
+    // Arm 2: naive even contiguous row ranges — the "no LB" baseline the
+    // schedule beats on skewed operands.
+    let ranges = crate::exec::even_ranges(csr.rows, pool.threads());
+    let mut y_even = vec![0.0; csr.rows];
+    for _ in 0..passes {
+        crate::exec::for_each_range_mut_labeled(
+            &pool,
+            &obs::lanes::SITE_SPMV_EVEN,
+            &mut y_even,
+            &ranges,
+            |block, part| {
+                for (local, r) in ranges[block].clone().enumerate() {
+                    let mut acc = 0.0;
+                    for k in csr.row_range(r) {
+                        acc += csr.val[k] * x[csr.col_idx[k] as usize];
+                    }
+                    part[local] = acc;
+                }
+            },
+        );
+    }
+    assert_eq!(
+        y_scheduled, y_even,
+        "scheduled and even-ranges SpMV must agree bit-for-bit"
+    );
+}
+
+/// A deterministic skewed operand: the first eighth of the rows are
+/// heavy (`heavy_nnz` nonzeros each), the rest carry 1–4 — the row-nnz
+/// distribution where even contiguous ranges concentrate nearly all
+/// work in the lane owning the heavy block.
+fn skewed_csr(rows: usize, heavy_nnz: usize, seed: u64) -> Csr {
+    let cols = rows;
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x5b3c_9d1e);
+    let mut triplets = Vec::new();
+    for r in 0..rows {
+        let nnz = if r < rows / 8 {
+            heavy_nnz.min(cols)
+        } else {
+            1 + r % 4
+        };
+        for i in 0..nnz {
+            // Spread columns deterministically; duplicate (r, c) pairs
+            // stay as separate nnz entries, so every row keeps exactly
+            // `nnz` stored values and the skew is exact.
+            let c = (r * 31 + i * 97 + rng.gen_range(7)) % cols;
+            triplets.push((r, c, 1.0 + (i % 5) as f64));
+        }
+    }
+    Csr::from_triplets(rows, cols, triplets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The infer profile at smoke scale covers every pipeline stage and
+    /// both SpMV comparison arms, and its artifact round-trips with the
+    /// schema intact.
+    #[test]
+    fn infer_profile_covers_stages_and_lane_sites() {
+        let _guard = crate::obs::test_toggle_lock();
+        let cfg = ProfileConfig::smoke();
+        let report = profile_infer(&cfg).expect("smoke profile runs");
+        crate::obs::set_enabled(false);
+        for stage in obs::STAGES {
+            let name = format!("stage.{stage}");
+            let hist = report
+                .snapshot
+                .histograms
+                .iter()
+                .find(|h| h.name == name)
+                .expect("stage histogram in snapshot");
+            assert!(hist.count > 0, "stage {stage} recorded nothing");
+        }
+        for site in ["spmv.nnz_row_groups", "spmv.even_ranges"] {
+            let lane = report
+                .snapshot
+                .lanes
+                .iter()
+                .find(|l| l.name == site)
+                .expect("lane site in snapshot");
+            assert!(lane.runs > 0, "lane site {site} never ran");
+            assert!(lane.imbalance() >= 1.0, "{site}: imbalance below 1");
+        }
+
+        let doc = report.to_json();
+        let back = Json::parse(&doc.to_string()).expect("artifact parses");
+        assert_eq!(back, doc, "JSON round-trip drift");
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(back.get("kind").and_then(Json::as_str), Some("infer"));
+        let stages = back.get("stages").and_then(Json::as_arr).expect("stages");
+        assert_eq!(stages.len(), obs::STAGES.len());
+    }
+
+    /// The serving profile at smoke scale answers every request, rolls
+    /// up per-shard metrics with zero misattribution, and emits a valid
+    /// artifact.
+    #[test]
+    fn serving_profile_rolls_up_shards() {
+        let _guard = crate::obs::test_toggle_lock();
+        let cfg = ProfileConfig::smoke();
+        let report = profile_serving(&cfg).expect("smoke profile runs");
+        crate::obs::set_enabled(false);
+        assert_eq!(report.kind, "serving");
+        assert_eq!(report.shard_rollups.len(), cfg.shards);
+        let answered: usize = report.shard_rollups.iter().map(|s| s.requests).sum();
+        assert_eq!(answered, cfg.requests, "every request must be answered");
+        for (i, s) in report.shard_rollups.iter().enumerate() {
+            assert_eq!(s.misattributed, 0, "shard {i} misattributed samples");
+        }
+        let (_, serve_requests) = report
+            .snapshot
+            .counters
+            .iter()
+            .find(|(n, _)| *n == "serve.requests")
+            .expect("serve.requests counter");
+        // >= not ==: the registry is process-global, so concurrent tests
+        // exercising the serving path while obs is on add to it too.
+        assert!(*serve_requests as usize >= cfg.requests);
+
+        let doc = report.to_json();
+        let back = Json::parse(&doc.to_string()).expect("artifact parses");
+        assert_eq!(back, doc, "JSON round-trip drift");
+        let shards = back.get("shards").and_then(Json::as_arr).expect("shards");
+        assert_eq!(shards.len(), cfg.shards);
+    }
+
+    /// The skewed operand really is skewed, and both SpMV arms agree.
+    #[test]
+    fn skewed_operand_has_heavy_head() {
+        let csr = skewed_csr(256, 64, 9);
+        let head: usize = (0..32).map(|r| csr.row_nnz(r)).sum();
+        let tail: usize = (32..256).map(|r| csr.row_nnz(r)).sum();
+        assert!(
+            head > tail / 2,
+            "head rows must dominate: head {head} vs tail {tail}"
+        );
+    }
+}

@@ -173,6 +173,7 @@ impl StageResult {
                     ("p50", Json::num(self.latency_ms.p50)),
                     ("p99", Json::num(self.latency_ms.p99)),
                     ("p999", Json::num(self.latency_ms.p999)),
+                    ("min", Json::num(self.latency_ms.min)),
                     ("max", Json::num(self.latency_ms.max)),
                 ]),
             ),
@@ -512,7 +513,7 @@ mod tests {
             point.get("offered_qps").and_then(Json::as_f64),
             Some(500.0)
         );
-        for key in ["p50", "p99", "p999"] {
+        for key in ["p50", "p99", "p999", "min"] {
             assert!(
                 point
                     .get("latency_ms")

@@ -19,11 +19,26 @@ pub struct LatencyStats {
     /// Extreme-tail percentile — the serving SLO the load harness sweeps
     /// (BENCH_SERVING.json reports p50/p99/p999 per offered-QPS point).
     pub p999: f64,
+    /// Smallest sample (0.0 when the series is empty, matching the
+    /// all-zero empty convention of the percentile fields).
+    pub min: f64,
     pub max: f64,
 }
 
 impl LatencyStats {
     pub fn from_samples(xs: &[f64]) -> Self {
+        // Fold from the infinities so genuinely-negative samples (clock
+        // skew artifacts) surface instead of being clamped by a 0.0
+        // seed; the empty series maps the infinities back to the 0.0
+        // convention the consumers (and the empty-registry test) pin.
+        let (min, max) = if xs.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                xs.iter().cloned().fold(f64::INFINITY, f64::min),
+                xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            )
+        };
         Self {
             count: xs.len(),
             mean: mean(xs),
@@ -32,7 +47,8 @@ impl LatencyStats {
             p95: percentile(xs, 95.0),
             p99: percentile(xs, 99.0),
             p999: percentile(xs, 99.9),
-            max: xs.iter().cloned().fold(0.0, f64::max),
+            min,
+            max,
         }
     }
 }
@@ -44,6 +60,10 @@ struct MetricsInner {
     fpga_ms: Vec<f64>,
     fpga_mj: Vec<f64>,
     per_worker: Vec<usize>,
+    /// Samples whose worker index fell outside `per_worker` — previously
+    /// dropped silently, now counted so a mis-sized registry is visible
+    /// in the rollup instead of quietly under-reporting a worker.
+    misattributed: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -79,6 +99,11 @@ impl MetricsRegistry {
         m.fpga_mj.push(fpga_mj);
         if worker < m.per_worker.len() {
             m.per_worker[worker] += 1;
+        } else {
+            m.misattributed += 1;
+            if crate::obs::enabled() {
+                crate::obs::metrics::SERVE_MISATTRIBUTED.inc();
+            }
         }
     }
 
@@ -104,6 +129,7 @@ impl MetricsRegistry {
                 0.0
             },
             per_worker: m.per_worker.clone(),
+            misattributed: m.misattributed,
         }
     }
 }
@@ -118,6 +144,10 @@ pub struct MetricsSummary {
     pub total_fpga_mj: f64,
     pub host_throughput_rps: f64,
     pub per_worker: Vec<usize>,
+    /// Samples recorded with an out-of-range worker index (see
+    /// [`MetricsRegistry::record`]). Non-zero means a worker-count
+    /// mismatch between the registry and its callers.
+    pub misattributed: usize,
 }
 
 #[cfg(test)]
@@ -145,6 +175,40 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.host_us.count, 0);
         assert_eq!(s.host_throughput_rps, 0.0);
+        assert_eq!(s.misattributed, 0);
+    }
+
+    /// Satellite: min/max come from a fold over the samples, not a 0.0
+    /// seed — an all-negative series must NOT report max = 0.0 (the old
+    /// `fold(0.0, f64::max)` fabricated a sample that never happened),
+    /// and min must track the smallest sample. Empty stays all-zero.
+    #[test]
+    fn min_max_track_samples_without_a_zero_seed() {
+        let s = LatencyStats::from_samples(&[-5.0, -3.0, -9.5]);
+        assert_eq!(s.max, -3.0, "max must be a real sample, not the 0.0 seed");
+        assert_eq!(s.min, -9.5);
+
+        let s = LatencyStats::from_samples(&[2.0, 7.0, 4.0]);
+        assert_eq!((s.min, s.max), (2.0, 7.0));
+        assert!(s.min <= s.p50 && s.p999 <= s.max);
+
+        let empty = LatencyStats::from_samples(&[]);
+        assert_eq!((empty.min, empty.max), (0.0, 0.0));
+    }
+
+    /// Satellite: samples reported with an out-of-range worker index
+    /// are counted, not silently dropped — the rollup surfaces the
+    /// mismatch while the latency series still includes the sample.
+    #[test]
+    fn out_of_range_worker_is_counted_as_misattributed() {
+        let reg = MetricsRegistry::new(2);
+        reg.record(0, 1.0, 0.1, 0.5, 0.4);
+        reg.record(7, 2.0, 0.1, 0.5, 0.4); // no worker 7 in a 2-worker registry
+        reg.record(2, 3.0, 0.1, 0.5, 0.4); // one past the end
+        let s = reg.summary();
+        assert_eq!(s.requests, 3, "latency samples are kept either way");
+        assert_eq!(s.per_worker, vec![1, 0]);
+        assert_eq!(s.misattributed, 2);
     }
 
     /// Independent nearest-rank reference: sort a copy (total order) and

@@ -133,6 +133,9 @@ impl ShardedServer {
             metrics.push(shard.metrics.clone());
             slots.push(Some(shard));
         }
+        if crate::obs::enabled() {
+            crate::obs::metrics::SERVE_SHARDS.set(cfg.shards as u64);
+        }
         Ok(Self {
             slots,
             ring: ShardRing::new(cfg.shards),
@@ -204,8 +207,14 @@ impl ShardedServer {
             if self.ring.is_empty() {
                 return Err(SubmitError::Closed(graph));
             }
-            let shard = self.ring.shard_for(graph.fingerprint());
+            let shard = {
+                let _route = crate::obs::span(&crate::obs::metrics::SERVE_SHARD_ROUTE);
+                self.ring.shard_for(graph.fingerprint())
+            };
             if self.outstanding[shard] >= self.max_outstanding {
+                if crate::obs::enabled() {
+                    crate::obs::metrics::SERVE_ADMISSION_SHED.inc();
+                }
                 return Err(SubmitError::Backpressure(graph));
             }
             let server = match self.slots[shard].as_mut() {
@@ -248,8 +257,14 @@ impl ShardedServer {
             if self.ring.is_empty() {
                 return Err(SubmitBatchError::Closed(graphs));
             }
-            let shard = self.ring.shard_for(graphs[0].fingerprint());
+            let shard = {
+                let _route = crate::obs::span(&crate::obs::metrics::SERVE_SHARD_ROUTE);
+                self.ring.shard_for(graphs[0].fingerprint())
+            };
             if self.outstanding[shard] + graphs.len() > self.max_outstanding {
+                if crate::obs::enabled() {
+                    crate::obs::metrics::SERVE_ADMISSION_SHED.inc();
+                }
                 return Err(SubmitBatchError::Backpressure(graphs));
             }
             let server = match self.slots[shard].as_mut() {

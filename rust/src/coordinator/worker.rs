@@ -53,8 +53,17 @@ pub fn worker_loop(
             engine.infer_batch(&graphs)
         };
         let host_us = picked_up.elapsed().as_secs_f64() * 1e6 / batch_size as f64;
+        if crate::obs::enabled() {
+            crate::obs::metrics::SERVE_BATCHES.inc();
+            crate::obs::metrics::SERVE_REQUESTS.add(batch_size as u64);
+            crate::obs::metrics::SERVE_BATCH
+                .record_ns(picked_up.elapsed().as_nanos() as u64);
+        }
         for (req, result) in batch.into_iter().zip(results) {
             let queue_us = (picked_up - req.submitted).as_secs_f64() * 1e6;
+            if crate::obs::enabled() {
+                crate::obs::metrics::SERVE_QUEUE.record_ns((queue_us * 1e3) as u64);
+            }
             let breakdown = simulate(&result.trace, &accel, opts);
             let energy = power.energy(&breakdown, &accel);
             let resp = Response {

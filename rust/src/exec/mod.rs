@@ -43,7 +43,9 @@ pub mod parallel;
 pub mod partition;
 pub mod pool;
 
-pub use parallel::{for_each_range_mut, map_parts, map_reduce, ScatterMut};
+pub use parallel::{
+    for_each_range_mut, for_each_range_mut_labeled, map_parts, map_reduce, ScatterMut,
+};
 pub use partition::{class_blocks, even_ranges, nnz_row_groups, triangle_ranges};
 pub use pool::{configure_threads, global, Pool, MAX_THREADS};
 

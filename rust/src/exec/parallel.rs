@@ -54,6 +54,35 @@ where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
+    for_each_range_mut_inner(pool, None, data, ranges, f)
+}
+
+/// [`for_each_range_mut`] through [`Pool::run_labeled`]: identical
+/// semantics, plus per-lane busy-time/part accounting into the obs
+/// `site` while observability is enabled (a no-op otherwise).
+pub fn for_each_range_mut_labeled<T, F>(
+    pool: &Pool,
+    site: &'static crate::obs::LaneSite,
+    data: &mut [T],
+    ranges: &[Range<usize>],
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    for_each_range_mut_inner(pool, Some(site), data, ranges, f)
+}
+
+fn for_each_range_mut_inner<T, F>(
+    pool: &Pool,
+    site: Option<&'static crate::obs::LaneSite>,
+    data: &mut [T],
+    ranges: &[Range<usize>],
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
     // Shadow-claim pass (NYSX_EXEC_CHECK=1, DESIGN.md §9): every part's
     // write interval is recorded in the epoch-tagged claim table up
     // front, so an overlap aborts with the typed report before any
@@ -72,14 +101,18 @@ where
     };
     validate_disjoint(ranges, data.len());
     let base = SendPtr(data.as_mut_ptr());
-    pool.run(ranges.len(), &|part| {
+    let body = |part: usize| {
         let r = &ranges[part];
         // SAFETY: ranges are validated disjoint and in-bounds, and the
         // pool runs each part index exactly once — so no two lanes ever
         // hold slices over the same elements.
         let slice = unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.end - r.start) };
         f(part, slice);
-    });
+    };
+    match site {
+        Some(site) => pool.run_labeled(site, ranges.len(), &body),
+        None => pool.run(ranges.len(), &body),
+    }
 }
 
 /// Map every part index to a value, returned **in part order** (not
@@ -222,6 +255,29 @@ mod tests {
                 assert!(data[r.clone()].iter().all(|&x| x == part as u32 + 1));
             }
         }
+    }
+
+    #[test]
+    fn labeled_variant_fills_identically_and_accounts_parts() {
+        static SITE: crate::obs::LaneSite = crate::obs::LaneSite::new("test.parallel_site");
+        let _serial = crate::obs::test_toggle_lock();
+        crate::obs::set_enabled(true);
+        let pool = Pool::new(3);
+        let mut labeled = vec![0u32; 100];
+        let mut plain = vec![0u32; 100];
+        let ranges = super::super::partition::even_ranges(100, 7);
+        let fill = |part: usize, slice: &mut [u32]| {
+            for x in slice.iter_mut() {
+                *x = part as u32 + 1;
+            }
+        };
+        for_each_range_mut_labeled(&pool, &SITE, &mut labeled, &ranges, fill);
+        crate::obs::set_enabled(false);
+        for_each_range_mut(&pool, &mut plain, &ranges, fill);
+        assert_eq!(labeled, plain, "labeling must not change results");
+        let snap = SITE.snapshot();
+        assert_eq!(snap.runs, 1);
+        assert_eq!(snap.parts.iter().sum::<u64>(), 7, "7 ranges dispatched");
     }
 
     #[test]

@@ -145,6 +145,17 @@ fn call_part(f: &(dyn Fn(usize) + Sync), p: usize) {
 /// permutation of that list. Results may not depend on the order:
 /// every caller makes part writes disjoint and reductions fixed-order,
 /// and the differential suites pin bit-identity across seeds.
+/// Number of parts lane `lane` executes out of `parts` across `lanes`
+/// lanes under the static `p % lanes` assignment.
+#[inline]
+fn lane_parts(parts: usize, lane: usize, lanes: usize) -> u64 {
+    if lane >= parts {
+        0
+    } else {
+        ((parts - lane - 1) / lanes + 1) as u64
+    }
+}
+
 fn run_lane(f: &(dyn Fn(usize) + Sync), lane: usize, lanes: usize, parts: usize, perturb: u64) {
     if perturb == 0 {
         let mut p = lane;
@@ -230,20 +241,69 @@ impl Pool {
     /// finish (a worker-lane panic surfaces as a `"exec worker lane
     /// panicked"` panic; a caller-lane panic resumes as itself).
     pub fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.run_inner(None, parts, f);
+    }
+
+    /// [`Pool::run`] with a labeled observability site: while obs is
+    /// enabled, each lane's whole part-loop is wrapped in ONE
+    /// `obs::clock` pair and its busy time + part count recorded into
+    /// `site` (plus one run/lane-count mark per dispatch) — that's how
+    /// per-site load-imbalance ratios land in `PROFILE.json`. While
+    /// obs is disabled this is exactly [`Pool::run`]: the site resolves
+    /// to `None` before any clock or atomic is touched. Recording can
+    /// never influence the schedule or results.
+    pub fn run_labeled(
+        &self,
+        site: &'static crate::obs::LaneSite,
+        parts: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) {
+        self.run_inner(Some(site), parts, f);
+    }
+
+    fn run_inner(
+        &self,
+        site: Option<&'static crate::obs::LaneSite>,
+        parts: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) {
         if parts == 0 {
             return;
         }
+        let site = if crate::obs::enabled() { site } else { None };
         // Read the perturbation seed once, on the caller, so every lane
         // of this run (worker threads included) permutes against the
         // same seed even when it came from a caller-thread test guard.
         let perturb = check::perturb_seed();
         let lanes = parts.min(self.threads);
         if lanes <= 1 || IN_POOL_LANE.with(|c| c.get()) {
-            run_lane(f, 0, 1, parts, perturb);
+            match site {
+                Some(site) => {
+                    site.record_run(1);
+                    let t0 = crate::obs::clock::now_ns();
+                    run_lane(f, 0, 1, parts, perturb);
+                    site.record_lane(0, crate::obs::clock::elapsed_ns(t0), parts as u64);
+                }
+                None => run_lane(f, 0, 1, parts, perturb),
+            }
             return;
         }
 
-        let lane_fn = move |lane: usize| run_lane(f, lane, lanes, parts, perturb);
+        if let Some(site) = site {
+            site.record_run(lanes);
+        }
+        let lane_fn = move |lane: usize| match site {
+            Some(site) => {
+                let t0 = crate::obs::clock::now_ns();
+                run_lane(f, lane, lanes, parts, perturb);
+                site.record_lane(
+                    lane,
+                    crate::obs::clock::elapsed_ns(t0),
+                    lane_parts(parts, lane, lanes),
+                );
+            }
+            None => run_lane(f, lane, lanes, parts, perturb),
+        };
         let task: &(dyn Fn(usize) + Sync) = &lane_fn;
         // SAFETY: `WaitGuard` (dropped below, on the normal path AND on
         // unwind) blocks until every worker counted down the latch, and
@@ -570,5 +630,62 @@ mod tests {
         let pool = Pool::new(2);
         pool.warm_up(); // must not hang or panic
         pool.warm_up(); // idempotent
+    }
+
+    #[test]
+    fn lane_parts_partition_sums_to_parts() {
+        for parts in [0usize, 1, 2, 5, 7, 64, 129] {
+            for lanes in [1usize, 2, 3, 7, 16] {
+                let total: u64 = (0..lanes).map(|l| lane_parts(parts, l, lanes)).sum();
+                assert_eq!(total, parts as u64, "parts={parts} lanes={lanes}");
+                // Matches the static p % lanes assignment exactly.
+                for lane in 0..lanes {
+                    let want = (lane..parts).step_by(lanes).count() as u64;
+                    assert_eq!(lane_parts(parts, lane, lanes), want);
+                }
+            }
+        }
+    }
+
+    /// `run_labeled` records per-lane busy time and part counts while
+    /// obs is enabled, is a plain `run` while disabled, and never
+    /// changes which parts execute.
+    #[test]
+    fn labeled_runs_record_lane_utilization() {
+        static SITE: crate::obs::LaneSite = crate::obs::LaneSite::new("test.pool_site");
+        let _serial = crate::obs::test_toggle_lock();
+        let pool = Pool::new(3);
+
+        crate::obs::set_enabled(false);
+        let hits = AtomicUsize::new(0);
+        pool.run_labeled(&SITE, 6, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
+        assert_eq!(SITE.snapshot().runs, 0, "disabled obs must record nothing");
+
+        crate::obs::set_enabled(true);
+        pool.run_labeled(&SITE, 7, &|_| {
+            // Make busy time visibly nonzero on every lane.
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        crate::obs::set_enabled(false);
+
+        let snap = SITE.snapshot();
+        assert_eq!(snap.runs, 1);
+        assert_eq!(snap.lanes, 3);
+        assert_eq!(snap.parts, vec![3, 2, 2], "7 parts over 3 lanes, p % lanes");
+        assert!(snap.busy_ns.iter().all(|&b| b > 0), "{:?}", snap.busy_ns);
+        let imb = snap.imbalance();
+        assert!((1.0..=3.0).contains(&imb), "imbalance {imb} out of range");
+
+        // Sequential path (1 part) records lane 0 only.
+        SITE.reset();
+        crate::obs::set_enabled(true);
+        pool.run_labeled(&SITE, 1, &|_| {});
+        crate::obs::set_enabled(false);
+        let seq = SITE.snapshot();
+        assert_eq!((seq.runs, seq.lanes), (1, 1));
+        assert_eq!(seq.parts, vec![1]);
     }
 }

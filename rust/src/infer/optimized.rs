@@ -226,24 +226,33 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
 
         for t in 0..hops {
             // LSHU: c = F u^(t), then t scheduled applications of A.
-            for (i, p) in proj.iter_mut().enumerate() {
-                let mut acc = 0.0;
-                let row = graph.features.row(i);
-                for (x, u) in row.iter().zip(&model.lsh.u[t]) {
-                    acc += x * u;
+            // Obs stage spans per hop: the guards record elapsed ns into
+            // the stage histograms on scope exit, and are inert (no
+            // clock read) while obs is disabled.
+            {
+                let _stage = crate::obs::span(&crate::obs::metrics::STAGE_FEATURIZE);
+                for (i, p) in proj.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    let row = graph.features.row(i);
+                    for (x, u) in row.iter().zip(&model.lsh.u[t]) {
+                        acc += x * u;
+                    }
+                    *p = acc;
                 }
-                *p = acc;
             }
-            for _ in 0..t {
-                // Edge graphs are small; only big adjacency operands are
-                // worth the pool's lane wake-up (bit-identical either way
-                // — the schedule row groups partition y disjointly).
-                if graph.adj.nnz() >= exec::PAR_MIN_NNZ {
-                    a_lb.run_spmv_with_pool(pool, &graph.adj, proj, proj_scratch);
-                } else {
-                    a_lb.run_spmv(&graph.adj, proj, proj_scratch);
+            {
+                let _stage = crate::obs::span(&crate::obs::metrics::STAGE_SPMV);
+                for _ in 0..t {
+                    // Edge graphs are small; only big adjacency operands are
+                    // worth the pool's lane wake-up (bit-identical either way
+                    // — the schedule row groups partition y disjointly).
+                    if graph.adj.nnz() >= exec::PAR_MIN_NNZ {
+                        a_lb.run_spmv_with_pool(pool, &graph.adj, proj, proj_scratch);
+                    } else {
+                        a_lb.run_spmv(&graph.adj, proj, proj_scratch);
+                    }
+                    std::mem::swap(proj, proj_scratch);
                 }
-                std::mem::swap(proj, proj_scratch);
             }
             for (c, &p) in codes.iter_mut().zip(proj.iter()) {
                 *c = model.lsh.quantize(p, t);
@@ -256,17 +265,22 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
             let lookup = &model.lookups[t];
             let mut probes = 0u64;
             let mut hits = 0u64;
-            for &code in codes.iter() {
-                let (idx, p) = lookup.get_with_probes(code_key(code));
-                probes += p as u64;
-                if let Some(j) = idx {
-                    hist[j as usize] += 1.0;
-                    hits += 1;
+            {
+                let _stage = crate::obs::span(&crate::obs::metrics::STAGE_MPH_LOOKUP);
+                for &code in codes.iter() {
+                    let (idx, p) = lookup.get_with_probes(code_key(code));
+                    probes += p as u64;
+                    if let Some(j) = idx {
+                        hist[j as usize] += 1.0;
+                        hits += 1;
+                    }
                 }
             }
 
             // KSE: v^(t) = H^(t) h^(t) via the static LB schedule,
-            // accumulated into C.
+            // accumulated into C (same "spmv" obs stage as the A-chain:
+            // both are scheduled SpMV passes).
+            let _stage = crate::obs::span(&crate::obs::metrics::STAGE_SPMV);
             let h = &model.landmark_hists[t];
             let sched = &model.kse_schedules[t];
             for it in 0..sched.iterations {
@@ -281,6 +295,7 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
                     }
                 }
             }
+            drop(_stage);
 
             let (kse_lb, _) = sched.spmv_cycles(h);
             let (kse_cycles_nolb, _) = kse_nolb[t].spmv_cycles(h);
@@ -307,21 +322,26 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
         // The d×s projection dominates single-query NEE+SCE time; split
         // its packed words across the pool's lanes when the matrix is
         // big enough to amortize the dispatch (same bits either way).
-        if exec::worth_parallelizing(pool, model.d() * model.s(), exec::PAR_MIN_MACS) {
-            model.projection.project_pack_into_with_pool(pool, c_sim, hv);
-        } else {
-            model.projection.project_pack_into(c_sim, hv);
+        {
+            let _stage = crate::obs::span(&crate::obs::metrics::STAGE_NEE_PROJECT);
+            if exec::worth_parallelizing(pool, model.d() * model.s(), exec::PAR_MIN_MACS) {
+                model.projection.project_pack_into_with_pool(pool, c_sim, hv);
+            } else {
+                model.projection.project_pack_into(c_sim, hv);
+            }
         }
         // SCE: class-block parallel matching once the C×d prototype
         // sweep itself is big enough, the streaming sequential argmax
         // otherwise — identical scores and first-max tie rule either
         // way.
         let sce_work = model.packed_prototypes.num_classes() * words_for(model.d());
+        let _stage = crate::obs::span(&crate::obs::metrics::STAGE_SCE_MATCH);
         let predicted = if exec::worth_parallelizing(pool, sce_work, exec::PAR_MIN_WORDS) {
             model.packed_prototypes.classify_pool(pool, simd::active(), hv)
         } else {
             model.packed_prototypes.classify(hv)
         };
+        drop(_stage);
         (predicted, hv.clone())
     }
 
@@ -363,6 +383,10 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
     /// matching). Results are bit-identical to calling [`Self::infer`] on
     /// each graph in order, traces included.
     pub fn infer_batch(&mut self, graphs: &[&Graph]) -> Vec<InferenceResult> {
+        if crate::obs::enabled() {
+            crate::obs::metrics::INFER_REQUESTS.inc();
+            crate::obs::metrics::INFER_GRAPHS.add(graphs.len() as u64);
+        }
         let mut traces = Vec::with_capacity(graphs.len());
         // Stage 1 (sequential, one scratch set): the per-graph front half
         // (LSHU/MPHE/HUE/KSE), staging each kernel vector into the flat
@@ -403,6 +427,10 @@ impl<M: Borrow<NysHdcModel>> NysxEngine<M> {
 
     /// Full Algorithm 1.
     pub fn infer(&mut self, graph: &Graph) -> InferenceResult {
+        if crate::obs::enabled() {
+            crate::obs::metrics::INFER_REQUESTS.inc();
+            crate::obs::metrics::INFER_GRAPHS.inc();
+        }
         let (_, trace) = self.kernel_vector(graph);
         // Split borrows: take c_sim out temporarily to satisfy the borrow
         // checker without cloning on the hot path.
@@ -442,26 +470,36 @@ fn nee_sce_batch(
         batch.push_zeroed();
     }
     let wph = batch.words_per_hv();
-    if exec::worth_parallelizing(pool, w * model.d() * s, exec::PAR_MIN_MACS) {
-        let q_ranges = exec::even_ranges(w, pool.threads());
-        let word_ranges: Vec<std::ops::Range<usize>> =
-            q_ranges.iter().map(|r| r.start * wph..r.end * wph).collect();
-        exec::for_each_range_mut(pool, batch.all_words_mut(), &word_ranges, |block, part| {
-            for (local, q) in q_ranges[block].clone().enumerate() {
-                model.projection.project_pack_words(
-                    &c_flat[q * s..(q + 1) * s],
-                    &mut part[local * wph..(local + 1) * wph],
-                );
+    {
+        let _stage = crate::obs::span(&crate::obs::metrics::STAGE_NEE_PROJECT);
+        if exec::worth_parallelizing(pool, w * model.d() * s, exec::PAR_MIN_MACS) {
+            let q_ranges = exec::even_ranges(w, pool.threads());
+            let word_ranges: Vec<std::ops::Range<usize>> =
+                q_ranges.iter().map(|r| r.start * wph..r.end * wph).collect();
+            exec::for_each_range_mut_labeled(
+                pool,
+                &crate::obs::lanes::SITE_NEE_BATCH,
+                batch.all_words_mut(),
+                &word_ranges,
+                |block, part| {
+                    for (local, q) in q_ranges[block].clone().enumerate() {
+                        model.projection.project_pack_words(
+                            &c_flat[q * s..(q + 1) * s],
+                            &mut part[local * wph..(local + 1) * wph],
+                        );
+                    }
+                },
+            );
+        } else {
+            for q in 0..w {
+                model
+                    .projection
+                    .project_pack_words(&c_flat[q * s..(q + 1) * s], batch.query_words_mut(q));
             }
-        });
-    } else {
-        for q in 0..w {
-            model
-                .projection
-                .project_pack_words(&c_flat[q * s..(q + 1) * s], batch.query_words_mut(q));
         }
     }
     let sce_work = model.packed_prototypes.num_classes() * w * wph;
+    let _stage = crate::obs::span(&crate::obs::metrics::STAGE_SCE_MATCH);
     if exec::worth_parallelizing(pool, sce_work, exec::PAR_MIN_WORDS) {
         model
             .packed_prototypes
@@ -471,6 +509,7 @@ fn nee_sce_batch(
             .packed_prototypes
             .classify_batch_into_with(simd::active(), batch, scores, preds);
     }
+    drop(_stage);
 }
 
 impl InferTrace {

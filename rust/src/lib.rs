@@ -35,6 +35,7 @@ pub mod kernel;
 pub mod linalg;
 pub mod mph;
 pub mod nystrom;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod succinct;

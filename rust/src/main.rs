@@ -11,6 +11,7 @@
 //!   eval    [--scale 1.0] [--ablation]      # all tables & figures
 //!   bench serving [--shards 1,2,4] [--qps 100,300,1000] [--out BENCH_SERVING.json]
 //!   bench memory  [--datasets MUTAG,BZR] [--out BENCH_MEMORY.json]
+//!   profile infer|serving [--out PROFILE.json] [--prom-out PROM.txt]
 //!   lint    [--root DIR] [--json] [--out LINT_REPORT.json]   # exit 2 on findings
 //!   race    [--root DIR] [--json] [--out CONCURRENCY_REPORT.json]  # exit 2 on findings
 //!   roofline
@@ -19,6 +20,10 @@
 //! data-parallel pool (default: the `NYSX_THREADS` environment variable,
 //! then the machine's available parallelism). Thread count is a pure
 //! throughput knob — results are bit-identical at any value.
+//!
+//! Observability (`nysx::obs`) is ON by default in the CLI; `NYSX_OBS=0`
+//! turns it off. Either way classifications are bit-identical — the
+//! stage spans and lane counters observe, never steer.
 //!
 //! Positional command first, then flags (the tiny parser is greedy).
 
@@ -35,6 +40,9 @@ use nysx::nystrom::LandmarkStrategy;
 use nysx::util::cli::Args;
 
 fn main() {
+    // CLI convention: observability defaults ON (the library defaults
+    // off); NYSX_OBS=0 disables it. Must run before any span executes.
+    nysx::obs::init_from_env();
     let args = Args::from_env();
     // Size the exec pool before anything touches it: `--threads N`
     // beats NYSX_THREADS beats available parallelism. An explicit 0 (or
@@ -56,6 +64,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "bench" => cmd_bench(&args),
+        "profile" => cmd_profile(&args),
         "lint" => cmd_lint(&args),
         "race" => cmd_race(&args),
         "roofline" => {
@@ -65,7 +74,7 @@ fn main() {
         _ => {
             println!(
                 "nysx — Nyström-HDC graph classification (NysX reproduction)\n\n\
-                 USAGE: nysx <train|infer|serve|eval|bench|lint|race|roofline> [flags]\n\
+                 USAGE: nysx <train|infer|serve|eval|bench|profile|lint|race|roofline> [flags]\n\
                  common flags: --threads N (exec pool size; default NYSX_THREADS or all cores)\n\
                  datasets: {}",
                 TU_SPECS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
@@ -112,7 +121,7 @@ fn cmd_train(args: &Args) -> Result<(), NysxError> {
         "generating {} and training...",
         args.get_or("dataset", "MUTAG")
     );
-    let t0 = std::time::Instant::now();
+    let t0 = nysx::obs::clock::now_ns();
     let mut trained = pipeline.train()?;
     let model = trained.model();
     eprintln!(
@@ -121,7 +130,7 @@ fn cmd_train(args: &Args) -> Result<(), NysxError> {
         trained.dataset().train.len(),
         model.s(),
         model.config.strategy,
-        t0.elapsed().as_secs_f64()
+        nysx::obs::clock::elapsed_ns(t0) as f64 / 1e9
     );
     report_accuracy(&mut trained);
     let mem = trained.model().memory_report();
@@ -155,9 +164,9 @@ fn cmd_infer(args: &Args) -> Result<(), NysxError> {
         .min(ds.test.len());
     let mut correct = 0;
     for (g, y) in ds.test.iter().take(count) {
-        let t0 = std::time::Instant::now();
+        let t0 = nysx::obs::clock::now_ns();
         let res = engine.infer(g);
-        let host_us = t0.elapsed().as_secs_f64() * 1e6;
+        let host_us = nysx::obs::clock::elapsed_ns(t0) as f64 / 1e3;
         let b = nysx::sim::simulate(&res.trace, &accel, nysx::sim::SimOptions::default());
         let e = power.energy(&b, &accel);
         if res.predicted == *y {
@@ -441,6 +450,74 @@ fn cmd_bench_memory(args: &Args) -> Result<(), NysxError> {
     );
     report.write(Path::new(&out))?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// `profile <infer|serving>` — run the obs-instrumented profiling
+/// harness (DESIGN.md §11) and write the `nysx-obs/v1` artifact to
+/// `--out` (default PROFILE.json), optionally a Prometheus text
+/// exposition to `--prom-out`. Forces obs ON regardless of `NYSX_OBS`
+/// (profiling with the meters off would be an empty artifact). Smoke
+/// mode (`NYSX_BENCH_SMOKE=1`) shrinks the run for CI.
+fn cmd_profile(args: &Args) -> Result<(), NysxError> {
+    use nysx::bench::profile::{self, ProfileConfig};
+    let kind = args.positional().get(1).map(|s| s.as_str());
+    let mut cfg = ProfileConfig::from_env();
+    if let Some(name) = args.get("dataset") {
+        cfg.dataset = name.to_string();
+    }
+    cfg.scale = args.try_f64("scale", cfg.scale).map_err(flag_err)?;
+    cfg.seed = args.try_u64("seed", cfg.seed).map_err(flag_err)?;
+    cfg.hv_dim = args.try_usize("d", cfg.hv_dim).map_err(flag_err)?;
+    cfg.repeats = args.try_usize("repeats", cfg.repeats).map_err(flag_err)?;
+    cfg.shards = args.try_usize("shards", cfg.shards).map_err(flag_err)?;
+    cfg.requests = args.try_usize("requests", cfg.requests).map_err(flag_err)?;
+    cfg.workers_per_shard = args
+        .try_usize("workers", cfg.workers_per_shard)
+        .map_err(flag_err)?;
+    cfg.batch_size = args.try_usize("batch", cfg.batch_size).map_err(flag_err)?.max(1);
+    if args.get("threads").is_some() {
+        cfg.threads = Some(args.try_usize("threads", 0).map_err(flag_err)?);
+    }
+    let out = args.get_or("out", "PROFILE.json").to_string();
+
+    let report = match kind {
+        Some("infer") => profile::profile_infer(&cfg)?,
+        Some("serving") => profile::profile_serving(&cfg)?,
+        other => {
+            return Err(NysxError::Config(format!(
+                "unknown profile kind {:?}; available: infer, serving",
+                other.unwrap_or("<none>")
+            )))
+        }
+    };
+    for stage in nysx::obs::STAGES {
+        let name = format!("stage.{stage}");
+        if let Some(h) = report.snapshot.histograms.iter().find(|h| h.name == name) {
+            println!(
+                "stage {stage:<15} count={:<8} mean={:.1}µs p50~{:.1}µs p99~{:.1}µs",
+                h.count,
+                h.mean_ns() / 1e3,
+                h.percentile_ns(50.0) as f64 / 1e3,
+                h.percentile_ns(99.0) as f64 / 1e3,
+            );
+        }
+    }
+    for lane in &report.snapshot.lanes {
+        println!(
+            "lanes {:<22} runs={:<6} lanes={} imbalance={:.2}",
+            lane.name,
+            lane.runs,
+            lane.lanes,
+            lane.imbalance(),
+        );
+    }
+    report.write(Path::new(&out))?;
+    println!("wrote {out}");
+    if let Some(prom) = args.get("prom-out") {
+        std::fs::write(prom, nysx::api::snapshot_prometheus()).map_err(NysxError::Io)?;
+        println!("wrote {prom}");
+    }
     Ok(())
 }
 

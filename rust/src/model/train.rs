@@ -154,6 +154,7 @@ pub fn train_with_pool(dataset: &GraphDataset, config: &ModelConfig, pool: &Pool
     // order. Counters are pure per-coordinate counts, so the merged
     // state — and therefore the prototypes — equals the sequential
     // single-accumulator pass exactly, at any thread count.
+    let _stage = crate::obs::span(&crate::obs::metrics::STAGE_TRAIN_FINALIZE);
     let ranges = exec::even_ranges(dataset.train.len(), pool.threads());
     let lane_accs: Vec<PackedAccumulator> = exec::map_parts(pool, ranges.len(), |block| {
         let mut acc = PackedAccumulator::new(dataset.num_classes, config.hv_dim);

@@ -1,0 +1,55 @@
+//! The single wall-clock seam for observability.
+//!
+//! Every timing read outside `coordinator/` and `bench/` flows through
+//! this module, so the `timing-confinement` lint rule can confine the
+//! raw `Instant::now` / `SystemTime` tokens to three directories and the
+//! determinism contract stays mechanically checkable: kernels never see
+//! a clock, they only ever *are seen by* one.
+//!
+//! Time is exposed as nanoseconds since a lazily-pinned process epoch
+//! (`u64` is ~584 years of nanoseconds — no overflow in practice), so
+//! call sites work in plain integers and no `Instant` values leak into
+//! instrumented code.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic nanoseconds since the process obs epoch (first clock read).
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Nanoseconds elapsed since a `now_ns()` reading. Saturating, so a
+/// stale or crossed reading can never underflow into a huge duration.
+#[inline]
+pub fn elapsed_ns(start_ns: u64) -> u64 {
+    now_ns().saturating_sub(start_ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_and_saturating() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a, "clock went backwards: {a} -> {b}");
+        assert_eq!(elapsed_ns(u64::MAX), 0, "elapsed_ns must saturate");
+        // A real spin shows up as nonzero elapsed time eventually.
+        let t0 = now_ns();
+        let mut x = 0u64;
+        for i in 0..100_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        let dt = elapsed_ns(t0);
+        assert!(dt < u64::MAX / 2, "elapsed {dt} implausible");
+    }
+}

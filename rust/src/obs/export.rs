@@ -1,0 +1,229 @@
+//! Snapshot + export: one coherent view of every metric, serialized to
+//! the `PROFILE.json` building blocks and to Prometheus text
+//! exposition format.
+//!
+//! A [`Snapshot`] is a point-in-time merge of the whole registry
+//! (counters, gauges, histograms, labeled lane sites). The JSON shape
+//! here is the reusable core — `bench::profile` wraps it with run
+//! configuration and the `nysx-obs/v1` schema tag, and round-trip
+//! validates before anything lands on disk.
+
+use crate::util::json::Json;
+
+use super::lanes::{self, LaneSiteSnapshot};
+use super::metrics::{self, HistogramSnapshot};
+
+/// Point-in-time merge of the process-wide registry.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Nanoseconds since the obs clock epoch at capture time — the
+    /// wall-clock bound for lane busy-time sanity checks
+    /// (`sum(busy_ns) <= wall_ns × lanes`).
+    pub wall_ns: u64,
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub histograms: Vec<HistogramSnapshot>,
+    pub lanes: Vec<LaneSiteSnapshot>,
+}
+
+impl Snapshot {
+    /// Capture the current state of every registered metric.
+    pub fn capture() -> Self {
+        let reg = metrics::registry();
+        Self {
+            wall_ns: super::clock::now_ns(),
+            counters: reg.counters.iter().map(|c| (c.name(), c.get())).collect(),
+            gauges: reg.gauges.iter().map(|g| (g.name(), g.get())).collect(),
+            histograms: reg.histograms.iter().map(|h| h.snapshot()).collect(),
+            lanes: lanes::SITES.iter().map(|s| s.snapshot()).collect(),
+        }
+    }
+
+    /// The snapshot body shared by every profile artifact (stable key
+    /// order via `Json`'s BTreeMap objects).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wall_ns", Json::num(self.wall_ns as f64)),
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Json::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|h| (h.name.to_string(), hist_json(h)))
+                        .collect(),
+                ),
+            ),
+            (
+                "lanes",
+                Json::Obj(
+                    self.lanes
+                        .iter()
+                        .map(|l| (l.name.to_string(), lane_json(l)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Prometheus text exposition (the `--prom-out` /
+    /// `api::snapshot_prometheus` surface). Histograms emit cumulative
+    /// `_bucket{le=...}` series up to the highest occupied bucket, then
+    /// `+Inf`, `_sum` and `_count`, per the exposition format.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for h in &self.histograms {
+            let n = format!("{}_ns", prom_name(h.name));
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            let top = h.buckets.iter().rposition(|&c| c > 0);
+            let mut cum = 0u64;
+            if let Some(top) = top {
+                for (i, &c) in h.buckets.iter().enumerate().take(top + 1) {
+                    cum += c;
+                    // Upper bound of bucket i is 2^(i+1) - 1 inclusive;
+                    // Prometheus `le` is inclusive, so that's the label.
+                    let le = if i + 1 >= 64 {
+                        u64::MAX
+                    } else {
+                        (1u64 << (i + 1)) - 1
+                    };
+                    out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cum}\n"));
+                }
+            }
+            out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{n}_sum {}\n", h.sum_ns));
+            out.push_str(&format!("{n}_count {}\n", h.count));
+        }
+        for l in &self.lanes {
+            let n = prom_name(l.name);
+            out.push_str(&format!(
+                "# TYPE {n}_lane_busy_ns counter\n# TYPE {n}_imbalance gauge\n"
+            ));
+            for (lane, busy) in l.busy_ns.iter().enumerate() {
+                out.push_str(&format!("{n}_lane_busy_ns{{lane=\"{lane}\"}} {busy}\n"));
+            }
+            out.push_str(&format!("{n}_imbalance {}\n", l.imbalance()));
+        }
+        out
+    }
+}
+
+fn hist_json(h: &HistogramSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count as f64)),
+        ("sum_ns", Json::num(h.sum_ns as f64)),
+        ("mean_ns", Json::num(h.mean_ns())),
+        ("p50_ns", Json::num(h.percentile_ns(50.0) as f64)),
+        ("p99_ns", Json::num(h.percentile_ns(99.0) as f64)),
+        ("p999_ns", Json::num(h.percentile_ns(99.9) as f64)),
+        ("max_bucket_lower_ns", Json::num(h.max_bucket_lower_ns() as f64)),
+        (
+            "buckets",
+            Json::arr(h.buckets.iter().map(|&c| Json::num(c as f64))),
+        ),
+    ])
+}
+
+fn lane_json(l: &LaneSiteSnapshot) -> Json {
+    Json::obj(vec![
+        ("runs", Json::num(l.runs as f64)),
+        ("lanes", Json::num(l.lanes as f64)),
+        (
+            "busy_ns",
+            Json::arr(l.busy_ns.iter().map(|&b| Json::num(b as f64))),
+        ),
+        (
+            "parts",
+            Json::arr(l.parts.iter().map(|&p| Json::num(p as f64))),
+        ),
+        ("imbalance", Json::num(l.imbalance())),
+    ])
+}
+
+/// Metric-name sanitizer for the Prometheus exposition format:
+/// `[a-zA-Z0-9_:]` stays, everything else (the catalog's `.`) becomes
+/// `_`, and the whole thing gets the `nysx_` namespace prefix.
+fn prom_name(name: &str) -> String {
+    let body: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' })
+        .collect();
+    format!("nysx_{body}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_json_round_trips_and_covers_the_catalog() {
+        metrics::STAGE_SPMV.record_ns(1_234);
+        metrics::INFER_REQUESTS.inc();
+        lanes::SITE_SPMV_SCHEDULED.record_run(2);
+        lanes::SITE_SPMV_SCHEDULED.record_lane(0, 500, 3);
+        lanes::SITE_SPMV_SCHEDULED.record_lane(1, 700, 3);
+
+        let snap = Snapshot::capture();
+        let doc = snap.to_json();
+        let text = doc.to_string();
+        let back = Json::parse(&text).expect("snapshot JSON must parse");
+        assert_eq!(back, doc, "snapshot JSON round-trip drift");
+
+        // Every stage histogram is present under histograms.stage.<name>.
+        let hists = doc.get("histograms").expect("histograms key");
+        for stage in metrics::STAGES {
+            assert!(
+                hists.get(&format!("stage.{stage}")).is_some(),
+                "stage.{stage} missing from snapshot JSON"
+            );
+        }
+        let spmv = hists.get("stage.spmv").unwrap();
+        assert!(spmv.get("count").unwrap().as_f64().unwrap() >= 1.0);
+        let lanes_obj = doc.get("lanes").expect("lanes key");
+        let sched = lanes_obj.get("spmv.nnz_row_groups").expect("scheduled site");
+        assert!(sched.get("imbalance").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        metrics::STAGE_SCE_MATCH.record_ns(5);
+        let text = Snapshot::capture().prometheus();
+        assert!(text.contains("# TYPE nysx_stage_sce_match_ns histogram"));
+        assert!(text.contains("nysx_stage_sce_match_ns_count"));
+        assert!(text.contains("nysx_stage_sce_match_ns_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("# TYPE nysx_serve_shards gauge"));
+        assert!(text.contains("# TYPE nysx_infer_requests counter"));
+        // Dots sanitized, every line is name<space>value or a comment.
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# ") || line.split(' ').count() == 2,
+                "malformed exposition line: {line:?}"
+            );
+        }
+    }
+}

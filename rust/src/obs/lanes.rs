@@ -1,0 +1,195 @@
+//! Per-site exec-lane utilization: busy time and parts executed per
+//! lane of a labeled `Pool::run` site, merged into a load-imbalance
+//! ratio at snapshot time.
+//!
+//! This is what makes the paper's §4.2 static-load-balancing claim
+//! *observable*: the scheduled SpMV (`spmv.nnz_row_groups`, nnz-grouped
+//! PE blocks) and the naive contiguous partitioning
+//! (`spmv.even_ranges`) are both labeled sites, so one profile run
+//! shows the imbalance ratio (max-lane busy / mean-lane busy) of each
+//! side by side in `PROFILE.json`.
+//!
+//! Recording is a handful of relaxed atomic adds per lane per run —
+//! the pool wraps each lane's whole part-loop in ONE clock pair, so
+//! the overhead is independent of part count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lane slots tracked per site. `exec::MAX_THREADS` is 4096, but lanes
+/// beyond this many fold onto slot `lane % MAX_LANES` — utilization
+/// stays conservative instead of the table growing 32 KiB per site.
+pub const MAX_LANES: usize = 64;
+
+/// Lane accounting for one labeled `Pool::run` call site.
+pub struct LaneSite {
+    name: &'static str,
+    busy_ns: [AtomicU64; MAX_LANES],
+    parts: [AtomicU64; MAX_LANES],
+    runs: AtomicU64,
+    /// High-water mark of lanes used by any single run.
+    lanes_hwm: AtomicU64,
+}
+
+impl LaneSite {
+    pub const fn new(name: &'static str) -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Self {
+            name,
+            busy_ns: [Z; MAX_LANES],
+            parts: [Z; MAX_LANES],
+            runs: AtomicU64::new(0),
+            lanes_hwm: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Record one lane's contribution to one run.
+    #[inline]
+    pub fn record_lane(&self, lane: usize, busy_ns: u64, parts: u64) {
+        let slot = lane % MAX_LANES;
+        self.busy_ns[slot].fetch_add(busy_ns, Ordering::Relaxed);
+        self.parts[slot].fetch_add(parts, Ordering::Relaxed);
+    }
+
+    /// Record that one run dispatched across `lanes` lanes.
+    #[inline]
+    pub fn record_run(&self, lanes: usize) {
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        self.lanes_hwm.fetch_max(lanes as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LaneSiteSnapshot {
+        let lanes = (self.lanes_hwm.load(Ordering::Relaxed) as usize).min(MAX_LANES);
+        let busy_ns: Vec<u64> = self.busy_ns[..lanes]
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect();
+        let parts: Vec<u64> = self.parts[..lanes]
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect();
+        LaneSiteSnapshot {
+            name: self.name,
+            runs: self.runs.load(Ordering::Relaxed),
+            lanes,
+            busy_ns,
+            parts,
+        }
+    }
+
+    pub fn reset(&self) {
+        for a in &self.busy_ns {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in &self.parts {
+            a.store(0, Ordering::Relaxed);
+        }
+        self.runs.store(0, Ordering::Relaxed);
+        self.lanes_hwm.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Immutable view of a [`LaneSite`], with the derived imbalance ratio.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneSiteSnapshot {
+    pub name: &'static str,
+    pub runs: u64,
+    /// Lanes observed (high-water mark across runs).
+    pub lanes: usize,
+    /// Cumulative busy nanoseconds per lane, `lanes` entries.
+    pub busy_ns: Vec<u64>,
+    /// Cumulative parts executed per lane, `lanes` entries.
+    pub parts: Vec<u64>,
+}
+
+impl LaneSiteSnapshot {
+    /// Load-imbalance ratio: max-lane busy / mean-lane busy over the
+    /// observed lanes. 1.0 is perfect balance; `lanes as f64` is the
+    /// worst case (all work on one lane). 0.0 when nothing ran.
+    pub fn imbalance(&self) -> f64 {
+        if self.lanes == 0 {
+            return 0.0;
+        }
+        let total: u64 = self.busy_ns.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let max = *self.busy_ns.iter().max().expect("lanes > 0") as f64;
+        let mean = total as f64 / self.lanes as f64;
+        max / mean
+    }
+}
+
+// The labeled call sites. Adding a site = a static here + its row in
+// `SITES` + passing it to `Pool::run_labeled` at the call site.
+
+/// Scheduled SpMV: §4.2 nnz-grouped PE blocks (`sparse::schedule`).
+pub static SITE_SPMV_SCHEDULED: LaneSite = LaneSite::new("spmv.nnz_row_groups");
+/// Naive contiguous row partitioning of the same SpMV (profile harness
+/// comparison arm).
+pub static SITE_SPMV_EVEN: LaneSite = LaneSite::new("spmv.even_ranges");
+/// Batched NEE projection word-ranges (`infer::optimized::nee_sce_batch`).
+pub static SITE_NEE_BATCH: LaneSite = LaneSite::new("nee.batch_project");
+
+/// Every labeled site, in stable export order.
+pub static SITES: [&LaneSite; 3] = [&SITE_SPMV_SCHEDULED, &SITE_SPMV_EVEN, &SITE_NEE_BATCH];
+
+/// Zero every site (called from `Registry::reset_all`).
+pub fn reset_all() {
+    for site in SITES {
+        site.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_ratio_from_recorded_lanes() {
+        let site = LaneSite::new("test.site");
+        assert_eq!(site.snapshot().imbalance(), 0.0);
+
+        // Perfectly balanced run across 4 lanes.
+        site.record_run(4);
+        for lane in 0..4 {
+            site.record_lane(lane, 1_000, 8);
+        }
+        let snap = site.snapshot();
+        assert_eq!(snap.lanes, 4);
+        assert_eq!(snap.runs, 1);
+        assert_eq!(snap.busy_ns, vec![1_000; 4]);
+        assert_eq!(snap.parts, vec![8; 4]);
+        assert!((snap.imbalance() - 1.0).abs() < 1e-12, "{}", snap.imbalance());
+
+        // Pile extra work on lane 0: ratio rises toward `lanes`.
+        site.record_run(4);
+        site.record_lane(0, 5_000, 8);
+        let skewed = site.snapshot();
+        assert_eq!(skewed.runs, 2);
+        // busy = [6000, 1000, 1000, 1000]; mean = 2250; max/mean = 2.666…
+        assert!(
+            (skewed.imbalance() - 6_000.0 / 2_250.0).abs() < 1e-12,
+            "{}",
+            skewed.imbalance()
+        );
+        assert!(skewed.imbalance() <= 4.0);
+
+        site.reset();
+        assert_eq!(site.snapshot().lanes, 0);
+    }
+
+    #[test]
+    fn lanes_beyond_the_table_fold_conservatively() {
+        let site = LaneSite::new("test.fold");
+        site.record_run(MAX_LANES + 2);
+        site.record_lane(MAX_LANES + 1, 10, 1); // folds onto slot 1
+        let snap = site.snapshot();
+        assert_eq!(snap.lanes, MAX_LANES);
+        assert_eq!(snap.busy_ns[1], 10);
+    }
+}

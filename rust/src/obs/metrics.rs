@@ -1,0 +1,535 @@
+//! Lock-free metric primitives and the process-wide registry.
+//!
+//! Everything here is a `static` built from `AtomicU64`s: recording is
+//! wait-free (one or two relaxed RMWs), there is no registration step,
+//! no allocation, and no lock anywhere on a hot path. The catalog of
+//! metric names is fixed at compile time — snapshots iterate a constant
+//! table in a deterministic order, which keeps `PROFILE.json` stable
+//! across runs of the same workload shape.
+//!
+//! Latency histograms use a fixed 64-bucket power-of-two layout: bucket
+//! `i` covers `[2^i, 2^(i+1))` nanoseconds (bucket 0 also absorbs 0).
+//! That spans 1 ns to ~584 years in 64 buckets with ≤ 2× relative
+//! error — plenty for stage attribution, and it makes the merge a plain
+//! element-wise sum. Counts are striped across [`HIST_SHARDS`]
+//! cache-line-separated shards selected by a stable per-thread index,
+//! so concurrent lanes don't serialize on one cache line; shards merge
+//! at snapshot time.
+//!
+//! Recording never reads the clock itself — callers time through
+//! [`super::clock`] (the lint-confined seam) and hand finished
+//! durations in.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Number of buckets in the power-of-two histogram layout (one per
+/// possible `u64` leading-zero count).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Concurrency stripes per histogram. Threads are assigned a stable
+/// stripe round-robin; 8 stripes cover the pool sizes this crate runs
+/// at without bloating the static footprint.
+pub const HIST_SHARDS: usize = 8;
+
+/// The six pipeline stages every profile artifact must cover, in
+/// pipeline order. Histogram names are `"stage.<name>"`.
+pub const STAGES: [&str; 6] = [
+    "featurize",
+    "mph_lookup",
+    "spmv",
+    "nee_project",
+    "sce_match",
+    "train_finalize",
+];
+
+/// Bucket index of a nanosecond value: `floor(log2(v))`, with 0 mapped
+/// to bucket 0. Bucket `i >= 1` covers `[2^i, 2^(i+1))`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        63 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive lower bound of a bucket (the percentile estimate returned
+/// for any rank landing in it).
+#[inline]
+pub fn bucket_lower_bound(bucket: usize) -> u64 {
+    if bucket == 0 {
+        0
+    } else {
+        1u64 << bucket
+    }
+}
+
+/// Stable per-thread stripe index: assigned round-robin from a global
+/// counter on first use, so a thread always hits the same stripe and
+/// two pool lanes rarely share one.
+fn stripe_index() -> usize {
+    use std::cell::Cell;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static STRIPE: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    STRIPE.with(|c| {
+        let mut i = c.get();
+        if i == usize::MAX {
+            i = NEXT.fetch_add(1, Ordering::Relaxed) % HIST_SHARDS;
+            c.set(i);
+        }
+        i
+    })
+}
+
+/// A monotonically increasing event counter.
+pub struct Counter {
+    name: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str) -> Self {
+        Self {
+            name,
+            value: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A last-write-wins gauge (configuration facts: thread count, shard
+/// count, batch width).
+pub struct Gauge {
+    name: &'static str,
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str) -> Self {
+        Self {
+            name,
+            value: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.set(0);
+    }
+}
+
+/// One stripe of a histogram, padded out so stripes land on distinct
+/// cache lines (64 buckets × 8 B = 512 B per stripe already guarantees
+/// separation of the bucket arrays; the sum rides along).
+struct HistStripe {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_ns: AtomicU64,
+}
+
+impl HistStripe {
+    const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Self {
+            buckets: [Z; HIST_BUCKETS],
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A log2-bucketed latency histogram (layout documented in the module
+/// docs). `record_ns` is wait-free; `snapshot` merges the stripes.
+pub struct Histogram {
+    name: &'static str,
+    stripes: [HistStripe; HIST_SHARDS],
+}
+
+impl Histogram {
+    pub const fn new(name: &'static str) -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const S: HistStripe = HistStripe::new();
+        Self {
+            name,
+            stripes: [S; HIST_SHARDS],
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Record one duration (nanoseconds).
+    #[inline]
+    pub fn record_ns(&self, v: u64) {
+        let s = &self.stripes[stripe_index()];
+        s.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        s.sum_ns.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Merge all stripes into one immutable view.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        let mut sum_ns = 0u64;
+        for stripe in &self.stripes {
+            for (b, a) in buckets.iter_mut().zip(stripe.buckets.iter()) {
+                *b += a.load(Ordering::Relaxed);
+            }
+            sum_ns = sum_ns.wrapping_add(stripe.sum_ns.load(Ordering::Relaxed));
+        }
+        let count = buckets.iter().sum();
+        HistogramSnapshot {
+            name: self.name,
+            buckets,
+            count,
+            sum_ns,
+        }
+    }
+
+    pub fn reset(&self) {
+        for stripe in &self.stripes {
+            for a in &stripe.buckets {
+                a.store(0, Ordering::Relaxed);
+            }
+            stripe.sum_ns.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Merged, immutable view of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub name: &'static str,
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl HistogramSnapshot {
+    /// Nearest-rank percentile estimate: the inclusive lower bound of
+    /// the bucket holding the sample of rank `round(p/100 · (n-1))` —
+    /// the same rank formula as `coordinator::LatencyStats`, so the
+    /// estimate is guaranteed to land in the SAME bucket as the exact
+    /// sorted-vector answer (`estimate <= exact < 2·max(estimate, 1)`).
+    /// Returns 0 for an empty histogram.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_lower_bound(i);
+            }
+        }
+        bucket_lower_bound(HIST_BUCKETS - 1)
+    }
+
+    /// Lower bound of the highest occupied bucket (0 if empty).
+    pub fn max_bucket_lower_ns(&self) -> u64 {
+        match self.buckets.iter().rposition(|&c| c > 0) {
+            Some(i) => bucket_lower_bound(i),
+            None => 0,
+        }
+    }
+
+    /// Mean in nanoseconds (exact: true sum over count).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The fixed catalog. Adding a metric = adding a static AND its row in
+// the registry arrays below; `Registry::histogram` and the export layer
+// pick it up from there.
+// ---------------------------------------------------------------------
+
+pub static STAGE_FEATURIZE: Histogram = Histogram::new("stage.featurize");
+pub static STAGE_MPH_LOOKUP: Histogram = Histogram::new("stage.mph_lookup");
+pub static STAGE_SPMV: Histogram = Histogram::new("stage.spmv");
+pub static STAGE_NEE_PROJECT: Histogram = Histogram::new("stage.nee_project");
+pub static STAGE_SCE_MATCH: Histogram = Histogram::new("stage.sce_match");
+pub static STAGE_TRAIN_FINALIZE: Histogram = Histogram::new("stage.train_finalize");
+pub static SERVE_QUEUE: Histogram = Histogram::new("serve.queue");
+pub static SERVE_BATCH: Histogram = Histogram::new("serve.batch");
+pub static SERVE_SHARD_ROUTE: Histogram = Histogram::new("serve.shard_route");
+
+pub static INFER_REQUESTS: Counter = Counter::new("infer.requests");
+pub static INFER_GRAPHS: Counter = Counter::new("infer.graphs");
+pub static SERVE_REQUESTS: Counter = Counter::new("serve.requests");
+pub static SERVE_BATCHES: Counter = Counter::new("serve.batches");
+pub static SERVE_ADMISSION_SHED: Counter = Counter::new("serve.admission_shed");
+pub static SERVE_MISATTRIBUTED: Counter = Counter::new("serve.misattributed");
+
+pub static EXEC_THREADS: Gauge = Gauge::new("exec.threads");
+pub static SERVE_SHARDS: Gauge = Gauge::new("serve.shards");
+
+/// The process-wide metric catalog: every counter, gauge and histogram,
+/// in stable export order.
+pub struct Registry {
+    pub counters: &'static [&'static Counter],
+    pub gauges: &'static [&'static Gauge],
+    pub histograms: &'static [&'static Histogram],
+}
+
+static REGISTRY: Registry = Registry {
+    counters: &[
+        &INFER_REQUESTS,
+        &INFER_GRAPHS,
+        &SERVE_REQUESTS,
+        &SERVE_BATCHES,
+        &SERVE_ADMISSION_SHED,
+        &SERVE_MISATTRIBUTED,
+    ],
+    gauges: &[&EXEC_THREADS, &SERVE_SHARDS],
+    histograms: &[
+        &STAGE_FEATURIZE,
+        &STAGE_MPH_LOOKUP,
+        &STAGE_SPMV,
+        &STAGE_NEE_PROJECT,
+        &STAGE_SCE_MATCH,
+        &STAGE_TRAIN_FINALIZE,
+        &SERVE_QUEUE,
+        &SERVE_BATCH,
+        &SERVE_SHARD_ROUTE,
+    ],
+};
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    &REGISTRY
+}
+
+impl Registry {
+    /// Look a histogram up by its catalog name (the `span!` macro path).
+    pub fn histogram(&self, name: &str) -> Option<&'static Histogram> {
+        self.histograms.iter().find(|h| h.name() == name).copied()
+    }
+
+    /// Zero every metric (profiling harness between warmup and the
+    /// measured section; tests).
+    pub fn reset_all(&self) {
+        for c in self.counters {
+            c.reset();
+        }
+        for g in self.gauges {
+            g.reset();
+        }
+        for h in self.histograms {
+            h.reset();
+        }
+        super::lanes::reset_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        for i in 1..HIST_BUCKETS {
+            let lo = bucket_lower_bound(i);
+            // Exactly at the boundary lands in bucket i, one below in i-1.
+            assert_eq!(bucket_of(lo), i);
+            assert_eq!(bucket_of(lo - 1), i - 1);
+        }
+    }
+
+    /// Exact sorted-vector percentile at the same nearest-rank formula
+    /// as `coordinator::LatencyStats::from_samples`.
+    fn ref_percentile(samples: &[u64], p: f64) -> u64 {
+        if samples.is_empty() {
+            return 0;
+        }
+        let mut xs = samples.to_vec();
+        xs.sort_unstable();
+        let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[idx.min(xs.len() - 1)]
+    }
+
+    fn check_against_reference(name: &str, samples: &[u64]) {
+        let h = Histogram::new("test.property");
+        for &s in samples {
+            h.record_ns(s);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, samples.len() as u64, "{name}: count");
+        assert_eq!(
+            snap.sum_ns,
+            samples.iter().copied().fold(0u64, u64::wrapping_add),
+            "{name}: sum"
+        );
+        for p in [50.0, 99.0, 99.9] {
+            let est = snap.percentile_ns(p);
+            let exact = ref_percentile(samples, p);
+            assert_eq!(
+                bucket_of(est),
+                bucket_of(exact),
+                "{name}: p{p} estimate {est} not in the exact answer's bucket ({exact})"
+            );
+            assert!(est <= exact, "{name}: p{p} estimate {est} > exact {exact}");
+            let within_2x = est.max(1).checked_mul(2).map_or(true, |ub| exact < ub);
+            assert!(within_2x, "{name}: p{p} exact {exact} >= 2x estimate {est}");
+        }
+        // Every recorded sample lives in the bucket the layout says.
+        let mut want = [0u64; HIST_BUCKETS];
+        for &s in samples {
+            want[bucket_of(s)] += 1;
+        }
+        assert_eq!(snap.buckets, want, "{name}: bucket contents");
+    }
+
+    /// Satellite property test: on the adversarial fixtures from
+    /// `coordinator/metrics.rs` (converted µs → ns), the histogram's
+    /// p50/p99/p999 estimates land in the same power-of-two bucket as
+    /// the exact sorted-vector reference.
+    #[test]
+    fn percentiles_within_one_bucket_of_exact_reference() {
+        // Empty series.
+        check_against_reference("empty", &[]);
+        let empty = Histogram::new("test.empty").snapshot();
+        assert_eq!(
+            (empty.count, empty.percentile_ns(50.0), empty.max_bucket_lower_ns()),
+            (0, 0, 0)
+        );
+
+        // Single sample (42.5 µs).
+        check_against_reference("single", &[42_500]);
+
+        // Duplicate-heavy: 980×1.0 µs + 20×100.0 µs.
+        let mut dup: Vec<u64> = vec![1_000; 980];
+        dup.extend(std::iter::repeat(100_000).take(20));
+        check_against_reference("duplicate-heavy", &dup);
+
+        // Out-of-order uniform ramp: i/7.0 µs for i in 0..1000, reversed.
+        let mut ramp: Vec<u64> = (0..1000u64)
+            .map(|i| (i as f64 / 7.0 * 1000.0) as u64)
+            .collect();
+        ramp.reverse();
+        check_against_reference("out-of-order-ramp", &ramp);
+
+        // Tail-separated: 499×1.0 µs + one 1000.0 µs outlier.
+        let mut tail: Vec<u64> = vec![1_000; 499];
+        tail.push(1_000_000);
+        check_against_reference("tail-separated", &tail);
+
+        // Boundary adversary: exact powers of two and their neighbors.
+        let mut pow: Vec<u64> = Vec::new();
+        for b in [1u64, 2, 4, 1 << 10, 1 << 20, 1 << 40] {
+            pow.extend([b - 1, b, b + 1]);
+        }
+        pow.push(0);
+        pow.push(u64::MAX);
+        check_against_reference("power-of-two-boundaries", &pow);
+    }
+
+    #[test]
+    fn histogram_merges_stripes_from_many_threads() {
+        static H: Histogram = Histogram::new("test.threads");
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        H.record_ns(t * 1_000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = H.snapshot();
+        assert_eq!(snap.count, 8_000);
+        let want_sum: u64 = (0..8u64)
+            .flat_map(|t| (0..1000u64).map(move |i| t * 1_000 + i))
+            .sum();
+        assert_eq!(snap.sum_ns, want_sum);
+        H.reset();
+        assert_eq!(H.snapshot().count, 0);
+    }
+
+    #[test]
+    fn counters_gauges_and_catalog_lookup() {
+        let c = Counter::new("test.counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let g = Gauge::new("test.gauge");
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+
+        let reg = registry();
+        for stage in STAGES {
+            let name = format!("stage.{stage}");
+            assert!(
+                reg.histogram(&name).is_some(),
+                "stage histogram {name} missing from the catalog"
+            );
+        }
+        assert!(reg.histogram("no.such.metric").is_none());
+        // Catalog names are unique (export keys collide otherwise).
+        let mut names: Vec<&str> = reg
+            .histograms
+            .iter()
+            .map(|h| h.name())
+            .chain(reg.counters.iter().map(|c| c.name()))
+            .chain(reg.gauges.iter().map(|g| g.name()))
+            .collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate metric names in the catalog");
+    }
+}

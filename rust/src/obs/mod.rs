@@ -1,0 +1,204 @@
+//! `nysx::obs` — dependency-free observability: stage-level tracing
+//! spans, lock-free counters/gauges/log2-latency-histograms, per-site
+//! exec-lane utilization, and export to `PROFILE.json` / Prometheus
+//! text exposition. DESIGN.md §11 documents the metric catalog,
+//! histogram layout and overhead budget.
+//!
+//! # The enable switch
+//!
+//! Observability is a process-global `AtomicBool`, **off by default
+//! for library use** and turned **on by the CLI** unless `NYSX_OBS=0`
+//! ([`init_from_env`]). Disabled paths are a single relaxed load plus
+//! a branch — no clock read, no atomics, no allocation — and by
+//! construction recording never feeds back into computation, so
+//! outputs are bit-identical with obs on, off, or toggled mid-run, at
+//! any thread count (`tests/obs_differential.rs` pins this across
+//! pools {1, 2, 7}).
+//!
+//! # The clock seam
+//!
+//! All timing flows through [`clock`] — the one module outside
+//! `coordinator/` and `bench/` allowed to touch `Instant` (the
+//! `timing-confinement` lint rule enforces exactly that set), so the
+//! kernel determinism contract stays mechanically checkable.
+//!
+//! # Usage
+//!
+//! ```
+//! // Scoped stage timer (records on drop; no-op while disabled):
+//! {
+//!     let _s = nysx::obs::span(&nysx::obs::metrics::STAGE_SPMV);
+//!     // ... the A-chain ...
+//! }
+//! // Or by catalog name, macro-style:
+//! nysx::span!("stage.nee_project");
+//! let snap = nysx::obs::Snapshot::capture();
+//! assert!(snap.histograms.iter().any(|h| h.name == "stage.spmv"));
+//! ```
+
+pub mod clock;
+pub mod export;
+pub mod lanes;
+pub mod metrics;
+
+pub use export::Snapshot;
+pub use lanes::{LaneSite, LaneSiteSnapshot};
+pub use metrics::{registry, Counter, Gauge, Histogram, HistogramSnapshot, Registry, STAGES};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is observability recording on? One relaxed load — every
+/// instrumentation site branches on this and does nothing while off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip recording on or off. Safe at any time from any thread:
+/// recording only ever *writes* metric atomics, never influences
+/// computation, so toggling cannot change outputs.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// CLI initialization: on unless `NYSX_OBS=0` (or empty). Library
+/// consumers who want recording call [`set_enabled`] themselves —
+/// the default for embedded use stays off.
+pub fn init_from_env() {
+    let on = match std::env::var("NYSX_OBS") {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => true,
+    };
+    set_enabled(on);
+}
+
+/// Serializes unit tests that toggle the process-global enable flag —
+/// two toggling tests racing in one test binary would see each other's
+/// state. (Integration tests run in their own processes and don't need
+/// it.)
+#[cfg(test)]
+pub(crate) fn test_toggle_lock() -> std::sync::MutexGuard<'static, ()> {
+    static M: std::sync::OnceLock<std::sync::Mutex<()>> = std::sync::OnceLock::new();
+    M.get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poison| poison.into_inner())
+}
+
+/// A scoped stage timer: created by [`span`] / [`span_named`], records
+/// elapsed nanoseconds into its histogram when dropped. While obs is
+/// disabled the guard is inert (no clock read on either end).
+pub struct SpanGuard {
+    hist: Option<&'static Histogram>,
+    start_ns: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(h) = self.hist {
+            h.record_ns(clock::elapsed_ns(self.start_ns));
+        }
+    }
+}
+
+/// Open a scoped timer on a catalog histogram (the zero-lookup form —
+/// instrumented pipeline stages reference their static directly).
+#[inline]
+pub fn span(hist: &'static Histogram) -> SpanGuard {
+    if enabled() {
+        SpanGuard {
+            hist: Some(hist),
+            start_ns: clock::now_ns(),
+        }
+    } else {
+        SpanGuard {
+            hist: None,
+            start_ns: 0,
+        }
+    }
+}
+
+/// Open a scoped timer by catalog name (`"stage.spmv"`,
+/// `"serve.batch"`, …). Unknown names yield an inert guard — a typo
+/// can't panic a serving path. Backs the [`crate::span!`] macro.
+pub fn span_named(name: &str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            hist: None,
+            start_ns: 0,
+        };
+    }
+    match metrics::registry().histogram(name) {
+        Some(h) => SpanGuard {
+            hist: Some(h),
+            start_ns: clock::now_ns(),
+        },
+        None => SpanGuard {
+            hist: None,
+            start_ns: 0,
+        },
+    }
+}
+
+/// `span!("stage.nee_project")` — scoped stage timer bound to the
+/// enclosing block: records into the named catalog histogram when the
+/// block exits, a no-op while obs is disabled.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        let _nysx_obs_span = $crate::obs::span_named($name);
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The enable toggle, span recording, and the inert-guard paths.
+    /// (Single test so the process-global toggle isn't raced by a
+    /// sibling test in this module; other test modules never disable.)
+    #[test]
+    fn spans_record_only_while_enabled() {
+        let _serial = test_toggle_lock();
+        let before = metrics::STAGE_TRAIN_FINALIZE.snapshot().count;
+
+        set_enabled(false);
+        {
+            let _g = span(&metrics::STAGE_TRAIN_FINALIZE);
+            let _n = span_named("stage.train_finalize");
+        }
+        assert_eq!(
+            metrics::STAGE_TRAIN_FINALIZE.snapshot().count,
+            before,
+            "disabled spans must record nothing"
+        );
+
+        set_enabled(true);
+        assert!(enabled());
+        {
+            let _g = span(&metrics::STAGE_TRAIN_FINALIZE);
+            let _n = span_named("stage.train_finalize");
+            let _typo = span_named("stage.no_such_stage"); // inert, no panic
+            crate::span!("stage.train_finalize");
+        }
+        let after = metrics::STAGE_TRAIN_FINALIZE.snapshot().count;
+        assert_eq!(after, before + 3, "three live spans must have recorded");
+        set_enabled(false);
+    }
+
+    #[test]
+    fn init_from_env_respects_nysx_obs() {
+        // Can't mutate the process env safely under parallel tests;
+        // exercise the parse contract through a local mirror of it.
+        let parse = |v: Option<&str>| match v {
+            Some(v) => !(v.is_empty() || v == "0"),
+            None => true,
+        };
+        assert!(parse(None), "CLI default is on");
+        assert!(!parse(Some("0")));
+        assert!(!parse(Some("")));
+        assert!(parse(Some("1")));
+        assert!(parse(Some("yes")));
+    }
+}

@@ -152,7 +152,10 @@ impl ScheduleTable {
         }
         let pe_blocks = crate::exec::even_ranges(self.pes, lanes);
         let scatter = crate::exec::ScatterMut::new(y);
-        pool.run(pe_blocks.len(), &|block| {
+        // Labeled obs site: per-lane busy time of the nnz-grouped
+        // schedule lands in PROFILE.json as "spmv.nnz_row_groups" (the
+        // §4.2 load-balance comparison arm; a no-op while obs is off).
+        pool.run_labeled(&crate::obs::lanes::SITE_SPMV_SCHEDULED, pe_blocks.len(), &|block| {
             for it in 0..self.iterations {
                 for pe in pe_blocks[block].clone() {
                     if let Some(r) = self.row_for(it, pe) {

@@ -126,6 +126,36 @@ fn gate_detects_and_pragma_clears_a_planted_violation() {
 /// iteration anywhere in their build paths would break the cross-format
 /// and cross-thread differential pins), while the same code in a
 /// non-kernel path is not.
+/// The timing-confinement rule keeps raw clock reads behind the
+/// `obs::clock` seam: a planted `Instant::now()` in a scratch
+/// `src/infer/` file is a finding (and *only* a timing finding — infer/
+/// is outside the determinism kernel set), the identical code inside
+/// `src/bench/` is allowed, and a justified pragma clears the planted
+/// site.
+#[test]
+fn gate_confines_raw_clock_reads() {
+    let dir = std::env::temp_dir().join(format!("nysx-lint-timing-{}", std::process::id()));
+    let infer = dir.join("src").join("infer");
+    let bench = dir.join("src").join("bench");
+    std::fs::create_dir_all(&infer).expect("temp tree");
+    std::fs::create_dir_all(&bench).expect("temp tree");
+    let bad = "pub fn f() -> std::time::Instant { std::time::Instant::now() }\n";
+    std::fs::write(infer.join("hot.rs"), bad).expect("write");
+    std::fs::write(bench.join("mod.rs"), bad).expect("write");
+    let report = lint_crate(&dir).expect("lint runs");
+    assert_eq!(report.findings.len(), 1, "{}", report.render_text());
+    assert_eq!(report.findings[0].rule, rules::RULE_TIMING);
+    assert_eq!(report.findings[0].file, "src/infer/hot.rs");
+    assert_eq!(report.findings[0].line, 1);
+
+    let fixed =
+        format!("// nysx-lint: allow(timing-confinement): scratch fixture, not a hot path\n{bad}");
+    std::fs::write(infer.join("hot.rs"), fixed).expect("write");
+    let report = lint_crate(&dir).expect("lint runs");
+    assert!(report.findings.is_empty(), "{}", report.render_text());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn gate_covers_succinct_determinism() {
     let dir = std::env::temp_dir().join(format!("nysx-lint-succinct-{}", std::process::id()));

@@ -1,0 +1,84 @@
+//! Obs differential gate: classification outputs are bit-identical with
+//! observability recording on or off, at any pool width (DESIGN.md
+//! §11). Instrumentation only ever *writes* metric atomics — this test
+//! pins the "recording never feeds back into computation" contract end
+//! to end through the public pipeline facade, across pools {1, 2, 7},
+//! for both the single-graph and the batched inference paths, down to
+//! the packed query hypervector words.
+//!
+//! One `#[test]` on purpose: the enable flag is process-global, and two
+//! tests toggling it concurrently inside this binary would race. (Other
+//! integration binaries run in their own processes and never see it.)
+
+use nysx::api::Pipeline;
+use nysx::graph::Graph;
+
+/// Per test graph: (single predicted, single hv words, batch predicted,
+/// batch hv words).
+type Fingerprint = Vec<(usize, Vec<u64>, usize, Vec<u64>)>;
+
+fn run(threads: usize, obs_on: bool) -> Fingerprint {
+    nysx::obs::set_enabled(obs_on);
+    let mut pipeline = Pipeline::for_dataset("MUTAG")
+        .expect("known dataset")
+        .scale(0.25)
+        .hv_dim(1000)
+        .seed(91)
+        .threads(threads)
+        .train()
+        .expect("training succeeds");
+    let graphs: Vec<Graph> = pipeline
+        .dataset()
+        .test
+        .iter()
+        .map(|(g, _)| g.clone())
+        .collect();
+    let refs: Vec<&Graph> = graphs.iter().collect();
+    let batched = pipeline.infer_batch(&refs);
+    graphs
+        .iter()
+        .zip(batched)
+        .map(|(g, b)| {
+            let s = pipeline.infer(g);
+            (
+                s.predicted,
+                s.hv.words().to_vec(),
+                b.predicted,
+                b.hv.words().to_vec(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn outputs_bit_identical_with_obs_on_or_off_across_pools() {
+    let mut baseline: Option<Fingerprint> = None;
+    for threads in [1usize, 2, 7] {
+        for obs_on in [false, true] {
+            let fp = run(threads, obs_on);
+            assert!(!fp.is_empty(), "test split must be non-empty");
+            match &baseline {
+                None => baseline = Some(fp),
+                Some(b) => assert_eq!(
+                    b, &fp,
+                    "outputs diverged at threads={threads} obs_on={obs_on}"
+                ),
+            }
+        }
+    }
+
+    // The enabled runs were not vacuous: every pipeline stage span
+    // recorded at least once (train_finalize during train(), the rest
+    // on the inference paths).
+    let snap = nysx::obs::Snapshot::capture();
+    for stage in nysx::obs::STAGES {
+        let name = format!("stage.{stage}");
+        let hist = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == name)
+            .unwrap_or_else(|| panic!("snapshot missing {name}"));
+        assert!(hist.count > 0, "{name} never recorded while obs was on");
+    }
+    nysx::obs::set_enabled(false);
+}
